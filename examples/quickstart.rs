@@ -1,0 +1,77 @@
+//! Quickstart: build one benchmark, compare CODA against every baseline,
+//! and (if `make artifacts` has run) execute a real AOT-compiled kernel
+//! through the PJRT runtime.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use coda::config::SystemConfig;
+use coda::coordinator::{Coordinator, Mechanism};
+use coda::report::{f2, pct, Table};
+use coda::runtime::Runtime;
+use coda::workloads::suite;
+
+fn main() -> coda::Result<()> {
+    let mut cfg = SystemConfig::default();
+    cfg.stack_capacity = 256 << 20; // plenty for the demo workload
+    let coord = Coordinator::new(cfg.clone());
+
+    println!("== CODA quickstart: PageRank on a 98K-vertex graph ==\n");
+    let wl = suite::build("PR", &cfg)?;
+    println!(
+        "workload: {} ({} thread-blocks, {} accesses, {} objects)\n",
+        wl.name,
+        wl.trace.num_blocks(),
+        wl.total_accesses(),
+        wl.trace.objects.len()
+    );
+
+    let mechs = [
+        Mechanism::FgpOnly,
+        Mechanism::CgpOnly,
+        Mechanism::CgpFta,
+        Mechanism::MigrationFta,
+        Mechanism::Coda,
+    ];
+    let reports = coord.compare(&wl, &mechs)?;
+    let base = reports[0].clone();
+    let mut t = Table::new(&["mechanism", "speedup", "remote%", "remote-reduction"]);
+    for r in &reports {
+        t.row(&[
+            r.mechanism.clone(),
+            f2(r.speedup_over(&base)),
+            pct(r.accesses.remote_fraction()),
+            pct(r.remote_reduction_over(&base)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // The AOT compute path: run one real PageRank sweep through PJRT.
+    let mut rt = Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
+    if rt.artifact_exists("pagerank_update") {
+        const V: usize = 8192;
+        const K: usize = 16;
+        let ranks = vec![1.0f32 / V as f32; V];
+        let inv_deg = vec![1.0f32 / K as f32; V];
+        // Ring graph neighbor table.
+        let mut nbr = vec![0i32; V * K];
+        for v in 0..V {
+            for k in 0..K {
+                nbr[v * K + k] = ((v + k + 1) % V) as i32;
+            }
+        }
+        let mask = vec![1.0f32; V * K];
+        let exe = rt.load("pagerank_update")?;
+        let out = coda::runtime::run_pagerank(exe, &ranks, &inv_deg, &nbr, &mask, V, K)?;
+        let sum: f32 = out.iter().sum();
+        println!(
+            "PJRT sweep on {}: |ranks|_1 = {:.6} (expect 1.0)\n",
+            rt.platform(),
+            sum
+        );
+    } else {
+        println!("(artifacts not built; run `make artifacts` to see the PJRT path)");
+    }
+    Ok(())
+}

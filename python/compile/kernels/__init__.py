@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels (build-time only; lowered to HLO once).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+real-TPU Mosaic custom-calls, so interpret mode is the correctness target
+and real-TPU efficiency is estimated analytically (DESIGN.md §7).
+"""
+
+from .gather_reduce import pagerank_update_kernel
+from .kmeans_assign import kmeans_assign_kernel, kmeans_update_centroids
+from .hotspot_step import hotspot_step_kernel
+
+__all__ = [
+    "pagerank_update_kernel",
+    "kmeans_assign_kernel",
+    "kmeans_update_centroids",
+    "hotspot_step_kernel",
+]

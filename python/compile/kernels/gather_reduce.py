@@ -1,0 +1,61 @@
+"""PageRank neighbor gather+reduce as a Pallas kernel.
+
+The NDP hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+thread-block owning a contiguous vertex slice becomes a Pallas grid step
+owning a VMEM-resident row tile. The rank vector — CODA's *shared* (FGP)
+object — stays whole in every grid step (it is broadcast, like the paper's
+fine-grain interleaved pages), while the per-tile neighbor index/mask
+arrays — CODA's *exclusive* (CGP) objects — are blocked so each grid step
+only stages its own slice, the BlockSpec analog of Eq 2/3 placement.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of the vertex tile each grid step owns (the "thread-block").
+TILE_V = 256
+
+
+def _kernel(ranks_ref, inv_deg_ref, nbr_ref, mask_ref, o_ref, *, damping):
+    """One vertex tile: new_rank = (1-d)/V + d * sum_k contrib(nbr_k)."""
+    ranks = ranks_ref[...]            # (V,)  shared, whole
+    inv_deg = inv_deg_ref[...]        # (V,)  shared, whole
+    nbr = nbr_ref[...]                # (TILE_V, K) exclusive tile
+    mask = mask_ref[...]              # (TILE_V, K) exclusive tile
+    v_total = ranks.shape[0]
+    contrib = ranks[nbr] * inv_deg[nbr] * mask
+    acc = jnp.sum(contrib, axis=1)
+    o_ref[...] = (1.0 - damping) / v_total + damping * acc
+
+
+@functools.partial(jax.jit, static_argnames=("damping",))
+def pagerank_update_kernel(ranks, inv_deg, nbr_idx, nbr_mask, damping=0.85):
+    """One PageRank sweep.
+
+    Args:
+      ranks:    f32[V]    current ranks (shared object).
+      inv_deg:  f32[V]    1/out_degree per vertex (0 for sinks).
+      nbr_idx:  i32[V,K]  padded in-neighbor ids (exclusive object).
+      nbr_mask: f32[V,K]  1.0 for real edges, 0.0 for padding.
+    Returns:
+      f32[V] updated ranks.
+    """
+    v, k = nbr_idx.shape
+    assert v % TILE_V == 0, f"V={v} must be a multiple of {TILE_V}"
+    grid = (v // TILE_V,)
+    return pl.pallas_call(
+        functools.partial(_kernel, damping=damping),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v,), lambda i: (0,)),            # ranks: whole
+            pl.BlockSpec((v,), lambda i: (0,)),            # inv_deg: whole
+            pl.BlockSpec((TILE_V, k), lambda i: (i, 0)),   # nbr tile
+            pl.BlockSpec((TILE_V, k), lambda i: (i, 0)),   # mask tile
+        ],
+        out_specs=pl.BlockSpec((TILE_V,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((v,), jnp.float32),
+        interpret=True,
+    )(ranks, inv_deg, nbr_idx, nbr_mask)

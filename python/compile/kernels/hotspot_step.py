@@ -1,0 +1,64 @@
+"""Hotspot 5-point stencil step as a Pallas kernel.
+
+Each grid step owns a row band of the temperature grid (the paper's
+thread-block tile); north/south halo rows are staged by overlapping block
+reads — the VMEM analog of the halo accesses that make stencils "sharing"
+workloads in Table 2.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_H = 64
+
+
+def _kernel(t_ref, p_ref, o_ref, *, alpha, beta):
+    # The whole padded grid is staged; this step's band (plus halo rows) is
+    # carved out with a dynamic slice at the step's row offset.
+    i = pl.program_id(0)
+    t_full = t_ref[...]  # (H + 2, W)
+    t = jax.lax.dynamic_slice(
+        t_full, (i * TILE_H, 0), (TILE_H + 2, t_full.shape[1])
+    )
+    p = p_ref[...]  # (TILE_H, W)
+    center = t[1:-1, :]
+    north = t[:-2, :]
+    south = t[2:, :]
+    east = jnp.concatenate([center[:, 1:], center[:, -1:]], axis=1)
+    west = jnp.concatenate([center[:, :1], center[:, :-1]], axis=1)
+    o_ref[...] = center + alpha * (north + south + east + west - 4.0 * center) + beta * p
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta"))
+def hotspot_step_kernel(temp, power, alpha=0.1, beta=0.05):
+    """One stencil time step.
+
+    Args:
+      temp:  f32[H, W] temperature grid (boundary rows are clamped).
+      power: f32[H, W] power dissipation.
+    Returns:
+      f32[H, W] next temperature.
+    """
+    h, w = temp.shape
+    assert h % TILE_H == 0
+    grid = (h // TILE_H,)
+    # Pad with clamped boundary rows so every band has a halo.
+    padded = jnp.concatenate([temp[:1, :], temp, temp[-1:, :]], axis=0)
+    return pl.pallas_call(
+        functools.partial(_kernel, alpha=alpha, beta=beta),
+        grid=grid,
+        in_specs=[
+            # Overlapping bands: block i covers rows [i*TILE_H, i*TILE_H +
+            # TILE_H + 2) of the padded array. Element-level index_map with
+            # unblocked overlap is awkward in older pallas; we pass the
+            # whole padded array and slice per step instead.
+            pl.BlockSpec((h + 2, w), lambda i: (0, 0)),
+            pl.BlockSpec((TILE_H, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_H, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )(padded, power)

@@ -1,0 +1,70 @@
+"""K-means assignment as an MXU-shaped Pallas kernel.
+
+Hardware adaptation of the paper's Fig-7 K-means kernel: instead of the
+CUDA per-thread feature loop, distances are computed as a matmul
+(-2 * X @ C^T, the MXU-friendly form), tiled so each grid step holds one
+point tile (CODA-exclusive, CGP) in VMEM while the centroid table
+(CODA-shared, FGP) is broadcast to every step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 256
+
+
+def _kernel(x_ref, c_ref, dist_ref, assign_ref):
+    x = x_ref[...]          # (TILE_N, F) exclusive tile
+    c = c_ref[...]          # (K, F)      shared
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)          # (TILE_N, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]                # (1, K)
+    # The MXU product: (TILE_N, F) @ (F, K).
+    xc = jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    d2 = x2 - 2.0 * xc + c2                             # (TILE_N, K)
+    dist_ref[...] = d2
+    assign_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+@jax.jit
+def kmeans_assign_kernel(points, centroids):
+    """Squared distances + nearest-centroid assignment.
+
+    Args:
+      points:    f32[N, F]
+      centroids: f32[K, F]
+    Returns:
+      (f32[N, K] squared distances, i32[N] assignments)
+    """
+    n, f = points.shape
+    k, f2 = centroids.shape
+    assert f == f2 and n % TILE_N == 0
+    grid = (n // TILE_N,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, f), lambda i: (i, 0)),
+            pl.BlockSpec((k, f), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_N, k), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_N,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(points, centroids)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def kmeans_update_centroids(points, assignments, k):
+    """Centroid recomputation (plain jnp; bandwidth-bound scatter-add)."""
+    one_hot = jax.nn.one_hot(assignments, k, dtype=points.dtype)  # (N, K)
+    sums = one_hot.T @ points                                     # (K, F)
+    counts = jnp.sum(one_hot, axis=0)[:, None]                    # (K, 1)
+    return sums / jnp.maximum(counts, 1.0)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel in this package must match its oracle to float32 tolerance;
+pytest + hypothesis enforce it (python/tests/).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def pagerank_update_ref(ranks, inv_deg, nbr_idx, nbr_mask, damping=0.85):
+    """Reference PageRank sweep (dense gather formulation)."""
+    v = ranks.shape[0]
+    contrib = ranks[nbr_idx] * inv_deg[nbr_idx] * nbr_mask
+    return (1.0 - damping) / v + damping * jnp.sum(contrib, axis=1)
+
+
+def kmeans_assign_ref(points, centroids):
+    """Reference distances + assignment (explicit broadcast form)."""
+    diff = points[:, None, :] - centroids[None, :, :]  # (N, K, F)
+    d2 = jnp.sum(diff * diff, axis=2)                  # (N, K)
+    return d2, jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def kmeans_update_centroids_ref(points, assignments, k):
+    """Reference centroid update via segment_sum."""
+    sums = jax.ops.segment_sum(points, assignments, num_segments=k)
+    counts = jax.ops.segment_sum(
+        jnp.ones((points.shape[0],), points.dtype), assignments, num_segments=k
+    )
+    return sums / jnp.maximum(counts, 1.0)[:, None]
+
+
+def hotspot_step_ref(temp, power, alpha=0.1, beta=0.05):
+    """Reference stencil with clamped (replicated) boundaries."""
+    north = jnp.concatenate([temp[:1, :], temp[:-1, :]], axis=0)
+    south = jnp.concatenate([temp[1:, :], temp[-1:, :]], axis=0)
+    west = jnp.concatenate([temp[:, :1], temp[:, :-1]], axis=1)
+    east = jnp.concatenate([temp[:, 1:], temp[:, -1:]], axis=1)
+    return temp + alpha * (north + south + east + west - 4.0 * temp) + beta * power
+
+
+def pagerank_full_ref(nbr_idx, nbr_mask, out_deg, iters, damping=0.85):
+    """Multi-iteration PageRank from a uniform start (e2e validation)."""
+    v = nbr_idx.shape[0]
+    ranks = jnp.full((v,), 1.0 / v, jnp.float32)
+    inv_deg = jnp.where(out_deg > 0, 1.0 / jnp.maximum(out_deg, 1), 0.0).astype(
+        jnp.float32
+    )
+    for _ in range(iters):
+        ranks = pagerank_update_ref(ranks, inv_deg, nbr_idx, nbr_mask, damping)
+    return ranks

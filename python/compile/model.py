@@ -1,0 +1,80 @@
+"""Layer-2 JAX compute graphs: the per-thread-block-batch functions the
+Rust coordinator executes through PJRT. Each calls the Layer-1 Pallas
+kernel so everything lowers into one HLO module per artifact.
+
+The L3 coordinator owns iteration loops (the paper's runtime owns kernel
+relaunch); these graphs are single sweeps over statically-shaped batches.
+Rank buffers are donated on the rust side by re-feeding outputs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    hotspot_step_kernel,
+    kmeans_assign_kernel,
+    kmeans_update_centroids,
+    pagerank_update_kernel,
+)
+
+# Artifact shapes — must match the constants in examples/*.rs.
+PR_V = 8192          # vertices
+PR_K = 16            # padded in-degree
+KM_N = 4096          # points
+KM_F = 8             # features
+KM_K = 8             # clusters
+HS_H = 128           # grid rows
+HS_W = 128           # grid cols
+
+
+def pagerank_update(ranks, inv_deg, nbr_idx, nbr_mask):
+    """One damped PageRank sweep over the whole graph."""
+    return (pagerank_update_kernel(ranks, inv_deg, nbr_idx, nbr_mask),)
+
+
+def kmeans_assign(points, centroids):
+    """Assignment step + fused centroid update (one Lloyd iteration)."""
+    d2, assign = kmeans_assign_kernel(points, centroids)
+    new_centroids = kmeans_update_centroids(points, assign, KM_K)
+    # Mean intra-cluster distance: the convergence metric rust logs.
+    inertia = jnp.mean(jnp.min(d2, axis=1))
+    return assign.astype(jnp.float32), new_centroids, inertia[None]
+
+
+def hotspot_step(temp, power):
+    """One stencil time step."""
+    return (hotspot_step_kernel(temp, power),)
+
+
+def artifact_specs():
+    """(name, fn, example_args) for every artifact `aot.py` exports."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    return [
+        (
+            "pagerank_update",
+            pagerank_update,
+            (
+                jax.ShapeDtypeStruct((PR_V,), f32),
+                jax.ShapeDtypeStruct((PR_V,), f32),
+                jax.ShapeDtypeStruct((PR_V, PR_K), i32),
+                jax.ShapeDtypeStruct((PR_V, PR_K), f32),
+            ),
+        ),
+        (
+            "kmeans_assign",
+            kmeans_assign,
+            (
+                jax.ShapeDtypeStruct((KM_N, KM_F), f32),
+                jax.ShapeDtypeStruct((KM_K, KM_F), f32),
+            ),
+        ),
+        (
+            "hotspot_step",
+            hotspot_step,
+            (
+                jax.ShapeDtypeStruct((HS_H, HS_W), f32),
+                jax.ShapeDtypeStruct((HS_H, HS_W), f32),
+            ),
+        ),
+    ]

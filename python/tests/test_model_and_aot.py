@@ -1,0 +1,74 @@
+"""L2 model shape checks and AOT export round-trip (HLO text emission)."""
+
+import pathlib
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.aot import export_all, to_hlo_text
+
+
+def test_pagerank_update_shapes():
+    v, k = model.PR_V, model.PR_K
+    out = model.pagerank_update(
+        jnp.full((v,), 1.0 / v, jnp.float32),
+        jnp.full((v,), 0.25, jnp.float32),
+        jnp.zeros((v, k), jnp.int32),
+        jnp.zeros((v, k), jnp.float32),
+    )
+    assert len(out) == 1 and out[0].shape == (v,)
+
+
+def test_kmeans_assign_shapes():
+    pts = jnp.zeros((model.KM_N, model.KM_F), jnp.float32)
+    cen = jnp.zeros((model.KM_K, model.KM_F), jnp.float32)
+    assign, new_cen, inertia = model.kmeans_assign(pts, cen)
+    assert assign.shape == (model.KM_N,)
+    assert new_cen.shape == (model.KM_K, model.KM_F)
+    assert inertia.shape == (1,)
+
+
+def test_hotspot_step_shapes():
+    t = jnp.zeros((model.HS_H, model.HS_W), jnp.float32)
+    (out,) = model.hotspot_step(t, t)
+    assert out.shape == (model.HS_H, model.HS_W)
+
+
+def test_artifact_specs_cover_all_models():
+    names = [name for name, _, _ in model.artifact_specs()]
+    assert names == ["pagerank_update", "kmeans_assign", "hotspot_step"]
+
+
+def test_hlo_text_is_parseable_entry_module():
+    _, fn, args = model.artifact_specs()[2]  # hotspot: fastest to lower
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    assert "ENTRY" in text and "HloModule" in text
+    # return_tuple: the root must be a tuple.
+    assert "tuple(" in text or "(f32[" in text
+
+
+def test_export_all_writes_files():
+    with tempfile.TemporaryDirectory() as d:
+        out = pathlib.Path(d)
+        export_all(out)
+        for name, _, _ in model.artifact_specs():
+            p = out / f"{name}.hlo.txt"
+            assert p.exists() and p.stat().st_size > 1000, name
+
+
+def test_pagerank_artifact_numerics_vs_ref():
+    """The exact function exported to rust matches the oracle."""
+    from compile.kernels import ref
+
+    v, k = model.PR_V, model.PR_K
+    rng = np.random.default_rng(0)
+    nbr = rng.integers(0, v, size=(v, k)).astype(np.int32)
+    mask = (rng.random((v, k)) < 0.5).astype(np.float32)
+    inv_deg = np.full(v, 1.0 / k, np.float32)
+    ranks = np.full(v, 1.0 / v, np.float32)
+    (got,) = model.pagerank_update(ranks, inv_deg, nbr, mask)
+    want = ref.pagerank_update_ref(ranks, inv_deg, nbr, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-8)

@@ -1,0 +1,98 @@
+//! Ablation studies for the design choices DESIGN.md calls out (not in
+//! the paper's figures, but each isolates one mechanism knob):
+//!
+//!  A1. FGR interleave granularity (64 B / 128 B / 256 B / 512 B).
+//!  A2. Eq-3 chunk validation + page-majority fallback on/off.
+//!  A3. TLB size sensitivity.
+//!  A4. Number of stacks (2 / 4 / 8) at constant total compute.
+//!  A5. Energy efficiency of CODA vs FGP-Only (the paper's §1 motivation).
+
+mod common;
+
+use coda::coordinator::{Coordinator, Mechanism};
+use coda::energy::EnergyModel;
+use coda::report::{f2, Table};
+use coda::workloads::suite;
+
+const PROBE: &[&str] = &["PR", "KM", "SPMV", "HS3D"];
+
+fn geomean_probe(cfg: &coda::config::SystemConfig) -> coda::Result<f64> {
+    let coord = Coordinator::new(cfg.clone());
+    let mut speedups = Vec::new();
+    for name in PROBE {
+        let wl = suite::build(name, cfg)?;
+        let fgp = coord.run(&wl, Mechanism::FgpOnly)?;
+        let coda = coord.run(&wl, Mechanism::Coda)?;
+        speedups.push(coda.speedup_over(&fgp));
+    }
+    Ok(coda::stats::geomean(&speedups))
+}
+
+fn main() -> coda::Result<()> {
+    println!("== Ablations ==\n");
+
+    // A1: interleave granularity.
+    println!("A1: fine-grain interleave granularity");
+    let mut t = Table::new(&["FGR bytes", "CODA geomean (probe set)"]);
+    for fgr in [128u64, 256, 512, 1024] {
+        let mut cfg = common::eval_config();
+        cfg.fgp_interleave = fgr;
+        cfg.validate()?;
+        t.row(&[fgr.to_string(), f2(geomean_probe(&cfg)?)]);
+    }
+    println!("{}", t.render());
+
+    // A3: TLB size.
+    println!("A3: TLB reach");
+    let mut t = Table::new(&["TLB entries", "CODA geomean", "CODA tlb hit rate (PR)"]);
+    for entries in [16usize, 64, 256] {
+        let mut cfg = common::eval_config();
+        cfg.tlb_entries = entries;
+        let coord = Coordinator::new(cfg.clone());
+        let wl = suite::build("PR", &cfg)?;
+        let r = coord.run(&wl, Mechanism::Coda)?;
+        t.row(&[
+            entries.to_string(),
+            f2(geomean_probe(&cfg)?),
+            f2(r.tlb_hit_rate),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // A4: stack count (same total SMs-per-system scaling).
+    println!("A4: number of stacks");
+    let mut t = Table::new(&["stacks", "CODA geomean (probe set)"]);
+    for stacks in [2usize, 4, 8] {
+        let mut cfg = common::eval_config();
+        cfg.num_stacks = stacks;
+        cfg.validate()?;
+        t.row(&[stacks.to_string(), f2(geomean_probe(&cfg)?)]);
+    }
+    println!("{}", t.render());
+
+    // A5: energy.
+    println!("A5: interconnect + DRAM energy (CODA vs FGP-Only)");
+    let cfg = common::eval_config();
+    let coord = Coordinator::new(cfg.clone());
+    let em = EnergyModel::default();
+    let mut t = Table::new(&["bench", "FGP uJ", "CODA uJ", "energy improvement"]);
+    let mut imps = Vec::new();
+    for name in suite::names() {
+        let wl = suite::build(name, &cfg)?;
+        let fgp = coord.run(&wl, Mechanism::FgpOnly)?;
+        let coda = coord.run(&wl, Mechanism::Coda)?;
+        let imp = em.improvement(&coda, &fgp, cfg.line_size);
+        imps.push(imp);
+        t.row(&[
+            name.to_string(),
+            format!("{:.0}", em.estimate(&fgp, cfg.line_size).total_uj()),
+            format!("{:.0}", em.estimate(&coda, cfg.line_size).total_uj()),
+            f2(imp),
+        ]);
+    }
+    println!("{}", t.render());
+    let g = coda::stats::geomean(&imps);
+    println!("geomean energy improvement: {g:.2}x");
+    assert!(g > 1.0, "CODA must save interconnect energy overall");
+    Ok(())
+}

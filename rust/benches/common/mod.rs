@@ -1,0 +1,42 @@
+//! Shared helpers for the figure-regeneration benches.
+#![allow(dead_code)]
+
+use coda::config::SystemConfig;
+use coda::coordinator::{Coordinator, Mechanism};
+use coda::stats::RunReport;
+use coda::workloads::suite;
+
+/// The evaluation config: Table 1 with a per-category quick toggle.
+pub fn eval_config() -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    // Lazy allocator means the 8 GB stacks cost nothing; keep Table 1.
+    if std::env::var("CODA_BENCH_FAST").is_ok() {
+        cfg.stack_capacity = 256 << 20;
+    }
+    cfg
+}
+
+/// Run one benchmark under several mechanisms.
+pub fn run_mechs(
+    name: &str,
+    cfg: &SystemConfig,
+    mechs: &[Mechanism],
+) -> coda::Result<Vec<RunReport>> {
+    let wl = suite::build(name, cfg)?;
+    let coord = Coordinator::new(cfg.clone());
+    coord.compare(&wl, mechs)
+}
+
+/// Geometric-mean speedup of `mech` over FGP-Only across a set of names.
+pub fn geomean_speedup(
+    names: &[&str],
+    cfg: &SystemConfig,
+    mech: Mechanism,
+) -> coda::Result<f64> {
+    let mut speedups = Vec::new();
+    for name in names {
+        let rs = run_mechs(name, cfg, &[Mechanism::FgpOnly, mech])?;
+        speedups.push(rs[1].speedup_over(&rs[0]));
+    }
+    Ok(coda::stats::geomean(&speedups))
+}

@@ -1,0 +1,43 @@
+//! Figure 12: multiprogrammed mixes (one application per stack) —
+//! CGP-Only per-stack placement vs FGP-Only. The paper's claim: CGP
+//! hardware outperforms FGP-Only for every mix, because FGP makes every
+//! application's traffic cross-stack by construction.
+
+mod common;
+
+use coda::multiprog::{run_mix, Mix, MixPlacement};
+use coda::report::{f2, pct, Table};
+use coda::workloads::suite;
+
+fn main() -> coda::Result<()> {
+    let cfg = common::eval_config();
+    println!("== Figure 12: multiprogrammed workloads ==\n");
+    let mixes: [[&str; 4]; 4] = [
+        ["BFS", "KM", "CC", "TC"],
+        ["PR", "NN", "MG", "HS3D"],
+        ["DC", "SPMV", "DWT", "HS"],
+        ["SSSP", "MM", "GC", "NW"],
+    ];
+    let mut t = Table::new(&["mix", "CGP/FGP speedup", "FGP remote", "CGP remote"]);
+    for names in &mixes {
+        let apps: Vec<_> = names
+            .iter()
+            .map(|n| suite::build(n, &cfg))
+            .collect::<coda::Result<Vec<_>>>()?;
+        let mix = Mix {
+            apps: apps.iter().map(|a| a.as_ref()).collect(),
+        };
+        let (_, fgp) = run_mix(&cfg, &mix, MixPlacement::FgpOnly)?;
+        let (_, cgp) = run_mix(&cfg, &mix, MixPlacement::CgpLocal)?;
+        let s = fgp.cycles / cgp.cycles;
+        t.row(&[
+            names.join("+"),
+            f2(s),
+            pct(fgp.accesses.remote_fraction()),
+            pct(cgp.accesses.remote_fraction()),
+        ]);
+        assert!(s > 1.0, "CGP-Only must outperform FGP-Only for all mixes");
+    }
+    println!("{}", t.render());
+    Ok(())
+}

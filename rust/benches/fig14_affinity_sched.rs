@@ -1,0 +1,60 @@
+//! Figure 14: performance impact of affinity-based work scheduling alone
+//! (FGP-Only + Affinity vs FGP-Only). The paper's shape: virtually no
+//! impact anywhere except SAD, whose 61 thread-blocks cannot balance 16
+//! SMs across 4 stacks. Also evaluates the §4.3.1 work-stealing extension
+//! the paper sketches.
+
+mod common;
+
+use coda::coordinator::Mechanism;
+use coda::report::{f2, Table};
+use coda::workloads::suite;
+
+fn main() -> coda::Result<()> {
+    let cfg = common::eval_config();
+    println!("== Figure 14: affinity-scheduling impact (FGP placement) ==\n");
+    let mut t = Table::new(&["bench", "FGP+Affinity / FGP", "FGP+Stealing / FGP"]);
+    let mut sad_ratio = 1.0;
+    let mut others = Vec::new();
+    for name in suite::names() {
+        let rs = common::run_mechs(
+            name,
+            &cfg,
+            &[Mechanism::FgpOnly, Mechanism::FgpAffinity],
+        )?;
+        let ratio = rs[1].speedup_over(&rs[0]);
+        // Work-stealing on top of affinity (placement still FGP).
+        let wl = suite::build(name, &cfg)?;
+        let coord = coda::coordinator::Coordinator::new(cfg.clone());
+        let plan = coda::placement::PlacementPlan::all_fgp(wl.trace.objects.len());
+        let (mut vm, bases, _, _) = coda::sim::map_objects(&cfg, &wl.trace, &plan)?;
+        let steal = coda::sim::KernelRun {
+            cfg: &cfg,
+            trace: &wl.trace,
+            vm: &mut vm,
+            obj_base: &bases,
+            policy: coda::sched::Policy::AffinityStealing,
+            migrate_on_first_touch: false,
+        }
+        .run();
+        let _ = coord;
+        let steal_ratio = rs[0].cycles / steal.cycles;
+        t.row(&[name.to_string(), f2(ratio), f2(steal_ratio)]);
+        if name == "SAD" {
+            sad_ratio = ratio;
+        } else {
+            others.push(ratio);
+        }
+    }
+    println!("{}", t.render());
+    let min_other = others.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "\nnon-SAD minimum ratio: {min_other:.2} (paper: ~1.0); SAD: {sad_ratio:.2} (paper: degraded)"
+    );
+    assert!(min_other > 0.9, "non-SAD benchmarks must be virtually unaffected");
+    assert!(
+        sad_ratio < min_other,
+        "SAD (61 blocks) must suffer the most from restricted scheduling"
+    );
+    Ok(())
+}

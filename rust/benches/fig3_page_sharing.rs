@@ -1,0 +1,45 @@
+//! Figure 3 + Table 2: distribution of memory pages by the number of
+//! thread-blocks that access each page, and the derived workload
+//! categories, for all 20 benchmarks.
+
+mod common;
+
+use coda::report::{pct, Table};
+use coda::sched::affinity_stack;
+use coda::trace::{classify, sharing_histogram};
+use coda::workloads::suite;
+
+fn main() -> coda::Result<()> {
+    let cfg = common::eval_config();
+    println!("== Figure 3: page-sharing distribution ==\n");
+    let mut t = Table::new(&[
+        "bench", "pages", "1 TB", "2 TBs", "3-16", ">16", "~all", "1-stack", "category",
+        "paper",
+    ]);
+    let mut matches = 0;
+    for (name, paper_cat) in suite::ALL {
+        let wl = suite::build(name, &cfg)?;
+        let h = sharing_histogram(&wl.trace, cfg.page_size, |b| affinity_stack(b, &cfg));
+        let f = h.fractions();
+        let got = classify(&h);
+        if got == *paper_cat {
+            matches += 1;
+        }
+        t.row(&[
+            name.to_string(),
+            h.total.to_string(),
+            pct(f[0]),
+            pct(f[1]),
+            pct(f[2]),
+            pct(f[3]),
+            pct(f[4]),
+            pct(h.one_stack as f64 / h.total.max(1) as f64),
+            got.to_string(),
+            paper_cat.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("Table 2 category agreement: {matches}/20");
+    assert_eq!(matches, 20, "all categories must match Table 2");
+    Ok(())
+}

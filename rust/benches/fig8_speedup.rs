@@ -1,0 +1,52 @@
+//! Figure 8: speedup of CODA over FGP-Only, CGP-Only, and the idealized
+//! first-touch allocation (CGP-Only+FTA), for all 20 benchmarks — plus the
+//! footnote-6 migration-based FTA variant and the per-category averages
+//! (§6.1: block-exclusive 1.56x, core-exclusive 1.13x, sharing 1.29x;
+//! headline geomean 1.31x).
+
+mod common;
+
+use coda::coordinator::Mechanism;
+use coda::report::{f2, Table};
+use coda::stats::geomean;
+use coda::trace::Category;
+use coda::workloads::suite;
+
+fn main() -> coda::Result<()> {
+    let cfg = common::eval_config();
+    println!("== Figure 8: speedup over FGP-Only ==\n");
+    let mechs = [
+        Mechanism::FgpOnly,
+        Mechanism::CgpOnly,
+        Mechanism::CgpFta,
+        Mechanism::MigrationFta,
+        Mechanism::Coda,
+    ];
+    let mut t = Table::new(&["bench", "CGP-Only", "CGP+FTA", "Migr-FTA", "CODA", "category"]);
+    let mut per_cat: std::collections::HashMap<Category, Vec<f64>> = Default::default();
+    let mut coda_all = Vec::new();
+    for (name, cat) in suite::ALL {
+        let rs = common::run_mechs(name, &cfg, &mechs)?;
+        let base = &rs[0];
+        let coda = rs[4].speedup_over(base);
+        per_cat.entry(*cat).or_default().push(coda);
+        coda_all.push(coda);
+        t.row(&[
+            name.to_string(),
+            f2(rs[1].speedup_over(base)),
+            f2(rs[2].speedup_over(base)),
+            f2(rs[3].speedup_over(base)),
+            f2(coda),
+            cat.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("\nper-category CODA geomean (paper: block-excl 1.56x, core-excl 1.13x, sharing 1.29x):");
+    for (cat, v) in &per_cat {
+        println!("  {:<16} {:.2}x (n={})", cat.to_string(), geomean(v), v.len());
+    }
+    let headline = geomean(&coda_all);
+    println!("\nheadline CODA geomean: {headline:.3}x (paper: 1.31x)");
+    assert!(headline > 1.1, "CODA must clearly beat the baseline");
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Figure 9: local vs remote data-access split, FGP-Only vs CODA, plus the
+//! §6.2 per-category remote-reduction aggregates (paper: 47% block-excl,
+//! 34% core-excl, 32% sharing; 38% overall).
+
+mod common;
+
+use coda::coordinator::Mechanism;
+use coda::report::{pct, Table};
+use coda::stats::mean;
+use coda::trace::Category;
+use coda::workloads::suite;
+
+fn main() -> coda::Result<()> {
+    let cfg = common::eval_config();
+    println!("== Figure 9: local vs remote accesses ==\n");
+    let mut t = Table::new(&[
+        "bench", "FGP local", "FGP remote", "CODA local", "CODA remote", "reduction",
+    ]);
+    let mut per_cat: std::collections::HashMap<Category, Vec<f64>> = Default::default();
+    let mut all = Vec::new();
+    for (name, cat) in suite::ALL {
+        let rs = common::run_mechs(name, &cfg, &[Mechanism::FgpOnly, Mechanism::Coda])?;
+        let red = rs[1].remote_reduction_over(&rs[0]);
+        per_cat.entry(*cat).or_default().push(red);
+        all.push(red);
+        t.row(&[
+            name.to_string(),
+            pct(rs[0].accesses.local_fraction()),
+            pct(rs[0].accesses.remote_fraction()),
+            pct(rs[1].accesses.local_fraction()),
+            pct(rs[1].accesses.remote_fraction()),
+            pct(red),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("\nper-category mean remote reduction (paper: 47%/34%/32%):");
+    for (cat, v) in &per_cat {
+        println!("  {:<16} {}", cat.to_string(), pct(mean(v)));
+    }
+    println!("\noverall mean remote reduction: {} (paper: 38%)", pct(mean(&all)));
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Hot-path micro-benchmarks (the §Perf targets in EXPERIMENTS.md):
+//! address mapping, TLB lookup, scheduler pick, event-driven simulation
+//! throughput, and PJRT sweep latency.
+
+mod common;
+
+use coda::addr::{AddressMapper, Granularity};
+use coda::coordinator::{Coordinator, Mechanism};
+use coda::harness::{black_box, Bencher};
+use coda::sched::{Policy, Scheduler};
+use coda::vm::{Pte, Tlb};
+use coda::workloads::suite;
+
+fn main() -> coda::Result<()> {
+    let cfg = common::eval_config();
+    let mut b = Bencher::new();
+
+    println!("== hot-path micro-benchmarks ==\n");
+
+    // Address mapping: THE per-access operation.
+    let mapper = AddressMapper::new(&cfg);
+    let n_ops = 1_000_000u64;
+    let r = b.bench("addr::stack_of x1M (fgp+cgp mix)", || {
+        let mut acc = 0usize;
+        for i in 0..n_ops {
+            let a = i.wrapping_mul(0x9E3779B97F4A7C15) & 0xFFFF_FFFF;
+            let g = if i & 1 == 0 {
+                Granularity::Fgp
+            } else {
+                Granularity::Cgp
+            };
+            acc = acc.wrapping_add(mapper.stack_of(a, g));
+        }
+        black_box(acc)
+    });
+    println!(
+        "  -> {:.2} ns/op ({:.0} M ops/s)\n",
+        r.mean_ns / n_ops as f64,
+        r.throughput(n_ops as f64) / 1e6
+    );
+
+    // TLB lookup/fill mix.
+    let mut tlb = Tlb::new(cfg.tlb_entries);
+    let r = b.bench("tlb::lookup+fill x100K", || {
+        let mut acc = 0u64;
+        for i in 0..100_000u64 {
+            let vpn = (i * 7) & 0x3FF;
+            match tlb.lookup(vpn) {
+                Some(p) => acc = acc.wrapping_add(p.ppn),
+                None => tlb.fill(
+                    vpn,
+                    Pte {
+                        ppn: vpn,
+                        granularity: Granularity::Fgp,
+                    },
+                ),
+            }
+        }
+        black_box(acc)
+    });
+    println!("  -> {:.2} ns/op\n", r.mean_ns / 100_000.0);
+
+    // Scheduler pick throughput.
+    let r = b.bench("sched::next_for full drain (96K blocks)", || {
+        let mut s = Scheduler::new(Policy::Affinity, 96_000, &cfg);
+        let mut n = 0u32;
+        'outer: loop {
+            for stack in 0..cfg.num_stacks {
+                match s.next_for(stack) {
+                    Some(_) => n += 1,
+                    None => {
+                        if s.empty() {
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+        }
+        black_box(n)
+    });
+    println!("  -> {:.1} ns/pick\n", r.mean_ns / 96_000.0);
+
+    // End-to-end simulator throughput on a mid-size workload.
+    let wl = suite::build("KM", &cfg)?;
+    let accesses = wl.total_accesses();
+    let coord = Coordinator::new(cfg.clone());
+    let r = b.bench("sim: KM full run (CODA)", || {
+        coord.run(&wl, Mechanism::Coda).unwrap().cycles
+    });
+    println!(
+        "  -> {:.1} ns/access, {:.2} M simulated accesses/s\n",
+        r.mean_ns / accesses as f64,
+        r.throughput(accesses as f64) / 1e6
+    );
+
+    let wl = suite::build("PR", &cfg)?;
+    let accesses = wl.total_accesses();
+    let r = b.bench("sim: PR full run (FGP-Only)", || {
+        coord.run(&wl, Mechanism::FgpOnly).unwrap().cycles
+    });
+    println!(
+        "  -> {:.1} ns/access, {:.2} M simulated accesses/s\n",
+        r.mean_ns / accesses as f64,
+        r.throughput(accesses as f64) / 1e6
+    );
+
+    // PJRT artifact sweep latency (the runtime hot path), if built.
+    let mut rt = coda::runtime::Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
+    if rt.artifact_exists("pagerank_update") {
+        const V: usize = 8192;
+        const K: usize = 16;
+        let ranks = vec![1.0f32 / V as f32; V];
+        let inv_deg = vec![1.0f32 / K as f32; V];
+        let nbr: Vec<i32> = (0..V * K).map(|i| ((i / K + i % K + 1) % V) as i32).collect();
+        let mask = vec![1.0f32; V * K];
+        let exe = rt.load("pagerank_update")?;
+        let r = b.bench("pjrt: pagerank_update sweep (8192x16)", || {
+            coda::runtime::run_pagerank(exe, &ranks, &inv_deg, &nbr, &mask, V, K).unwrap()
+        });
+        let flops = (V * K * 3) as f64; // mul+mul+add per edge slot
+        println!(
+            "  -> {:.2} ms/sweep, {:.2} GFLOP/s effective\n",
+            r.mean_ns / 1e6,
+            flops / r.mean_ns
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,266 @@
+//! Dual-mode address mapping (§4.2 of the paper).
+//!
+//! Each OS page carries a granularity bit: **FGP** (fine-grain page) stripes
+//! the page across all memory stacks at `fgp_interleave` bytes, improving
+//! processor-memory interface utilization for host / shared data; **CGP**
+//! (coarse-grain page) places the entire page in a single stack, which is
+//! what NDP-private data wants. Only the *mapping* of physical address to
+//! stack changes — never the physical address itself — so caches, coherence,
+//! and virtual address translation are untouched.
+//!
+//! With `N` stacks, FGP selects the stack from the interleave-granularity
+//! bits of the address; CGP selects it from the lowest bits of the physical
+//! page number (PPN). Because one FGP occupies `page_size / N` bytes in each
+//! of the `N` stacks, converting a page between modes affects `N` aligned
+//! consecutive pages at once — a **page-group** (§4.2, Fig 6).
+//!
+//! The module also implements the paper's §7.1 (complex / XOR address
+//! mappings) and §7.2 (large pages) extensions.
+
+use crate::config::SystemConfig;
+
+/// Page granularity mode: the PTE/TLB/cache-line granularity bit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Granularity {
+    /// Fine-grain: page striped across all stacks (the default, as today).
+    Fgp,
+    /// Coarse-grain: entire page resident in one stack (NDP-private data).
+    Cgp,
+}
+
+/// The dual-mode address mapper. Cheap to copy; used on every simulated
+/// memory access, so everything is shift/mask arithmetic.
+#[derive(Clone, Copy, Debug)]
+pub struct AddressMapper {
+    stack_shift_fgp: u32,
+    stack_shift_cgp: u32,
+    stack_mask: u64,
+    page_shift: u32,
+    /// Optional XOR-fold of higher address bits into the stack-selection
+    /// bits (§7.1 complex mappings; DRAMA-style channel hashing).
+    xor_fold: bool,
+}
+
+impl AddressMapper {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        assert!(cfg.num_stacks.is_power_of_two());
+        Self {
+            stack_shift_fgp: cfg.fgp_interleave.trailing_zeros(),
+            stack_shift_cgp: cfg.page_size.trailing_zeros(),
+            stack_mask: cfg.num_stacks as u64 - 1,
+            page_shift: cfg.page_size.trailing_zeros(),
+            xor_fold: false,
+        }
+    }
+
+    /// Enable the §7.1 XOR-folded ("complex") mapping variant: stack bits
+    /// are XORed with a higher-order bit window, the scheme used by modern
+    /// memory controllers to spread conflict patterns. CODA's dual-mode
+    /// mechanism still works because the *same* fold is applied in both
+    /// modes (bits are swapped, not consumed).
+    pub fn with_xor_fold(mut self, enable: bool) -> Self {
+        self.xor_fold = enable;
+        self
+    }
+
+    /// Number of stacks this mapper selects among.
+    #[inline]
+    pub fn num_stacks(&self) -> usize {
+        (self.stack_mask + 1) as usize
+    }
+
+    /// Physical page number of a physical address.
+    #[inline]
+    pub fn ppn(&self, paddr: u64) -> u64 {
+        paddr >> self.page_shift
+    }
+
+    #[inline]
+    fn fold(&self, base: u64, addr: u64) -> u64 {
+        if self.xor_fold {
+            // Fold a disjoint higher window (above the page bits) into the
+            // selection, mirroring channel-hash XOR schemes.
+            (base ^ (addr >> (self.page_shift + 9))) & self.stack_mask
+        } else {
+            base & self.stack_mask
+        }
+    }
+
+    /// Which stack a physical address maps to, given the page's granularity
+    /// bit. This is THE hot operation: every simulated memory request calls
+    /// it once.
+    #[inline]
+    pub fn stack_of(&self, paddr: u64, g: Granularity) -> usize {
+        let raw = match g {
+            Granularity::Fgp => paddr >> self.stack_shift_fgp,
+            Granularity::Cgp => paddr >> self.stack_shift_cgp,
+        };
+        self.fold(raw, paddr) as usize
+    }
+
+    /// For a CGP, the stack is a pure function of the PPN.
+    #[inline]
+    pub fn stack_of_ppn_cgp(&self, ppn: u64) -> usize {
+        self.fold(ppn, ppn << self.page_shift) as usize
+    }
+
+    /// Page-group index of a PPN: groups of `N` aligned consecutive pages
+    /// convert FGP<->CGP together (§4.2).
+    #[inline]
+    pub fn page_group(&self, ppn: u64) -> u64 {
+        ppn / (self.stack_mask + 1)
+    }
+
+    /// First PPN of a page-group.
+    #[inline]
+    pub fn group_base_ppn(&self, group: u64) -> u64 {
+        group * (self.stack_mask + 1)
+    }
+
+    /// Bytes of a given FGP page resident in each stack
+    /// (`page_size / num_stacks`).
+    pub fn fgp_bytes_per_stack(&self, cfg: &SystemConfig) -> u64 {
+        cfg.page_size / cfg.num_stacks as u64
+    }
+}
+
+/// Large-page variant (§7.2): identical math at 2 MB granularity. We expose
+/// it as a separate constructor so the page-management layer can mix 4 KB
+/// and 2 MB regions.
+pub fn large_page_mapper(cfg: &SystemConfig) -> AddressMapper {
+    let mut large = cfg.clone();
+    large.page_size = 2 << 20;
+    AddressMapper::new(&large)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    #[test]
+    fn fgp_stripes_at_interleave_granularity() {
+        let m = AddressMapper::new(&cfg());
+        // 128-byte stripes round-robin over 4 stacks.
+        for chunk in 0..16u64 {
+            let addr = chunk * 128;
+            assert_eq!(m.stack_of(addr, Granularity::Fgp), (chunk % 4) as usize);
+        }
+        // All bytes within one stripe land in the same stack.
+        for b in 0..128u64 {
+            assert_eq!(m.stack_of(b, Granularity::Fgp), 0);
+            assert_eq!(m.stack_of(128 + b, Granularity::Fgp), 1);
+        }
+    }
+
+    #[test]
+    fn cgp_keeps_whole_page_in_one_stack() {
+        let m = AddressMapper::new(&cfg());
+        for page in 0..8u64 {
+            let base = page * 4096;
+            let s0 = m.stack_of(base, Granularity::Cgp);
+            assert_eq!(s0, (page % 4) as usize, "PPN low bits select the stack");
+            for off in [0u64, 1, 127, 128, 2048, 4095] {
+                assert_eq!(m.stack_of(base + off, Granularity::Cgp), s0);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_fig5_bit_positions() {
+        // Paper example: 4 stacks, 4KB pages -> CGP uses bits [13:12].
+        // (The paper's FGP example uses bits [11:10], i.e. 1KB stripes; our
+        // default FGR is the evaluated 128 B -> bits [8:7].)
+        let m = AddressMapper::new(&cfg());
+        let addr = 0b11_0000_0000_0000u64; // bits 13:12 = 0b11
+        assert_eq!(m.stack_of(addr, Granularity::Cgp), 3);
+        let addr = 0b1_1000_0000u64; // bits 8:7 = 0b11
+        assert_eq!(m.stack_of(addr, Granularity::Fgp), 3);
+    }
+
+    #[test]
+    fn fgp_page_touches_every_stack_equally() {
+        let c = cfg();
+        let m = AddressMapper::new(&c);
+        let mut counts = vec![0u64; c.num_stacks];
+        let base = 7 * c.page_size;
+        for off in (0..c.page_size).step_by(c.fgp_interleave as usize) {
+            counts[m.stack_of(base + off, Granularity::Fgp)] += 1;
+        }
+        let per = c.page_size / c.fgp_interleave / c.num_stacks as u64;
+        assert!(counts.iter().all(|&n| n == per), "{counts:?}");
+    }
+
+    #[test]
+    fn page_group_math() {
+        let m = AddressMapper::new(&cfg());
+        assert_eq!(m.page_group(0), 0);
+        assert_eq!(m.page_group(3), 0);
+        assert_eq!(m.page_group(4), 1);
+        assert_eq!(m.group_base_ppn(1), 4);
+        // The 4 pages of one group map CGP onto 4 distinct stacks, i.e. a
+        // group provides exactly one page of capacity per stack -- the
+        // space-conservation property of Fig 6.
+        let stacks: Vec<usize> = (4..8).map(|p| m.stack_of_ppn_cgp(p)).collect();
+        let mut sorted = stacks.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn eight_stacks() {
+        let mut c = cfg();
+        c.num_stacks = 8;
+        c.fgp_interleave = 128; // 128*8=1024 <= 4096 ok
+        c.validate().unwrap();
+        let m = AddressMapper::new(&c);
+        for chunk in 0..32u64 {
+            assert_eq!(m.stack_of(chunk * 128, Granularity::Fgp), (chunk % 8) as usize);
+        }
+        assert_eq!(m.page_group(15), 1);
+    }
+
+    #[test]
+    fn xor_fold_preserves_page_residency() {
+        // §7.1: under the complex mapping, a CGP must still be fully
+        // resident in a single stack.
+        let m = AddressMapper::new(&cfg()).with_xor_fold(true);
+        for page in 0..64u64 {
+            let base = page * 4096;
+            let s = m.stack_of(base, Granularity::Cgp);
+            for off in [1u64, 129, 1024, 4095] {
+                assert_eq!(m.stack_of(base + off, Granularity::Cgp), s);
+            }
+        }
+    }
+
+    #[test]
+    fn xor_fold_still_balances_fgp() {
+        let c = cfg();
+        let m = AddressMapper::new(&c).with_xor_fold(true);
+        let mut counts = vec![0u64; c.num_stacks];
+        for off in (0..(1u64 << 22)).step_by(c.fgp_interleave as usize) {
+            counts[m.stack_of(off, Granularity::Fgp)] += 1;
+        }
+        let total: u64 = counts.iter().sum();
+        for &n in &counts {
+            let share = n as f64 / total as f64;
+            assert!((share - 0.25).abs() < 0.01, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn large_page_mapper_uses_bits_22_21() {
+        // §7.2: for 2MB pages, bits [22:21] select the stack in CGP mode.
+        let m = large_page_mapper(&cfg());
+        let addr = 0b11u64 << 21;
+        assert_eq!(m.stack_of(addr, Granularity::Cgp), 3);
+        let s = m.stack_of(5 * (2 << 20), Granularity::Cgp);
+        for off in [0u64, 4096, 1 << 20, (2 << 20) - 1] {
+            assert_eq!(m.stack_of(5 * (2 << 20) + off, Granularity::Cgp), s);
+        }
+    }
+}

@@ -1,0 +1,839 @@
+//! The compiler/profiler substrate of §4.3.2.
+//!
+//! The paper implements an LLVM `FunctionPass` that walks every
+//! `GetElementPtrInst` in a GPU kernel and symbolically checks whether the
+//! index expression has a **runtime-constant stride between two consecutive
+//! thread-blocks**, using only kernel-invocation constants (parameters,
+//! block/grid dimensions, global constants), the thread index, the block
+//! index, and local loop indices. We reproduce that decision procedure over
+//! a small kernel IR: each static memory access is an index [`Expr`]; the
+//! analyzer normalizes it to an affine form
+//!
+//! ```text
+//!   index = s_b * blockIdx + s_t * threadIdx + sum_i s_i * loop_i + k
+//! ```
+//!
+//! with symbolic (parameter-dependent) coefficients. If normalization
+//! succeeds, the inter-block stride `s_b` and the per-block footprint `B`
+//! are runtime constants computable before launch — the object is
+//! **regular** and a CGP-placement candidate. If the expression contains a
+//! data-dependent term (pointer chasing, CSR neighbor lists), the object is
+//! **irregular** and falls back to the trace profiler, exactly as the paper
+//! falls back to profiler-assisted estimation for input-dependent patterns.
+
+use crate::trace::KernelTrace;
+use std::collections::HashMap;
+
+/// Index expressions of the kernel IR (the analog of LLVM GEP index
+/// computation trees).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    /// Integer literal.
+    Const(i64),
+    /// Kernel-invocation constant (parameter, e.g. `nfeatures`).
+    Param(&'static str),
+    /// Flattened block index (`blockIdx.y * gridDim.x + blockIdx.x`).
+    BlockIdx,
+    /// `blockDim.x` (threads per block) — an invocation constant.
+    BlockDim,
+    /// Thread index within the block.
+    ThreadIdx,
+    /// A kernel-local loop induction variable with extent `Expr`.
+    Loop(u32, Box<Expr>),
+    /// A value loaded from memory (data-dependent; kills regularity).
+    Indirect,
+    Add(Box<Expr>, Box<Expr>),
+    Sub(Box<Expr>, Box<Expr>),
+    Mul(Box<Expr>, Box<Expr>),
+    Div(Box<Expr>, Box<Expr>),
+    Rem(Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    pub fn add(a: Expr, b: Expr) -> Expr {
+        Expr::Add(Box::new(a), Box::new(b))
+    }
+    pub fn mul(a: Expr, b: Expr) -> Expr {
+        Expr::Mul(Box::new(a), Box::new(b))
+    }
+    pub fn sub(a: Expr, b: Expr) -> Expr {
+        Expr::Sub(Box::new(a), Box::new(b))
+    }
+
+    /// The canonical global thread id `blockIdx * blockDim + threadIdx`
+    /// (the `pid` of the paper's Fig 7 K-means snippet).
+    pub fn pid() -> Expr {
+        Expr::add(Expr::mul(Expr::BlockIdx, Expr::BlockDim), Expr::ThreadIdx)
+    }
+}
+
+/// A symbolic constant: `coeff * product(params) + ...` represented as a
+/// polynomial over parameters. Multiplication of two parameter-dependent
+/// terms is allowed (e.g. `nfeatures * blockDim`); anything involving
+/// blockIdx/threadIdx is tracked separately by [`LinForm`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SymConst {
+    /// monomial (sorted param list) -> integer coefficient.
+    terms: HashMap<Vec<&'static str>, i64>,
+}
+
+impl SymConst {
+    pub fn zero() -> Self {
+        Self::default()
+    }
+
+    pub fn constant(c: i64) -> Self {
+        let mut s = Self::default();
+        if c != 0 {
+            s.terms.insert(Vec::new(), c);
+        }
+        s
+    }
+
+    pub fn param(p: &'static str) -> Self {
+        let mut s = Self::default();
+        s.terms.insert(vec![p], 1);
+        s
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// As a plain integer if parameter-free.
+    pub fn as_const(&self) -> Option<i64> {
+        if self.terms.is_empty() {
+            return Some(0);
+        }
+        if self.terms.len() == 1 {
+            if let Some(c) = self.terms.get(&Vec::new() as &Vec<&'static str>) {
+                return Some(*c);
+            }
+        }
+        None
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        let mut out = self.clone();
+        for (m, c) in &other.terms {
+            let e = out.terms.entry(m.clone()).or_insert(0);
+            *e += c;
+            if *e == 0 {
+                out.terms.remove(m);
+            }
+        }
+        out
+    }
+
+    pub fn neg(&self) -> Self {
+        let mut out = self.clone();
+        for c in out.terms.values_mut() {
+            *c = -*c;
+        }
+        out
+    }
+
+    pub fn mul(&self, other: &Self) -> Self {
+        let mut out = Self::default();
+        for (m1, c1) in &self.terms {
+            for (m2, c2) in &other.terms {
+                let mut m = m1.clone();
+                m.extend(m2.iter().copied());
+                m.sort_unstable();
+                let e = out.terms.entry(m).or_insert(0);
+                *e += c1 * c2;
+                if *e == 0 {
+                    // normalize away cancelled monomials lazily
+                }
+            }
+        }
+        out.terms.retain(|_, c| *c != 0);
+        out
+    }
+
+    /// Evaluate with a parameter environment.
+    pub fn eval(&self, env: &ParamEnv) -> i64 {
+        self.terms
+            .iter()
+            .map(|(m, c)| c * m.iter().map(|p| env.get(p)).product::<i64>())
+            .sum()
+    }
+}
+
+/// Runtime values of kernel-invocation constants.
+#[derive(Clone, Debug, Default)]
+pub struct ParamEnv {
+    vals: HashMap<&'static str, i64>,
+    pub block_dim: i64,
+}
+
+impl ParamEnv {
+    pub fn new(block_dim: i64) -> Self {
+        Self {
+            vals: HashMap::new(),
+            block_dim,
+        }
+    }
+
+    pub fn with(mut self, name: &'static str, v: i64) -> Self {
+        self.vals.insert(name, v);
+        self
+    }
+
+    pub fn get(&self, name: &str) -> i64 {
+        if name == "__blockDim" {
+            return self.block_dim;
+        }
+        *self
+            .vals
+            .get(name)
+            .unwrap_or_else(|| panic!("unbound kernel parameter {name}"))
+    }
+}
+
+/// Affine normal form over (blockIdx, threadIdx, loop vars).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LinForm {
+    pub block: SymConst,
+    pub thread: SymConst,
+    /// loop var id -> (coefficient, extent as SymConst)
+    pub loops: Vec<(u32, SymConst, SymConst)>,
+    pub konst: SymConst,
+}
+
+impl LinForm {
+    fn constant(s: SymConst) -> Self {
+        Self {
+            konst: s,
+            ..Default::default()
+        }
+    }
+
+    fn is_const(&self) -> bool {
+        self.block.is_zero() && self.thread.is_zero() && self.loops.is_empty()
+    }
+
+    fn add(&self, o: &Self) -> Self {
+        let mut loops = self.loops.clone();
+        for (id, c, ext) in &o.loops {
+            if let Some(e) = loops.iter_mut().find(|(i, _, _)| i == id) {
+                e.1 = e.1.add(c);
+            } else {
+                loops.push((*id, c.clone(), ext.clone()));
+            }
+        }
+        loops.retain(|(_, c, _)| !c.is_zero());
+        Self {
+            block: self.block.add(&o.block),
+            thread: self.thread.add(&o.thread),
+            loops,
+            konst: self.konst.add(&o.konst),
+        }
+    }
+
+    fn neg(&self) -> Self {
+        Self {
+            block: self.block.neg(),
+            thread: self.thread.neg(),
+            loops: self
+                .loops
+                .iter()
+                .map(|(i, c, e)| (*i, c.neg(), e.clone()))
+                .collect(),
+            konst: self.konst.neg(),
+        }
+    }
+
+    /// Multiply by a pure symbolic constant.
+    fn scale(&self, s: &SymConst) -> Self {
+        Self {
+            block: self.block.mul(s),
+            thread: self.thread.mul(s),
+            loops: self
+                .loops
+                .iter()
+                .map(|(i, c, e)| (*i, c.mul(s), e.clone()))
+                .collect(),
+            konst: self.konst.mul(s),
+        }
+    }
+}
+
+/// Result of normalizing one index expression.
+#[derive(Clone, Debug, PartialEq)]
+pub enum IndexForm {
+    /// Affine in (blockIdx, threadIdx, loops) with symbolic coefficients.
+    Affine(LinForm),
+    /// Contains data-dependent or non-affine terms.
+    Irregular,
+}
+
+/// Normalize an expression to affine form (the GEP walk).
+pub fn normalize(e: &Expr) -> IndexForm {
+    use IndexForm::*;
+    match e {
+        Expr::Const(c) => Affine(LinForm::constant(SymConst::constant(*c))),
+        Expr::Param(p) => Affine(LinForm::constant(SymConst::param(p))),
+        Expr::BlockDim => Affine(LinForm::constant(SymConst::param("__blockDim"))),
+        Expr::BlockIdx => Affine(LinForm {
+            block: SymConst::constant(1),
+            ..Default::default()
+        }),
+        Expr::ThreadIdx => Affine(LinForm {
+            thread: SymConst::constant(1),
+            ..Default::default()
+        }),
+        Expr::Loop(id, extent) => match normalize(extent) {
+            Affine(f) if f.is_const() => Affine(LinForm {
+                loops: vec![(*id, SymConst::constant(1), f.konst)],
+                ..Default::default()
+            }),
+            _ => Irregular,
+        },
+        Expr::Indirect => Irregular,
+        Expr::Add(a, b) => match (normalize(a), normalize(b)) {
+            (Affine(x), Affine(y)) => Affine(x.add(&y)),
+            _ => Irregular,
+        },
+        Expr::Sub(a, b) => match (normalize(a), normalize(b)) {
+            (Affine(x), Affine(y)) => Affine(x.add(&y.neg())),
+            _ => Irregular,
+        },
+        Expr::Mul(a, b) => match (normalize(a), normalize(b)) {
+            (Affine(x), Affine(y)) if y.is_const() => Affine(x.scale(&y.konst)),
+            (Affine(x), Affine(y)) if x.is_const() => Affine(y.scale(&x.konst)),
+            _ => Irregular,
+        },
+        // Division/modulo of a pure constant by a pure constant stays
+        // symbolic-constant only when exact at runtime; we conservatively
+        // treat any div/rem with non-constant operands as irregular (the
+        // paper's analysis does the same: such indices are not
+        // runtime-constant-strided).
+        Expr::Div(a, b) | Expr::Rem(a, b) => match (normalize(a), normalize(b)) {
+            (Affine(x), Affine(y)) if x.is_const() && y.is_const() => {
+                // Cannot fold symbolically without values; keep as irregular
+                // unless both are literal integers.
+                match (x.konst.as_const(), y.konst.as_const()) {
+                    (Some(xa), Some(yb)) if yb != 0 => {
+                        let v = if matches!(e, Expr::Div(_, _)) {
+                            xa / yb
+                        } else {
+                            xa % yb
+                        };
+                        Affine(LinForm::constant(SymConst::constant(v)))
+                    }
+                    _ => Irregular,
+                }
+            }
+            _ => Irregular,
+        },
+    }
+}
+
+/// One static memory access in a kernel: `object[index] (elem_size bytes)`.
+#[derive(Clone, Debug)]
+pub struct AccessExpr {
+    pub object: u16,
+    pub index: Expr,
+    pub elem_size: u32,
+}
+
+/// The kernel IR: what the compiler pass sees.
+#[derive(Clone, Debug)]
+pub struct KernelIr {
+    pub name: String,
+    pub accesses: Vec<AccessExpr>,
+}
+
+/// Per-object outcome of the compile-time analysis.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ObjectPattern {
+    /// Runtime-constant inter-block stride; `B` = per-block footprint bytes,
+    /// `stride` = bytes between block b and b+1's footprints.
+    Regular { stride: i64, footprint: i64 },
+    /// Same data accessed by every block (block coefficient zero).
+    BlockInvariant { footprint: i64 },
+    /// Data-dependent or non-affine (falls back to the profiler).
+    Irregular,
+}
+
+/// Run the compile-time analysis for a kernel over all its objects,
+/// evaluating symbolic results with the launch-time parameter values (this
+/// is the "insert instructions in the host code to compute the stride at
+/// runtime" step of §4.3.2).
+pub fn analyze_kernel(ir: &KernelIr, env: &ParamEnv) -> HashMap<u16, ObjectPattern> {
+    let mut per_obj: HashMap<u16, Vec<(&AccessExpr, IndexForm)>> = HashMap::new();
+    for a in &ir.accesses {
+        per_obj.entry(a.object).or_default().push((a, normalize(&a.index)));
+    }
+    let mut out = HashMap::new();
+    for (obj, forms) in per_obj {
+        let mut pattern: Option<ObjectPattern> = None;
+        for (acc, form) in forms {
+            let p = match form {
+                IndexForm::Irregular => ObjectPattern::Irregular,
+                IndexForm::Affine(f) => {
+                    let stride_elems = f.block.eval(env);
+                    // Footprint: index range within one block (threadIdx in
+                    // [0, blockDim), each loop var in [0, extent)).
+                    let thread_span = f.thread.eval(env).abs() * (env.block_dim - 1).max(0);
+                    let loop_span: i64 = f
+                        .loops
+                        .iter()
+                        .map(|(_, c, ext)| c.eval(env).abs() * (ext.eval(env) - 1).max(0))
+                        .sum();
+                    let footprint =
+                        (thread_span + loop_span + 1) * acc.elem_size as i64;
+                    if stride_elems == 0 {
+                        ObjectPattern::BlockInvariant { footprint }
+                    } else {
+                        ObjectPattern::Regular {
+                            stride: stride_elems * acc.elem_size as i64,
+                            footprint,
+                        }
+                    }
+                }
+            };
+            // Merge across the object's accesses: any irregularity poisons;
+            // regular accesses merge by taking the max footprint & stride
+            // (multiple strided views of the same array, e.g. in/out).
+            pattern = Some(match (pattern.take(), p) {
+                (None, p) => p,
+                (Some(ObjectPattern::Irregular), _) | (_, ObjectPattern::Irregular) => {
+                    ObjectPattern::Irregular
+                }
+                (
+                    Some(ObjectPattern::Regular {
+                        stride: s1,
+                        footprint: f1,
+                    }),
+                    ObjectPattern::Regular {
+                        stride: s2,
+                        footprint: f2,
+                    },
+                ) => {
+                    if s1 == s2 {
+                        ObjectPattern::Regular {
+                            stride: s1,
+                            footprint: f1.max(f2),
+                        }
+                    } else {
+                        // Conflicting strides: not a single runtime-constant
+                        // block stride.
+                        ObjectPattern::Irregular
+                    }
+                }
+                (
+                    Some(ObjectPattern::BlockInvariant { footprint: f1 }),
+                    ObjectPattern::BlockInvariant { footprint: f2 },
+                ) => ObjectPattern::BlockInvariant {
+                    footprint: f1.max(f2),
+                },
+                // Mixed invariant + strided views -> shared by all blocks.
+                (Some(ObjectPattern::BlockInvariant { footprint }), _)
+                | (Some(_), ObjectPattern::BlockInvariant { footprint }) => {
+                    ObjectPattern::BlockInvariant { footprint }
+                }
+            });
+        }
+        out.insert(obj, pattern.unwrap());
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Profiler fallback (§4.3.2: "profiler-assisted techniques ... for the case
+// where the access pattern is input-dependent")
+// ---------------------------------------------------------------------------
+
+/// Per-page profile: traffic and the dominant affinity stack.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PageProfile {
+    pub page: u64,
+    pub traffic: u32,
+    pub majority_stack: usize,
+    pub majority_share: f64,
+}
+
+/// Profile-derived estimate for one object.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProfiledPattern {
+    /// Mean distinct bytes touched per thread-block.
+    pub mean_footprint: f64,
+    /// Traffic-weighted fraction of the object's accesses that land on
+    /// pages without a dominant affinity stack (the fraction localization
+    /// cannot help).
+    pub cross_stack_fraction: f64,
+    /// Whether per-block footprints look contiguous & strided.
+    pub looks_strided: bool,
+    /// Estimated per-block stride in bytes (valid if `looks_strided`).
+    pub stride_estimate: f64,
+    /// Per-page traffic + majority stack (placement validation and the
+    /// page-majority fallback).
+    pub pages: Vec<PageProfile>,
+}
+
+/// Per-page access accounting: exact per-stack touch counts (stacks are
+/// few — 4 to 16 — so a small inline array suffices).
+#[derive(Clone, Debug)]
+struct PageCounts {
+    counts: [u32; 16],
+}
+
+impl PageCounts {
+    fn new(stack: usize) -> Self {
+        let mut counts = [0u32; 16];
+        counts[stack & 15] = 1;
+        Self { counts }
+    }
+
+    fn touch(&mut self, stack: usize) {
+        self.counts[stack & 15] += 1;
+    }
+
+    fn total(&self) -> u32 {
+        self.counts.iter().sum()
+    }
+
+    fn majority_share(&self) -> f64 {
+        *self.counts.iter().max().unwrap() as f64 / self.total().max(1) as f64
+    }
+}
+
+/// A page is considered localizable when one stack issues at least this
+/// share of its accesses.
+const MAJORITY_SHARE: f64 = 0.60;
+
+/// Run the trace profiler over a (sample) kernel trace. The profiler
+/// "performs a similar examination as the compile-time analysis" (§4.3.2)
+/// but on observed addresses: per block it records the footprint interval,
+/// then checks inter-block stride consistency (median-based, robust to
+/// boundary halos) and traffic-weighted cross-stack page sharing under the
+/// affinity schedule.
+pub fn profile_trace(
+    trace: &KernelTrace,
+    page_size: u64,
+    affinity: impl Fn(u32) -> usize,
+) -> HashMap<u16, ProfiledPattern> {
+    struct ObjAgg {
+        per_block: HashMap<u32, (u64, u64, u64)>, // block -> (min, max, count)
+        pages: HashMap<u64, PageCounts>,
+    }
+    let mut objs: HashMap<u16, ObjAgg> = HashMap::new();
+    for b in &trace.blocks {
+        let stack = affinity(b.block_id);
+        for a in &b.accesses {
+            let agg = objs.entry(a.obj).or_insert_with(|| ObjAgg {
+                per_block: HashMap::new(),
+                pages: HashMap::new(),
+            });
+            let e = agg
+                .per_block
+                .entry(b.block_id)
+                .or_insert((u64::MAX, 0, 0));
+            e.0 = e.0.min(a.offset);
+            e.1 = e.1.max(a.offset);
+            e.2 += 1;
+            agg.pages
+                .entry(a.offset / page_size)
+                .and_modify(|p| p.touch(stack))
+                .or_insert_with(|| PageCounts::new(stack));
+        }
+    }
+    let mut out = HashMap::new();
+    for (obj, agg) in objs {
+        let mut blocks: Vec<(u32, u64, u64)> = agg
+            .per_block
+            .iter()
+            .map(|(b, (lo, hi, _))| (*b, *lo, *hi))
+            .collect();
+        blocks.sort_unstable_by_key(|x| x.0);
+        let footprints: Vec<f64> = blocks
+            .iter()
+            .map(|(_, lo, hi)| (hi - lo) as f64 + 1.0)
+            .collect();
+        let mean_footprint =
+            footprints.iter().sum::<f64>() / footprints.len().max(1) as f64;
+        // Stride estimate: median of consecutive blocks' min-offset diffs;
+        // strided if >=80% of diffs are within 5% of the median (robust to
+        // halo reads and row-boundary jumps that poison a mean/stddev test).
+        let mut strided = false;
+        let mut stride = 0.0;
+        if blocks.len() >= 2 {
+            let mut diffs: Vec<f64> = blocks
+                .windows(2)
+                .map(|w| w[1].1 as f64 - w[0].1 as f64)
+                .collect();
+            let mut sorted = diffs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = sorted[sorted.len() / 2];
+            if median > 0.0 {
+                let tol = 0.05 * median.max(1.0);
+                let within = diffs.iter().filter(|d| (*d - median).abs() <= tol).count();
+                strided = within as f64 >= 0.8 * diffs.len() as f64;
+                stride = median;
+            }
+            diffs.clear();
+        }
+        // Traffic-weighted cross-stack fraction + per-page majorities.
+        let mut cross_traffic = 0u64;
+        let mut total_traffic = 0u64;
+        let mut pages = Vec::with_capacity(agg.pages.len());
+        for (pg, p) in &agg.pages {
+            let total = p.total();
+            let share = p.majority_share();
+            total_traffic += total as u64;
+            if share < MAJORITY_SHARE {
+                cross_traffic += total as u64;
+            }
+            let majority_stack = p
+                .counts
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, c)| **c)
+                .map(|(s, _)| s)
+                .unwrap_or(0);
+            pages.push(PageProfile {
+                page: *pg,
+                traffic: total,
+                majority_stack,
+                majority_share: share,
+            });
+        }
+        pages.sort_unstable_by_key(|p| p.page);
+        let cross = cross_traffic as f64 / total_traffic.max(1) as f64;
+        out.insert(
+            obj,
+            ProfiledPattern {
+                mean_footprint,
+                cross_stack_fraction: cross,
+                looks_strided: strided,
+                stride_estimate: stride,
+                pages,
+            },
+        );
+    }
+    out
+}
+
+/// Estimate the graph-regularity statistics of §6.4 from basic graph
+/// properties: mean edges per block (mu), its standard deviation (sigma),
+/// and the coefficient of variation sigma/mu used to predict CODA's
+/// effectiveness before kernel invocation.
+pub fn graph_regularity(degrees: &[u32], threads_per_block: usize) -> (f64, f64, f64) {
+    if degrees.is_empty() || threads_per_block == 0 {
+        return (0.0, 0.0, 0.0);
+    }
+    let per_block: Vec<f64> = degrees
+        .chunks(threads_per_block)
+        .map(|c| c.iter().map(|&d| d as f64).sum())
+        .collect();
+    let mu = crate::stats::mean(&per_block);
+    let sigma = crate::stats::stddev(&per_block);
+    (mu, sigma, if mu == 0.0 { 0.0 } else { sigma / mu })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Access, BlockTrace, ObjectDesc};
+
+    /// The paper's Fig 7 K-means kernel:
+    /// `in[pid * nfeatures + i]`, i in [0, nfeatures).
+    fn kmeans_in_access() -> AccessExpr {
+        AccessExpr {
+            object: 0,
+            index: Expr::add(
+                Expr::mul(Expr::pid(), Expr::Param("nfeatures")),
+                Expr::Loop(0, Box::new(Expr::Param("nfeatures"))),
+            ),
+            elem_size: 4,
+        }
+    }
+
+    #[test]
+    fn kmeans_fig7_regular_with_paper_b_value() {
+        // Paper: "blockDim.x * nfeatures * sizeof(float) is the B value".
+        let ir = KernelIr {
+            name: "kmeans".into(),
+            accesses: vec![kmeans_in_access()],
+        };
+        let env = ParamEnv::new(256).with("nfeatures", 34);
+        let res = analyze_kernel(&ir, &env);
+        match res[&0] {
+            ObjectPattern::Regular { stride, footprint } => {
+                assert_eq!(stride, 256 * 34 * 4, "block stride = blockDim*nfeatures*4");
+                // footprint spans the whole block's elements:
+                // threadIdx span (255 * 34) + loop span (33) + 1 elements.
+                assert_eq!(footprint, (255 * 34 + 33 + 1) * 4);
+                // B is within one element of blockDim*nfeatures*4.
+                assert!((footprint - 256 * 34 * 4).abs() <= 4);
+            }
+            ref p => panic!("expected regular, got {p:?}"),
+        }
+    }
+
+    #[test]
+    fn kmeans_out_transposed_is_irregular() {
+        // Fig 7's out[i*npoints + pid]: loop coefficient = npoints, thread
+        // coefficient 1 -> affine and strided by blockDim elements. The
+        // paper treats this as analyzable too (stride blockDim * 4).
+        let ir = KernelIr {
+            name: "kmeans_out".into(),
+            accesses: vec![AccessExpr {
+                object: 1,
+                index: Expr::add(
+                    Expr::mul(
+                        Expr::Loop(0, Box::new(Expr::Param("nfeatures"))),
+                        Expr::Param("npoints"),
+                    ),
+                    Expr::pid(),
+                ),
+                elem_size: 4,
+            }],
+        };
+        let env = ParamEnv::new(256).with("nfeatures", 34).with("npoints", 10000);
+        let res = analyze_kernel(&ir, &env);
+        match res[&1] {
+            ObjectPattern::Regular { stride, .. } => assert_eq!(stride, 256 * 4),
+            ref p => panic!("expected regular, got {p:?}"),
+        }
+    }
+
+    #[test]
+    fn indirect_access_is_irregular() {
+        // CSR neighbor access: data[col_index[j]] — data-dependent.
+        let ir = KernelIr {
+            name: "spmv".into(),
+            accesses: vec![AccessExpr {
+                object: 0,
+                index: Expr::Indirect,
+                elem_size: 8,
+            }],
+        };
+        let env = ParamEnv::new(128);
+        assert_eq!(analyze_kernel(&ir, &env)[&0], ObjectPattern::Irregular);
+    }
+
+    #[test]
+    fn block_invariant_detected() {
+        // A lookup table indexed only by threadIdx: same pages for every
+        // block -> shared -> FGP.
+        let ir = KernelIr {
+            name: "lut".into(),
+            accesses: vec![AccessExpr {
+                object: 3,
+                index: Expr::ThreadIdx,
+                elem_size: 4,
+            }],
+        };
+        let env = ParamEnv::new(64);
+        match analyze_kernel(&ir, &env)[&3] {
+            ObjectPattern::BlockInvariant { footprint } => assert_eq!(footprint, 64 * 4),
+            ref p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn conflicting_strides_poison() {
+        let a1 = AccessExpr {
+            object: 0,
+            index: Expr::mul(Expr::BlockIdx, Expr::Const(100)),
+            elem_size: 4,
+        };
+        let a2 = AccessExpr {
+            object: 0,
+            index: Expr::mul(Expr::BlockIdx, Expr::Const(7)),
+            elem_size: 4,
+        };
+        let ir = KernelIr {
+            name: "conflict".into(),
+            accesses: vec![a1, a2],
+        };
+        let env = ParamEnv::new(32);
+        assert_eq!(analyze_kernel(&ir, &env)[&0], ObjectPattern::Irregular);
+    }
+
+    #[test]
+    fn div_rem_folding() {
+        assert_eq!(
+            normalize(&Expr::Div(Box::new(Expr::Const(10)), Box::new(Expr::Const(3)))),
+            IndexForm::Affine(LinForm::constant(SymConst::constant(3)))
+        );
+        assert_eq!(
+            normalize(&Expr::Rem(Box::new(Expr::BlockIdx), Box::new(Expr::Const(4)))),
+            IndexForm::Irregular
+        );
+    }
+
+    #[test]
+    fn profiler_detects_strided_partitioning() {
+        // Blocks 0..8 each touch a contiguous 4KB slice of object 0.
+        let blocks = (0..8u32)
+            .map(|b| BlockTrace {
+                block_id: b,
+                accesses: (0..32u64)
+                    .map(|i| Access {
+                        obj: 0,
+                        offset: b as u64 * 4096 + i * 128,
+                        write: false,
+                    })
+                    .collect(),
+            })
+            .collect();
+        let t = KernelTrace {
+            name: "p".into(),
+            threads_per_block: 64,
+            objects: vec![ObjectDesc {
+                name: "o".into(),
+                bytes: 8 * 4096,
+            }],
+            blocks,
+        };
+        let prof = profile_trace(&t, 4096, |b| (b / 2) as usize % 4);
+        let p = &prof[&0];
+        assert!(p.looks_strided);
+        assert!((p.stride_estimate - 4096.0).abs() < 1.0);
+        assert_eq!(p.cross_stack_fraction, 0.0);
+        assert!((p.mean_footprint - (31.0 * 128.0 + 1.0)).abs() < 1.0);
+    }
+
+    #[test]
+    fn profiler_detects_shared_object() {
+        // Every block touches the same page.
+        let blocks = (0..8u32)
+            .map(|b| BlockTrace {
+                block_id: b,
+                accesses: vec![Access {
+                    obj: 0,
+                    offset: 0,
+                    write: false,
+                }],
+            })
+            .collect();
+        let t = KernelTrace {
+            name: "s".into(),
+            threads_per_block: 64,
+            objects: vec![ObjectDesc {
+                name: "o".into(),
+                bytes: 4096,
+            }],
+            blocks,
+        };
+        let prof = profile_trace(&t, 4096, |b| b as usize % 4);
+        let p = &prof[&0];
+        assert!(p.cross_stack_fraction > 0.99);
+        assert!(!p.looks_strided);
+    }
+
+    #[test]
+    fn graph_regularity_cv() {
+        let regular = vec![4u32; 1024];
+        let (_, _, cv) = graph_regularity(&regular, 64);
+        assert!(cv < 1e-9);
+        let mut skewed = vec![1u32; 1024];
+        skewed[0] = 10_000;
+        let (_, _, cv2) = graph_regularity(&skewed, 64);
+        assert!(cv2 > 1.0);
+    }
+}

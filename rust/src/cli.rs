@@ -1,0 +1,99 @@
+//! Command-line parsing (the `clap` crate is not vendored in this
+//! environment; this is a small, conventional GNU-style parser: positional
+//! subcommand, `--flag`, `--key value` / `--key=value`).
+
+use anyhow::bail;
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `value_opts` lists option names that take a value.
+    pub fn parse(argv: &[String], value_opts: &[&str]) -> crate::Result<Self> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if value_opts.contains(&name) {
+                    i += 1;
+                    if i >= argv.len() {
+                        bail!("--{name} expects a value");
+                    }
+                    out.options.insert(name.to_string(), argv[i].clone());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> crate::Result<T> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for --{name}: {v}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(
+            &argv(&["run", "PR", "--mechanism", "coda", "--json", "--set=seed=7"]),
+            &["mechanism"],
+        )
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["PR"]);
+        assert_eq!(a.opt("mechanism"), Some("coda"));
+        assert!(a.has_flag("json"));
+        assert_eq!(a.opt("set"), Some("seed=7"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv(&["run", "--mechanism"]), &["mechanism"]).is_err());
+    }
+
+    #[test]
+    fn opt_parse_defaults_and_errors() {
+        let a = Args::parse(&argv(&["x", "--n", "5"]), &["n"]).unwrap();
+        assert_eq!(a.opt_parse("n", 1usize).unwrap(), 5);
+        assert_eq!(a.opt_parse("missing", 9usize).unwrap(), 9);
+        let b = Args::parse(&argv(&["x", "--n", "zzz"]), &["n"]).unwrap();
+        assert!(b.opt_parse::<usize>("n", 1).is_err());
+    }
+}

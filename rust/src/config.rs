@@ -1,0 +1,366 @@
+//! System configuration (Table 1 of the paper) and a minimal TOML-subset
+//! loader so deployments can override any field from a file or `key=value`
+//! CLI overrides without a `serde`/`toml` dependency (not vendored here).
+//!
+//! The defaults reproduce the paper's evaluated system: 4 HBM2 stacks of
+//! 8 GB, 4 SMs per stack, 256 GB/s internal bandwidth per stack, 128 GB/s
+//! aggregate host bandwidth, 16 GB/s remote bandwidth, 128 B fine-grain
+//! interleaving and 4 KB pages.
+
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+
+/// Full system configuration. All bandwidths are aggregate GB/s; the
+/// simulator converts to bytes/cycle at `sm_clock_ghz`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    // --- topology -------------------------------------------------------
+    /// Number of memory stacks (power of two).
+    pub num_stacks: usize,
+    /// SMs on each stack's logic layer.
+    pub sms_per_stack: usize,
+    /// Thread-blocks resident per SM (occupancy bound).
+    pub blocks_per_sm: usize,
+    /// HBM capacity per stack in bytes.
+    pub stack_capacity: u64,
+
+    // --- clocks ---------------------------------------------------------
+    /// SM clock; the simulator's cycle domain.
+    pub sm_clock_ghz: f64,
+
+    // --- interleaving ---------------------------------------------------
+    /// Fine-grain interleaving granularity in bytes (FGP stripe).
+    pub fgp_interleave: u64,
+    /// OS page size (CGP granularity).
+    pub page_size: u64,
+
+    // --- bandwidths (GB/s, aggregate) ------------------------------------
+    /// Internal bandwidth available to the SMs within one stack.
+    pub local_bw_gbs: f64,
+    /// Aggregate host-processor <-> stacks bandwidth.
+    pub host_bw_gbs: f64,
+    /// Aggregate stack <-> stack (remote) bandwidth.
+    pub remote_bw_gbs: f64,
+
+    // --- latencies (ns, unloaded) ----------------------------------------
+    /// Local crossbar + TSV latency.
+    pub local_latency_ns: f64,
+    /// Host SerDes + link latency.
+    pub host_latency_ns: f64,
+    /// Remote link latency per hop (SerDes + routing).
+    pub remote_latency_ns: f64,
+    /// DRAM service latency (row hit).
+    pub dram_hit_ns: f64,
+    /// DRAM service latency (row miss: precharge + activate + CAS).
+    pub dram_miss_ns: f64,
+
+    // --- memory organization ---------------------------------------------
+    /// HBM channels per stack.
+    pub channels_per_stack: usize,
+    /// Banks per channel (row-buffer locality model).
+    pub banks_per_channel: usize,
+    /// DRAM row (page) size in bytes per bank.
+    pub row_size: u64,
+
+    // --- caches / TLB ------------------------------------------------------
+    /// Cache line size in bytes (memory request granularity).
+    pub line_size: u64,
+    /// SM L1 TLB entries.
+    pub tlb_entries: usize,
+    /// TLB miss penalty (page-walk) in ns.
+    pub tlb_miss_ns: f64,
+    /// Per-SM L1 hit rate model knob: fraction of accesses filtered before
+    /// the memory system (the paper's 32KB L1 + 1MB L2/stack). Workload
+    /// generators emit post-L1 traffic; this filters a further L2 fraction.
+    pub l2_hit_rate: f64,
+    /// L2 hit latency in ns.
+    pub l2_hit_ns: f64,
+
+    // --- execution model ----------------------------------------------------
+    /// Outstanding memory requests per thread-block (warp-level MLP).
+    pub mlp_per_block: usize,
+    /// Compute cycles between consecutive memory accesses of a block.
+    pub compute_cycles_per_access: u64,
+
+    // --- misc ----------------------------------------------------------------
+    /// Global PRNG seed for workload synthesis.
+    pub seed: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            num_stacks: 4,
+            sms_per_stack: 4,
+            blocks_per_sm: 6,
+            stack_capacity: 8 << 30,
+            sm_clock_ghz: 2.0,
+            fgp_interleave: 128,
+            page_size: 4096,
+            local_bw_gbs: 256.0,
+            host_bw_gbs: 128.0,
+            remote_bw_gbs: 16.0,
+            local_latency_ns: 20.0,
+            host_latency_ns: 60.0,
+            remote_latency_ns: 120.0,
+            dram_hit_ns: 15.0,
+            dram_miss_ns: 45.0,
+            channels_per_stack: 8,
+            banks_per_channel: 16,
+            row_size: 2048,
+            line_size: 128,
+            tlb_entries: 64,
+            tlb_miss_ns: 200.0,
+            l2_hit_rate: 0.30,
+            l2_hit_ns: 5.0,
+            mlp_per_block: 32,
+            compute_cycles_per_access: 440,
+            seed: 0xC0DA,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Total SMs in the NDP system.
+    pub fn total_sms(&self) -> usize {
+        self.num_stacks * self.sms_per_stack
+    }
+
+    /// `N_blocks_per_stack` from the paper's Eq (1): thread-blocks that run
+    /// concurrently in one memory stack.
+    pub fn blocks_per_stack(&self) -> usize {
+        self.sms_per_stack * self.blocks_per_sm
+    }
+
+    /// Pages per page-group: an FGP stripes across all stacks, so groups of
+    /// `num_stacks` consecutive pages convert FGP<->CGP together (§4.2).
+    pub fn page_group_len(&self) -> usize {
+        self.num_stacks
+    }
+
+    /// Cycles per nanosecond in the SM clock domain.
+    pub fn cycles_per_ns(&self) -> f64 {
+        self.sm_clock_ghz
+    }
+
+    /// Convert an aggregate GB/s figure to bytes per SM cycle.
+    pub fn gbs_to_bytes_per_cycle(&self, gbs: f64) -> f64 {
+        gbs / self.sm_clock_ghz
+    }
+
+    /// Validate invariants the rest of the system relies on.
+    pub fn validate(&self) -> crate::Result<()> {
+        if !self.num_stacks.is_power_of_two() {
+            bail!("num_stacks must be a power of two, got {}", self.num_stacks);
+        }
+        if !self.page_size.is_power_of_two() || !self.fgp_interleave.is_power_of_two() {
+            bail!("page_size and fgp_interleave must be powers of two");
+        }
+        if self.fgp_interleave * self.num_stacks as u64 > self.page_size {
+            bail!(
+                "one FGP stripe round ({} B x {} stacks) must fit in a page ({} B)",
+                self.fgp_interleave,
+                self.num_stacks,
+                self.page_size
+            );
+        }
+        if self.line_size > self.fgp_interleave {
+            bail!("line_size must not exceed fgp_interleave");
+        }
+        if !(0.0..=1.0).contains(&self.l2_hit_rate) {
+            bail!("l2_hit_rate must be in [0,1]");
+        }
+        if self.mlp_per_block == 0 || self.blocks_per_sm == 0 || self.sms_per_stack == 0 {
+            bail!("mlp_per_block, blocks_per_sm, sms_per_stack must be positive");
+        }
+        Ok(())
+    }
+
+    /// Apply a single `key = value` override (used by both the TOML-subset
+    /// loader and `--set` CLI flags).
+    pub fn set(&mut self, key: &str, value: &str) -> crate::Result<()> {
+        let v = value.trim().trim_matches('"');
+        macro_rules! parse {
+            ($field:ident, $ty:ty) => {
+                self.$field = v
+                    .parse::<$ty>()
+                    .with_context(|| format!("bad value for {key}: {v}"))?
+            };
+        }
+        match key {
+            "num_stacks" => parse!(num_stacks, usize),
+            "sms_per_stack" => parse!(sms_per_stack, usize),
+            "blocks_per_sm" => parse!(blocks_per_sm, usize),
+            "stack_capacity" => parse!(stack_capacity, u64),
+            "sm_clock_ghz" => parse!(sm_clock_ghz, f64),
+            "fgp_interleave" => parse!(fgp_interleave, u64),
+            "page_size" => parse!(page_size, u64),
+            "local_bw_gbs" => parse!(local_bw_gbs, f64),
+            "host_bw_gbs" => parse!(host_bw_gbs, f64),
+            "remote_bw_gbs" => parse!(remote_bw_gbs, f64),
+            "local_latency_ns" => parse!(local_latency_ns, f64),
+            "host_latency_ns" => parse!(host_latency_ns, f64),
+            "remote_latency_ns" => parse!(remote_latency_ns, f64),
+            "dram_hit_ns" => parse!(dram_hit_ns, f64),
+            "dram_miss_ns" => parse!(dram_miss_ns, f64),
+            "channels_per_stack" => parse!(channels_per_stack, usize),
+            "banks_per_channel" => parse!(banks_per_channel, usize),
+            "row_size" => parse!(row_size, u64),
+            "line_size" => parse!(line_size, u64),
+            "tlb_entries" => parse!(tlb_entries, usize),
+            "tlb_miss_ns" => parse!(tlb_miss_ns, f64),
+            "l2_hit_rate" => parse!(l2_hit_rate, f64),
+            "l2_hit_ns" => parse!(l2_hit_ns, f64),
+            "mlp_per_block" => parse!(mlp_per_block, usize),
+            "compute_cycles_per_access" => parse!(compute_cycles_per_access, u64),
+            "seed" => parse!(seed, u64),
+            _ => bail!("unknown config key: {key}"),
+        }
+        Ok(())
+    }
+
+    /// Load from TOML-subset text: `key = value` lines, `#` comments,
+    /// optional `[section]` headers (ignored — the namespace is flat).
+    pub fn from_toml_str(text: &str) -> crate::Result<Self> {
+        let mut cfg = Self::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            cfg.set(k.trim(), v)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load a config file.
+    pub fn from_file(path: &str) -> crate::Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Serialize to TOML-subset text (round-trips through
+    /// [`Self::from_toml_str`]).
+    pub fn to_toml_string(&self) -> String {
+        let mut out = String::from("# CODA system configuration (Table 1)\n");
+        let kv: BTreeMap<&str, String> = [
+            ("num_stacks", self.num_stacks.to_string()),
+            ("sms_per_stack", self.sms_per_stack.to_string()),
+            ("blocks_per_sm", self.blocks_per_sm.to_string()),
+            ("stack_capacity", self.stack_capacity.to_string()),
+            ("sm_clock_ghz", self.sm_clock_ghz.to_string()),
+            ("fgp_interleave", self.fgp_interleave.to_string()),
+            ("page_size", self.page_size.to_string()),
+            ("local_bw_gbs", self.local_bw_gbs.to_string()),
+            ("host_bw_gbs", self.host_bw_gbs.to_string()),
+            ("remote_bw_gbs", self.remote_bw_gbs.to_string()),
+            ("local_latency_ns", self.local_latency_ns.to_string()),
+            ("host_latency_ns", self.host_latency_ns.to_string()),
+            ("remote_latency_ns", self.remote_latency_ns.to_string()),
+            ("dram_hit_ns", self.dram_hit_ns.to_string()),
+            ("dram_miss_ns", self.dram_miss_ns.to_string()),
+            ("channels_per_stack", self.channels_per_stack.to_string()),
+            ("banks_per_channel", self.banks_per_channel.to_string()),
+            ("row_size", self.row_size.to_string()),
+            ("line_size", self.line_size.to_string()),
+            ("tlb_entries", self.tlb_entries.to_string()),
+            ("tlb_miss_ns", self.tlb_miss_ns.to_string()),
+            ("l2_hit_rate", self.l2_hit_rate.to_string()),
+            ("l2_hit_ns", self.l2_hit_ns.to_string()),
+            ("mlp_per_block", self.mlp_per_block.to_string()),
+            (
+                "compute_cycles_per_access",
+                self.compute_cycles_per_access.to_string(),
+            ),
+            ("tlb_miss_ns", self.tlb_miss_ns.to_string()),
+            ("seed", self.seed.to_string()),
+        ]
+        .into_iter()
+        .collect();
+        for (k, v) in kv {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        out
+    }
+
+    /// A scaled-down preset for fast unit tests (64 MB stacks).
+    pub fn test_small() -> Self {
+        Self {
+            stack_capacity: 64 << 20,
+            ..Self::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table1() {
+        let c = SystemConfig::default();
+        assert_eq!(c.num_stacks, 4);
+        assert_eq!(c.sms_per_stack, 4);
+        assert_eq!(c.stack_capacity, 8 << 30);
+        assert_eq!(c.local_bw_gbs, 256.0);
+        assert_eq!(c.host_bw_gbs, 128.0);
+        assert_eq!(c.remote_bw_gbs, 16.0);
+        assert_eq!(c.fgp_interleave, 128);
+        assert_eq!(c.page_size, 4096);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn blocks_per_stack_eq1_example() {
+        // Paper: "if one memory stack has four SMs and each of which can run
+        // six thread-blocks, N_blocks_per_stack is 24."
+        let c = SystemConfig::default();
+        assert_eq!(c.blocks_per_stack(), 24);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = SystemConfig::default();
+        let text = c.to_toml_string();
+        let c2 = SystemConfig::from_toml_str(&text).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn toml_overrides_and_comments() {
+        let text = "# comment\n[network]\nremote_bw_gbs = 64.0 # inline\nnum_stacks = 8\n";
+        let c = SystemConfig::from_toml_str(text).unwrap();
+        assert_eq!(c.remote_bw_gbs, 64.0);
+        assert_eq!(c.num_stacks, 8);
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        assert!(SystemConfig::from_toml_str("nope = 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_non_pow2_stacks() {
+        let mut c = SystemConfig::default();
+        c.num_stacks = 3;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_stripe_overflow() {
+        let mut c = SystemConfig::default();
+        c.fgp_interleave = 2048; // 2048*4 > 4096
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn set_rejects_garbage_value() {
+        let mut c = SystemConfig::default();
+        assert!(c.set("num_stacks", "four").is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! The CODA coordinator: the end-to-end runtime that ties the pieces
+//! together the way the paper's system does.
+//!
+//! For a kernel launch it (1) runs the compile-time symbolic analysis when
+//! the workload ships IR, (2) profiles a trace sample for the irregular
+//! objects, (3) builds the placement plan (Eq 2/3 or a baseline), (4) maps
+//! the objects into virtual memory through the page-group-aware allocator,
+//! and (5) simulates execution under the matching scheduling policy. The
+//! same coordinator drives every baseline so comparisons are
+//! apples-to-apples.
+
+use crate::analysis::{analyze_kernel, profile_trace, ObjectPattern};
+use crate::config::SystemConfig;
+use crate::placement::{self, PlacementPlan};
+use crate::sched::{affinity_stack, Policy};
+use crate::sim::{map_objects, KernelRun};
+use crate::stats::RunReport;
+use crate::workloads::BuiltWorkload;
+use std::collections::HashMap;
+
+/// The mechanisms of §6 (Fig 8/14 plus the footnote-6 migration variant
+/// and the work-stealing extension of §4.3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mechanism {
+    /// Baseline: everything fine-grain interleaved, blocks to any SM.
+    FgpOnly,
+    /// Every page coarse-grain, circular stack order, blocks to any SM.
+    CgpOnly,
+    /// CGP with oracle first-touch page placement + affinity schedule.
+    CgpFta,
+    /// Pages migrate to the first-touching stack at runtime.
+    MigrationFta,
+    /// The paper's mechanism: analysis-driven placement + affinity.
+    Coda,
+    /// Fig 14's isolation: FGP data placement but affinity scheduling.
+    FgpAffinity,
+    /// CODA with the work-stealing scheduler extension.
+    CodaStealing,
+}
+
+impl Mechanism {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mechanism::FgpOnly => "FGP-Only",
+            Mechanism::CgpOnly => "CGP-Only",
+            Mechanism::CgpFta => "CGP-Only+FTA",
+            Mechanism::MigrationFta => "Migration-FTA",
+            Mechanism::Coda => "CODA",
+            Mechanism::FgpAffinity => "FGP-Only+Affinity",
+            Mechanism::CodaStealing => "CODA+Stealing",
+        }
+    }
+
+    /// Scheduling policy each mechanism uses.
+    pub fn policy(&self) -> Policy {
+        match self {
+            Mechanism::FgpOnly | Mechanism::CgpOnly => Policy::Baseline,
+            Mechanism::CodaStealing => Policy::AffinityStealing,
+            _ => Policy::Affinity,
+        }
+    }
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    cfg: SystemConfig,
+}
+
+impl Coordinator {
+    pub fn new(cfg: SystemConfig) -> Self {
+        Self { cfg }
+    }
+
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// Build the placement plan a mechanism uses for a workload.
+    pub fn plan_for(&self, wl: &BuiltWorkload, mech: Mechanism) -> PlacementPlan {
+        let n = wl.trace.objects.len();
+        match mech {
+            Mechanism::FgpOnly | Mechanism::FgpAffinity => PlacementPlan::all_fgp(n),
+            Mechanism::CgpOnly => placement::cgp_only_plan(n, &self.cfg),
+            Mechanism::CgpFta => placement::fta_plan(&wl.trace, &self.cfg),
+            Mechanism::MigrationFta => placement::migration_fta_plan(n),
+            Mechanism::Coda | Mechanism::CodaStealing => {
+                // Compile-time analysis where IR exists...
+                let compile: HashMap<u16, ObjectPattern> = wl
+                    .ir
+                    .as_ref()
+                    .map(|ir| analyze_kernel(ir, &wl.env))
+                    .unwrap_or_default();
+                // ...profiler for the rest (§4.3.2's fallback). The
+                // profiler sees a trace sample, as a real profiling run
+                // would.
+                let cfg = &self.cfg;
+                let profile =
+                    profile_trace(&wl.trace, cfg.page_size, |b| affinity_stack(b, cfg));
+                placement::coda_plan(n, &compile, &profile, cfg)
+            }
+        }
+    }
+
+    /// Fraction of a workload's accesses that land on objects the plan
+    /// localizes (CGP or page-overridden).
+    fn localizable_traffic(&self, wl: &BuiltWorkload, plan: &PlacementPlan) -> f64 {
+        let mut per_obj = vec![0u64; wl.trace.objects.len()];
+        for b in &wl.trace.blocks {
+            for a in &b.accesses {
+                per_obj[a.obj as usize] += 1;
+            }
+        }
+        let total: u64 = per_obj.iter().sum();
+        let localized: u64 = per_obj
+            .iter()
+            .enumerate()
+            .filter(|(o, _)| {
+                !matches!(plan.per_object[*o], crate::placement::Placement::Fgp)
+            })
+            .map(|(_, n)| *n)
+            .sum();
+        if total == 0 {
+            0.0
+        } else {
+            localized as f64 / total as f64
+        }
+    }
+
+    /// Run one workload under one mechanism.
+    pub fn run(&self, wl: &BuiltWorkload, mech: Mechanism) -> crate::Result<RunReport> {
+        let mut plan = self.plan_for(wl, mech);
+        let mut policy = mech.policy();
+        // §6.4's no-degradation guarantee: when nothing meaningful is
+        // localizable, CODA's plan degenerates to the baseline's — all-FGP
+        // placement with unrestricted scheduling — so sharing-dominated
+        // workloads behave exactly like FGP-Only.
+        if matches!(mech, Mechanism::Coda | Mechanism::CodaStealing)
+            && self.localizable_traffic(wl, &plan) < 0.05
+        {
+            plan = PlacementPlan::all_fgp(wl.trace.objects.len());
+            policy = crate::sched::Policy::Baseline;
+        }
+        let (mut vm, bases, cgp_pages, fgp_pages) = map_objects(&self.cfg, &wl.trace, &plan)?;
+        let mut report = KernelRun {
+            cfg: &self.cfg,
+            trace: &wl.trace,
+            vm: &mut vm,
+            obj_base: &bases,
+            policy,
+            migrate_on_first_touch: plan.migrate_on_first_touch,
+        }
+        .run();
+        report.mechanism = mech.name().into();
+        report.cgp_pages = cgp_pages;
+        report.fgp_pages = fgp_pages;
+        Ok(report)
+    }
+
+    /// Run a workload under several mechanisms (sharing the generated
+    /// trace), returning reports in the same order.
+    pub fn compare(
+        &self,
+        wl: &BuiltWorkload,
+        mechs: &[Mechanism],
+    ) -> crate::Result<Vec<RunReport>> {
+        mechs.iter().map(|m| self.run(wl, *m)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::suite;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::test_small()
+    }
+
+    #[test]
+    fn coda_beats_fgp_on_block_exclusive() {
+        let c = cfg();
+        let coord = Coordinator::new(c.clone());
+        let wl = suite::build("DC", &c).unwrap();
+        let fgp = coord.run(&wl, Mechanism::FgpOnly).unwrap();
+        let coda = coord.run(&wl, Mechanism::Coda).unwrap();
+        assert!(
+            coda.speedup_over(&fgp) > 1.05,
+            "speedup {}",
+            coda.speedup_over(&fgp)
+        );
+        assert!(coda.remote_reduction_over(&fgp) > 0.3);
+    }
+
+    #[test]
+    fn coda_never_slower_than_fgp_on_sharing() {
+        // §6.4: "CODA does not degrade performance in any case" — sharing
+        // objects stay FGP, so the plan degenerates to the baseline's.
+        let c = cfg();
+        let coord = Coordinator::new(c.clone());
+        let wl = suite::build("HS3D", &c).unwrap();
+        let fgp = coord.run(&wl, Mechanism::FgpOnly).unwrap();
+        let coda = coord.run(&wl, Mechanism::Coda).unwrap();
+        assert!(coda.speedup_over(&fgp) > 0.9);
+    }
+
+    #[test]
+    fn coda_uses_cgp_for_exclusive_fgp_for_shared() {
+        let c = cfg();
+        let coord = Coordinator::new(c.clone());
+        let wl = suite::build("KM", &c).unwrap();
+        let plan = coord.plan_for(&wl, Mechanism::Coda);
+        use crate::placement::Placement;
+        // features (obj 0) localized; clusters (obj 2) distributed.
+        assert!(matches!(plan.per_object[0], Placement::Cgp { .. }));
+        assert_eq!(plan.per_object[2], Placement::Fgp);
+    }
+
+    #[test]
+    fn all_mechanisms_run_on_one_workload() {
+        let c = cfg();
+        let coord = Coordinator::new(c.clone());
+        let wl = suite::build("NN", &c).unwrap();
+        for m in [
+            Mechanism::FgpOnly,
+            Mechanism::CgpOnly,
+            Mechanism::CgpFta,
+            Mechanism::MigrationFta,
+            Mechanism::Coda,
+            Mechanism::FgpAffinity,
+            Mechanism::CodaStealing,
+        ] {
+            let r = coord.run(&wl, m).unwrap();
+            assert!(r.cycles > 0.0, "{}", m.name());
+            assert_eq!(
+                r.accesses.ndp_total() + r.accesses.l2_hits,
+                wl.total_accesses(),
+                "{}",
+                m.name()
+            );
+        }
+    }
+
+    #[test]
+    fn reports_are_deterministic() {
+        let c = cfg();
+        let coord = Coordinator::new(c.clone());
+        let wl = suite::build("KM", &c).unwrap();
+        let a = coord.run(&wl, Mechanism::Coda).unwrap();
+        let b = coord.run(&wl, Mechanism::Coda).unwrap();
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.accesses, b.accesses);
+    }
+}

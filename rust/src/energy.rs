@@ -1,0 +1,150 @@
+//! Energy accounting — the paper's second motivating metric ("performance
+//! **and energy efficiency**", §1). Off-chip SerDes crossings cost an
+//! order of magnitude more energy per bit than on-stack TSV transfers, so
+//! remote-access reduction translates directly into interconnect energy
+//! savings; this module turns a [`RunReport`]'s traffic counters into
+//! picojoule estimates.
+//!
+//! Coefficients follow the published NDP literature (HMC/HBM-era numbers
+//! commonly used in the paper's citations [4, 39]):
+//! DRAM core access ≈ 4 pJ/bit, TSV/on-stack link ≈ 0.1 pJ/bit, off-chip
+//! SerDes link ≈ 2–6 pJ/bit per crossing. All are configurable.
+
+use crate::stats::RunReport;
+
+/// Energy coefficients in picojoules per bit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnergyModel {
+    /// DRAM array access (activate + read/write amortized).
+    pub dram_pj_per_bit: f64,
+    /// On-stack TSV + crossbar transfer.
+    pub local_pj_per_bit: f64,
+    /// One off-chip SerDes crossing (remote links; two per hop-pair).
+    pub serdes_pj_per_bit: f64,
+    /// Host link crossing.
+    pub host_pj_per_bit: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self {
+            dram_pj_per_bit: 4.0,
+            local_pj_per_bit: 0.1,
+            serdes_pj_per_bit: 4.0,
+            host_pj_per_bit: 2.0,
+        }
+    }
+}
+
+/// Energy breakdown of one run, in microjoules.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyReport {
+    pub dram_uj: f64,
+    pub local_uj: f64,
+    pub remote_uj: f64,
+    pub host_uj: f64,
+}
+
+impl EnergyReport {
+    pub fn total_uj(&self) -> f64 {
+        self.dram_uj + self.local_uj + self.remote_uj + self.host_uj
+    }
+}
+
+impl EnergyModel {
+    /// Estimate interconnect + DRAM energy for a simulated run.
+    ///
+    /// `line_size` is the access granularity the counters were taken at.
+    pub fn estimate(&self, r: &RunReport, line_size: u64) -> EnergyReport {
+        let bits = |n: u64| (n * line_size * 8) as f64;
+        let pj_to_uj = 1e-6;
+        // Every served access pays DRAM + one local (on-stack) transfer at
+        // the owning stack; remote accesses additionally pay the request
+        // and response SerDes crossings (4 crossings: out+in each way).
+        let dram_bits = bits(r.accesses.local + r.accesses.remote + r.accesses.host);
+        let local_bits = bits(r.accesses.local + r.accesses.remote);
+        let remote_bits = bits(r.accesses.remote) * 4.0;
+        let host_bits = bits(r.accesses.host) * 2.0;
+        EnergyReport {
+            dram_uj: dram_bits * self.dram_pj_per_bit * pj_to_uj,
+            local_uj: local_bits * self.local_pj_per_bit * pj_to_uj,
+            remote_uj: remote_bits * self.serdes_pj_per_bit * pj_to_uj,
+            host_uj: host_bits * self.host_pj_per_bit * pj_to_uj,
+        }
+    }
+
+    /// Interconnect+DRAM energy-efficiency improvement of `run` over
+    /// `baseline` (>1 means `run` uses less energy).
+    pub fn improvement(&self, run: &RunReport, baseline: &RunReport, line_size: u64) -> f64 {
+        let a = self.estimate(baseline, line_size).total_uj();
+        let b = self.estimate(run, line_size).total_uj();
+        if b == 0.0 {
+            1.0
+        } else {
+            a / b
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::AccessStats;
+
+    fn report(local: u64, remote: u64) -> RunReport {
+        RunReport {
+            accesses: AccessStats {
+                local,
+                remote,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn remote_accesses_dominate_interconnect_energy() {
+        let m = EnergyModel::default();
+        let all_local = m.estimate(&report(1000, 0), 128);
+        let all_remote = m.estimate(&report(0, 1000), 128);
+        assert!(all_remote.remote_uj > 100.0 * all_local.remote_uj.max(1e-12));
+        assert!(all_remote.total_uj() > 2.0 * all_local.total_uj());
+        // DRAM energy is placement-invariant.
+        assert!((all_local.dram_uj - all_remote.dram_uj).abs() < 1e-9);
+    }
+
+    #[test]
+    fn improvement_tracks_remote_reduction() {
+        let m = EnergyModel::default();
+        let fgp = report(250, 750);
+        let coda = report(950, 50);
+        let imp = m.improvement(&coda, &fgp, 128);
+        assert!(imp > 1.5, "improvement {imp}");
+    }
+
+    #[test]
+    fn hand_computed_numbers() {
+        let m = EnergyModel {
+            dram_pj_per_bit: 1.0,
+            local_pj_per_bit: 1.0,
+            serdes_pj_per_bit: 1.0,
+            host_pj_per_bit: 1.0,
+        };
+        // 1 local access of 128B = 1024 bits: 1024 pJ dram + 1024 pJ local.
+        let e = m.estimate(&report(1, 0), 128);
+        assert!((e.dram_uj - 1024.0 * 1e-6).abs() < 1e-12);
+        assert!((e.local_uj - 1024.0 * 1e-6).abs() < 1e-12);
+        assert_eq!(e.remote_uj, 0.0);
+        // 1 remote access: dram + local at owner + 4 serdes crossings.
+        let e = m.estimate(&report(0, 1), 128);
+        assert!((e.remote_uj - 4.0 * 1024.0 * 1e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_run_is_safe() {
+        let m = EnergyModel::default();
+        let e = m.estimate(&report(0, 0), 128);
+        assert_eq!(e.total_uj(), 0.0);
+        assert_eq!(m.improvement(&report(0, 0), &report(0, 0), 128), 1.0);
+    }
+}

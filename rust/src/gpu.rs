@@ -1,0 +1,105 @@
+//! GPU execution-model types: kernels, thread-blocks, SM topology and
+//! occupancy (§2.1–2.2).
+//!
+//! The programming model is the standard GPU one: the host launches a
+//! kernel; the runtime distributes its thread-blocks over all SMs in the
+//! system (here, the SMs on the logic layers of the memory stacks). Up to
+//! `blocks_per_sm` thread-blocks are resident per SM.
+
+use crate::config::SystemConfig;
+
+/// A kernel launch descriptor (grid is flattened row-major as in Eq 1:
+/// `blockIdx.y * gridDim.x + blockIdx.x`).
+#[derive(Clone, Debug)]
+pub struct KernelDesc {
+    pub name: String,
+    /// Total thread-blocks in the launch (flattened grid).
+    pub num_blocks: u32,
+    /// Threads per thread-block.
+    pub threads_per_block: u32,
+}
+
+impl KernelDesc {
+    pub fn new(name: impl Into<String>, num_blocks: u32, threads_per_block: u32) -> Self {
+        Self {
+            name: name.into(),
+            num_blocks,
+            threads_per_block,
+        }
+    }
+
+    /// Flatten a 2-D block index row-major.
+    pub fn flatten(block_x: u32, block_y: u32, grid_x: u32) -> u32 {
+        block_y * grid_x + block_x
+    }
+}
+
+/// A streaming multiprocessor on some stack's logic layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Sm {
+    /// Global SM id, `0..total_sms`.
+    pub id: usize,
+    /// The memory stack whose logic layer hosts this SM.
+    pub stack: usize,
+}
+
+/// The NDP compute topology: which SM lives on which stack.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub sms: Vec<Sm>,
+    pub num_stacks: usize,
+    pub sms_per_stack: usize,
+    pub blocks_per_sm: usize,
+}
+
+impl Topology {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let sms = (0..cfg.total_sms())
+            .map(|id| Sm {
+                id,
+                stack: id / cfg.sms_per_stack,
+            })
+            .collect();
+        Self {
+            sms,
+            num_stacks: cfg.num_stacks,
+            sms_per_stack: cfg.sms_per_stack,
+            blocks_per_sm: cfg.blocks_per_sm,
+        }
+    }
+
+    /// SMs resident on one stack.
+    pub fn sms_of_stack(&self, stack: usize) -> impl Iterator<Item = &Sm> {
+        self.sms.iter().filter(move |sm| sm.stack == stack)
+    }
+
+    /// `N_blocks_per_stack` (Eq 1 denominator).
+    pub fn blocks_per_stack(&self) -> usize {
+        self.sms_per_stack * self.blocks_per_sm
+    }
+
+    /// Maximum concurrently-resident thread-blocks in the whole system.
+    pub fn system_capacity(&self) -> usize {
+        self.sms.len() * self.blocks_per_sm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_matches_table1() {
+        let t = Topology::new(&SystemConfig::default());
+        assert_eq!(t.sms.len(), 16);
+        assert_eq!(t.sms_of_stack(2).count(), 4);
+        assert_eq!(t.sms[5].stack, 1);
+        assert_eq!(t.blocks_per_stack(), 24);
+        assert_eq!(t.system_capacity(), 96);
+    }
+
+    #[test]
+    fn flatten_row_major() {
+        assert_eq!(KernelDesc::flatten(3, 2, 10), 23);
+    }
+}

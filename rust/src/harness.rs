@@ -1,0 +1,135 @@
+//! Micro-benchmark harness (criterion is not vendored in this environment;
+//! this module reproduces its core methodology: warmup, repeated timed
+//! iterations, mean/stddev/throughput reporting, and a `black_box` to
+//! defeat dead-code elimination).
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+/// Re-export of the std black box for bench bodies.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Result of one measured benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12.1} ns/iter (+/- {:>8.1})  [{} iters]",
+            self.name, self.mean_ns, self.stddev_ns, self.iters
+        )
+    }
+}
+
+/// A criterion-style bench runner.
+pub struct Bencher {
+    warmup_iters: u64,
+    measure_iters: u64,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Env overrides let CI shrink the run.
+        let warmup = std::env::var("CODA_BENCH_WARMUP")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(3);
+        let iters = std::env::var("CODA_BENCH_ITERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(10);
+        Self {
+            warmup_iters: warmup,
+            measure_iters: iters,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: u64, measure: u64) -> Self {
+        self.warmup_iters = warmup;
+        self.measure_iters = measure;
+        self
+    }
+
+    /// Time `f` and record the result under `name`.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters as usize);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let mean = crate::stats::mean(&samples);
+        let sd = crate::stats::stddev(&samples);
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = samples.iter().cloned().fold(0.0, f64::max);
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: self.measure_iters,
+            mean_ns: mean,
+            stddev_ns: sd,
+            min_ns: min,
+            max_ns: max,
+        };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::new().with_iters(1, 3);
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns && r.mean_ns <= r.max_ns);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "t".into(),
+            iters: 1,
+            mean_ns: 1e9, // 1 second
+            stddev_ns: 0.0,
+            min_ns: 1e9,
+            max_ns: 1e9,
+        };
+        assert!((r.throughput(100.0) - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,333 @@
+//! The `coda` CLI: run benchmarks under any mechanism, classify workloads
+//! (Fig 3 / Table 2), sweep parameters, and dump configs.
+//!
+//! ```text
+//! coda run <BENCH> [--mechanism coda|fgp|cgp|fta|migrate|fgp-affinity|steal]
+//!                  [--config file.toml] [--set key=value]... [--json]
+//! coda compare <BENCH>            # all mechanisms side by side
+//! coda classify [BENCH]           # Fig-3 histogram + Table-2 category
+//! coda suite [--mechanism ...]    # all 20 benchmarks
+//! coda config                     # print the default config (Table 1)
+//! ```
+
+use coda::cli::Args;
+use coda::config::SystemConfig;
+use coda::coordinator::{Coordinator, Mechanism};
+use coda::report::{f2, pct, Json, Table};
+use coda::sched::affinity_stack;
+use coda::stats::RunReport;
+use coda::trace::{classify, sharing_histogram};
+use coda::workloads::suite;
+
+fn mechanism_of(name: &str) -> coda::Result<Mechanism> {
+    Ok(match name {
+        "fgp" | "fgp-only" => Mechanism::FgpOnly,
+        "cgp" | "cgp-only" => Mechanism::CgpOnly,
+        "fta" => Mechanism::CgpFta,
+        "migrate" => Mechanism::MigrationFta,
+        "coda" => Mechanism::Coda,
+        "fgp-affinity" => Mechanism::FgpAffinity,
+        "steal" => Mechanism::CodaStealing,
+        other => anyhow::bail!("unknown mechanism {other}"),
+    })
+}
+
+fn load_config(args: &Args) -> coda::Result<SystemConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => SystemConfig::from_file(path)?,
+        None => SystemConfig::default(),
+    };
+    // Repeated --set k=v is not supported by the flat map; accept
+    // comma-separated pairs instead.
+    if let Some(sets) = args.opt("set") {
+        for pair in sets.split(',') {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got {pair}"))?;
+            cfg.set(k, v)?;
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn print_report(r: &RunReport, json: bool) {
+    if json {
+        println!("{}", Json::from(r).render());
+    } else {
+        println!(
+            "{:<6} {:<18} cycles={:>14.0}  local={:<9} remote={:<9} remote%={:<6} cgp_pages={} migrated={}",
+            r.workload,
+            r.mechanism,
+            r.cycles,
+            r.accesses.local,
+            r.accesses.remote,
+            pct(r.accesses.remote_fraction()),
+            r.cgp_pages,
+            r.migrated_pages,
+        );
+    }
+}
+
+fn cmd_run(args: &Args) -> coda::Result<()> {
+    let cfg = load_config(args)?;
+    let bench = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: coda run <BENCH>"))?;
+    let mech = mechanism_of(args.opt("mechanism").unwrap_or("coda"))?;
+    let wl = suite::build(bench, &cfg)?;
+    let coord = Coordinator::new(cfg);
+    let r = coord.run(&wl, mech)?;
+    print_report(&r, args.has_flag("json"));
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> coda::Result<()> {
+    let cfg = load_config(args)?;
+    let bench = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: coda compare <BENCH>"))?;
+    let wl = suite::build(bench, &cfg)?;
+    let coord = Coordinator::new(cfg);
+    let mechs = [
+        Mechanism::FgpOnly,
+        Mechanism::CgpOnly,
+        Mechanism::CgpFta,
+        Mechanism::MigrationFta,
+        Mechanism::Coda,
+    ];
+    let reports = coord.compare(&wl, &mechs)?;
+    let base = &reports[0];
+    let mut t = Table::new(&["mechanism", "cycles", "speedup", "remote%", "remote-reduction"]);
+    for r in &reports {
+        t.row(&[
+            r.mechanism.clone(),
+            format!("{:.0}", r.cycles),
+            f2(r.speedup_over(base)),
+            pct(r.accesses.remote_fraction()),
+            pct(r.remote_reduction_over(base)),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_classify(args: &Args) -> coda::Result<()> {
+    let cfg = load_config(args)?;
+    let names: Vec<&str> = match args.positional.first() {
+        Some(b) => vec![b.as_str()],
+        None => suite::names(),
+    };
+    let mut t = Table::new(&["bench", "1 TB", "2 TBs", "3-16", ">16", "~all", "category"]);
+    for name in names {
+        let wl = suite::build(name, &cfg)?;
+        let h = sharing_histogram(&wl.trace, cfg.page_size, |b| affinity_stack(b, &cfg));
+        let f = h.fractions();
+        t.row(&[
+            name.into(),
+            pct(f[0]),
+            pct(f[1]),
+            pct(f[2]),
+            pct(f[3]),
+            pct(f[4]),
+            classify(&h).to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> coda::Result<()> {
+    let cfg = load_config(args)?;
+    let bench = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: coda plan <BENCH>"))?;
+    let wl = suite::build(bench, &cfg)?;
+    let coord = Coordinator::new(cfg.clone());
+    let plan = coord.plan_for(&wl, Mechanism::Coda);
+    let profile = coda::analysis::profile_trace(&wl.trace, cfg.page_size, |b| {
+        affinity_stack(b, &cfg)
+    });
+    let mut t = Table::new(&[
+        "obj", "name", "bytes", "placement", "cross%", "strided", "stride", "footprint",
+    ]);
+    for (i, o) in wl.trace.objects.iter().enumerate() {
+        let p = profile.get(&(i as u16));
+        t.row(&[
+            i.to_string(),
+            o.name.clone(),
+            o.bytes.to_string(),
+            format!("{:?}", plan.per_object[i]),
+            p.map(|p| pct(p.cross_stack_fraction)).unwrap_or_default(),
+            p.map(|p| p.looks_strided.to_string()).unwrap_or_default(),
+            p.map(|p| format!("{:.0}", p.stride_estimate)).unwrap_or_default(),
+            p.map(|p| format!("{:.0}", p.mean_footprint)).unwrap_or_default(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_debug_pages(args: &Args) -> coda::Result<()> {
+    let cfg = load_config(args)?;
+    let bench = args.positional.first().expect("bench");
+    let obj: u16 = args.positional.get(1).expect("obj").parse()?;
+    let wl = suite::build(bench, &cfg)?;
+    // Recompute per-page per-stack counts exactly.
+    use std::collections::HashMap;
+    let mut pages: HashMap<u64, Vec<u64>> = HashMap::new();
+    for b in &wl.trace.blocks {
+        let s = affinity_stack(b.block_id, &cfg);
+        for a in &b.accesses {
+            if a.obj == obj {
+                let e = pages
+                    .entry(a.offset / cfg.page_size)
+                    .or_insert_with(|| vec![0; cfg.num_stacks]);
+                e[s] += 1;
+            }
+        }
+    }
+    let mut hist = [0usize; 10];
+    let mut sample = Vec::new();
+    for (pg, counts) in &pages {
+        let total: u64 = counts.iter().sum();
+        let share = *counts.iter().max().unwrap() as f64 / total.max(1) as f64;
+        hist[((share * 10.0) as usize).min(9)] += 1;
+        if sample.len() < 5 {
+            sample.push((*pg, counts.clone()));
+        }
+    }
+    println!("majority-share histogram (0.0-1.0 deciles): {hist:?}");
+    for (pg, c) in sample {
+        println!("page {pg}: {c:?}");
+    }
+    Ok(())
+}
+
+fn cmd_suite(args: &Args) -> coda::Result<()> {
+    let cfg = load_config(args)?;
+    let mech = mechanism_of(args.opt("mechanism").unwrap_or("coda"))?;
+    let coord = Coordinator::new(cfg.clone());
+    let json = args.has_flag("json");
+    let mut speedups = Vec::new();
+    for name in suite::names() {
+        let wl = suite::build(name, &cfg)?;
+        let base = coord.run(&wl, Mechanism::FgpOnly)?;
+        let r = coord.run(&wl, mech)?;
+        speedups.push(r.speedup_over(&base));
+        print_report(&r, json);
+    }
+    if !json {
+        println!("geomean speedup over FGP-Only: {:.3}", coda::stats::geomean(&speedups));
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> coda::Result<()> {
+    // coda sweep <BENCH> --key remote_bw_gbs --values 16,32,64,128,256
+    let cfg0 = load_config(args)?;
+    let bench = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: coda sweep <BENCH> --key k --values v1,v2"))?;
+    let key = args.opt("key").unwrap_or("remote_bw_gbs");
+    let values = args.opt("values").unwrap_or("16,32,64,128,256");
+    let mut t = Table::new(&[key, "FGP cycles", "CODA cycles", "speedup", "CODA remote%"]);
+    for v in values.split(',') {
+        let mut cfg = cfg0.clone();
+        cfg.set(key, v)?;
+        cfg.validate()?;
+        let wl = suite::build(bench, &cfg)?;
+        let coord = Coordinator::new(cfg);
+        let fgp = coord.run(&wl, Mechanism::FgpOnly)?;
+        let coda = coord.run(&wl, Mechanism::Coda)?;
+        t.row(&[
+            v.to_string(),
+            format!("{:.0}", fgp.cycles),
+            format!("{:.0}", coda.cycles),
+            f2(coda.speedup_over(&fgp)),
+            pct(coda.accesses.remote_fraction()),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> coda::Result<()> {
+    // coda trace record <BENCH> <FILE> | coda trace replay <FILE>
+    let cfg = load_config(args)?;
+    match (
+        args.positional.first().map(|s| s.as_str()),
+        args.positional.get(1),
+        args.positional.get(2),
+    ) {
+        (Some("record"), Some(bench), Some(path)) => {
+            let wl = suite::build(bench, &cfg)?;
+            let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+            coda::trace::write_trace(&mut f, &wl.trace)?;
+            println!(
+                "recorded {} ({} blocks, {} accesses) -> {path}",
+                bench,
+                wl.trace.num_blocks(),
+                wl.trace.total_accesses()
+            );
+        }
+        (Some("replay"), Some(path), _) => {
+            let mut f = std::io::BufReader::new(std::fs::File::open(path.as_str())?);
+            let trace = coda::trace::read_trace(&mut f)?;
+            let wl = coda::workloads::BuiltWorkload {
+                name: "replay",
+                category: coda::trace::Category::Sharing, // unknown; unused
+                trace,
+                ir: None,
+                env: coda::analysis::ParamEnv::new(256),
+            };
+            let mech = mechanism_of(args.opt("mechanism").unwrap_or("coda"))?;
+            let coord = Coordinator::new(cfg);
+            let r = coord.run(&wl, mech)?;
+            print_report(&r, args.has_flag("json"));
+        }
+        _ => anyhow::bail!("usage: coda trace record <BENCH> <FILE> | coda trace replay <FILE>"),
+    }
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv, &["mechanism", "config", "set"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("classify") => cmd_classify(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("debug-pages") => cmd_debug_pages(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("suite") => cmd_suite(&args),
+        Some("config") => {
+            print!("{}", SystemConfig::default().to_toml_string());
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: coda <run|compare|classify|plan|sweep|trace|suite|config> [args]\n\
+                 benchmarks: {}",
+                suite::names().join(" ")
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,218 @@
+//! Multiprogrammed workloads (§6.5, Fig 12).
+//!
+//! Several applications run concurrently, one pinned to each memory
+//! stack's SMs. With FGP-Only hardware every application's pages spread
+//! over all stacks — guaranteed remote traffic from everyone. With CGP
+//! hardware, each application's pages can be allocated in its own stack
+//! ("it is infeasible or difficult to reduce remote data accesses in the
+//! presence of multiple workloads" otherwise).
+
+use crate::addr::AddressMapper;
+use crate::config::SystemConfig;
+use crate::gpu::Topology;
+use crate::mem::HbmStack;
+use crate::net::Interconnect;
+use crate::stats::{AccessStats, RunReport};
+use crate::vm::{Tlb, VirtualMemory};
+use crate::workloads::BuiltWorkload;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Placement style for a multiprogrammed run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MixPlacement {
+    /// Every app's pages fine-grain interleaved over all stacks.
+    FgpOnly,
+    /// Every app's pages coarse-grain in its home stack.
+    CgpLocal,
+}
+
+/// One application mix: up to `num_stacks` workloads, app `i` homed on
+/// stack `i`.
+pub struct Mix<'a> {
+    pub apps: Vec<&'a BuiltWorkload>,
+}
+
+/// Simulate a mix; returns (per-app cycles, combined report).
+pub fn run_mix(
+    cfg: &SystemConfig,
+    mix: &Mix<'_>,
+    placement: MixPlacement,
+) -> crate::Result<(Vec<f64>, RunReport)> {
+    assert!(mix.apps.len() <= cfg.num_stacks);
+    let topo = Topology::new(cfg);
+    let mapper = AddressMapper::new(cfg);
+    let mut net = Interconnect::new(cfg);
+    let mut stacks: Vec<HbmStack> = (0..cfg.num_stacks).map(|_| HbmStack::new(cfg)).collect();
+    let mut tlbs: Vec<Tlb> = (0..topo.sms.len())
+        .map(|_| Tlb::new(cfg.tlb_entries))
+        .collect();
+
+    // One shared physical memory, per-app virtual spaces.
+    let mut vm = VirtualMemory::new(cfg);
+    let mut app_bases: Vec<Vec<u64>> = Vec::new();
+    for (home, app) in mix.apps.iter().enumerate() {
+        let mut bases = Vec::new();
+        for obj in &app.trace.objects {
+            let pages = obj.bytes.div_ceil(cfg.page_size).max(1);
+            let base = match placement {
+                MixPlacement::FgpOnly => vm.map_fgp(pages)?,
+                MixPlacement::CgpLocal => vm.map_cgp(pages, |_| home)?,
+            };
+            bases.push(base);
+        }
+        app_bases.push(bases);
+    }
+
+    // Per-app block queues; each app's blocks run on its home stack's SMs.
+    let line = cfg.line_size;
+    let cyc = cfg.cycles_per_ns();
+    let page_shift = cfg.page_size.trailing_zeros();
+    let tlb_miss_cycles = cfg.tlb_miss_ns * cyc;
+    let mlp = cfg.mlp_per_block;
+    let compute = cfg.compute_cycles_per_access as f64;
+
+    let mut stats = AccessStats::default();
+    let mut app_end = vec![0.0f64; mix.apps.len()];
+    let mut seq = 0u64;
+    // Events: (time_bits, seq, app, block_idx, next_access, sm_id).
+    let mut heap: BinaryHeap<Reverse<(u64, u64, u32, u32, u32, u32)>> = BinaryHeap::new();
+    let mut next_block: Vec<usize> = vec![0; mix.apps.len()];
+    // Per-SM issue-bandwidth server (see sim.rs).
+    let mut sm_free: Vec<f64> = vec![0.0; topo.sms.len()];
+
+    // Seed each app's home-stack SM slots.
+    for (app_idx, app) in mix.apps.iter().enumerate() {
+        let sms: Vec<usize> = topo.sms_of_stack(app_idx).map(|s| s.id).collect();
+        let capacity = sms.len() * cfg.blocks_per_sm;
+        for slot in 0..capacity {
+            if next_block[app_idx] >= app.trace.blocks.len() {
+                break;
+            }
+            let b = next_block[app_idx];
+            next_block[app_idx] += 1;
+            heap.push(Reverse((
+                0f64.to_bits(),
+                seq,
+                app_idx as u32,
+                b as u32,
+                0,
+                sms[slot % sms.len()] as u32,
+            )));
+            seq += 1;
+        }
+    }
+
+    while let Some(Reverse((tb, _, app_idx, block_idx, next_acc, sm_id))) = heap.pop() {
+        let now = f64::from_bits(tb);
+        let app = mix.apps[app_idx as usize];
+        let home = app_idx as usize;
+        let block = &app.trace.blocks[block_idx as usize];
+        let begin = next_acc as usize;
+        let endw = (begin + mlp).min(block.accesses.len());
+        let mut window_done = now;
+        for a in &block.accesses[begin..endw] {
+            let vaddr = app_bases[home][a.obj as usize] + a.offset;
+            let vpn = vaddr >> page_shift;
+            let mut t = now;
+            let pte = match tlbs[sm_id as usize].lookup(vpn) {
+                Some(p) => p,
+                None => {
+                    t += tlb_miss_cycles;
+                    let p = vm.pte_of(vaddr).expect("mapped");
+                    tlbs[sm_id as usize].fill(vpn, p);
+                    p
+                }
+            };
+            let paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
+            let dst = mapper.stack_of(paddr, pte.granularity);
+            let done = if dst == home {
+                stats.local += 1;
+                let t1 = net.local_hop(t, dst, line);
+                stacks[dst].access(t1, paddr, line).done
+            } else {
+                stats.remote += 1;
+                let t1 = net.remote_hop(t, home, dst, line);
+                let t2 = stacks[dst].access(t1, paddr, line).done;
+                net.remote_hop(t2, dst, home, line)
+            };
+            window_done = window_done.max(done);
+        }
+        let c_start = window_done.max(sm_free[sm_id as usize]);
+        let t_next = c_start + compute * (endw - begin) as f64;
+        sm_free[sm_id as usize] = t_next;
+        app_end[home] = app_end[home].max(t_next);
+        if endw < block.accesses.len() {
+            heap.push(Reverse((
+                t_next.to_bits(),
+                seq,
+                app_idx,
+                block_idx,
+                endw as u32,
+                sm_id,
+            )));
+            seq += 1;
+        } else if next_block[home] < app.trace.blocks.len() {
+            let b = next_block[home];
+            next_block[home] += 1;
+            heap.push(Reverse((t_next.to_bits(), seq, app_idx, b as u32, 0, sm_id)));
+            seq += 1;
+        }
+    }
+
+    let report = RunReport {
+        workload: mix
+            .apps
+            .iter()
+            .map(|a| a.name)
+            .collect::<Vec<_>>()
+            .join("+"),
+        mechanism: format!("{placement:?}"),
+        cycles: app_end.iter().cloned().fold(0.0, f64::max),
+        accesses: stats,
+        stack_bytes: stacks.iter().map(|s| s.bytes_served()).collect(),
+        remote_bytes: net.remote_bytes(),
+        ..Default::default()
+    };
+    Ok((app_end, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::suite;
+
+    /// Fig 12's claim: CGP-local beats FGP-Only for every mix.
+    #[test]
+    fn cgp_local_beats_fgp_for_mixes() {
+        let cfg = SystemConfig::test_small();
+        let a = suite::build("NN", &cfg).unwrap();
+        let b = suite::build("KM", &cfg).unwrap();
+        let c = suite::build("DC", &cfg).unwrap();
+        let d = suite::build("HS", &cfg).unwrap();
+        let mix = Mix {
+            apps: vec![&a, &b, &c, &d],
+        };
+        let (_, fgp) = run_mix(&cfg, &mix, MixPlacement::FgpOnly).unwrap();
+        let (_, cgp) = run_mix(&cfg, &mix, MixPlacement::CgpLocal).unwrap();
+        assert_eq!(cgp.accesses.remote, 0, "home placement removes remote");
+        assert!(fgp.accesses.remote > 0);
+        assert!(
+            cgp.cycles < fgp.cycles,
+            "cgp {} vs fgp {}",
+            cgp.cycles,
+            fgp.cycles
+        );
+    }
+
+    #[test]
+    fn per_app_times_reported() {
+        let cfg = SystemConfig::test_small();
+        let a = suite::build("NN", &cfg).unwrap();
+        let b = suite::build("DC", &cfg).unwrap();
+        let mix = Mix { apps: vec![&a, &b] };
+        let (times, _) = run_mix(&cfg, &mix, MixPlacement::CgpLocal).unwrap();
+        assert_eq!(times.len(), 2);
+        assert!(times.iter().all(|&t| t > 0.0));
+    }
+}

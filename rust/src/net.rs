@@ -1,0 +1,202 @@
+//! The three interconnects of the NDP system (§2.3):
+//!
+//! * **Local** — SMs to their own stack's HBM (crossbar + TSVs). Highest
+//!   bandwidth, lowest latency.
+//! * **Host** — host processor to each stack (the processor-centric
+//!   topology of Kim et al.). Mid bandwidth.
+//! * **Remote** — stack to stack, for NDP accesses to data resident
+//!   elsewhere. Lowest bandwidth; the resource CODA exists to avoid.
+//!
+//! Each directional port is a busy-until server: a transfer occupies the
+//! port for `bytes / bw` cycles and then experiences the propagation
+//! latency. Queuing delay therefore emerges when traffic concentrates on a
+//! port — exactly the congestion behaviour §6.2 discusses.
+
+use crate::config::SystemConfig;
+
+/// A single directional link/port with finite bandwidth.
+#[derive(Clone, Debug)]
+pub struct Link {
+    bytes_per_cycle: f64,
+    latency_cycles: f64,
+    next_free: f64,
+    bytes_sent: u64,
+    transfers: u64,
+    queued_cycles: f64,
+}
+
+impl Link {
+    pub fn new(bytes_per_cycle: f64, latency_cycles: f64) -> Self {
+        assert!(bytes_per_cycle > 0.0);
+        Self {
+            bytes_per_cycle,
+            latency_cycles,
+            next_free: 0.0,
+            bytes_sent: 0,
+            transfers: 0,
+            queued_cycles: 0.0,
+        }
+    }
+
+    /// Send `bytes` at time `now`; returns delivery completion time.
+    #[inline]
+    pub fn transfer(&mut self, now: f64, bytes: u64) -> f64 {
+        let start = now.max(self.next_free);
+        self.queued_cycles += start - now;
+        let occupancy = bytes as f64 / self.bytes_per_cycle;
+        self.next_free = start + occupancy;
+        self.bytes_sent += bytes;
+        self.transfers += 1;
+        start + occupancy + self.latency_cycles
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
+    }
+
+    /// Mean queuing delay per transfer, in cycles.
+    pub fn mean_queue_delay(&self) -> f64 {
+        if self.transfers == 0 {
+            0.0
+        } else {
+            self.queued_cycles / self.transfers as f64
+        }
+    }
+
+    /// Utilization up to `now` (busy time / wall time).
+    pub fn utilization(&self, now: f64) -> f64 {
+        if now <= 0.0 {
+            0.0
+        } else {
+            (self.bytes_sent as f64 / self.bytes_per_cycle) / now
+        }
+    }
+}
+
+/// The full interconnect: per-stack local crossbars, per-stack host ports,
+/// and per-stack remote ports (ingress + egress).
+#[derive(Clone, Debug)]
+pub struct Interconnect {
+    /// Per-stack local crossbar (SM <-> local HBM), full local bandwidth.
+    pub local: Vec<Link>,
+    /// Per-stack host port; the aggregate host bandwidth divides evenly.
+    pub host: Vec<Link>,
+    /// Per-stack remote egress ports.
+    pub remote_out: Vec<Link>,
+    /// Per-stack remote ingress ports.
+    pub remote_in: Vec<Link>,
+}
+
+impl Interconnect {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let n = cfg.num_stacks;
+        let cyc = cfg.cycles_per_ns();
+        let local_bw = cfg.gbs_to_bytes_per_cycle(cfg.local_bw_gbs);
+        let host_bw = cfg.gbs_to_bytes_per_cycle(cfg.host_bw_gbs) / n as f64;
+        let remote_bw = cfg.gbs_to_bytes_per_cycle(cfg.remote_bw_gbs) / n as f64;
+        Self {
+            local: (0..n)
+                .map(|_| Link::new(local_bw, cfg.local_latency_ns * cyc))
+                .collect(),
+            host: (0..n)
+                .map(|_| Link::new(host_bw, cfg.host_latency_ns * cyc))
+                .collect(),
+            remote_out: (0..n)
+                .map(|_| Link::new(remote_bw, cfg.remote_latency_ns * cyc))
+                .collect(),
+            remote_in: (0..n)
+                .map(|_| Link::new(remote_bw, 0.0))
+                .collect(),
+        }
+    }
+
+    /// Deliver a local access: SM in `stack` to its own HBM. Returns the
+    /// time the request reaches the DRAM controller.
+    #[inline]
+    pub fn local_hop(&mut self, now: f64, stack: usize, bytes: u64) -> f64 {
+        self.local[stack].transfer(now, bytes)
+    }
+
+    /// Deliver a remote access from `src` stack to `dst` stack: egress at
+    /// the source, ingress at the destination (two SerDes crossings).
+    #[inline]
+    pub fn remote_hop(&mut self, now: f64, src: usize, dst: usize, bytes: u64) -> f64 {
+        debug_assert_ne!(src, dst);
+        let t = self.remote_out[src].transfer(now, bytes);
+        self.remote_in[dst].transfer(t, bytes)
+    }
+
+    /// Deliver a host access to `stack`.
+    #[inline]
+    pub fn host_hop(&mut self, now: f64, stack: usize, bytes: u64) -> f64 {
+        self.host[stack].transfer(now, bytes)
+    }
+
+    /// Total bytes that crossed remote egress ports.
+    pub fn remote_bytes(&self) -> u64 {
+        self.remote_out.iter().map(|l| l.bytes_sent()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    #[test]
+    fn link_latency_and_occupancy() {
+        let mut l = Link::new(2.0, 10.0); // 2 B/cy, 10cy latency
+        let t = l.transfer(0.0, 100);
+        assert_eq!(t, 50.0 + 10.0);
+        // Second transfer queues behind the first's occupancy (not latency).
+        let t2 = l.transfer(0.0, 100);
+        assert_eq!(t2, 100.0 + 10.0);
+        assert!(l.mean_queue_delay() > 0.0);
+    }
+
+    #[test]
+    fn remote_is_slower_than_local() {
+        let c = cfg();
+        let mut net = Interconnect::new(&c);
+        let t_local = net.local_hop(0.0, 0, 128);
+        let t_remote = net.remote_hop(0.0, 0, 1, 128);
+        assert!(
+            t_remote > 4.0 * t_local,
+            "remote {t_remote} vs local {t_local}"
+        );
+    }
+
+    #[test]
+    fn remote_port_congests() {
+        let c = cfg();
+        let mut net = Interconnect::new(&c);
+        // Many concurrent remote transfers from stack 0 queue on its egress.
+        let mut last = 0.0f64;
+        for _ in 0..64 {
+            last = net.remote_hop(0.0, 0, 1, 128);
+        }
+        let single = Interconnect::new(&c).remote_hop(0.0, 0, 1, 128);
+        assert!(last > 8.0 * single, "queuing must accumulate: {last} vs single {single}");
+    }
+
+    #[test]
+    fn bandwidth_ratios_match_config() {
+        let c = cfg();
+        let net = Interconnect::new(&c);
+        // local : host-per-stack : remote-per-stack = 256 : 32 : 4 GB/s.
+        let u = |l: &Link| l.bytes_per_cycle;
+        assert!((u(&net.local[0]) / u(&net.host[0]) - 8.0).abs() < 1e-9);
+        assert!((u(&net.host[0]) / u(&net.remote_out[0]) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut l = Link::new(1.0, 0.0);
+        l.transfer(0.0, 500);
+        assert!((l.utilization(1000.0) - 0.5).abs() < 1e-9);
+        assert_eq!(l.bytes_sent(), 500);
+    }
+}

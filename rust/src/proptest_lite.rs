@@ -1,0 +1,100 @@
+//! Property-based testing support (the `proptest` crate is not vendored in
+//! this environment). Provides a seeded case generator and a runner that
+//! reports the failing seed/case for reproduction; used by the integration
+//! tests to check coordinator/allocator invariants over randomized inputs.
+
+use crate::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xC0DA_7E57,
+        }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. `gen` draws one case from the
+/// RNG. On failure, panics with the case index and seed so the exact case
+/// can be replayed.
+pub fn run_prop<T: std::fmt::Debug>(
+    cfg: PropConfig,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {:#x}): {msg}\ninput: {input:?}",
+                cfg.seed.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// Draw helpers.
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    rng.range(lo as u64, hi as u64) as usize
+}
+
+pub fn pow2_in(rng: &mut Rng, lo_log2: u32, hi_log2: u32) -> u64 {
+    1u64 << rng.range(lo_log2 as u64, hi_log2 as u64 + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        run_prop(
+            PropConfig {
+                cases: 10,
+                seed: 1,
+            },
+            |rng| rng.below(100),
+            |x| {
+                n += 1;
+                if *x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        run_prop(
+            PropConfig {
+                cases: 5,
+                seed: 2,
+            },
+            |rng| rng.below(10),
+            |_| Err("always fails".into()),
+        );
+    }
+
+    #[test]
+    fn pow2_in_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let v = pow2_in(&mut rng, 7, 12);
+            assert!(v.is_power_of_two());
+            assert!((128..=4096).contains(&v));
+        }
+    }
+}

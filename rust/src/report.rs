@@ -1,0 +1,228 @@
+//! Result emission: JSON (machine-readable) and aligned-text/markdown
+//! tables (the rows/series each paper figure reports). `serde`/`serde_json`
+//! are not vendored in this environment, so the JSON writer is in-repo.
+
+use crate::stats::RunReport;
+use std::fmt::Write as _;
+
+/// Minimal JSON value builder (output only).
+#[derive(Clone, Debug)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Self {
+        Json::Obj(Vec::new())
+    }
+
+    pub fn push(&mut self, key: &str, v: Json) -> &mut Self {
+        if let Json::Obj(fields) = self {
+            fields.push((key.to_string(), v));
+        }
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => {
+                let _ = write!(out, "{b}");
+            }
+            Json::Num(n) => {
+                if n.is_finite() {
+                    // Integers render without a trailing .0 for readability.
+                    if n.fract() == 0.0 && n.abs() < 9e15 {
+                        let _ = write!(out, "{}", *n as i64);
+                    } else {
+                        let _ = write!(out, "{n}");
+                    }
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for ch in s.chars() {
+                    match ch {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl From<&RunReport> for Json {
+    fn from(r: &RunReport) -> Self {
+        let mut o = Json::obj();
+        o.push("workload", Json::Str(r.workload.clone()))
+            .push("mechanism", Json::Str(r.mechanism.clone()))
+            .push("cycles", Json::Num(r.cycles))
+            .push("local", Json::Num(r.accesses.local as f64))
+            .push("remote", Json::Num(r.accesses.remote as f64))
+            .push("l2_hits", Json::Num(r.accesses.l2_hits as f64))
+            .push("remote_fraction", Json::Num(r.accesses.remote_fraction()))
+            .push("remote_bytes", Json::Num(r.remote_bytes as f64))
+            .push("mean_mem_latency", Json::Num(r.mean_mem_latency))
+            .push("tlb_hit_rate", Json::Num(r.tlb_hit_rate))
+            .push("row_hit_rate", Json::Num(r.row_hit_rate))
+            .push("cgp_pages", Json::Num(r.cgp_pages as f64))
+            .push("fgp_pages", Json::Num(r.fgp_pages as f64))
+            .push("migrated_pages", Json::Num(r.migrated_pages as f64))
+            .push(
+                "stack_bytes",
+                Json::Arr(r.stack_bytes.iter().map(|&b| Json::Num(b as f64)).collect()),
+            );
+        o
+    }
+}
+
+/// A fixed-width text table (the shape each figure's harness prints).
+#[derive(Debug, Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+            for i in 0..ncols {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                let _ = write!(out, "{:<w$}", cells[i], w = widths[i]);
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &widths, &mut out);
+        }
+        out
+    }
+}
+
+/// Format helpers used across benches.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escaping() {
+        let j = Json::Str("a\"b\\c\nd".into());
+        assert_eq!(j.render(), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn json_object_render() {
+        let mut o = Json::obj();
+        o.push("x", Json::Num(1.0))
+            .push("y", Json::Arr(vec![Json::Num(2.5), Json::Null]));
+        assert_eq!(o.render(), r#"{"x":1,"y":[2.5,null]}"#);
+    }
+
+    #[test]
+    fn report_to_json_has_fields() {
+        let r = RunReport {
+            workload: "PR".into(),
+            mechanism: "CODA".into(),
+            cycles: 123.0,
+            ..Default::default()
+        };
+        let s = Json::from(&r).render();
+        assert!(s.contains(r#""workload":"PR""#));
+        assert!(s.contains(r#""cycles":123"#));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["x".into(), "1".into()]);
+        t.row(&["longer".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("name"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,174 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! them from the Rust request path. Python never runs at execution time.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits `HloModuleProto`s with
+//! 64-bit instruction ids that the crate's pinned XLA (xla_extension
+//! 0.5.1) rejects; the text parser reassigns ids and round-trips cleanly.
+//! Modules are lowered with `return_tuple=True`, so results unwrap with
+//! `to_tuple1`.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A typed input tensor for [`Executable::run`].
+pub enum Arg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+/// A compiled, executable artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with mixed f32/i32 inputs; returns each tuple output as
+    /// flattened f32 (all our artifacts emit f32 outputs).
+    pub fn run(&self, inputs: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|arg| {
+                let (lit, dims) = match arg {
+                    Arg::F32(data, dims) => (xla::Literal::vec1(data), *dims),
+                    Arg::I32(data, dims) => (xla::Literal::vec1(data), *dims),
+                };
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims_i64).context("reshape input")
+            })
+            .collect::<Result<_>>()?;
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let elems = result.decompose_tuple().context("decompose tuple")?;
+        elems
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().context("output to f32 vec"))
+            .collect()
+    }
+    /// Execute with f32 tensor inputs `(data, dims)`; returns the flattened
+    /// f32 elements of each tuple output.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims_i64).context("reshape input")
+            })
+            .collect::<Result<_>>()?;
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let elems = result.decompose_tuple().context("decompose tuple")?;
+        elems
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().context("output to f32 vec"))
+            .collect()
+    }
+}
+
+/// One PageRank sweep through the `pagerank_update` artifact.
+pub fn run_pagerank(
+    exe: &Executable,
+    ranks: &[f32],
+    inv_deg: &[f32],
+    nbr_idx: &[i32],
+    nbr_mask: &[f32],
+    v: usize,
+    k: usize,
+) -> Result<Vec<f32>> {
+    let out = exe.run(&[
+        Arg::F32(ranks, &[v]),
+        Arg::F32(inv_deg, &[v]),
+        Arg::I32(nbr_idx, &[v, k]),
+        Arg::F32(nbr_mask, &[v, k]),
+    ])?;
+    Ok(out.into_iter().next().expect("1-tuple"))
+}
+
+/// The PJRT runtime: a CPU client plus a cache of compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a CPU-backed runtime reading artifacts from `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self {
+            client,
+            artifact_dir: dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (and cache) an artifact by stem, e.g. `"pagerank_update"` ->
+    /// `artifacts/pagerank_update.hlo.txt`.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("loading HLO text {path:?} (run `make artifacts`)"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(
+                name.to_string(),
+                Executable {
+                    exe,
+                    name: name.to_string(),
+                },
+            );
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Whether an artifact file exists (lets examples degrade gracefully
+    /// with a "run make artifacts" hint).
+    pub fn artifact_exists(&self, name: &str) -> bool {
+        self.artifact_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> PathBuf {
+        // Tests run from the crate root.
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn runtime_creates_cpu_client() {
+        let rt = Runtime::new(artifact_dir()).unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let mut rt = Runtime::new(artifact_dir()).unwrap();
+        let err = match rt.load("no_such_artifact") {
+            Err(e) => e,
+            Ok(_) => panic!("expected missing-artifact error"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    // The artifact-dependent round-trip tests live in
+    // rust/tests/integration.rs (they need `make artifacts` to have run;
+    // the Makefile orders that before `cargo test`).
+}

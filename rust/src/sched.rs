@@ -1,0 +1,193 @@
+//! Thread-block scheduling (§4.3.1).
+//!
+//! * **Baseline**: blocks dispatch in launch order to any SM with a free
+//!   residency slot ("as soon as one thread-block retires, the next
+//!   thread-block is scheduled to any available SM").
+//! * **Affinity** (Eq 1): `affinity = (block_id / N_blocks_per_stack) mod
+//!   N_stacks`; an SM only receives blocks whose affinity names its stack.
+//! * **Affinity + work stealing** (the §4.3.1 optimization the paper
+//!   sketches but does not evaluate): when a stack's queue drains, its SMs
+//!   steal from the stack with the most remaining blocks.
+
+use crate::config::SystemConfig;
+use std::collections::VecDeque;
+
+/// Eq (1): the affinity stack of a thread-block.
+#[inline]
+pub fn affinity_stack(block_id: u32, cfg: &SystemConfig) -> usize {
+    (block_id as usize / cfg.blocks_per_stack()) % cfg.num_stacks
+}
+
+/// Scheduling policies the simulator supports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Any block to any available SM, in launch order.
+    Baseline,
+    /// Eq-1 affinity: blocks only run on SMs of their affinity stack.
+    Affinity,
+    /// Affinity, falling back to stealing when a stack runs dry.
+    AffinityStealing,
+}
+
+/// A work scheduler over a kernel launch of `num_blocks` blocks.
+#[derive(Debug)]
+pub struct Scheduler {
+    policy: Policy,
+    /// Per-stack FIFO of unscheduled blocks (Affinity*); single queue at
+    /// index 0 for Baseline.
+    queues: Vec<VecDeque<u32>>,
+    remaining: usize,
+    pub steals: u64,
+}
+
+impl Scheduler {
+    pub fn new(policy: Policy, num_blocks: u32, cfg: &SystemConfig) -> Self {
+        let mut queues = match policy {
+            Policy::Baseline => vec![VecDeque::with_capacity(num_blocks as usize)],
+            _ => vec![VecDeque::new(); cfg.num_stacks],
+        };
+        for b in 0..num_blocks {
+            match policy {
+                Policy::Baseline => queues[0].push_back(b),
+                _ => queues[affinity_stack(b, cfg)].push_back(b),
+            }
+        }
+        Self {
+            policy,
+            queues,
+            remaining: num_blocks as usize,
+            steals: 0,
+        }
+    }
+
+    /// Blocks not yet dispatched.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    /// Pick the next block for an SM on `stack`. Returns `None` when no
+    /// block is eligible (for Affinity, the stack's queue is empty; the SM
+    /// idles even though other stacks may still have work — the load
+    /// imbalance §6.7 measures).
+    pub fn next_for(&mut self, stack: usize) -> Option<u32> {
+        let picked = match self.policy {
+            Policy::Baseline => self.queues[0].pop_front(),
+            Policy::Affinity => self.queues[stack].pop_front(),
+            Policy::AffinityStealing => self.queues[stack].pop_front().or_else(|| {
+                // Steal from the most loaded stack.
+                let victim = (0..self.queues.len())
+                    .filter(|&s| s != stack)
+                    .max_by_key(|&s| self.queues[s].len())?;
+                if self.queues[victim].is_empty() {
+                    return None;
+                }
+                self.steals += 1;
+                // Steal from the tail: the tail blocks are furthest from
+                // the victim's current locality frontier.
+                self.queues[victim].pop_back()
+            }),
+        };
+        if picked.is_some() {
+            self.remaining -= 1;
+        }
+        picked
+    }
+
+    /// Whether all blocks have been dispatched.
+    pub fn empty(&self) -> bool {
+        self.remaining == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    #[test]
+    fn eq1_worked_example() {
+        // Paper: N_blocks_per_stack = 24 with 4 SMs x 6 blocks. Blocks
+        // 0..23 -> stack 0, 24..47 -> stack 1, ..., 96..119 -> stack 0.
+        let c = cfg();
+        assert_eq!(affinity_stack(0, &c), 0);
+        assert_eq!(affinity_stack(23, &c), 0);
+        assert_eq!(affinity_stack(24, &c), 1);
+        assert_eq!(affinity_stack(95, &c), 3);
+        assert_eq!(affinity_stack(96, &c), 0);
+    }
+
+    #[test]
+    fn equal_share_per_stack() {
+        // "When N is the number of memory stacks and T is the total number
+        // of thread-blocks, T/N thread-blocks have the same affinity."
+        let c = cfg();
+        let t = 960u32;
+        let mut counts = [0usize; 4];
+        for b in 0..t {
+            counts[affinity_stack(b, &c)] += 1;
+        }
+        assert_eq!(counts, [240, 240, 240, 240]);
+    }
+
+    #[test]
+    fn baseline_dispatches_in_order_anywhere() {
+        let c = cfg();
+        let mut s = Scheduler::new(Policy::Baseline, 10, &c);
+        assert_eq!(s.next_for(3), Some(0));
+        assert_eq!(s.next_for(0), Some(1));
+        assert_eq!(s.remaining(), 8);
+    }
+
+    #[test]
+    fn affinity_respects_stacks() {
+        let c = cfg();
+        let mut s = Scheduler::new(Policy::Affinity, 96, &c);
+        // Stack 2 only sees blocks 48..71.
+        for expect in 48..72u32 {
+            assert_eq!(s.next_for(2), Some(expect));
+        }
+        assert_eq!(s.next_for(2), None, "stack 2 ran dry; SM idles");
+        assert!(!s.empty());
+    }
+
+    #[test]
+    fn stealing_falls_back() {
+        let c = cfg();
+        let mut s = Scheduler::new(Policy::AffinityStealing, 48, &c);
+        // Drain stack 0's own 24 blocks.
+        for _ in 0..24 {
+            assert!(s.next_for(0).is_some());
+        }
+        // Now steals from stack 1 (the only loaded one).
+        let stolen = s.next_for(0).unwrap();
+        assert!((24..48).contains(&stolen));
+        assert_eq!(s.steals, 1);
+        // Everything still dispatches exactly once.
+        let mut seen = vec![false; 48];
+        seen[stolen as usize] = true;
+        for b in 0..24 {
+            seen[b] = true;
+        }
+        while let Some(b) = s.next_for(1) {
+            assert!(!seen[b as usize]);
+            seen[b as usize] = true;
+        }
+        while let Some(b) = s.next_for(0) {
+            assert!(!seen[b as usize]);
+            seen[b as usize] = true;
+        }
+        assert!(s.empty());
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn affinity_with_eight_stacks() {
+        let mut c = cfg();
+        c.num_stacks = 8;
+        assert_eq!(affinity_stack(24 * 8, &c), 0);
+        assert_eq!(affinity_stack(24 * 7, &c), 7);
+    }
+}

@@ -1,0 +1,483 @@
+//! The NDP system simulator: the substrate standing in for the paper's
+//! SST + MacSim + DRAMSim2 stack (DESIGN.md §2 documents the substitution).
+//!
+//! Discrete-event, bandwidth/latency/queuing-accurate at the granularity
+//! the paper's conclusions live at: every memory access is routed through
+//! the TLB, the dual-mode address mapping, and either the local crossbar +
+//! HBM of its SM's stack or the remote ports + the owning stack's HBM.
+//! Links and DRAM channels are busy-until servers, so hotspots queue.
+//!
+//! Thread-blocks issue their access streams in windows of `mlp_per_block`
+//! outstanding requests, with `compute_cycles_per_access` of execution
+//! charged per access — an SM-throughput model rather than a pipeline
+//! model. Blocks occupy SM residency slots; when one retires, the
+//! scheduler's policy picks the next (this is where Eq 1 bites).
+
+use crate::addr::{AddressMapper, Granularity};
+use crate::config::SystemConfig;
+use crate::gpu::Topology;
+use crate::mem::HbmStack;
+use crate::net::Interconnect;
+use crate::sched::{Policy, Scheduler};
+use crate::stats::{AccessStats, RunReport};
+use crate::trace::KernelTrace;
+use crate::vm::{Tlb, VirtualMemory};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Event key ordering by time (f64 bit-monotonic for non-negative values),
+/// tie-broken by sequence number for determinism.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct TimeKey(u64, u64);
+
+fn key(t: f64, seq: u64) -> TimeKey {
+    debug_assert!(t >= 0.0);
+    TimeKey(t.to_bits(), seq)
+}
+
+#[derive(Clone, Copy, Debug)]
+struct SlotState {
+    /// Index into `trace.blocks`.
+    block_idx: u32,
+    /// Next access offset within the block's stream.
+    next_access: u32,
+}
+
+/// One simulated kernel execution.
+pub struct KernelRun<'a> {
+    pub cfg: &'a SystemConfig,
+    pub trace: &'a KernelTrace,
+    pub vm: &'a mut VirtualMemory,
+    /// Base virtual address of each object (indexed by `Access::obj`).
+    pub obj_base: &'a [u64],
+    pub policy: Policy,
+    /// Migrate FGP pages to the first-touching stack (migration-FTA).
+    pub migrate_on_first_touch: bool,
+}
+
+/// Fast deterministic hash for the L2-filter decision (splitmix finalizer).
+#[inline]
+fn line_hash(x: u64) -> u64 {
+    let mut z = x.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z ^ (z >> 31)
+}
+
+impl<'a> KernelRun<'a> {
+    /// Execute the kernel and return the run report.
+    pub fn run(self) -> RunReport {
+        let cfg = self.cfg;
+        let topo = Topology::new(cfg);
+        let mapper = AddressMapper::new(cfg);
+        let mut net = Interconnect::new(cfg);
+        let mut stacks: Vec<HbmStack> = (0..cfg.num_stacks).map(|_| HbmStack::new(cfg)).collect();
+        let mut tlbs: Vec<Tlb> = (0..topo.sms.len())
+            .map(|_| Tlb::new(cfg.tlb_entries))
+            .collect();
+        let mut sched = Scheduler::new(self.policy, self.trace.num_blocks(), cfg);
+
+        // block_id -> index in trace.blocks (blocks may be listed in any order).
+        let mut id_to_idx = vec![u32::MAX; self.trace.num_blocks() as usize];
+        for (i, b) in self.trace.blocks.iter().enumerate() {
+            id_to_idx[b.block_id as usize] = i as u32;
+        }
+
+        let cyc = cfg.cycles_per_ns();
+        let l2_threshold = (self.cfg.l2_hit_rate * u32::MAX as f64) as u64;
+        let l2_hit_cycles = cfg.l2_hit_ns * cyc;
+        let tlb_miss_cycles = cfg.tlb_miss_ns * cyc;
+        let line = cfg.line_size;
+        let page_shift = cfg.page_size.trailing_zeros();
+        let mlp = cfg.mlp_per_block as u32;
+        let compute = cfg.compute_cycles_per_access as f64;
+
+        let mut stats = AccessStats::default();
+        let mut migrated: u64 = 0;
+        let mut migrated_pages: Vec<bool> = vec![false; self.vm.mapped_pages() as usize];
+        let mut latency_sum = 0.0f64;
+        let mut latency_n: u64 = 0;
+        let mut end_time = 0.0f64;
+        let mut seq: u64 = 0;
+
+        // (key, sm_index, slot_index) min-heap.
+        let mut heap: BinaryHeap<Reverse<(TimeKey, u32, u32)>> = BinaryHeap::new();
+        let slots_per_sm = cfg.blocks_per_sm;
+        let mut slots: Vec<Option<SlotState>> = vec![None; topo.sms.len() * slots_per_sm];
+        // Per-SM issue-bandwidth server: resident blocks share the SM's
+        // execution resources, so their compute phases serialize.
+        let mut sm_free: Vec<f64> = vec![0.0; topo.sms.len()];
+
+        // Initial fill: breadth-first over SMs (hardware distributes blocks
+        // across SMs before stacking occupancy on one).
+        for slot in 0..slots_per_sm {
+            for sm in &topo.sms {
+                if let Some(bid) = sched.next_for(sm.stack) {
+                    let idx = id_to_idx[bid as usize];
+                    slots[sm.id * slots_per_sm + slot] = Some(SlotState {
+                        block_idx: idx,
+                        next_access: 0,
+                    });
+                    heap.push(Reverse((key(0.0, seq), sm.id as u32, slot as u32)));
+                    seq += 1;
+                }
+            }
+        }
+
+        while let Some(Reverse((tk, sm_id, slot_id))) = heap.pop() {
+            let now = f64::from_bits(tk.0);
+            let sm = topo.sms[sm_id as usize];
+            let slot_key = sm_id as usize * slots_per_sm + slot_id as usize;
+            let Some(state) = slots[slot_key] else { continue };
+            let block = &self.trace.blocks[state.block_idx as usize];
+            let begin = state.next_access as usize;
+            let end = (begin + mlp as usize).min(block.accesses.len());
+
+            // Issue one window of accesses; the block stalls until the
+            // slowest completes, then pays its compute debt.
+            let mut window_done = now;
+            for a in &block.accesses[begin..end] {
+                let vaddr = self.obj_base[a.obj as usize] + a.offset;
+                let vline = vaddr / line;
+                // Stack-level L2 filter (deterministic per line).
+                if line_hash(vline) & 0xFFFF_FFFF < l2_threshold {
+                    stats.l2_hits += 1;
+                    window_done = window_done.max(now + l2_hit_cycles);
+                    continue;
+                }
+                // TLB + translation.
+                let vpn = vaddr >> page_shift;
+                let mut t = now;
+                let pte = match tlbs[sm.id].lookup(vpn) {
+                    Some(pte) => pte,
+                    None => {
+                        t += tlb_miss_cycles;
+                        let pte = self
+                            .vm
+                            .pte_of(vaddr)
+                            .expect("workload access beyond mapped object");
+                        tlbs[sm.id].fill(vpn, pte);
+                        pte
+                    }
+                };
+                let mut paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
+                let mut gran = pte.granularity;
+                // Migration-based first touch: the first NDP access to an
+                // FGP page pulls the whole page into the toucher's stack.
+                if self.migrate_on_first_touch
+                    && gran == Granularity::Fgp
+                    && !migrated_pages[vpn as usize]
+                {
+                    migrated_pages[vpn as usize] = true;
+                    if self.vm.migrate_to_cgp(vaddr, sm.stack).is_ok() {
+                        migrated += 1;
+                        // Page copy: page_size bytes arrive over the remote
+                        // ingress port (3/4 of the stripes are remote).
+                        let copy_bytes =
+                            cfg.page_size * (cfg.num_stacks as u64 - 1) / cfg.num_stacks as u64;
+                        t = net.remote_hop(t, (sm.stack + 1) % cfg.num_stacks, sm.stack, copy_bytes);
+                        let pte = self.vm.pte_of(vaddr).unwrap();
+                        tlbs[sm.id].fill(vpn, pte);
+                        paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
+                        gran = pte.granularity;
+                    }
+                }
+                let dst = mapper.stack_of(paddr, gran);
+                let done = if dst == sm.stack {
+                    stats.local += 1;
+                    let t1 = net.local_hop(t, dst, line);
+                    stacks[dst].access(t1, paddr, line).done
+                } else {
+                    stats.remote += 1;
+                    // Request out, serve at the owner, response back.
+                    let t1 = net.remote_hop(t, sm.stack, dst, line);
+                    let t2 = stacks[dst].access(t1, paddr, line).done;
+                    net.remote_hop(t2, dst, sm.stack, line)
+                };
+                latency_sum += done - now;
+                latency_n += 1;
+                window_done = window_done.max(done);
+            }
+            let issued = (end - begin) as f64;
+            // Compute occupies the SM serially across its resident blocks.
+            let c_start = window_done.max(sm_free[sm.id]);
+            let t_next = c_start + compute * issued;
+            sm_free[sm.id] = t_next;
+            end_time = end_time.max(t_next);
+
+            if end < block.accesses.len() {
+                slots[slot_key] = Some(SlotState {
+                    block_idx: state.block_idx,
+                    next_access: end as u32,
+                });
+                heap.push(Reverse((key(t_next, seq), sm_id, slot_id)));
+                seq += 1;
+            } else {
+                // Block retires; pull the next one for this stack.
+                match sched.next_for(sm.stack) {
+                    Some(bid) => {
+                        slots[slot_key] = Some(SlotState {
+                            block_idx: id_to_idx[bid as usize],
+                            next_access: 0,
+                        });
+                        heap.push(Reverse((key(t_next, seq), sm_id, slot_id)));
+                        seq += 1;
+                    }
+                    None => slots[slot_key] = None,
+                }
+            }
+        }
+
+        let tlb_hits: u64 = tlbs.iter().map(|t| t.hits).sum();
+        let tlb_total: u64 = tlbs.iter().map(|t| t.hits + t.misses).sum();
+        let row_hit_rate = {
+            let rates: Vec<f64> = stacks.iter().map(|s| s.row_hit_rate()).collect();
+            crate::stats::mean(&rates)
+        };
+        RunReport {
+            workload: self.trace.name.clone(),
+            mechanism: String::new(),
+            cycles: end_time,
+            accesses: stats,
+            stack_bytes: stacks.iter().map(|s| s.bytes_served()).collect(),
+            remote_bytes: net.remote_bytes(),
+            mean_mem_latency: if latency_n == 0 {
+                0.0
+            } else {
+                latency_sum / latency_n as f64
+            },
+            tlb_hit_rate: if tlb_total == 0 {
+                0.0
+            } else {
+                tlb_hits as f64 / tlb_total as f64
+            },
+            row_hit_rate,
+            cgp_pages: 0,
+            fgp_pages: 0,
+            migrated_pages: migrated,
+        }
+    }
+}
+
+/// Convenience: map a trace's objects into a fresh [`VirtualMemory`]
+/// according to a placement plan; returns (vm, per-object base vaddrs,
+/// cgp_pages, fgp_pages).
+pub fn map_objects(
+    cfg: &SystemConfig,
+    trace: &KernelTrace,
+    plan: &crate::placement::PlacementPlan,
+) -> crate::Result<(VirtualMemory, Vec<u64>, u64, u64)> {
+    let mut vm = VirtualMemory::new(cfg);
+    let mut bases = Vec::with_capacity(trace.objects.len());
+    let mut cgp_pages = 0u64;
+    let mut fgp_pages = 0u64;
+    for (i, obj) in trace.objects.iter().enumerate() {
+        let pages = obj.bytes.div_ceil(cfg.page_size).max(1);
+        // Mixed plans (page overrides) pick per page; object-level plans
+        // pick once.
+        let mut any_cgp = false;
+        for p in 0..pages {
+            if plan
+                .stack_of_page(i as u16, p, cfg.page_size, cfg.num_stacks)
+                .is_some()
+            {
+                any_cgp = true;
+                break;
+            }
+        }
+        if any_cgp {
+            let base = vm.map_cgp(pages, |p| {
+                plan.stack_of_page(i as u16, p, cfg.page_size, cfg.num_stacks)
+                    .unwrap_or(((p) % cfg.num_stacks as u64) as usize)
+            })?;
+            cgp_pages += pages;
+            bases.push(base);
+        } else {
+            let base = vm.map_fgp(pages)?;
+            fgp_pages += pages;
+            bases.push(base);
+        }
+    }
+    Ok((vm, bases, cgp_pages, fgp_pages))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::{PlacementPlan, Placement};
+    use crate::sched::affinity_stack;
+    use crate::trace::{Access, BlockTrace, ObjectDesc};
+    use std::collections::HashMap;
+
+    fn cfg() -> SystemConfig {
+        let mut c = SystemConfig::test_small();
+        c.l2_hit_rate = 0.0; // make access counts exact for assertions
+        c
+    }
+
+    /// A trace where each block touches its own contiguous 4KB slice.
+    fn partitioned_trace(cfg: &SystemConfig, blocks: u32) -> KernelTrace {
+        let per_block = cfg.page_size;
+        let t_blocks = (0..blocks)
+            .map(|b| BlockTrace {
+                block_id: b,
+                accesses: (0..per_block / cfg.line_size)
+                    .map(|i| Access {
+                        obj: 0,
+                        offset: b as u64 * per_block + i * cfg.line_size,
+                        write: i % 4 == 0,
+                    })
+                    .collect(),
+            })
+            .collect();
+        KernelTrace {
+            name: "partitioned".into(),
+            threads_per_block: 256,
+            objects: vec![ObjectDesc {
+                name: "data".into(),
+                bytes: blocks as u64 * per_block,
+            }],
+            blocks: t_blocks,
+        }
+    }
+
+    fn run(
+        cfg: &SystemConfig,
+        trace: &KernelTrace,
+        plan: &PlacementPlan,
+        policy: Policy,
+    ) -> RunReport {
+        let (mut vm, bases, _, _) = map_objects(cfg, trace, plan).unwrap();
+        KernelRun {
+            cfg,
+            trace,
+            vm: &mut vm,
+            obj_base: &bases,
+            policy,
+            migrate_on_first_touch: plan.migrate_on_first_touch,
+        }
+        .run()
+    }
+
+    #[test]
+    fn fgp_spreads_accesses_quarter_local() {
+        let c = cfg();
+        let t = partitioned_trace(&c, 96);
+        let plan = PlacementPlan::all_fgp(1);
+        let r = run(&c, &t, &plan, Policy::Baseline);
+        assert_eq!(r.accesses.ndp_total(), t.total_accesses());
+        let lf = r.accesses.local_fraction();
+        assert!((lf - 0.25).abs() < 0.02, "local fraction {lf}");
+    }
+
+    /// The paper's core claim in miniature: affinity schedule + Eq 2/3
+    /// placement eliminates remote accesses for block-exclusive data.
+    #[test]
+    fn coda_placement_eliminates_remote() {
+        let c = cfg();
+        let t = partitioned_trace(&c, 96);
+        let chunk = crate::placement::eq2_chunk_size(c.page_size, &c);
+        let plan = PlacementPlan {
+            per_object: vec![Placement::Cgp { chunk_size: chunk }],
+            page_overrides: HashMap::new(),
+            migrate_on_first_touch: false,
+        };
+        let r = run(&c, &t, &plan, Policy::Affinity);
+        assert_eq!(r.accesses.remote, 0, "all accesses must be local");
+        assert_eq!(r.accesses.local, t.total_accesses());
+    }
+
+    #[test]
+    fn coda_is_faster_than_fgp_baseline() {
+        let c = cfg();
+        let t = partitioned_trace(&c, 192);
+        let fgp = run(&c, &t, &PlacementPlan::all_fgp(1), Policy::Baseline);
+        let chunk = crate::placement::eq2_chunk_size(c.page_size, &c);
+        let coda_plan = PlacementPlan {
+            per_object: vec![Placement::Cgp { chunk_size: chunk }],
+            page_overrides: HashMap::new(),
+            migrate_on_first_touch: false,
+        };
+        let coda = run(&c, &t, &coda_plan, Policy::Affinity);
+        let speedup = coda.speedup_over(&fgp);
+        assert!(speedup > 1.1, "speedup {speedup}");
+        assert!(coda.remote_reduction_over(&fgp) > 0.9);
+    }
+
+    #[test]
+    fn migration_fta_migrates_and_localizes() {
+        let c = cfg();
+        let t = partitioned_trace(&c, 24); // one stack's worth
+        let mut plan = PlacementPlan::all_fgp(1);
+        plan.migrate_on_first_touch = true;
+        let r = run(&c, &t, &plan, Policy::Affinity);
+        assert_eq!(r.migrated_pages, 24, "one page per block");
+        // After migration the remaining accesses in each page are local.
+        assert!(r.accesses.local_fraction() > 0.9);
+    }
+
+    #[test]
+    fn determinism() {
+        let c = cfg();
+        let t = partitioned_trace(&c, 96);
+        let plan = PlacementPlan::all_fgp(1);
+        let a = run(&c, &t, &plan, Policy::Baseline);
+        let b = run(&c, &t, &plan, Policy::Baseline);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.accesses, b.accesses);
+    }
+
+    #[test]
+    fn l2_filter_reduces_dram_traffic() {
+        let mut c = cfg();
+        c.l2_hit_rate = 0.5;
+        let t = partitioned_trace(&c, 48);
+        let r = run(&c, &t, &PlacementPlan::all_fgp(1), Policy::Baseline);
+        let total = t.total_accesses();
+        assert!(r.accesses.l2_hits > total / 3);
+        assert_eq!(r.accesses.ndp_total() + r.accesses.l2_hits, total);
+    }
+
+    #[test]
+    fn remote_bandwidth_sensitivity_shape() {
+        // Lower remote bandwidth must hurt an FGP run (Fig 10's premise).
+        let mut slow = cfg();
+        slow.remote_bw_gbs = 4.0;
+        let mut fast = cfg();
+        fast.remote_bw_gbs = 256.0;
+        let t = partitioned_trace(&slow, 96);
+        let plan = PlacementPlan::all_fgp(1);
+        let r_slow = run(&slow, &t, &plan, Policy::Baseline);
+        let r_fast = run(&fast, &t, &plan, Policy::Baseline);
+        assert!(
+            r_slow.cycles > 1.2 * r_fast.cycles,
+            "slow {} vs fast {}",
+            r_slow.cycles,
+            r_fast.cycles
+        );
+    }
+
+    #[test]
+    fn affinity_stack_consistency_with_map_objects() {
+        // Under the CODA plan every block's pages live on its affinity
+        // stack (checked via translation, not simulation).
+        let c = cfg();
+        let t = partitioned_trace(&c, 96);
+        let chunk = crate::placement::eq2_chunk_size(c.page_size, &c);
+        let plan = PlacementPlan {
+            per_object: vec![Placement::Cgp { chunk_size: chunk }],
+            page_overrides: HashMap::new(),
+            migrate_on_first_touch: false,
+        };
+        let (vm, bases, cgp, fgp) = map_objects(&c, &t, &plan).unwrap();
+        assert!(cgp > 0 && fgp == 0);
+        let mapper = AddressMapper::new(&c);
+        for b in &t.blocks {
+            let stack = affinity_stack(b.block_id, &c);
+            for a in &b.accesses {
+                let (p, g) = vm.translate(bases[a.obj as usize] + a.offset).unwrap();
+                assert_eq!(g, Granularity::Cgp);
+                assert_eq!(mapper.stack_of(p, g), stack, "block {}", b.block_id);
+            }
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Run statistics: the access counters behind Fig 9, cycle accounting
+//! behind Fig 8/10/11/12/13/14, and small numeric helpers (geomean,
+//! speedup) used by every bench harness.
+
+/// Where simulated accesses were served.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AccessStats {
+    /// Served by the accessing SM's own stack.
+    pub local: u64,
+    /// Served by another stack over the Remote network.
+    pub remote: u64,
+    /// Issued by the host over the Host network.
+    pub host: u64,
+    /// Absorbed by the stack-level L2 before reaching DRAM.
+    pub l2_hits: u64,
+}
+
+impl AccessStats {
+    pub fn ndp_total(&self) -> u64 {
+        self.local + self.remote
+    }
+
+    /// Fraction of NDP accesses that were remote (the Fig 9 metric).
+    pub fn remote_fraction(&self) -> f64 {
+        let t = self.ndp_total();
+        if t == 0 {
+            0.0
+        } else {
+            self.remote as f64 / t as f64
+        }
+    }
+
+    pub fn local_fraction(&self) -> f64 {
+        let t = self.ndp_total();
+        if t == 0 {
+            0.0
+        } else {
+            self.local as f64 / t as f64
+        }
+    }
+
+    pub fn add(&mut self, other: &AccessStats) {
+        self.local += other.local;
+        self.remote += other.remote;
+        self.host += other.host;
+        self.l2_hits += other.l2_hits;
+    }
+}
+
+/// The result of simulating one workload under one mechanism.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub workload: String,
+    pub mechanism: String,
+    /// Simulated execution time in SM cycles.
+    pub cycles: f64,
+    pub accesses: AccessStats,
+    /// Bytes served by each stack's DRAM (hotspot analysis).
+    pub stack_bytes: Vec<u64>,
+    /// Bytes crossing remote links.
+    pub remote_bytes: u64,
+    /// Mean memory access latency (cycles).
+    pub mean_mem_latency: f64,
+    /// TLB hit rate across all SMs.
+    pub tlb_hit_rate: f64,
+    /// DRAM row-buffer hit rate across stacks.
+    pub row_hit_rate: f64,
+    /// Pages the mechanism placed coarse-grain.
+    pub cgp_pages: u64,
+    /// Pages the mechanism placed fine-grain.
+    pub fgp_pages: u64,
+    /// Pages migrated (migration-based baselines only).
+    pub migrated_pages: u64,
+}
+
+impl RunReport {
+    /// Speedup of this run relative to a baseline run of the same workload.
+    pub fn speedup_over(&self, baseline: &RunReport) -> f64 {
+        baseline.cycles / self.cycles
+    }
+
+    /// Remote-access reduction vs a baseline (positive = fewer remote).
+    pub fn remote_reduction_over(&self, baseline: &RunReport) -> f64 {
+        if baseline.accesses.remote == 0 {
+            return 0.0;
+        }
+        1.0 - self.accesses.remote as f64 / baseline.accesses.remote as f64
+    }
+
+    /// Imbalance of DRAM traffic across stacks: max/mean bytes.
+    pub fn stack_imbalance(&self) -> f64 {
+        if self.stack_bytes.is_empty() {
+            return 1.0;
+        }
+        let max = *self.stack_bytes.iter().max().unwrap() as f64;
+        let mean =
+            self.stack_bytes.iter().sum::<u64>() as f64 / self.stack_bytes.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// Geometric mean of positive values (the paper's cross-benchmark average).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let log_sum: f64 = xs.iter().map(|x| x.max(1e-12).ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Coefficient of variation sigma/mu (§6.4's graph-regularity metric).
+pub fn coeff_of_variation(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        0.0
+    } else {
+        stddev(xs) / m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions() {
+        let s = AccessStats {
+            local: 75,
+            remote: 25,
+            host: 10,
+            l2_hits: 0,
+        };
+        assert!((s.remote_fraction() - 0.25).abs() < 1e-12);
+        assert!((s.local_fraction() - 0.75).abs() < 1e-12);
+        assert_eq!(s.ndp_total(), 100);
+    }
+
+    #[test]
+    fn empty_fractions_are_zero() {
+        let s = AccessStats::default();
+        assert_eq!(s.remote_fraction(), 0.0);
+    }
+
+    #[test]
+    fn speedup_and_reduction() {
+        let base = RunReport {
+            cycles: 200.0,
+            accesses: AccessStats {
+                remote: 100,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let run = RunReport {
+            cycles: 100.0,
+            accesses: AccessStats {
+                remote: 40,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        assert!((run.speedup_over(&base) - 2.0).abs() < 1e-12);
+        assert!((run.remote_reduction_over(&base) - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_matches_hand_computation() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn cv_of_constant_is_zero() {
+        assert_eq!(coeff_of_variation(&[3.0, 3.0, 3.0]), 0.0);
+        assert!(coeff_of_variation(&[1.0, 100.0]) > 0.9);
+    }
+
+    #[test]
+    fn imbalance() {
+        let r = RunReport {
+            stack_bytes: vec![100, 100, 100, 100],
+            ..Default::default()
+        };
+        assert!((r.stack_imbalance() - 1.0).abs() < 1e-12);
+        let r = RunReport {
+            stack_bytes: vec![400, 0, 0, 0],
+            ..Default::default()
+        };
+        assert!((r.stack_imbalance() - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,450 @@
+//! Memory access traces: the interchange format between workload
+//! generators, the profiler, and the simulator, plus the page-sharing
+//! analysis behind Fig 3 / Table 2 and a compact binary record/replay
+//! format.
+//!
+//! Accesses are line-granularity (the generators coalesce per-warp
+//! accesses) and object-relative: `(object, offset)` rather than virtual
+//! addresses, so the same trace can be replayed under any placement.
+
+use anyhow::{bail, Context};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+
+/// One line-granularity memory access, relative to a memory object.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Access {
+    /// Index into the workload's object table.
+    pub obj: u16,
+    /// Byte offset within the object (line-aligned by generators).
+    pub offset: u64,
+    /// Store (true) or load (false).
+    pub write: bool,
+}
+
+/// The accesses of one thread-block.
+#[derive(Clone, Debug, Default)]
+pub struct BlockTrace {
+    pub block_id: u32,
+    pub accesses: Vec<Access>,
+}
+
+/// A memory object (one `cudaMalloc` in the paper's Fig 7).
+#[derive(Clone, Debug)]
+pub struct ObjectDesc {
+    pub name: String,
+    pub bytes: u64,
+}
+
+/// A full kernel trace: objects + per-block access streams.
+#[derive(Clone, Debug)]
+pub struct KernelTrace {
+    pub name: String,
+    pub threads_per_block: u32,
+    pub objects: Vec<ObjectDesc>,
+    pub blocks: Vec<BlockTrace>,
+}
+
+impl KernelTrace {
+    pub fn num_blocks(&self) -> u32 {
+        self.blocks.len() as u32
+    }
+
+    pub fn total_accesses(&self) -> u64 {
+        self.blocks.iter().map(|b| b.accesses.len() as u64).sum()
+    }
+
+    /// Total footprint in bytes.
+    pub fn footprint(&self) -> u64 {
+        self.objects.iter().map(|o| o.bytes).sum()
+    }
+}
+
+/// Sharing histogram of Fig 3: how many thread-blocks touch each page.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SharingHistogram {
+    /// Pages touched by exactly 1 thread-block.
+    pub one_block: u64,
+    /// Pages touched by exactly 2 thread-blocks.
+    pub two_blocks: u64,
+    /// Pages touched by 3..=16 thread-blocks.
+    pub few_blocks: u64,
+    /// Pages touched by >16 but not (almost) all blocks.
+    pub many_blocks: u64,
+    /// Pages touched by >=90% of all thread-blocks.
+    pub all_blocks: u64,
+    /// Pages whose accessing blocks all share one affinity stack.
+    pub one_stack: u64,
+    /// Total touched pages.
+    pub total: u64,
+}
+
+impl SharingHistogram {
+    pub fn fractions(&self) -> [f64; 5] {
+        let t = self.total.max(1) as f64;
+        [
+            self.one_block as f64 / t,
+            self.two_blocks as f64 / t,
+            self.few_blocks as f64 / t,
+            self.many_blocks as f64 / t,
+            self.all_blocks as f64 / t,
+        ]
+    }
+}
+
+/// Workload category of Table 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Category {
+    /// >90% of pages accessed by only one thread-block.
+    BlockExclusive,
+    /// >90% of pages accessed by one memory stack (multiple SMs, one stack).
+    CoreExclusive,
+    /// >60% of pages accessed by only one thread-block.
+    BlockMajority,
+    /// >60% of pages accessed by one memory stack.
+    CoreMajority,
+    /// Most pages accessed by more than one memory stack.
+    Sharing,
+}
+
+impl std::fmt::Display for Category {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Category::BlockExclusive => "block-exclusive",
+            Category::CoreExclusive => "core-exclusive",
+            Category::BlockMajority => "block-majority",
+            Category::CoreMajority => "core-majority",
+            Category::Sharing => "sharing",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Compute the Fig 3 sharing histogram for a kernel trace.
+///
+/// `affinity` maps a block id to its affinity stack (Eq 1); it determines
+/// the `one_stack` statistic used for the core-exclusive classification.
+pub fn sharing_histogram(
+    trace: &KernelTrace,
+    page_size: u64,
+    affinity: impl Fn(u32) -> usize,
+) -> SharingHistogram {
+    // Per (object, page) -> set of accessing blocks, kept small: we only
+    // need |set| and the stack-uniformity flag.
+    #[derive(Clone)]
+    struct PageInfo {
+        blocks: u32,
+        last_block: u32,
+        second_block: u32,
+        stack: usize,
+        one_stack: bool,
+        count_capped: u32,
+    }
+    let mut pages: HashMap<(u16, u64), PageInfo> = HashMap::new();
+    for b in &trace.blocks {
+        let stack = affinity(b.block_id);
+        for a in &b.accesses {
+            let key = (a.obj, a.offset / page_size);
+            match pages.get_mut(&key) {
+                None => {
+                    pages.insert(
+                        key,
+                        PageInfo {
+                            blocks: 1,
+                            last_block: b.block_id,
+                            second_block: u32::MAX,
+                            stack,
+                            one_stack: true,
+                            count_capped: 1,
+                        },
+                    );
+                }
+                Some(p) => {
+                    if p.last_block != b.block_id {
+                        if p.second_block == u32::MAX || p.second_block == p.last_block {
+                            p.second_block = p.last_block;
+                        }
+                        p.last_block = b.block_id;
+                        p.blocks += 1;
+                        p.count_capped = p.count_capped.saturating_add(1);
+                    }
+                    if p.stack != stack {
+                        p.one_stack = false;
+                    }
+                }
+            }
+        }
+    }
+    // NOTE: blocks counts transitions of distinct block visits; generators
+    // emit all of one block's accesses contiguously, so this equals the
+    // number of distinct blocks (verified by tests).
+    let total_blocks = trace.blocks.len() as u32;
+    let mut h = SharingHistogram::default();
+    for p in pages.values() {
+        h.total += 1;
+        if p.one_stack {
+            h.one_stack += 1;
+        }
+        let n = p.blocks;
+        if n == 1 {
+            h.one_block += 1;
+        } else if n == 2 {
+            h.two_blocks += 1;
+        } else if n as f64 >= 0.9 * total_blocks as f64 {
+            h.all_blocks += 1;
+        } else if n <= 16 {
+            h.few_blocks += 1;
+        } else {
+            h.many_blocks += 1;
+        }
+    }
+    h
+}
+
+/// Table 2 classification from the sharing histogram.
+///
+/// "Accessed by only one thread-block" counts the 1–2-block bucket (Fig 3
+/// merges 1 and 2: a block's slice of an object rarely page-aligns, so the
+/// page holding a boundary is inevitably touched by the neighbor block too;
+/// the paper's >90% block-exclusive claims for BFS/NW only hold under that
+/// reading). Categories are tested in Table 2's order.
+pub fn classify(h: &SharingHistogram) -> Category {
+    let t = h.total.max(1) as f64;
+    let block_excl = (h.one_block + h.two_blocks) as f64 / t;
+    let one_stack = h.one_stack as f64 / t;
+    if block_excl > 0.9 {
+        Category::BlockExclusive
+    } else if one_stack > 0.9 {
+        Category::CoreExclusive
+    } else if block_excl > 0.6 {
+        Category::BlockMajority
+    } else if one_stack > 0.6 {
+        Category::CoreMajority
+    } else {
+        Category::Sharing
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Binary record/replay format
+// ---------------------------------------------------------------------------
+
+const MAGIC: &[u8; 8] = b"CODATRC1";
+
+/// Serialize a kernel trace to a compact binary stream.
+pub fn write_trace<W: Write>(w: &mut W, t: &KernelTrace) -> crate::Result<()> {
+    w.write_all(MAGIC)?;
+    write_str(w, &t.name)?;
+    w.write_all(&t.threads_per_block.to_le_bytes())?;
+    w.write_all(&(t.objects.len() as u32).to_le_bytes())?;
+    for o in &t.objects {
+        write_str(w, &o.name)?;
+        w.write_all(&o.bytes.to_le_bytes())?;
+    }
+    w.write_all(&(t.blocks.len() as u32).to_le_bytes())?;
+    for b in &t.blocks {
+        w.write_all(&b.block_id.to_le_bytes())?;
+        w.write_all(&(b.accesses.len() as u32).to_le_bytes())?;
+        for a in &b.accesses {
+            w.write_all(&a.obj.to_le_bytes())?;
+            w.write_all(&a.offset.to_le_bytes())?;
+            w.write_all(&[a.write as u8])?;
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize a kernel trace written by [`write_trace`].
+pub fn read_trace<R: Read>(r: &mut R) -> crate::Result<KernelTrace> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("trace header")?;
+    if &magic != MAGIC {
+        bail!("not a CODA trace (bad magic)");
+    }
+    let name = read_str(r)?;
+    let threads_per_block = read_u32(r)?;
+    let n_obj = read_u32(r)? as usize;
+    let mut objects = Vec::with_capacity(n_obj);
+    for _ in 0..n_obj {
+        let name = read_str(r)?;
+        let bytes = read_u64(r)?;
+        objects.push(ObjectDesc { name, bytes });
+    }
+    let n_blocks = read_u32(r)? as usize;
+    let mut blocks = Vec::with_capacity(n_blocks);
+    for _ in 0..n_blocks {
+        let block_id = read_u32(r)?;
+        let n_acc = read_u32(r)? as usize;
+        let mut accesses = Vec::with_capacity(n_acc);
+        for _ in 0..n_acc {
+            let mut obj = [0u8; 2];
+            r.read_exact(&mut obj)?;
+            let offset = read_u64(r)?;
+            let mut wr = [0u8; 1];
+            r.read_exact(&mut wr)?;
+            accesses.push(Access {
+                obj: u16::from_le_bytes(obj),
+                offset,
+                write: wr[0] != 0,
+            });
+        }
+        blocks.push(BlockTrace {
+            block_id,
+            accesses,
+        });
+    }
+    Ok(KernelTrace {
+        name,
+        threads_per_block,
+        objects,
+        blocks,
+    })
+}
+
+fn write_str<W: Write>(w: &mut W, s: &str) -> crate::Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str<R: Read>(r: &mut R) -> crate::Result<String> {
+    let n = read_u32(r)? as usize;
+    if n > 1 << 20 {
+        bail!("implausible string length {n}");
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> crate::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> crate::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_trace() -> KernelTrace {
+        // Object 0: 4 pages. Blocks 0..4 each touch their own page; all
+        // touch page 0 of object 1 (shared).
+        let objects = vec![
+            ObjectDesc {
+                name: "priv".into(),
+                bytes: 4 * 4096,
+            },
+            ObjectDesc {
+                name: "shared".into(),
+                bytes: 4096,
+            },
+        ];
+        let blocks = (0..4u32)
+            .map(|b| BlockTrace {
+                block_id: b,
+                accesses: vec![
+                    Access {
+                        obj: 0,
+                        offset: b as u64 * 4096,
+                        write: false,
+                    },
+                    Access {
+                        obj: 0,
+                        offset: b as u64 * 4096 + 128,
+                        write: true,
+                    },
+                    Access {
+                        obj: 1,
+                        offset: 0,
+                        write: false,
+                    },
+                ],
+            })
+            .collect();
+        KernelTrace {
+            name: "t".into(),
+            threads_per_block: 64,
+            objects,
+            blocks,
+        }
+    }
+
+    #[test]
+    fn histogram_counts_exclusive_and_shared() {
+        let t = mk_trace();
+        let h = sharing_histogram(&t, 4096, |_| 0);
+        assert_eq!(h.total, 5);
+        assert_eq!(h.one_block, 4);
+        // Shared page touched by 4/4 blocks >= 90% -> all_blocks.
+        assert_eq!(h.all_blocks, 1);
+        // With all blocks on stack 0, every page is one-stack.
+        assert_eq!(h.one_stack, 5);
+    }
+
+    #[test]
+    fn histogram_one_stack_depends_on_affinity() {
+        let t = mk_trace();
+        let h = sharing_histogram(&t, 4096, |b| (b % 4) as usize);
+        assert_eq!(h.one_stack, 4, "only the private pages are one-stack");
+    }
+
+    #[test]
+    fn classify_thresholds() {
+        let mut h = SharingHistogram {
+            one_block: 80,
+            two_blocks: 15,
+            total: 100,
+            ..Default::default()
+        };
+        assert_eq!(classify(&h), Category::BlockExclusive);
+        h.one_block = 55;
+        h.two_blocks = 15;
+        h.one_stack = 70;
+        assert_eq!(classify(&h), Category::BlockMajority);
+        h.one_block = 10;
+        h.two_blocks = 0;
+        h.one_stack = 95;
+        assert_eq!(classify(&h), Category::CoreExclusive);
+        h.one_stack = 65;
+        assert_eq!(classify(&h), Category::CoreMajority);
+        h.one_stack = 10;
+        assert_eq!(classify(&h), Category::Sharing);
+        // Core-exclusive wins over block-majority (Table 2's order): many
+        // two-block pages that all stay within one stack.
+        let h = SharingHistogram {
+            one_block: 10,
+            two_blocks: 60,
+            one_stack: 95,
+            total: 100,
+            ..Default::default()
+        };
+        assert_eq!(classify(&h), Category::CoreExclusive);
+    }
+
+    #[test]
+    fn trace_roundtrip() {
+        let t = mk_trace();
+        let mut buf = Vec::new();
+        write_trace(&mut buf, &t).unwrap();
+        let t2 = read_trace(&mut buf.as_slice()).unwrap();
+        assert_eq!(t2.name, t.name);
+        assert_eq!(t2.threads_per_block, t.threads_per_block);
+        assert_eq!(t2.objects.len(), 2);
+        assert_eq!(t2.objects[0].bytes, t.objects[0].bytes);
+        assert_eq!(t2.blocks.len(), t.blocks.len());
+        assert_eq!(t2.blocks[3].accesses, t.blocks[3].accesses);
+    }
+
+    #[test]
+    fn trace_rejects_garbage() {
+        let buf = b"NOTATRACE_____";
+        assert!(read_trace(&mut buf.as_slice()).is_err());
+    }
+}

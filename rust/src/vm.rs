@@ -1,0 +1,529 @@
+//! Virtual memory: page table entries carrying the CODA granularity bit,
+//! a TLB model, and an OS physical-page allocator that understands
+//! **page-groups** (§4.2).
+//!
+//! The allocator is the "System Software Support" half of the paper's
+//! hardware mechanism: a CGP occupies the space that N FGPs would have
+//! occupied within one stack, so groups of N aligned pages must be uniformly
+//! FGP or CGP, and may only switch modes while the whole group is free.
+//! Allocating a coarse-grain page *on a specific stack* is the primitive the
+//! data-placement algorithm (Eq 3) builds on.
+
+use crate::addr::{AddressMapper, Granularity};
+use crate::config::SystemConfig;
+use anyhow::bail;
+use std::collections::HashMap;
+
+/// A page table entry: translation plus the CODA granularity bit (the paper
+/// stores it in one of the x86 PTE reserved bits [11:9], §7.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pte {
+    pub ppn: u64,
+    pub granularity: Granularity,
+}
+
+/// Per-group allocator bookkeeping.
+#[derive(Clone, Debug)]
+struct GroupEntry {
+    mode: Granularity,
+    /// Bitmask of in-use pages within the group (bit i = page base+i).
+    used: u64,
+    /// Bumped whenever the group returns to the free pool; invalidates any
+    /// stale entries in the mode-specific free pools.
+    epoch: u32,
+}
+
+/// OS physical-page allocator with page-group-aware free lists.
+///
+/// Groups are materialized lazily: a fresh-group cursor covers
+/// never-touched memory, and fully-freed groups recycle through
+/// `free_groups`. Mode-specific pools (`fgp_pool`, per-stack `cgp_pools`)
+/// hold individual free pages of groups already committed to a mode.
+#[derive(Debug)]
+pub struct PhysAllocator {
+    group_len: u64,
+    total_groups: u64,
+    next_fresh: u64,
+    free_groups: Vec<u64>,
+    groups: HashMap<u64, GroupEntry>,
+    /// Free FGP pages: (ppn, group_epoch).
+    fgp_pool: Vec<(u64, u32)>,
+    /// Free CGP pages per stack: (ppn, group_epoch).
+    cgp_pools: Vec<Vec<(u64, u32)>>,
+    mapper: AddressMapper,
+    pages_allocated: u64,
+}
+
+impl PhysAllocator {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let mapper = AddressMapper::new(cfg);
+        let total_pages = cfg.stack_capacity / cfg.page_size * cfg.num_stacks as u64;
+        let group_len = cfg.num_stacks as u64;
+        Self {
+            group_len,
+            total_groups: total_pages / group_len,
+            next_fresh: 0,
+            free_groups: Vec::new(),
+            groups: HashMap::new(),
+            fgp_pool: Vec::new(),
+            cgp_pools: vec![Vec::new(); cfg.num_stacks],
+            mapper,
+            pages_allocated: 0,
+        }
+    }
+
+    fn take_free_group(&mut self) -> Option<u64> {
+        if let Some(g) = self.free_groups.pop() {
+            return Some(g);
+        }
+        if self.next_fresh < self.total_groups {
+            let g = self.next_fresh;
+            self.next_fresh += 1;
+            return Some(g);
+        }
+        None
+    }
+
+    fn commit_group(&mut self, g: u64, mode: Granularity) -> u32 {
+        let epoch = self.groups.get(&g).map(|e| e.epoch).unwrap_or(0);
+        self.groups.insert(
+            g,
+            GroupEntry {
+                mode,
+                used: 0,
+                epoch,
+            },
+        );
+        epoch
+    }
+
+    /// Pop a valid page from a pool, discarding entries invalidated by
+    /// group recycling.
+    fn pop_valid(groups: &HashMap<u64, GroupEntry>, pool: &mut Vec<(u64, u32)>, group_len: u64, mode: Granularity) -> Option<u64> {
+        while let Some((ppn, epoch)) = pool.pop() {
+            let g = ppn / group_len;
+            if let Some(e) = groups.get(&g) {
+                if e.epoch == epoch && e.mode == mode && e.used & (1 << (ppn % group_len)) == 0 {
+                    return Some(ppn);
+                }
+            }
+        }
+        None
+    }
+
+    fn mark_used(&mut self, ppn: u64) {
+        let g = ppn / self.group_len;
+        let e = self.groups.get_mut(&g).expect("group committed");
+        e.used |= 1 << (ppn % self.group_len);
+        self.pages_allocated += 1;
+    }
+
+    /// Allocate one fine-grain page (striped across all stacks).
+    pub fn alloc_fgp(&mut self) -> crate::Result<u64> {
+        if let Some(ppn) = Self::pop_valid(&self.groups, &mut self.fgp_pool, self.group_len, Granularity::Fgp) {
+            self.mark_used(ppn);
+            return Ok(ppn);
+        }
+        let Some(g) = self.take_free_group() else {
+            bail!("out of physical memory (FGP)");
+        };
+        let epoch = self.commit_group(g, Granularity::Fgp);
+        let base = g * self.group_len;
+        // Hand out page 0 now; pool the rest.
+        for i in (1..self.group_len).rev() {
+            self.fgp_pool.push((base + i, epoch));
+        }
+        self.mark_used(base);
+        Ok(base)
+    }
+
+    /// Allocate one coarse-grain page resident entirely on `stack`.
+    ///
+    /// Within a CGP group with base PPN `B` (group-aligned), page `B+i` maps
+    /// to stack `i`, so each group supplies exactly one page per stack.
+    pub fn alloc_cgp(&mut self, stack: usize) -> crate::Result<u64> {
+        if stack >= self.cgp_pools.len() {
+            bail!("stack {stack} out of range");
+        }
+        if let Some(ppn) = Self::pop_valid(
+            &self.groups,
+            &mut self.cgp_pools[stack],
+            self.group_len,
+            Granularity::Cgp,
+        ) {
+            self.mark_used(ppn);
+            return Ok(ppn);
+        }
+        let Some(g) = self.take_free_group() else {
+            bail!("out of physical memory (CGP, stack {stack})");
+        };
+        let epoch = self.commit_group(g, Granularity::Cgp);
+        let base = g * self.group_len;
+        let mut target = None;
+        for i in 0..self.group_len {
+            let ppn = base + i;
+            let s = self.mapper.stack_of_ppn_cgp(ppn);
+            if s == stack && target.is_none() {
+                target = Some(ppn);
+            } else {
+                self.cgp_pools[s].push((ppn, epoch));
+            }
+        }
+        let ppn = target.expect("aligned group covers every stack exactly once");
+        self.mark_used(ppn);
+        Ok(ppn)
+    }
+
+    /// Free a page. When its whole group becomes free, the group may be
+    /// re-committed to either mode by a later allocation (the paper's
+    /// conversion rule).
+    pub fn free(&mut self, ppn: u64) {
+        let g = ppn / self.group_len;
+        let Some(e) = self.groups.get_mut(&g) else {
+            panic!("freeing page {ppn} of unknown group");
+        };
+        let bit = 1 << (ppn % self.group_len);
+        assert!(e.used & bit != 0, "double free of ppn {ppn}");
+        e.used &= !bit;
+        self.pages_allocated -= 1;
+        if e.used == 0 {
+            e.epoch += 1; // invalidate pooled siblings
+            self.free_groups.push(g);
+        } else {
+            // Return this single page to its mode pool.
+            let epoch = e.epoch;
+            match e.mode {
+                Granularity::Fgp => self.fgp_pool.push((ppn, epoch)),
+                Granularity::Cgp => {
+                    let s = self.mapper.stack_of_ppn_cgp(ppn);
+                    self.cgp_pools[s].push((ppn, epoch));
+                }
+            }
+        }
+    }
+
+    /// Mode of the group a page belongs to (None if never allocated).
+    pub fn group_mode(&self, ppn: u64) -> Option<Granularity> {
+        self.groups.get(&(ppn / self.group_len)).map(|e| e.mode)
+    }
+
+    pub fn pages_allocated(&self) -> u64 {
+        self.pages_allocated
+    }
+}
+
+/// A flat per-workload virtual address space with CODA-aware translation.
+#[derive(Debug)]
+pub struct VirtualMemory {
+    page_size: u64,
+    page_shift: u32,
+    table: Vec<Option<Pte>>, // indexed by VPN; dense per-workload space
+    alloc: PhysAllocator,
+    next_vpn: u64,
+}
+
+impl VirtualMemory {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        Self {
+            page_size: cfg.page_size,
+            page_shift: cfg.page_size.trailing_zeros(),
+            table: Vec::new(),
+            alloc: PhysAllocator::new(cfg),
+            next_vpn: 0,
+        }
+    }
+
+    pub fn page_size(&self) -> u64 {
+        self.page_size
+    }
+
+    fn push_pte(&mut self, pte: Pte) -> u64 {
+        let vpn = self.next_vpn;
+        self.next_vpn += 1;
+        if self.table.len() <= vpn as usize {
+            self.table.resize(vpn as usize + 1, None);
+        }
+        self.table[vpn as usize] = Some(pte);
+        vpn
+    }
+
+    /// Map `n_pages` fine-grain pages; returns the base virtual address.
+    pub fn map_fgp(&mut self, n_pages: u64) -> crate::Result<u64> {
+        let base = self.next_vpn;
+        for _ in 0..n_pages {
+            let ppn = self.alloc.alloc_fgp()?;
+            self.push_pte(Pte {
+                ppn,
+                granularity: Granularity::Fgp,
+            });
+        }
+        Ok(base << self.page_shift)
+    }
+
+    /// Map `n_pages` coarse-grain pages; `stack_of_page(i)` names the target
+    /// stack for the i-th page (this is where Eq 3 plugs in). Returns the
+    /// base virtual address.
+    pub fn map_cgp(
+        &mut self,
+        n_pages: u64,
+        mut stack_of_page: impl FnMut(u64) -> usize,
+    ) -> crate::Result<u64> {
+        let base = self.next_vpn;
+        for i in 0..n_pages {
+            let ppn = self.alloc.alloc_cgp(stack_of_page(i))?;
+            self.push_pte(Pte {
+                ppn,
+                granularity: Granularity::Cgp,
+            });
+        }
+        Ok(base << self.page_shift)
+    }
+
+    /// Translate a virtual address. Returns (physical address, granularity).
+    #[inline]
+    pub fn translate(&self, vaddr: u64) -> Option<(u64, Granularity)> {
+        let vpn = (vaddr >> self.page_shift) as usize;
+        let pte = (*self.table.get(vpn)?)?;
+        let off = vaddr & (self.page_size - 1);
+        Some(((pte.ppn << self.page_shift) | off, pte.granularity))
+    }
+
+    /// The PTE for a virtual page (tests / migration).
+    pub fn pte_of(&self, vaddr: u64) -> Option<Pte> {
+        *self.table.get((vaddr >> self.page_shift) as usize)?
+    }
+
+    /// Remap one virtual page onto a freshly allocated CGP page on `stack`
+    /// (used by the migration-based first-touch baseline, §6.1 fn.6).
+    pub fn migrate_to_cgp(&mut self, vaddr: u64, stack: usize) -> crate::Result<()> {
+        let vpn = (vaddr >> self.page_shift) as usize;
+        let Some(Some(old)) = self.table.get(vpn).copied() else {
+            bail!("migrating unmapped page");
+        };
+        let ppn = self.alloc.alloc_cgp(stack)?;
+        self.table[vpn] = Some(Pte {
+            ppn,
+            granularity: Granularity::Cgp,
+        });
+        self.alloc.free(old.ppn);
+        Ok(())
+    }
+
+    pub fn allocator(&self) -> &PhysAllocator {
+        &self.alloc
+    }
+
+    /// Number of mapped virtual pages.
+    pub fn mapped_pages(&self) -> u64 {
+        self.next_vpn
+    }
+}
+
+/// A set-associative TLB with LRU replacement, carrying the granularity bit
+/// alongside each translation (Fig 5).
+#[derive(Debug)]
+pub struct Tlb {
+    sets: Vec<Vec<(u64, Pte, u64)>>, // (vpn, pte, last_used)
+    ways: usize,
+    set_mask: u64,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Tlb {
+    pub fn new(entries: usize) -> Self {
+        let ways = 4.min(entries.max(1));
+        let sets = (entries / ways).max(1).next_power_of_two();
+        Self {
+            sets: vec![Vec::with_capacity(ways); sets],
+            ways,
+            set_mask: sets as u64 - 1,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Look up a VPN; on miss the caller walks the page table and calls
+    /// [`Self::fill`]. Returns the cached PTE on hit.
+    pub fn lookup(&mut self, vpn: u64) -> Option<Pte> {
+        self.tick += 1;
+        let set = &mut self.sets[(vpn & self.set_mask) as usize];
+        if let Some(entry) = set.iter_mut().find(|e| e.0 == vpn) {
+            entry.2 = self.tick;
+            self.hits += 1;
+            return Some(entry.1);
+        }
+        self.misses += 1;
+        None
+    }
+
+    pub fn fill(&mut self, vpn: u64, pte: Pte) {
+        self.tick += 1;
+        let tick = self.tick;
+        let ways = self.ways;
+        let set = &mut self.sets[(vpn & self.set_mask) as usize];
+        if let Some(entry) = set.iter_mut().find(|e| e.0 == vpn) {
+            *entry = (vpn, pte, tick);
+            return;
+        }
+        if set.len() < ways {
+            set.push((vpn, pte, tick));
+        } else {
+            let lru = set
+                .iter_mut()
+                .min_by_key(|e| e.2)
+                .expect("non-empty set");
+            *lru = (vpn, pte, tick);
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::test_small()
+    }
+
+    #[test]
+    fn fgp_alloc_walks_groups() {
+        let mut a = PhysAllocator::new(&cfg());
+        let p0 = a.alloc_fgp().unwrap();
+        assert_eq!(p0, 0);
+        assert_eq!(a.group_mode(p0), Some(Granularity::Fgp));
+        // Next three come from the same group's pool.
+        let mut rest: Vec<u64> = (0..3).map(|_| a.alloc_fgp().unwrap()).collect();
+        rest.sort_unstable();
+        assert_eq!(rest, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn cgp_alloc_targets_requested_stack() {
+        let c = cfg();
+        let mapper = AddressMapper::new(&c);
+        let mut a = PhysAllocator::new(&c);
+        for stack in [2usize, 0, 3, 1, 2, 2] {
+            let ppn = a.alloc_cgp(stack).unwrap();
+            assert_eq!(mapper.stack_of_ppn_cgp(ppn), stack);
+            assert_eq!(a.group_mode(ppn), Some(Granularity::Cgp));
+        }
+    }
+
+    #[test]
+    fn group_modes_are_exclusive_until_freed() {
+        let mut a = PhysAllocator::new(&cfg());
+        let f = a.alloc_fgp().unwrap(); // commits group 0 to FGP
+        let c0 = a.alloc_cgp(0).unwrap(); // must come from a different group
+        assert_ne!(f / 4, c0 / 4, "FGP and CGP pages never share a group");
+    }
+
+    #[test]
+    fn group_conversion_requires_fully_free() {
+        let mut a = PhysAllocator::new(&cfg());
+        // Fill group 0 as FGP.
+        let pages: Vec<u64> = (0..4).map(|_| a.alloc_fgp().unwrap()).collect();
+        assert!(pages.iter().all(|p| p / 4 == 0));
+        // Free all 4 -> group recycles; a CGP allocation may now claim it.
+        for p in pages {
+            a.free(p);
+        }
+        let c = a.alloc_cgp(1).unwrap();
+        assert_eq!(c / 4, 0, "recycled group reused in the other mode");
+        assert_eq!(a.group_mode(c), Some(Granularity::Cgp));
+    }
+
+    #[test]
+    fn stale_pool_entries_are_invalidated() {
+        let mut a = PhysAllocator::new(&cfg());
+        let f = a.alloc_fgp().unwrap(); // group 0 FGP; 3 siblings pooled
+        a.free(f); // group 0 fully free; siblings stale
+        let c = a.alloc_cgp(2).unwrap(); // may recycle group 0 as CGP
+        assert_eq!(a.group_mode(c), Some(Granularity::Cgp));
+        // FGP allocation must NOT return a stale group-0 sibling.
+        let f2 = a.alloc_fgp().unwrap();
+        assert_ne!(f2 / 4, c / 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = PhysAllocator::new(&cfg());
+        let p = a.alloc_fgp().unwrap();
+        a.free(p);
+        a.free(p);
+    }
+
+    #[test]
+    fn allocator_exhaustion() {
+        let mut c = cfg();
+        c.stack_capacity = 4 * c.page_size; // 4 pages/stack -> 16 pages total
+        let mut a = PhysAllocator::new(&c);
+        for _ in 0..16 {
+            a.alloc_fgp().unwrap();
+        }
+        assert!(a.alloc_fgp().is_err());
+    }
+
+    #[test]
+    fn vm_translate_fgp_and_cgp() {
+        let c = cfg();
+        let mut vm = VirtualMemory::new(&c);
+        let v_f = vm.map_fgp(2).unwrap();
+        let v_c = vm.map_cgp(2, |_| 3).unwrap();
+        let (p, g) = vm.translate(v_f + 100).unwrap();
+        assert_eq!(g, Granularity::Fgp);
+        assert_eq!(p & 0xFFF, 100);
+        let (p, g) = vm.translate(v_c + 5000).unwrap();
+        assert_eq!(g, Granularity::Cgp);
+        assert_eq!(p & 0xFFF, 5000 & 0xFFF);
+        let mapper = AddressMapper::new(&c);
+        assert_eq!(mapper.stack_of(p, g), 3);
+        assert!(vm.translate(1 << 40).is_none());
+    }
+
+    #[test]
+    fn vm_migration_changes_stack_and_granularity() {
+        let c = cfg();
+        let mapper = AddressMapper::new(&c);
+        let mut vm = VirtualMemory::new(&c);
+        let v = vm.map_fgp(1).unwrap();
+        assert_eq!(vm.pte_of(v).unwrap().granularity, Granularity::Fgp);
+        vm.migrate_to_cgp(v, 2).unwrap();
+        let (p, g) = vm.translate(v).unwrap();
+        assert_eq!(g, Granularity::Cgp);
+        assert_eq!(mapper.stack_of(p, g), 2);
+    }
+
+    #[test]
+    fn tlb_hits_after_fill_and_lru_evicts() {
+        let mut tlb = Tlb::new(8); // 4-way, 2 sets
+        let pte = |ppn| Pte {
+            ppn,
+            granularity: Granularity::Fgp,
+        };
+        assert!(tlb.lookup(0).is_none());
+        tlb.fill(0, pte(10));
+        assert_eq!(tlb.lookup(0).unwrap().ppn, 10);
+        // Fill one set (even vpns) beyond capacity; vpn 0 stays hot.
+        for vpn in [2u64, 4, 6] {
+            tlb.fill(vpn, pte(vpn));
+            tlb.lookup(0);
+        }
+        tlb.fill(8, pte(8)); // evicts LRU (vpn 2)
+        assert!(tlb.lookup(0).is_some());
+        assert!(tlb.lookup(2).is_none());
+        assert!(tlb.hit_rate() > 0.0);
+    }
+}

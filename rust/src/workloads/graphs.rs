@@ -1,0 +1,467 @@
+//! Graph benchmarks (GraphBIG-derived): BFS, DC, PR, SSSP, BC, GC, CC, TC.
+//!
+//! All are vertex-centric CUDA-style kernels over CSR: one thread per
+//! vertex, `tpb` threads per block, so block `b` owns vertices
+//! `[b*tpb, (b+1)*tpb)`. The emitted accesses follow the real kernels'
+//! index arithmetic: offset reads are contiguous (coalesced), neighbor-list
+//! scans are contiguous per vertex, and neighbor-property reads are
+//! data-dependent gathers — the access pattern the paper's compile-time
+//! analysis cannot resolve and the profiler handles (§4.3.2).
+
+use super::graph::{CsrGraph, GraphSpec};
+use super::{BuiltWorkload, Emitter};
+use crate::analysis::ParamEnv;
+use crate::config::SystemConfig;
+use crate::trace::{BlockTrace, Category, KernelTrace, ObjectDesc};
+
+/// Which per-vertex work a graph kernel does; drives trace emission.
+#[derive(Clone, Copy, Debug)]
+struct GraphKernelShape {
+    /// Reads the neighbor id list (cols) for each vertex.
+    scan_edges: bool,
+    /// Reads a property of each neighbor (gather) from object `gather_obj`.
+    gather: bool,
+    /// Reads a per-edge value array parallel to cols (SSSP weights).
+    edge_values: bool,
+    /// Writes a property of the owned vertex to object `write_obj`.
+    write_own: bool,
+    /// Fraction of vertices active (BFS frontier sweeps < 1.0).
+    active_fraction: f64,
+    /// Property element size in bytes.
+    prop_bytes: u64,
+}
+
+/// Object ids shared by all graph kernels.
+const OBJ_OFFSETS: u16 = 0;
+const OBJ_COLS: u16 = 1;
+const OBJ_PROP_READ: u16 = 2; // gathered neighbor property (e.g. rank[n])
+const OBJ_PROP_WRITE: u16 = 3; // owned vertex property (e.g. next_rank[v])
+const OBJ_EDGE_VALS: u16 = 4; // per-edge values (SSSP weights)
+
+/// Deterministic per-vertex activity test (stable across runs/mechanisms).
+fn active(v: usize, fraction: f64) -> bool {
+    if fraction >= 1.0 {
+        return true;
+    }
+    let mut z = (v as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    (z >> 40) as f64 / (1u64 << 24) as f64 <= fraction
+}
+
+fn emit_graph_kernel(
+    name: &str,
+    g: &CsrGraph,
+    tpb: u32,
+    shape: GraphKernelShape,
+    cfg: &SystemConfig,
+) -> KernelTrace {
+    let v = g.num_vertices;
+    let num_blocks = (v as u32).div_ceil(tpb);
+    let line = cfg.line_size;
+    let mut blocks = Vec::with_capacity(num_blocks as usize);
+    let mut em = Emitter::new(line);
+    for b in 0..num_blocks {
+        let v_lo = (b * tpb) as usize;
+        let v_hi = ((b + 1) * tpb as u32).min(v as u32) as usize;
+        for vtx in v_lo..v_hi {
+            if !active(vtx, shape.active_fraction) {
+                continue;
+            }
+            // offsets[v], offsets[v+1] — coalesced contiguous u32 reads.
+            em.touch(OBJ_OFFSETS, vtx as u64 * 4, 8, false);
+            let (e0, e1) = (g.offsets[vtx] as u64, g.offsets[vtx + 1] as u64);
+            if shape.scan_edges && e1 > e0 {
+                em.touch(OBJ_COLS, e0 * 4, (e1 - e0) * 4, false);
+                if shape.edge_values {
+                    em.touch(OBJ_EDGE_VALS, e0 * 4, (e1 - e0) * 4, false);
+                }
+            }
+            if shape.gather {
+                for &n in g.neighbors(vtx) {
+                    em.touch(
+                        OBJ_PROP_READ,
+                        n as u64 * shape.prop_bytes,
+                        shape.prop_bytes,
+                        false,
+                    );
+                }
+            }
+            if shape.write_own {
+                em.touch(
+                    OBJ_PROP_WRITE,
+                    vtx as u64 * shape.prop_bytes,
+                    shape.prop_bytes,
+                    true,
+                );
+            }
+        }
+        blocks.push(BlockTrace {
+            block_id: b,
+            accesses: em.take(),
+        });
+    }
+    let e = g.num_edges() as u64;
+    let objects = vec![
+        ObjectDesc {
+            name: "row_offsets".into(),
+            bytes: (v as u64 + 1) * 4,
+        },
+        ObjectDesc {
+            name: "col_indices".into(),
+            bytes: e * 4,
+        },
+        ObjectDesc {
+            name: "prop_read".into(),
+            bytes: v as u64 * shape.prop_bytes,
+        },
+        ObjectDesc {
+            name: "prop_write".into(),
+            bytes: v as u64 * shape.prop_bytes,
+        },
+        ObjectDesc {
+            name: "edge_vals".into(),
+            bytes: if shape.edge_values { e * 4 } else { 4 },
+        },
+    ];
+    KernelTrace {
+        name: name.into(),
+        threads_per_block: tpb,
+        objects,
+        blocks,
+    }
+}
+
+fn build(
+    name: &'static str,
+    category: Category,
+    g: &CsrGraph,
+    tpb: u32,
+    shape: GraphKernelShape,
+    cfg: &SystemConfig,
+) -> BuiltWorkload {
+    BuiltWorkload {
+        name,
+        category,
+        trace: emit_graph_kernel(name, g, tpb, shape, cfg),
+        ir: None, // input-dependent: handled by the profiler path
+        env: ParamEnv::new(tpb as i64),
+    }
+}
+
+/// Default suite graph: mildly irregular, high locality (LDBC-like).
+fn suite_graph(cfg: &SystemConfig) -> CsrGraph {
+    CsrGraph::generate(&GraphSpec {
+        num_vertices: 98_304,
+        avg_degree: 8.0,
+        degree_cv: 0.4,
+        locality: 0.92,
+        window: 768,
+        seed: cfg.seed ^ 0x9A47,
+    })
+}
+
+/// PR — PageRank: scan edges, gather neighbor ranks, write own next-rank.
+pub fn pagerank(cfg: &SystemConfig) -> BuiltWorkload {
+    pagerank_on(suite_graph(cfg), cfg)
+}
+
+/// PageRank over an arbitrary graph (Fig 11's sensitivity study).
+pub fn pagerank_on(g: CsrGraph, cfg: &SystemConfig) -> BuiltWorkload {
+    build(
+        "PR",
+        Category::BlockExclusive,
+        &g,
+        1024,
+        GraphKernelShape {
+            scan_edges: true,
+            gather: true,
+            edge_values: false,
+            write_own: true,
+            active_fraction: 1.0,
+            prop_bytes: 4,
+        },
+        cfg,
+    )
+}
+
+/// BFS — level sweep over ~40% frontier.
+pub fn bfs(cfg: &SystemConfig) -> BuiltWorkload {
+    build(
+        "BFS",
+        Category::BlockExclusive,
+        &suite_graph(cfg),
+        1024,
+        GraphKernelShape {
+            scan_edges: true,
+            gather: true,
+            edge_values: false,
+            write_own: true,
+            active_fraction: 0.4,
+            prop_bytes: 4,
+        },
+        cfg,
+    )
+}
+
+/// DC — degree centrality: offsets only, no gathers. The most exclusive
+/// workload in the suite.
+pub fn degree_centrality(cfg: &SystemConfig) -> BuiltWorkload {
+    build(
+        "DC",
+        Category::BlockExclusive,
+        &suite_graph(cfg),
+        1024,
+        GraphKernelShape {
+            scan_edges: true,
+            gather: false,
+            edge_values: false,
+            write_own: true,
+            active_fraction: 1.0,
+            prop_bytes: 4,
+        },
+        cfg,
+    )
+}
+
+/// SSSP — Bellman-Ford sweep: edge weights + neighbor distance gathers.
+pub fn sssp(cfg: &SystemConfig) -> BuiltWorkload {
+    build(
+        "SSSP",
+        Category::BlockExclusive,
+        &suite_graph(cfg),
+        1024,
+        GraphKernelShape {
+            scan_edges: true,
+            gather: true,
+            edge_values: true,
+            write_own: true,
+            active_fraction: 0.6,
+            prop_bytes: 4,
+        },
+        cfg,
+    )
+}
+
+/// BC — betweenness centrality accumulation: very high locality graph
+/// (dependency chains), gathers from the sigma/delta arrays.
+pub fn betweenness(cfg: &SystemConfig) -> BuiltWorkload {
+    let g = CsrGraph::generate(&GraphSpec {
+        num_vertices: 98_304,
+        avg_degree: 8.0,
+        degree_cv: 0.3,
+        locality: 0.97,
+        window: 384,
+        seed: cfg.seed ^ 0xBC01,
+    });
+    build(
+        "BC",
+        Category::BlockExclusive,
+        &g,
+        1024,
+        GraphKernelShape {
+            scan_edges: true,
+            gather: true,
+            edge_values: false,
+            write_own: true,
+            active_fraction: 1.0,
+            prop_bytes: 4,
+        },
+        cfg,
+    )
+}
+
+/// GC — greedy graph coloring: gather neighbor colors, write own color.
+pub fn graph_coloring(cfg: &SystemConfig) -> BuiltWorkload {
+    let g = CsrGraph::generate(&GraphSpec {
+        num_vertices: 98_304,
+        avg_degree: 8.0,
+        degree_cv: 0.3,
+        locality: 0.95,
+        window: 512,
+        seed: cfg.seed ^ 0x6C01,
+    });
+    build(
+        "GC",
+        Category::BlockExclusive,
+        &g,
+        1024,
+        GraphKernelShape {
+            scan_edges: true,
+            gather: true,
+            edge_values: false,
+            write_own: true,
+            active_fraction: 1.0,
+            prop_bytes: 4,
+        },
+        cfg,
+    )
+}
+
+/// CC — connected components with label propagation: low-locality gathers
+/// over a sparser graph; the label array's pages are shared widely, which
+/// is what demotes CC to block-majority in Table 2.
+pub fn connected_components(cfg: &SystemConfig) -> BuiltWorkload {
+    let g = CsrGraph::generate(&GraphSpec {
+        num_vertices: 98_304,
+        avg_degree: 4.0,
+        degree_cv: 0.6,
+        locality: 0.30,
+        window: 2048,
+        seed: cfg.seed ^ 0xCC01,
+    });
+    let mut wl = build(
+        "CC",
+        Category::BlockMajority,
+        &g,
+        256,
+        GraphKernelShape {
+            scan_edges: true,
+            gather: true,
+            edge_values: false,
+            write_own: true,
+            active_fraction: 1.0,
+            prop_bytes: 8,
+        },
+        cfg,
+    );
+    wl.category = Category::BlockMajority;
+    wl
+}
+
+/// TC — triangle counting: for each edge (v,u), scan u's neighbor list.
+/// Every block reads edge pages all over the graph: the canonical sharing
+/// workload.
+pub fn triangle_count(cfg: &SystemConfig) -> BuiltWorkload {
+    let g = CsrGraph::generate(&GraphSpec {
+        num_vertices: 98_304,
+        avg_degree: 8.0,
+        degree_cv: 0.8,
+        locality: 0.10,
+        window: 4096,
+        seed: cfg.seed ^ 0x7C01,
+    });
+    let tpb = 256u32;
+    let line = cfg.line_size;
+    let num_blocks = (g.num_vertices as u32).div_ceil(tpb);
+    let mut blocks = Vec::with_capacity(num_blocks as usize);
+    let mut em = Emitter::new(line);
+    for b in 0..num_blocks {
+        let v_lo = (b * tpb) as usize;
+        let v_hi = ((b + 1) * tpb).min(g.num_vertices as u32) as usize;
+        for vtx in v_lo..v_hi {
+            em.touch(OBJ_OFFSETS, vtx as u64 * 4, 8, false);
+            let (e0, e1) = (g.offsets[vtx] as u64, g.offsets[vtx + 1] as u64);
+            if e1 > e0 {
+                em.touch(OBJ_COLS, e0 * 4, (e1 - e0) * 4, false);
+            }
+            for &u in g.neighbors(vtx) {
+                if (u as usize) <= vtx {
+                    continue; // count each triangle once
+                }
+                // offsets[u], offsets[u+1] then u's neighbor list: the
+                // remote-page scans that make TC a sharing workload.
+                em.touch(OBJ_OFFSETS, u as u64 * 4, 8, false);
+                let (f0, f1) = (g.offsets[u as usize] as u64, g.offsets[u as usize + 1] as u64);
+                if f1 > f0 {
+                    em.touch(OBJ_COLS, f0 * 4, (f1 - f0) * 4, false);
+                }
+            }
+        }
+        blocks.push(BlockTrace {
+            block_id: b,
+            accesses: em.take(),
+        });
+    }
+    let trace = KernelTrace {
+        name: "TC".into(),
+        threads_per_block: tpb,
+        objects: vec![
+            ObjectDesc {
+                name: "row_offsets".into(),
+                bytes: (g.num_vertices as u64 + 1) * 4,
+            },
+            ObjectDesc {
+                name: "col_indices".into(),
+                bytes: g.num_edges() as u64 * 4,
+            },
+        ],
+        blocks,
+    };
+    BuiltWorkload {
+        name: "TC",
+        category: Category::Sharing,
+        trace,
+        ir: None,
+        env: ParamEnv::new(tpb as i64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::affinity_stack;
+    use crate::trace::{classify, sharing_histogram};
+
+    fn check_category(wl: &BuiltWorkload, cfg: &SystemConfig) {
+        let h = sharing_histogram(&wl.trace, cfg.page_size, |b| affinity_stack(b, cfg));
+        let got = classify(&h);
+        assert_eq!(
+            got, wl.category,
+            "{}: histogram {:?}",
+            wl.name, h
+        );
+    }
+
+    #[test]
+    fn pr_is_block_exclusive() {
+        let cfg = SystemConfig::default();
+        check_category(&pagerank(&cfg), &cfg);
+    }
+
+    #[test]
+    fn dc_is_block_exclusive() {
+        let cfg = SystemConfig::default();
+        check_category(&degree_centrality(&cfg), &cfg);
+    }
+
+    #[test]
+    fn cc_is_block_majority() {
+        let cfg = SystemConfig::default();
+        check_category(&connected_components(&cfg), &cfg);
+    }
+
+    #[test]
+    fn tc_is_sharing() {
+        let cfg = SystemConfig::default();
+        check_category(&triangle_count(&cfg), &cfg);
+    }
+
+    #[test]
+    fn traces_are_deterministic() {
+        let cfg = SystemConfig::default();
+        let a = pagerank(&cfg);
+        let b = pagerank(&cfg);
+        assert_eq!(a.trace.total_accesses(), b.trace.total_accesses());
+        assert_eq!(a.trace.blocks[0].accesses, b.trace.blocks[0].accesses);
+    }
+
+    #[test]
+    fn accesses_stay_within_objects() {
+        let cfg = SystemConfig::default();
+        for wl in [pagerank(&cfg), sssp(&cfg), triangle_count(&cfg)] {
+            for b in &wl.trace.blocks {
+                for a in &b.accesses {
+                    let sz = wl.trace.objects[a.obj as usize].bytes;
+                    assert!(
+                        a.offset < sz.div_ceil(cfg.line_size) * cfg.line_size,
+                        "{}: obj {} off {} size {}",
+                        wl.name,
+                        a.obj,
+                        a.offset,
+                        sz
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! The benchmark registry: the paper's 20 evaluated workloads (Table 2)
+//! addressable by name, plus helpers to build the whole suite.
+
+use super::{dense, graphs, BuiltWorkload};
+use crate::config::SystemConfig;
+use crate::trace::Category;
+use anyhow::bail;
+
+/// All 20 benchmark names in Table 2 order, with their paper categories.
+pub const ALL: &[(&str, Category)] = &[
+    // Block-exclusive
+    ("BFS", Category::BlockExclusive),
+    ("DC", Category::BlockExclusive),
+    ("PR", Category::BlockExclusive),
+    ("SSSP", Category::BlockExclusive),
+    ("BC", Category::BlockExclusive),
+    ("GC", Category::BlockExclusive),
+    ("NW", Category::BlockExclusive),
+    // Core-exclusive
+    ("KM", Category::CoreExclusive),
+    ("CFD", Category::CoreExclusive),
+    ("NN", Category::CoreExclusive),
+    ("GE", Category::CoreExclusive),
+    ("SPMV", Category::CoreExclusive),
+    ("SAD", Category::CoreExclusive),
+    ("MM", Category::CoreExclusive),
+    // Block-majority
+    ("CC", Category::BlockMajority),
+    // Core-majority
+    ("MG", Category::CoreMajority),
+    ("DWT", Category::CoreMajority),
+    // Sharing
+    ("TC", Category::Sharing),
+    ("HS3D", Category::Sharing),
+    ("HS", Category::Sharing),
+];
+
+/// Build a benchmark by name.
+pub fn build(name: &str, cfg: &SystemConfig) -> crate::Result<Box<BuiltWorkload>> {
+    let wl = match name {
+        "BFS" => graphs::bfs(cfg),
+        "DC" => graphs::degree_centrality(cfg),
+        "PR" => graphs::pagerank(cfg),
+        "SSSP" => graphs::sssp(cfg),
+        "BC" => graphs::betweenness(cfg),
+        "GC" => graphs::graph_coloring(cfg),
+        "NW" => dense::needleman_wunsch(cfg),
+        "KM" => dense::kmeans(cfg),
+        "CFD" => dense::cfd(cfg),
+        "NN" => dense::nearest_neighbor(cfg),
+        "GE" => dense::gaussian(cfg),
+        "SPMV" => dense::spmv(cfg),
+        "SAD" => dense::sad(cfg),
+        "MM" => dense::matmul(cfg),
+        "CC" => graphs::connected_components(cfg),
+        "MG" => dense::mummer(cfg),
+        "DWT" => dense::dwt(cfg),
+        "TC" => graphs::triangle_count(cfg),
+        "HS3D" => dense::hotspot3d(cfg),
+        "HS" => dense::hybrid_sort(cfg),
+        _ => bail!("unknown benchmark {name}; known: {:?}", names()),
+    };
+    Ok(Box::new(wl))
+}
+
+/// All benchmark names.
+pub fn names() -> Vec<&'static str> {
+    ALL.iter().map(|(n, _)| *n).collect()
+}
+
+/// Names in one category.
+pub fn names_in(cat: Category) -> Vec<&'static str> {
+    ALL.iter()
+        .filter(|(_, c)| *c == cat)
+        .map(|(n, _)| *n)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_20_benchmarks() {
+        assert_eq!(ALL.len(), 20);
+        assert_eq!(names_in(Category::BlockExclusive).len(), 7);
+        assert_eq!(names_in(Category::CoreExclusive).len(), 7);
+        assert_eq!(names_in(Category::BlockMajority).len(), 1);
+        assert_eq!(names_in(Category::CoreMajority).len(), 2);
+        assert_eq!(names_in(Category::Sharing).len(), 3);
+    }
+
+    #[test]
+    fn every_benchmark_builds() {
+        let cfg = SystemConfig::default();
+        for (name, cat) in ALL {
+            let wl = build(name, &cfg).unwrap();
+            assert_eq!(wl.name, *name);
+            assert_eq!(wl.category, *cat, "{name}");
+            assert!(wl.trace.num_blocks() > 0, "{name}");
+            assert!(wl.total_accesses() > 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(build("NOPE", &SystemConfig::default()).is_err());
+    }
+}

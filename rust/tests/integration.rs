@@ -1,0 +1,400 @@
+//! Integration tests: cross-module invariants (property-based via
+//! `coda::proptest_lite`), end-to-end coordinator behaviour, and the
+//! PJRT runtime round-trip against the AOT artifacts (requires
+//! `make artifacts`; the Makefile orders that before `cargo test`).
+
+use coda::addr::{AddressMapper, Granularity};
+use coda::config::SystemConfig;
+use coda::coordinator::{Coordinator, Mechanism};
+use coda::placement::{eq2_chunk_size, eq3_stack_of};
+use coda::proptest_lite::{run_prop, usize_in, PropConfig};
+use coda::rng::Rng;
+use coda::sched::affinity_stack;
+use coda::vm::{PhysAllocator, VirtualMemory};
+use coda::workloads::suite;
+
+fn small_cfg() -> SystemConfig {
+    SystemConfig::test_small()
+}
+
+// ---------------------------------------------------------------------------
+// Property: the central CODA invariant. For any (stacks, blocks_per_stack,
+// B), Eq-2/3 placement routes every block's footprint to its Eq-1 affinity
+// stack (up to the page-rounding skew at chunk boundaries).
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_eq23_placement_matches_affinity() {
+    run_prop(
+        PropConfig {
+            cases: 64,
+            seed: 0xA11,
+        },
+        |rng: &mut Rng| {
+            let mut cfg = SystemConfig::default();
+            cfg.num_stacks = 1 << rng.range(1, 4); // 2..8
+            cfg.fgp_interleave = 128;
+            cfg.sms_per_stack = usize_in(rng, 1, 5);
+            cfg.blocks_per_sm = usize_in(rng, 1, 9);
+            let b_bytes = rng.range(64, 64 * 1024);
+            (cfg, b_bytes)
+        },
+        |(cfg, b_bytes)| {
+            let chunk = eq2_chunk_size(*b_bytes, cfg);
+            // Chunk must be page-aligned.
+            if chunk % cfg.page_size != 0 {
+                return Err(format!("chunk {chunk} not page multiple"));
+            }
+            // When B*N divides the chunk exactly, the mapping is exact.
+            let window = b_bytes * cfg.blocks_per_stack() as u64;
+            if chunk == window {
+                for block in (0..2000u32).step_by(7) {
+                    let aff = affinity_stack(block, cfg);
+                    let byte = block as u64 * b_bytes; // first byte of block's slice
+                    let got = eq3_stack_of(byte, chunk, cfg.num_stacks);
+                    if got != aff {
+                        return Err(format!("block {block}: stack {got} != affinity {aff}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Property: page-group space conservation. Any interleaving of FGP/CGP
+// allocations and frees never double-assigns a physical page, and a CGP
+// allocation always lands on the requested stack.
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_allocator_never_double_allocates() {
+    run_prop(
+        PropConfig {
+            cases: 48,
+            seed: 0xA110C,
+        },
+        |rng: &mut Rng| {
+            // A random alloc/free script.
+            let ops: Vec<(u8, usize)> = (0..200)
+                .map(|_| (rng.below(3) as u8, rng.below(4) as usize))
+                .collect();
+            ops
+        },
+        |ops| {
+            let cfg = small_cfg();
+            let mapper = AddressMapper::new(&cfg);
+            let mut alloc = PhysAllocator::new(&cfg);
+            let mut live: Vec<u64> = Vec::new();
+            for (op, stack) in ops {
+                match op {
+                    0 => {
+                        let p = alloc.alloc_fgp().map_err(|e| e.to_string())?;
+                        if live.contains(&p) {
+                            return Err(format!("double allocation of {p}"));
+                        }
+                        live.push(p);
+                    }
+                    1 => {
+                        let p = alloc.alloc_cgp(*stack).map_err(|e| e.to_string())?;
+                        if live.contains(&p) {
+                            return Err(format!("double allocation of {p}"));
+                        }
+                        if mapper.stack_of_ppn_cgp(p) != *stack {
+                            return Err(format!("cgp page {p} on wrong stack"));
+                        }
+                        live.push(p);
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let idx = (*stack * 7919) % live.len();
+                            let p = live.swap_remove(idx);
+                            alloc.free(p);
+                        }
+                    }
+                }
+            }
+            if alloc.pages_allocated() != live.len() as u64 {
+                return Err("allocation count mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Property: translation consistency. Any mix of FGP/CGP mappings
+// translates every byte to a unique physical line, and CGP pages are fully
+// stack-resident.
+// ---------------------------------------------------------------------------
+#[test]
+fn prop_vm_translation_consistent() {
+    run_prop(
+        PropConfig {
+            cases: 32,
+            seed: 0x7141,
+        },
+        |rng: &mut Rng| {
+            let segs: Vec<(bool, u64, usize)> = (0..12)
+                .map(|_| (rng.chance(0.5), rng.range(1, 6), rng.below(4) as usize))
+                .collect();
+            segs
+        },
+        |segs| {
+            let cfg = small_cfg();
+            let mapper = AddressMapper::new(&cfg);
+            let mut vm = VirtualMemory::new(&cfg);
+            let mut seen = std::collections::HashSet::new();
+            for (is_cgp, pages, stack) in segs {
+                let base = if *is_cgp {
+                    vm.map_cgp(*pages, |_| *stack).map_err(|e| e.to_string())?
+                } else {
+                    vm.map_fgp(*pages).map_err(|e| e.to_string())?
+                };
+                for pg in 0..*pages {
+                    let vaddr = base + pg * cfg.page_size;
+                    let (paddr, g) = vm.translate(vaddr).ok_or("unmapped")?;
+                    if !seen.insert(paddr >> 12) {
+                        return Err(format!("physical page {paddr:#x} mapped twice"));
+                    }
+                    if *is_cgp {
+                        if g != Granularity::Cgp {
+                            return Err("granularity bit lost".into());
+                        }
+                        for off in [0u64, 128, 4095] {
+                            let (p, g) = vm.translate(vaddr + off).ok_or("unmapped")?;
+                            if mapper.stack_of(p, g) != *stack {
+                                return Err("CGP page split across stacks".into());
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator invariants across the full suite (scaled-down runs).
+// ---------------------------------------------------------------------------
+#[test]
+fn access_conservation_across_mechanisms() {
+    let cfg = small_cfg();
+    let coord = Coordinator::new(cfg.clone());
+    for name in ["PR", "KM", "TC"] {
+        let wl = suite::build(name, &cfg).unwrap();
+        let total = wl.total_accesses();
+        for mech in [
+            Mechanism::FgpOnly,
+            Mechanism::CgpOnly,
+            Mechanism::CgpFta,
+            Mechanism::Coda,
+        ] {
+            let r = coord.run(&wl, mech).unwrap();
+            assert_eq!(
+                r.accesses.ndp_total() + r.accesses.l2_hits,
+                total,
+                "{name}/{}",
+                mech.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn coda_never_degrades_any_benchmark() {
+    // §6.4: "CODA does not degrade performance in any case."
+    let cfg = small_cfg();
+    let coord = Coordinator::new(cfg.clone());
+    for (name, _) in suite::ALL {
+        if *name == "SAD" {
+            continue; // the known Fig-14 load-imbalance exception
+        }
+        let wl = suite::build(name, &cfg).unwrap();
+        let fgp = coord.run(&wl, Mechanism::FgpOnly).unwrap();
+        let coda = coord.run(&wl, Mechanism::Coda).unwrap();
+        let s = coda.speedup_over(&fgp);
+        assert!(s > 0.93, "{name}: CODA regressed to {s:.3}x");
+    }
+}
+
+#[test]
+fn coda_reduces_remote_suitewide() {
+    let cfg = small_cfg();
+    let coord = Coordinator::new(cfg.clone());
+    let mut reductions = Vec::new();
+    for (name, _) in suite::ALL {
+        let wl = suite::build(name, &cfg).unwrap();
+        let fgp = coord.run(&wl, Mechanism::FgpOnly).unwrap();
+        let coda = coord.run(&wl, Mechanism::Coda).unwrap();
+        reductions.push(coda.remote_reduction_over(&fgp));
+    }
+    let mean = coda::stats::mean(&reductions);
+    assert!(
+        mean > 0.3,
+        "suite-wide mean remote reduction {mean:.2} too small (paper: 0.38)"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// PJRT runtime round-trip (needs `make artifacts`).
+// ---------------------------------------------------------------------------
+#[test]
+fn pjrt_pagerank_matches_rust_oracle() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let mut rt = match coda::runtime::Runtime::new(dir) {
+        Ok(rt) => rt,
+        Err(e) => panic!("PJRT client unavailable: {e:#}"),
+    };
+    assert!(
+        rt.artifact_exists("pagerank_update"),
+        "run `make artifacts` before `cargo test`"
+    );
+    const V: usize = 8192;
+    const K: usize = 16;
+    let mut rng = Rng::new(99);
+    let mut ranks = vec![0.0f32; V];
+    for r in ranks.iter_mut() {
+        *r = rng.f32();
+    }
+    let sum: f32 = ranks.iter().sum();
+    for r in ranks.iter_mut() {
+        *r /= sum;
+    }
+    let inv_deg: Vec<f32> = (0..V).map(|_| 1.0 / rng.range(1, K as u64 + 1) as f32).collect();
+    let nbr: Vec<i32> = (0..V * K).map(|_| rng.below(V as u64) as i32).collect();
+    let mask: Vec<f32> = (0..V * K)
+        .map(|_| if rng.chance(0.7) { 1.0 } else { 0.0 })
+        .collect();
+    let exe = rt.load("pagerank_update").unwrap();
+    let got = coda::runtime::run_pagerank(exe, &ranks, &inv_deg, &nbr, &mask, V, K).unwrap();
+    // Rust oracle.
+    let d = 0.85f32;
+    for v in 0..V {
+        let mut acc = 0.0f32;
+        for k in 0..K {
+            let n = nbr[v * K + k] as usize;
+            acc += ranks[n] * inv_deg[n] * mask[v * K + k];
+        }
+        let want = (1.0 - d) / V as f32 + d * acc;
+        assert!(
+            (got[v] - want).abs() < 1e-5,
+            "vertex {v}: {} vs {want}",
+            got[v]
+        );
+    }
+}
+
+#[test]
+fn pjrt_kmeans_assign_matches_oracle() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let mut rt = coda::runtime::Runtime::new(dir).unwrap();
+    assert!(rt.artifact_exists("kmeans_assign"), "run `make artifacts`");
+    const N: usize = 4096;
+    const F: usize = 8;
+    const K: usize = 8;
+    let mut rng = Rng::new(5);
+    let points: Vec<f32> = (0..N * F).map(|_| rng.normal() as f32).collect();
+    let centroids: Vec<f32> = (0..K * F).map(|_| rng.normal() as f32).collect();
+    let exe = rt.load("kmeans_assign").unwrap();
+    let out = exe
+        .run(&[
+            coda::runtime::Arg::F32(&points, &[N, F]),
+            coda::runtime::Arg::F32(&centroids, &[K, F]),
+        ])
+        .unwrap();
+    let assign = &out[0];
+    // Oracle assignment.
+    for i in (0..N).step_by(37) {
+        let mut best = (f32::INFINITY, 0usize);
+        for c in 0..K {
+            let mut d = 0.0f32;
+            for f in 0..F {
+                let diff = points[i * F + f] - centroids[c * F + f];
+                d += diff * diff;
+            }
+            if d < best.0 {
+                best = (d, c);
+            }
+        }
+        assert_eq!(assign[i] as usize, best.1, "point {i}");
+    }
+}
+
+#[test]
+fn pjrt_hotspot_matches_oracle() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let mut rt = coda::runtime::Runtime::new(dir).unwrap();
+    assert!(rt.artifact_exists("hotspot_step"), "run `make artifacts`");
+    const H: usize = 128;
+    const W: usize = 128;
+    let mut rng = Rng::new(17);
+    let temp: Vec<f32> = (0..H * W).map(|_| rng.f32() * 80.0).collect();
+    let power: Vec<f32> = (0..H * W).map(|_| rng.f32()).collect();
+    let exe = rt.load("hotspot_step").unwrap();
+    let out = exe
+        .run(&[
+            coda::runtime::Arg::F32(&temp, &[H, W]),
+            coda::runtime::Arg::F32(&power, &[H, W]),
+        ])
+        .unwrap();
+    let got = &out[0];
+    let (alpha, beta) = (0.1f32, 0.05f32);
+    let at = |r: isize, c: isize| {
+        let r = r.clamp(0, H as isize - 1) as usize;
+        let c = c.clamp(0, W as isize - 1) as usize;
+        temp[r * W + c]
+    };
+    for r in (0..H).step_by(13) {
+        for c in (0..W).step_by(11) {
+            let (ri, ci) = (r as isize, c as isize);
+            let want = at(ri, ci)
+                + alpha
+                    * (at(ri - 1, ci) + at(ri + 1, ci) + at(ri, ci - 1) + at(ri, ci + 1)
+                        - 4.0 * at(ri, ci))
+                + beta * power[r * W + c];
+            assert!(
+                (got[r * W + c] - want).abs() < 1e-4,
+                "({r},{c}): {} vs {want}",
+                got[r * W + c]
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Determinism across the public surface.
+// ---------------------------------------------------------------------------
+#[test]
+fn full_pipeline_is_deterministic() {
+    let cfg = small_cfg();
+    let coord = Coordinator::new(cfg.clone());
+    let wl1 = suite::build("SPMV", &cfg).unwrap();
+    let wl2 = suite::build("SPMV", &cfg).unwrap();
+    let r1 = coord.run(&wl1, Mechanism::Coda).unwrap();
+    let r2 = coord.run(&wl2, Mechanism::Coda).unwrap();
+    assert_eq!(r1.cycles, r2.cycles);
+    assert_eq!(r1.accesses, r2.accesses);
+    assert_eq!(r1.stack_bytes, r2.stack_bytes);
+}
+
+#[test]
+fn trace_record_replay_preserves_results() {
+    let cfg = small_cfg();
+    let wl = suite::build("NN", &cfg).unwrap();
+    let mut buf = Vec::new();
+    coda::trace::write_trace(&mut buf, &wl.trace).unwrap();
+    let replayed = coda::trace::read_trace(&mut buf.as_slice()).unwrap();
+    let coord = Coordinator::new(cfg.clone());
+    let r1 = coord.run(&wl, Mechanism::FgpOnly).unwrap();
+    let wl2 = coda::workloads::BuiltWorkload {
+        name: "NN",
+        category: wl.category,
+        trace: replayed,
+        ir: wl.ir.clone(),
+        env: coda::analysis::ParamEnv::new(256),
+    };
+    let r2 = coord.run(&wl2, Mechanism::FgpOnly).unwrap();
+    assert_eq!(r1.cycles, r2.cycles);
+    assert_eq!(r1.accesses, r2.accesses);
+}
