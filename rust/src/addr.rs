@@ -104,6 +104,55 @@ impl AddressMapper {
         self.fold(ppn, ppn << self.page_shift) as usize
     }
 
+    /// Number of stack-selection bits (`log2(num_stacks)`).
+    #[inline]
+    fn stack_bits(&self) -> u32 {
+        (self.stack_mask + 1).trailing_zeros()
+    }
+
+    #[inline]
+    fn shift_for(&self, g: Granularity) -> u32 {
+        match g {
+            Granularity::Fgp => self.stack_shift_fgp,
+            Granularity::Cgp => self.stack_shift_cgp,
+        }
+    }
+
+    /// Split a physical address into `(stack, stack-local offset)` under a
+    /// granularity: the local offset is the address with the
+    /// stack-selection bits removed, i.e. the byte position inside the
+    /// owning stack's share of the address space. [`Self::compose`] is the
+    /// exact inverse; together they witness that dual-mode decode is a
+    /// bijection (no two physical bytes alias one stack-local byte).
+    #[inline]
+    pub fn decompose(&self, paddr: u64, g: Granularity) -> (usize, u64) {
+        let shift = self.shift_for(g);
+        let stack = self.stack_of(paddr, g);
+        let low = paddr & ((1u64 << shift) - 1);
+        let high = (paddr >> shift) >> self.stack_bits();
+        (stack, (high << shift) | low)
+    }
+
+    /// Inverse of [`Self::decompose`]: rebuild the physical address that
+    /// maps to `stack` at stack-local offset `local`.
+    #[inline]
+    pub fn compose(&self, stack: usize, local: u64, g: Granularity) -> u64 {
+        let shift = self.shift_for(g);
+        let low = local & ((1u64 << shift) - 1);
+        let high = local >> shift;
+        // Address with the stack-selection bits zeroed; all bits the XOR
+        // fold sources live above the selection window, so they are already
+        // final here and the fold can be inverted exactly.
+        let base = ((high << self.stack_bits()) << shift) | low;
+        let fold_src = if self.xor_fold {
+            (base >> (self.page_shift + 9)) & self.stack_mask
+        } else {
+            0
+        };
+        let raw = (stack as u64 ^ fold_src) & self.stack_mask;
+        base | (raw << shift)
+    }
+
     /// Page-group index of a PPN: groups of `N` aligned consecutive pages
     /// convert FGP<->CGP together (§4.2).
     #[inline]
@@ -249,6 +298,34 @@ mod tests {
         for &n in &counts {
             let share = n as f64 / total as f64;
             assert!((share - 0.25).abs() < 0.01, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn decompose_compose_roundtrip() {
+        for fold in [false, true] {
+            let m = AddressMapper::new(&cfg()).with_xor_fold(fold);
+            for g in [Granularity::Fgp, Granularity::Cgp] {
+                for addr in [0u64, 1, 127, 128, 4095, 4096, 0xDEAD_BEEF, 1 << 33] {
+                    let (s, off) = m.decompose(addr, g);
+                    assert_eq!(s, m.stack_of(addr, g));
+                    assert_eq!(m.compose(s, off, g), addr, "fold={fold} {g:?} {addr:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compose_targets_requested_stack() {
+        let m = AddressMapper::new(&cfg());
+        for stack in 0..4usize {
+            for local in [0u64, 100, 5000, 1 << 20] {
+                for g in [Granularity::Fgp, Granularity::Cgp] {
+                    let addr = m.compose(stack, local, g);
+                    assert_eq!(m.stack_of(addr, g), stack);
+                    assert_eq!(m.decompose(addr, g), (stack, local));
+                }
+            }
         }
     }
 

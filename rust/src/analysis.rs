@@ -106,7 +106,8 @@ impl SymConst {
             return Some(0);
         }
         if self.terms.len() == 1 {
-            if let Some(c) = self.terms.get(&Vec::new() as &Vec<&'static str>) {
+            let empty: Vec<&'static str> = Vec::new();
+            if let Some(c) = self.terms.get(&empty) {
                 return Some(*c);
             }
         }

@@ -5,6 +5,10 @@
 use anyhow::bail;
 use std::collections::HashMap;
 
+/// Option names the `coda` CLI accepts with a value (`--opt value` /
+/// `--opt=value`). Kept here so the binary and tests agree on the set.
+pub const VALUE_OPTS: &[&str] = &["mechanism", "config", "set", "mem-backend"];
+
 /// Parsed command line.
 #[derive(Debug, Default)]
 pub struct Args {
@@ -86,6 +90,17 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(Args::parse(&argv(&["run", "--mechanism"]), &["mechanism"]).is_err());
+    }
+
+    #[test]
+    fn mem_backend_flag_takes_a_value() {
+        let a = Args::parse(
+            &argv(&["run", "PR", "--mem-backend", "bank"]),
+            VALUE_OPTS,
+        )
+        .unwrap();
+        assert_eq!(a.opt("mem-backend"), Some("bank"));
+        assert!(a.flags.is_empty());
     }
 
     #[test]

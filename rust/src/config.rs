@@ -10,6 +10,45 @@
 use anyhow::{bail, Context};
 use std::collections::BTreeMap;
 
+/// Which DRAM timing backend serves memory accesses (see [`crate::mem`]).
+///
+/// * [`MemBackendKind::FixedLatency`] — the original channel model: open-row
+///   hit/miss latency plus channel-bus occupancy. Cheap and adequate for the
+///   paper's headline comparisons.
+/// * [`MemBackendKind::BankLevel`] — per-bank state: row-buffer
+///   hit/miss/conflict timing, bank-busy queuing, bank-group column-command
+///   gaps, and periodic refresh windows. DRAMsim-class fidelity at model
+///   cost; changes absolute cycle counts but must never change access
+///   *counts* (enforced by `tests/backends.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum MemBackendKind {
+    /// Open-row channel model with fixed hit/miss service latency.
+    #[default]
+    FixedLatency,
+    /// Bank-level model: per-bank row state, conflicts, refresh.
+    BankLevel,
+}
+
+impl MemBackendKind {
+    /// Parse a CLI/config spelling; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim() {
+            "fixed" | "fixed-latency" | "fixed_latency" => Some(Self::FixedLatency),
+            "bank" | "bank-level" | "bank_level" => Some(Self::BankLevel),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for MemBackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::FixedLatency => "fixed",
+            Self::BankLevel => "bank",
+        })
+    }
+}
+
 /// Full system configuration. All bandwidths are aggregate GB/s; the
 /// simulator converts to bytes/cycle at `sm_clock_ghz`.
 #[derive(Clone, Debug, PartialEq)]
@@ -62,6 +101,26 @@ pub struct SystemConfig {
     /// DRAM row (page) size in bytes per bank.
     pub row_size: u64,
 
+    // --- DRAM timing backend ---------------------------------------------
+    /// Which DRAM timing backend serves accesses (see [`crate::mem`]).
+    pub mem_backend: MemBackendKind,
+    /// Bank groups per channel (bank-level backend; power of two).
+    pub bank_groups_per_channel: usize,
+    /// Row-to-column delay tRCD (ns, bank-level backend).
+    pub dram_trcd_ns: f64,
+    /// Precharge time tRP (ns, bank-level backend).
+    pub dram_trp_ns: f64,
+    /// Column access strobe latency tCL (ns, bank-level backend).
+    pub dram_tcl_ns: f64,
+    /// Column-command gap within one bank group, tCCD_L (ns).
+    pub dram_tccd_l_ns: f64,
+    /// Column-command gap across bank groups, tCCD_S (ns).
+    pub dram_tccd_s_ns: f64,
+    /// Refresh interval tREFI (ns): an all-bank refresh starts every tREFI.
+    pub dram_trefi_ns: f64,
+    /// Refresh cycle time tRFC (ns): the bank-unavailable window.
+    pub dram_trfc_ns: f64,
+
     // --- caches / TLB ------------------------------------------------------
     /// Cache line size in bytes (memory request granularity).
     pub line_size: u64,
@@ -108,6 +167,15 @@ impl Default for SystemConfig {
             channels_per_stack: 8,
             banks_per_channel: 16,
             row_size: 2048,
+            mem_backend: MemBackendKind::FixedLatency,
+            bank_groups_per_channel: 4,
+            dram_trcd_ns: 14.0,
+            dram_trp_ns: 14.0,
+            dram_tcl_ns: 14.0,
+            dram_tccd_l_ns: 3.0,
+            dram_tccd_s_ns: 1.0,
+            dram_trefi_ns: 3900.0,
+            dram_trfc_ns: 260.0,
             line_size: 128,
             tlb_entries: 64,
             tlb_miss_ns: 200.0,
@@ -173,6 +241,31 @@ impl SystemConfig {
         if self.mlp_per_block == 0 || self.blocks_per_sm == 0 || self.sms_per_stack == 0 {
             bail!("mlp_per_block, blocks_per_sm, sms_per_stack must be positive");
         }
+        if self.bank_groups_per_channel == 0
+            || !self.bank_groups_per_channel.is_power_of_two()
+            || self.bank_groups_per_channel > self.banks_per_channel
+        {
+            bail!(
+                "bank_groups_per_channel must be a power of two <= banks_per_channel, got {}",
+                self.bank_groups_per_channel
+            );
+        }
+        for (name, v) in [
+            ("dram_trcd_ns", self.dram_trcd_ns),
+            ("dram_trp_ns", self.dram_trp_ns),
+            ("dram_tcl_ns", self.dram_tcl_ns),
+            ("dram_tccd_l_ns", self.dram_tccd_l_ns),
+            ("dram_tccd_s_ns", self.dram_tccd_s_ns),
+            ("dram_trefi_ns", self.dram_trefi_ns),
+            ("dram_trfc_ns", self.dram_trfc_ns),
+        ] {
+            if v.is_nan() || v <= 0.0 {
+                bail!("{name} must be positive, got {v}");
+            }
+        }
+        if self.dram_trfc_ns >= self.dram_trefi_ns {
+            bail!("dram_trfc_ns must be smaller than dram_trefi_ns");
+        }
         Ok(())
     }
 
@@ -206,6 +299,19 @@ impl SystemConfig {
             "channels_per_stack" => parse!(channels_per_stack, usize),
             "banks_per_channel" => parse!(banks_per_channel, usize),
             "row_size" => parse!(row_size, u64),
+            "mem_backend" => {
+                self.mem_backend = MemBackendKind::parse(v).ok_or_else(|| {
+                    anyhow::anyhow!("bad value for {key}: {v} (expected fixed|bank)")
+                })?
+            }
+            "bank_groups_per_channel" => parse!(bank_groups_per_channel, usize),
+            "dram_trcd_ns" => parse!(dram_trcd_ns, f64),
+            "dram_trp_ns" => parse!(dram_trp_ns, f64),
+            "dram_tcl_ns" => parse!(dram_tcl_ns, f64),
+            "dram_tccd_l_ns" => parse!(dram_tccd_l_ns, f64),
+            "dram_tccd_s_ns" => parse!(dram_tccd_s_ns, f64),
+            "dram_trefi_ns" => parse!(dram_trefi_ns, f64),
+            "dram_trfc_ns" => parse!(dram_trfc_ns, f64),
             "line_size" => parse!(line_size, u64),
             "tlb_entries" => parse!(tlb_entries, usize),
             "tlb_miss_ns" => parse!(tlb_miss_ns, f64),
@@ -267,6 +373,18 @@ impl SystemConfig {
             ("channels_per_stack", self.channels_per_stack.to_string()),
             ("banks_per_channel", self.banks_per_channel.to_string()),
             ("row_size", self.row_size.to_string()),
+            ("mem_backend", self.mem_backend.to_string()),
+            (
+                "bank_groups_per_channel",
+                self.bank_groups_per_channel.to_string(),
+            ),
+            ("dram_trcd_ns", self.dram_trcd_ns.to_string()),
+            ("dram_trp_ns", self.dram_trp_ns.to_string()),
+            ("dram_tcl_ns", self.dram_tcl_ns.to_string()),
+            ("dram_tccd_l_ns", self.dram_tccd_l_ns.to_string()),
+            ("dram_tccd_s_ns", self.dram_tccd_s_ns.to_string()),
+            ("dram_trefi_ns", self.dram_trefi_ns.to_string()),
+            ("dram_trfc_ns", self.dram_trfc_ns.to_string()),
             ("line_size", self.line_size.to_string()),
             ("tlb_entries", self.tlb_entries.to_string()),
             ("tlb_miss_ns", self.tlb_miss_ns.to_string()),
@@ -362,5 +480,33 @@ mod tests {
     fn set_rejects_garbage_value() {
         let mut c = SystemConfig::default();
         assert!(c.set("num_stacks", "four").is_err());
+    }
+
+    #[test]
+    fn mem_backend_parses_and_roundtrips() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.mem_backend, MemBackendKind::FixedLatency);
+        c.set("mem_backend", "bank").unwrap();
+        assert_eq!(c.mem_backend, MemBackendKind::BankLevel);
+        c.set("mem_backend", "fixed-latency").unwrap();
+        assert_eq!(c.mem_backend, MemBackendKind::FixedLatency);
+        assert!(c.set("mem_backend", "dramsim9000").is_err());
+        let text = "mem_backend = bank\ndram_trfc_ns = 130.0\n";
+        let c2 = SystemConfig::from_toml_str(text).unwrap();
+        assert_eq!(c2.mem_backend, MemBackendKind::BankLevel);
+        assert_eq!(c2.dram_trfc_ns, 130.0);
+    }
+
+    #[test]
+    fn rejects_bad_bank_timing() {
+        let mut c = SystemConfig::default();
+        c.bank_groups_per_channel = 3;
+        assert!(c.validate().is_err());
+        let mut c = SystemConfig::default();
+        c.dram_trcd_ns = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = SystemConfig::default();
+        c.dram_trfc_ns = c.dram_trefi_ns;
+        assert!(c.validate().is_err());
     }
 }

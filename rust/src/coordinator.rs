@@ -75,6 +75,13 @@ impl Coordinator {
         &self.cfg
     }
 
+    /// Select the DRAM timing backend for subsequent runs (builder style;
+    /// equivalent to setting `mem_backend` in the config up front).
+    pub fn with_mem_backend(mut self, kind: crate::config::MemBackendKind) -> Self {
+        self.cfg.mem_backend = kind;
+        self
+    }
+
     /// Build the placement plan a mechanism uses for a workload.
     pub fn plan_for(&self, wl: &BuiltWorkload, mech: Mechanism) -> PlacementPlan {
         let n = wl.trace.objects.len();
@@ -238,6 +245,22 @@ mod tests {
                 m.name()
             );
         }
+    }
+
+    #[test]
+    fn mem_backend_threads_through_reports() {
+        let c = cfg();
+        let wl = suite::build("NN", &c).unwrap();
+        let fixed = Coordinator::new(c.clone())
+            .run(&wl, Mechanism::FgpOnly)
+            .unwrap();
+        let bank = Coordinator::new(c.clone())
+            .with_mem_backend(crate::config::MemBackendKind::BankLevel)
+            .run(&wl, Mechanism::FgpOnly)
+            .unwrap();
+        assert_eq!(fixed.accesses, bank.accesses);
+        assert_eq!(fixed.mem_backend, "fixed");
+        assert_eq!(bank.mem_backend, "bank");
     }
 
     #[test]

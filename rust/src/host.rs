@@ -9,7 +9,7 @@
 
 use crate::addr::AddressMapper;
 use crate::config::SystemConfig;
-use crate::mem::HbmStack;
+use crate::mem::{self, MemBackend, MemStats};
 use crate::net::Interconnect;
 use crate::stats::RunReport;
 use crate::trace::KernelTrace;
@@ -29,7 +29,7 @@ pub fn run_host_sweep(
 ) -> RunReport {
     let mapper = AddressMapper::new(cfg);
     let mut net = Interconnect::new(cfg);
-    let mut stacks: Vec<HbmStack> = (0..cfg.num_stacks).map(|_| HbmStack::new(cfg)).collect();
+    let mut stacks: Vec<Box<dyn MemBackend>> = mem::make_backends(cfg);
     let line = cfg.line_size;
     let mut host_accesses = 0u64;
     let mut window: Vec<f64> = Vec::with_capacity(HOST_MLP);
@@ -53,6 +53,10 @@ pub fn run_host_sweep(
             }
         }
     }
+    let mut mem_stats = MemStats::default();
+    for s in &stacks {
+        mem_stats.add(&s.stats());
+    }
     RunReport {
         workload: trace.name.clone(),
         mechanism: "host".into(),
@@ -69,6 +73,9 @@ pub fn run_host_sweep(
             let rates: Vec<f64> = stacks.iter().map(|s| s.row_hit_rate()).collect();
             crate::stats::mean(&rates)
         },
+        mem_backend: cfg.mem_backend.to_string(),
+        bank_conflicts: mem_stats.row_conflicts,
+        refresh_stalls: mem_stats.refresh_stalls,
         cgp_pages: 0,
         fgp_pages: 0,
         migrated_pages: 0,

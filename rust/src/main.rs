@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! coda run <BENCH> [--mechanism coda|fgp|cgp|fta|migrate|fgp-affinity|steal]
+//!                  [--mem-backend fixed|bank]
 //!                  [--config file.toml] [--set key=value]... [--json]
 //! coda compare <BENCH>            # all mechanisms side by side
 //! coda classify [BENCH]           # Fig-3 histogram + Table-2 category
@@ -46,6 +47,10 @@ fn load_config(args: &Args) -> coda::Result<SystemConfig> {
                 .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got {pair}"))?;
             cfg.set(k, v)?;
         }
+    }
+    // --mem-backend is sugar for --set mem_backend=... and wins over it.
+    if let Some(backend) = args.opt("mem-backend") {
+        cfg.set("mem_backend", backend)?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -297,7 +302,7 @@ fn cmd_trace(args: &Args) -> coda::Result<()> {
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(&argv, &["mechanism", "config", "set"]) {
+    let args = match Args::parse(&argv, coda::cli::VALUE_OPTS) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");

@@ -10,7 +10,7 @@
 use crate::addr::AddressMapper;
 use crate::config::SystemConfig;
 use crate::gpu::Topology;
-use crate::mem::HbmStack;
+use crate::mem::{self, MemBackend, MemStats};
 use crate::net::Interconnect;
 use crate::stats::{AccessStats, RunReport};
 use crate::vm::{Tlb, VirtualMemory};
@@ -43,7 +43,7 @@ pub fn run_mix(
     let topo = Topology::new(cfg);
     let mapper = AddressMapper::new(cfg);
     let mut net = Interconnect::new(cfg);
-    let mut stacks: Vec<HbmStack> = (0..cfg.num_stacks).map(|_| HbmStack::new(cfg)).collect();
+    let mut stacks: Vec<Box<dyn MemBackend>> = mem::make_backends(cfg);
     let mut tlbs: Vec<Tlb> = (0..topo.sms.len())
         .map(|_| Tlb::new(cfg.tlb_entries))
         .collect();
@@ -160,6 +160,10 @@ pub fn run_mix(
         }
     }
 
+    let mut mem_stats = MemStats::default();
+    for s in &stacks {
+        mem_stats.add(&s.stats());
+    }
     let report = RunReport {
         workload: mix
             .apps
@@ -172,6 +176,9 @@ pub fn run_mix(
         accesses: stats,
         stack_bytes: stacks.iter().map(|s| s.bytes_served()).collect(),
         remote_bytes: net.remote_bytes(),
+        mem_backend: cfg.mem_backend.to_string(),
+        bank_conflicts: mem_stats.row_conflicts,
+        refresh_stalls: mem_stats.refresh_stalls,
         ..Default::default()
     };
     Ok((app_end, report))

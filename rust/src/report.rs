@@ -109,6 +109,9 @@ impl From<&RunReport> for Json {
             .push("mean_mem_latency", Json::Num(r.mean_mem_latency))
             .push("tlb_hit_rate", Json::Num(r.tlb_hit_rate))
             .push("row_hit_rate", Json::Num(r.row_hit_rate))
+            .push("mem_backend", Json::Str(r.mem_backend.clone()))
+            .push("bank_conflicts", Json::Num(r.bank_conflicts as f64))
+            .push("refresh_stalls", Json::Num(r.refresh_stalls as f64))
             .push("cgp_pages", Json::Num(r.cgp_pages as f64))
             .push("fgp_pages", Json::Num(r.fgp_pages as f64))
             .push("migrated_pages", Json::Num(r.migrated_pages as f64))

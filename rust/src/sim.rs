@@ -16,7 +16,7 @@
 use crate::addr::{AddressMapper, Granularity};
 use crate::config::SystemConfig;
 use crate::gpu::Topology;
-use crate::mem::HbmStack;
+use crate::mem::{self, MemBackend, MemStats};
 use crate::net::Interconnect;
 use crate::sched::{Policy, Scheduler};
 use crate::stats::{AccessStats, RunReport};
@@ -70,7 +70,9 @@ impl<'a> KernelRun<'a> {
         let topo = Topology::new(cfg);
         let mapper = AddressMapper::new(cfg);
         let mut net = Interconnect::new(cfg);
-        let mut stacks: Vec<HbmStack> = (0..cfg.num_stacks).map(|_| HbmStack::new(cfg)).collect();
+        // DRAM timing is pluggable (fixed-latency vs bank-level); the
+        // backend may only shape time, never which accesses occur.
+        let mut stacks: Vec<Box<dyn MemBackend>> = mem::make_backends(cfg);
         let mut tlbs: Vec<Tlb> = (0..topo.sms.len())
             .map(|_| Tlb::new(cfg.tlb_entries))
             .collect();
@@ -233,6 +235,10 @@ impl<'a> KernelRun<'a> {
             let rates: Vec<f64> = stacks.iter().map(|s| s.row_hit_rate()).collect();
             crate::stats::mean(&rates)
         };
+        let mut mem_stats = MemStats::default();
+        for s in &stacks {
+            mem_stats.add(&s.stats());
+        }
         RunReport {
             workload: self.trace.name.clone(),
             mechanism: String::new(),
@@ -251,6 +257,9 @@ impl<'a> KernelRun<'a> {
                 tlb_hits as f64 / tlb_total as f64
             },
             row_hit_rate,
+            mem_backend: cfg.mem_backend.to_string(),
+            bank_conflicts: mem_stats.row_conflicts,
+            refresh_stalls: mem_stats.refresh_stalls,
             cgp_pages: 0,
             fgp_pages: 0,
             migrated_pages: migrated,
@@ -424,6 +433,24 @@ mod tests {
         let b = run(&c, &t, &plan, Policy::Baseline);
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.accesses, b.accesses);
+    }
+
+    #[test]
+    fn bank_backend_preserves_access_counts() {
+        let fixed = cfg();
+        let mut bank = cfg();
+        bank.mem_backend = crate::config::MemBackendKind::BankLevel;
+        let t = partitioned_trace(&fixed, 96);
+        let plan = PlacementPlan::all_fgp(1);
+        let rf = run(&fixed, &t, &plan, Policy::Baseline);
+        let rb = run(&bank, &t, &plan, Policy::Baseline);
+        assert_eq!(rf.accesses, rb.accesses, "backend leaked into placement");
+        assert_eq!(rf.stack_bytes, rb.stack_bytes);
+        assert_eq!(rb.mem_backend, "bank");
+        assert_eq!(rf.mem_backend, "fixed");
+        // Timing is allowed (expected) to differ.
+        assert!(rb.cycles > 0.0);
+        assert!((rb.cycles - rf.cycles).abs() > 1e-9);
     }
 
     #[test]

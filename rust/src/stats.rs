@@ -65,6 +65,12 @@ pub struct RunReport {
     pub tlb_hit_rate: f64,
     /// DRAM row-buffer hit rate across stacks.
     pub row_hit_rate: f64,
+    /// DRAM timing backend that produced the run ("fixed" / "bank").
+    pub mem_backend: String,
+    /// Row-buffer conflicts across stacks (bank-level backend; 0 for fixed).
+    pub bank_conflicts: u64,
+    /// Accesses delayed by DRAM refresh windows (bank-level backend).
+    pub refresh_stalls: u64,
     /// Pages the mechanism placed coarse-grain.
     pub cgp_pages: u64,
     /// Pages the mechanism placed fine-grain.

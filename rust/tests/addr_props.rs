@@ -1,0 +1,187 @@
+//! Property tests (via `coda::proptest_lite`) for the dual-mode address
+//! mapping and the PTE path:
+//!
+//! * FGP and CGP address -> (stack, stack-local offset) decode is a
+//!   bijection over random pages: `compose . decompose = id` and
+//!   `decompose . compose = id`, under plain and XOR-folded mappings, for
+//!   4 KB and 2 MB pages, across stack counts.
+//! * The granularity bit round-trips through the PTE path in `vm.rs`: a
+//!   page mapped FGP/CGP reads back with the same bit from `pte_of` and
+//!   `translate`, and CGP pages resolve to their requested stack.
+
+// Case generators mutate a default config; the lint's suggested struct
+// literal obscures which knobs each property varies.
+#![allow(clippy::field_reassign_with_default)]
+
+use coda::addr::{large_page_mapper, AddressMapper, Granularity};
+use coda::config::SystemConfig;
+use coda::proptest_lite::{run_prop, PropConfig};
+use coda::rng::Rng;
+use coda::vm::VirtualMemory;
+
+/// Random (config, mapper-variant, address) cases for the bijection.
+#[test]
+fn prop_dual_mode_decode_is_a_bijection() {
+    run_prop(
+        PropConfig {
+            cases: 128,
+            seed: 0xADD2,
+        },
+        |rng: &mut Rng| {
+            let mut cfg = SystemConfig::default();
+            cfg.num_stacks = 1 << rng.range(0, 4); // 1..8
+            cfg.fgp_interleave = 128 << rng.range(0, 2); // 128 or 256
+            let fold = rng.chance(0.5);
+            let large = rng.chance(0.25);
+            // 48-bit physical addresses, page-aligned plus a random offset.
+            let addrs: Vec<u64> = (0..64)
+                .map(|_| rng.below(1u64 << 48))
+                .collect();
+            (cfg, fold, large, addrs)
+        },
+        |(cfg, fold, large, addrs)| {
+            cfg.validate().map_err(|e| e.to_string())?;
+            let mapper = if *large {
+                large_page_mapper(cfg)
+            } else {
+                AddressMapper::new(cfg)
+            }
+            .with_xor_fold(*fold);
+            for &addr in addrs {
+                for g in [Granularity::Fgp, Granularity::Cgp] {
+                    let (stack, local) = mapper.decompose(addr, g);
+                    if stack != mapper.stack_of(addr, g) {
+                        return Err(format!("decompose stack mismatch at {addr:#x}"));
+                    }
+                    if stack >= cfg.num_stacks {
+                        return Err(format!("stack {stack} out of range at {addr:#x}"));
+                    }
+                    let back = mapper.compose(stack, local, g);
+                    if back != addr {
+                        return Err(format!(
+                            "compose(decompose({addr:#x})) = {back:#x} ({g:?})"
+                        ));
+                    }
+                    // Inverse direction: a synthetic (stack, local) pair
+                    // round-trips too, so decode is onto as well as 1-1.
+                    let synth_stack = (stack + 1) % cfg.num_stacks;
+                    let synth = mapper.compose(synth_stack, local, g);
+                    if mapper.decompose(synth, g) != (synth_stack, local) {
+                        return Err(format!(
+                            "decompose(compose({synth_stack}, {local:#x})) diverged ({g:?})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Distinct addresses never alias one (stack, local) pair — checked
+/// directly over a dense window so off-by-one bit errors can't hide.
+#[test]
+fn prop_decode_has_no_collisions_in_a_window() {
+    run_prop(
+        PropConfig {
+            cases: 32,
+            seed: 0xADD3,
+        },
+        |rng: &mut Rng| {
+            let base = rng.below(1u64 << 40) & !0xFFF;
+            let fold = rng.chance(0.5);
+            (base, fold)
+        },
+        |(base, fold)| {
+            let cfg = SystemConfig::default();
+            let mapper = AddressMapper::new(&cfg).with_xor_fold(*fold);
+            for g in [Granularity::Fgp, Granularity::Cgp] {
+                let mut seen = std::collections::HashSet::new();
+                for line in 0..256u64 {
+                    let addr = base + line * cfg.line_size;
+                    if !seen.insert(mapper.decompose(addr, g)) {
+                        return Err(format!("collision at {addr:#x} ({g:?})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Granularity-bit round-trip through the PTE path: map a random mix of
+/// FGP/CGP segments and check every page reads back with the bit it was
+/// mapped with, through both `pte_of` and `translate`, and that CGP pages
+/// land whole on the requested stack.
+#[test]
+fn prop_granularity_bit_roundtrips_through_pte() {
+    run_prop(
+        PropConfig {
+            cases: 48,
+            seed: 0x97E0,
+        },
+        |rng: &mut Rng| {
+            let segs: Vec<(bool, u64, usize)> = (0..10)
+                .map(|_| {
+                    (
+                        rng.chance(0.5),
+                        rng.range(1, 8),
+                        rng.below(4) as usize,
+                    )
+                })
+                .collect();
+            segs
+        },
+        |segs| {
+            let cfg = SystemConfig::test_small();
+            let mapper = AddressMapper::new(&cfg);
+            let mut vm = VirtualMemory::new(&cfg);
+            for (is_cgp, pages, stack) in segs {
+                let want = if *is_cgp {
+                    Granularity::Cgp
+                } else {
+                    Granularity::Fgp
+                };
+                let base = if *is_cgp {
+                    vm.map_cgp(*pages, |_| *stack)
+                } else {
+                    vm.map_fgp(*pages)
+                }
+                .map_err(|e| e.to_string())?;
+                for pg in 0..*pages {
+                    let vaddr = base + pg * cfg.page_size;
+                    let pte = vm.pte_of(vaddr).ok_or("missing PTE")?;
+                    if pte.granularity != want {
+                        return Err(format!("PTE bit lost at vaddr {vaddr:#x}"));
+                    }
+                    let (paddr, g) = vm.translate(vaddr + 123).ok_or("unmapped")?;
+                    if g != want {
+                        return Err(format!("translate bit lost at vaddr {vaddr:#x}"));
+                    }
+                    if *is_cgp {
+                        for off in [0u64, cfg.page_size / 2, cfg.page_size - 1] {
+                            let (p, g) = vm.translate(vaddr + off).ok_or("unmapped")?;
+                            if mapper.stack_of(p, g) != *stack {
+                                return Err(format!(
+                                    "CGP page at {vaddr:#x} strayed off stack {stack}"
+                                ));
+                            }
+                        }
+                    } else {
+                        // An FGP page's stripes must cover every stack.
+                        let mut hit = vec![false; cfg.num_stacks];
+                        for off in (0..cfg.page_size).step_by(cfg.fgp_interleave as usize) {
+                            let (p, g) = vm.translate(vaddr + off).ok_or("unmapped")?;
+                            hit[mapper.stack_of(p, g)] = true;
+                        }
+                        if hit.iter().any(|h| !h) {
+                            return Err(format!("FGP page at {vaddr:#x} skips a stack"));
+                        }
+                    }
+                    let _ = paddr;
+                }
+            }
+            Ok(())
+        },
+    );
+}

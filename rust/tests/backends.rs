@@ -1,0 +1,120 @@
+//! Backend-equivalence tests: the DRAM timing backend may shape *when*
+//! things happen, never *what* happens. Placement, translation and
+//! scheduling must not observe the backend; if they ever do, the
+//! local/remote access splits below stop being byte-identical and this
+//! file catches the leak.
+
+use coda::config::{MemBackendKind, SystemConfig};
+use coda::coordinator::{Coordinator, Mechanism};
+use coda::workloads::suite;
+
+fn fixed_cfg() -> SystemConfig {
+    SystemConfig::test_small()
+}
+
+fn bank_cfg() -> SystemConfig {
+    let mut c = SystemConfig::test_small();
+    c.mem_backend = MemBackendKind::BankLevel;
+    c
+}
+
+/// FixedLatency vs BankLevel on the small PR workload: identical access
+/// counts (local/remote split, L2 hits, per-stack bytes) under every
+/// non-migrating mechanism, while cycle counts are free to differ.
+#[test]
+fn backends_agree_on_access_counts_for_pr() {
+    let cf = fixed_cfg();
+    let cb = bank_cfg();
+    let wl_f = suite::build("PR", &cf).unwrap();
+    let wl_b = suite::build("PR", &cb).unwrap();
+    let coord_f = Coordinator::new(cf.clone());
+    let coord_b = Coordinator::new(cb.clone());
+    for mech in [
+        Mechanism::FgpOnly,
+        Mechanism::CgpOnly,
+        Mechanism::CgpFta,
+        Mechanism::Coda,
+        Mechanism::FgpAffinity,
+    ] {
+        let rf = coord_f.run(&wl_f, mech).unwrap();
+        let rb = coord_b.run(&wl_b, mech).unwrap();
+        assert_eq!(
+            rf.accesses,
+            rb.accesses,
+            "{}: access counts must not depend on the DRAM backend",
+            mech.name()
+        );
+        assert_eq!(rf.stack_bytes, rb.stack_bytes, "{}", mech.name());
+        assert_eq!(rf.remote_bytes, rb.remote_bytes, "{}", mech.name());
+        assert_eq!(rf.cgp_pages, rb.cgp_pages, "{}", mech.name());
+        assert_eq!(rf.mem_backend, "fixed");
+        assert_eq!(rb.mem_backend, "bank");
+        // Timing is allowed — and expected — to differ: if it doesn't, the
+        // backend selection never reached the simulator.
+        assert!(
+            (rf.cycles - rb.cycles).abs() > 1e-9,
+            "{}: identical cycles suggest the bank backend was not dispatched",
+            mech.name()
+        );
+    }
+}
+
+/// The bank-level backend must surface its extra counters through the
+/// report, and the fixed backend must leave them zero.
+#[test]
+fn bank_backend_reports_conflicts_and_refresh() {
+    let cb = bank_cfg();
+    let wl = suite::build("PR", &cb).unwrap();
+    let rb = Coordinator::new(cb.clone())
+        .run(&wl, Mechanism::FgpOnly)
+        .unwrap();
+    assert!(
+        rb.bank_conflicts > 0,
+        "an FGP PageRank run must produce some row-buffer conflicts"
+    );
+    assert!((0.0..=1.0).contains(&rb.row_hit_rate));
+
+    let cf = fixed_cfg();
+    let wl = suite::build("PR", &cf).unwrap();
+    let rf = Coordinator::new(cf.clone())
+        .run(&wl, Mechanism::FgpOnly)
+        .unwrap();
+    assert_eq!(rf.bank_conflicts, 0);
+    assert_eq!(rf.refresh_stalls, 0);
+}
+
+/// Both backends keep the paper's headline ordering: CODA beats FGP-Only
+/// on a block-exclusive workload regardless of DRAM fidelity.
+#[test]
+fn coda_beats_fgp_under_both_backends() {
+    for cfg in [fixed_cfg(), bank_cfg()] {
+        let wl = suite::build("DC", &cfg).unwrap();
+        let coord = Coordinator::new(cfg.clone());
+        let fgp = coord.run(&wl, Mechanism::FgpOnly).unwrap();
+        let coda = coord.run(&wl, Mechanism::Coda).unwrap();
+        let s = coda.speedup_over(&fgp);
+        // The fixed-backend bound (1.05) is locked in by the coordinator
+        // unit tests; here the point is that higher DRAM fidelity cannot
+        // flip the ordering, so a slightly looser bound avoids coupling
+        // this test to exact bank-timing constants.
+        assert!(
+            s > 1.02,
+            "backend {}: CODA speedup {s:.3} too small",
+            cfg.mem_backend
+        );
+    }
+}
+
+/// Determinism holds under the bank-level backend too.
+#[test]
+fn bank_backend_is_deterministic_end_to_end() {
+    let cb = bank_cfg();
+    let coord = Coordinator::new(cb.clone());
+    let wl = suite::build("KM", &cb).unwrap();
+    let a = coord.run(&wl, Mechanism::Coda).unwrap();
+    let b = coord.run(&wl, Mechanism::Coda).unwrap();
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.accesses, b.accesses);
+    assert_eq!(a.bank_conflicts, b.bank_conflicts);
+    assert_eq!(a.refresh_stalls, b.refresh_stalls);
+}

@@ -1,0 +1,110 @@
+//! Golden-report snapshot: lock in today's numbers for `Coordinator::run`
+//! across every `Mechanism` variant on a fixed-seed small workload, so a
+//! future refactor that silently changes cycles, remote-access counts or
+//! energy totals fails loudly instead of drifting.
+//!
+//! The snapshot lives at `tests/golden/coordinator_pr.txt`. On the first
+//! run (file absent) the test records it and passes; afterwards any
+//! mismatch is a failure. Regenerate intentionally with
+//! `CODA_UPDATE_GOLDEN=1 cargo test -q --test golden_report`.
+//!
+//! Robustness notes: the whole pipeline is integer/f64 arithmetic with
+//! fixed seeds and no HashMap-order dependence in the simulated path, and
+//! Rust's f64 `Display` prints the shortest round-trippable decimal, so
+//! the rendered snapshot is stable across runs and platforms.
+
+use coda::config::SystemConfig;
+use coda::coordinator::{Coordinator, Mechanism};
+use coda::energy::EnergyModel;
+use coda::workloads::suite;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+const MECHS: [Mechanism; 7] = [
+    Mechanism::FgpOnly,
+    Mechanism::CgpOnly,
+    Mechanism::CgpFta,
+    Mechanism::MigrationFta,
+    Mechanism::Coda,
+    Mechanism::FgpAffinity,
+    Mechanism::CodaStealing,
+];
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("coordinator_pr.txt")
+}
+
+/// Render the snapshot: one line per mechanism with the report fields the
+/// paper's conclusions rest on.
+fn render_snapshot() -> String {
+    let cfg = SystemConfig::test_small();
+    let coord = Coordinator::new(cfg.clone());
+    let wl = suite::build("PR", &cfg).unwrap();
+    let em = EnergyModel::default();
+    let mut out = String::from(
+        "# golden snapshot: PR (test_small, fixed backend)\n\
+         # mechanism | cycles | local | remote | l2_hits | migrated | energy_uj\n",
+    );
+    for mech in MECHS {
+        let r = coord.run(&wl, mech).unwrap();
+        let energy = em.estimate(&r, cfg.line_size).total_uj();
+        writeln!(
+            out,
+            "{} | {} | {} | {} | {} | {} | {}",
+            mech.name(),
+            r.cycles,
+            r.accesses.local,
+            r.accesses.remote,
+            r.accesses.l2_hits,
+            r.migrated_pages,
+            energy
+        )
+        .unwrap();
+    }
+    out
+}
+
+#[test]
+fn coordinator_reports_match_golden_snapshot() {
+    let path = golden_path();
+    let got = render_snapshot();
+    // Snapshots must at minimum be reproducible within one process.
+    assert_eq!(got, render_snapshot(), "snapshot is not deterministic");
+
+    let update = std::env::var("CODA_UPDATE_GOLDEN").is_ok();
+    match std::fs::read_to_string(&path) {
+        Ok(want) if !update => {
+            assert_eq!(
+                got, want,
+                "golden snapshot drifted; if the change is intentional rerun \
+                 with CODA_UPDATE_GOLDEN=1 and commit {path:?}"
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &got).unwrap();
+            eprintln!("recorded golden snapshot at {path:?}");
+        }
+    }
+}
+
+/// The golden workload keeps the paper-shape orderings we rely on, so a
+/// recorded snapshot can't silently encode a broken state: CODA must beat
+/// FGP-Only on PR and not lose accesses.
+#[test]
+fn golden_workload_sanity() {
+    let cfg = SystemConfig::test_small();
+    let coord = Coordinator::new(cfg.clone());
+    let wl = suite::build("PR", &cfg).unwrap();
+    let total = wl.total_accesses();
+    let fgp = coord.run(&wl, Mechanism::FgpOnly).unwrap();
+    let coda = coord.run(&wl, Mechanism::Coda).unwrap();
+    assert_eq!(fgp.accesses.ndp_total() + fgp.accesses.l2_hits, total);
+    assert_eq!(coda.accesses.ndp_total() + coda.accesses.l2_hits, total);
+    // No-degradation bound (§6.4); the stronger >1.05 speedup claims are
+    // covered by the coordinator and backends tests on DC.
+    assert!(coda.speedup_over(&fgp) > 0.95);
+}
