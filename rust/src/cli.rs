@@ -7,7 +7,16 @@ use std::collections::HashMap;
 
 /// Option names the `coda` CLI accepts with a value (`--opt value` /
 /// `--opt=value`). Kept here so the binary and tests agree on the set.
-pub const VALUE_OPTS: &[&str] = &["mechanism", "config", "set", "mem-backend"];
+pub const VALUE_OPTS: &[&str] = &[
+    "mechanism",
+    "config",
+    "set",
+    "mem-backend",
+    "placement",
+    "policy",
+    "fairness",
+    "stagger",
+];
 
 /// Parsed command line.
 #[derive(Debug, Default)]
@@ -100,6 +109,25 @@ mod tests {
         )
         .unwrap();
         assert_eq!(a.opt("mem-backend"), Some("bank"));
+        assert!(a.flags.is_empty());
+    }
+
+    #[test]
+    fn mix_options_take_values() {
+        let a = Args::parse(
+            &argv(&[
+                "mix", "NN,KM", "--placement", "cgp", "--fairness", "rr", "--stagger", "5000",
+                "--policy", "affinity",
+            ]),
+            VALUE_OPTS,
+        )
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("mix"));
+        assert_eq!(a.positional, vec!["NN,KM"]);
+        assert_eq!(a.opt("placement"), Some("cgp"));
+        assert_eq!(a.opt("fairness"), Some("rr"));
+        assert_eq!(a.opt("policy"), Some("affinity"));
+        assert_eq!(a.opt_parse("stagger", 0.0f64).unwrap(), 5000.0);
         assert!(a.flags.is_empty());
     }
 

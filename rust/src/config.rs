@@ -141,6 +141,14 @@ pub struct SystemConfig {
     /// Compute cycles between consecutive memory accesses of a block.
     pub compute_cycles_per_access: u64,
 
+    // --- multi-kernel scheduling ---------------------------------------------
+    /// Default inter-app arbitration for multi-kernel mixes (see
+    /// [`crate::sched::FairnessPolicy`]; CLI `--fairness fcfs|rr|least`).
+    pub mix_fairness: crate::sched::FairnessPolicy,
+    /// Default launch stagger for multi-kernel mixes: app `i` arrives at
+    /// `i * mix_stagger_cycles` SM cycles (CLI `--stagger N`).
+    pub mix_stagger_cycles: f64,
+
     // --- misc ----------------------------------------------------------------
     /// Global PRNG seed for workload synthesis.
     pub seed: u64,
@@ -183,6 +191,8 @@ impl Default for SystemConfig {
             l2_hit_ns: 5.0,
             mlp_per_block: 32,
             compute_cycles_per_access: 440,
+            mix_fairness: crate::sched::FairnessPolicy::Fcfs,
+            mix_stagger_cycles: 0.0,
             seed: 0xC0DA,
         }
     }
@@ -266,6 +276,12 @@ impl SystemConfig {
         if self.dram_trfc_ns >= self.dram_trefi_ns {
             bail!("dram_trfc_ns must be smaller than dram_trefi_ns");
         }
+        if !self.mix_stagger_cycles.is_finite() || self.mix_stagger_cycles < 0.0 {
+            bail!(
+                "mix_stagger_cycles must be a non-negative real, got {}",
+                self.mix_stagger_cycles
+            );
+        }
         Ok(())
     }
 
@@ -319,6 +335,13 @@ impl SystemConfig {
             "l2_hit_ns" => parse!(l2_hit_ns, f64),
             "mlp_per_block" => parse!(mlp_per_block, usize),
             "compute_cycles_per_access" => parse!(compute_cycles_per_access, u64),
+            "mix_fairness" => {
+                self.mix_fairness =
+                    crate::sched::FairnessPolicy::parse(v).ok_or_else(|| {
+                        anyhow::anyhow!("bad value for {key}: {v} (expected fcfs|rr|least)")
+                    })?
+            }
+            "mix_stagger_cycles" => parse!(mix_stagger_cycles, f64),
             "seed" => parse!(seed, u64),
             _ => bail!("unknown config key: {key}"),
         }
@@ -395,7 +418,8 @@ impl SystemConfig {
                 "compute_cycles_per_access",
                 self.compute_cycles_per_access.to_string(),
             ),
-            ("tlb_miss_ns", self.tlb_miss_ns.to_string()),
+            ("mix_fairness", self.mix_fairness.to_string()),
+            ("mix_stagger_cycles", self.mix_stagger_cycles.to_string()),
             ("seed", self.seed.to_string()),
         ]
         .into_iter()
@@ -495,6 +519,22 @@ mod tests {
         let c2 = SystemConfig::from_toml_str(text).unwrap();
         assert_eq!(c2.mem_backend, MemBackendKind::BankLevel);
         assert_eq!(c2.dram_trfc_ns, 130.0);
+    }
+
+    #[test]
+    fn mix_knobs_parse_and_validate() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.mix_fairness, crate::sched::FairnessPolicy::Fcfs);
+        c.set("mix_fairness", "rr").unwrap();
+        assert_eq!(c.mix_fairness, crate::sched::FairnessPolicy::RoundRobin);
+        assert!(c.set("mix_fairness", "lottery").is_err());
+        c.set("mix_stagger_cycles", "5000").unwrap();
+        assert_eq!(c.mix_stagger_cycles, 5000.0);
+        assert!(c.validate().is_ok());
+        c.mix_stagger_cycles = -1.0;
+        assert!(c.validate().is_err());
+        c.mix_stagger_cycles = f64::NAN;
+        assert!(c.validate().is_err());
     }
 
     #[test]

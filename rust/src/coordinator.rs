@@ -172,6 +172,37 @@ impl Coordinator {
     ) -> crate::Result<Vec<RunReport>> {
         mechs.iter().map(|m| self.run(wl, *m)).collect()
     }
+
+    /// Run a multiprogrammed mix (§6.5 / Fig 12 shape: one app per
+    /// stack, all launched together) under this coordinator's config.
+    pub fn run_mix(
+        &self,
+        apps: &[&BuiltWorkload],
+        placement: crate::multiprog::MixPlacement,
+    ) -> crate::Result<(Vec<f64>, RunReport)> {
+        let mix = crate::multiprog::Mix {
+            apps: apps.to_vec(),
+        };
+        crate::multiprog::run_mix(&self.cfg, &mix, placement)
+    }
+
+    /// Run a multi-kernel mix with time-shared SMs: `launches` pairs each
+    /// workload with its arrival time (cycles); the mix may hold more
+    /// kernels than stacks. Uses the config's `mix_fairness`.
+    pub fn run_multi(
+        &self,
+        launches: &[(&BuiltWorkload, f64)],
+        placement: crate::multiprog::MixPlacement,
+        policy: Policy,
+    ) -> crate::Result<RunReport> {
+        let mix = crate::multiprog::MultiMix {
+            launches: launches
+                .iter()
+                .map(|&(app, arrival)| crate::multiprog::KernelLaunch { app, arrival })
+                .collect(),
+        };
+        crate::multiprog::run_multi(&self.cfg, &mix, placement, policy, self.cfg.mix_fairness)
+    }
 }
 
 #[cfg(test)]

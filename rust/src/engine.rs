@@ -1,0 +1,512 @@
+//! The shared discrete-event simulation core.
+//!
+//! Before this module existed, `sim::KernelRun::run` and
+//! `multiprog::run_mix` each carried their own copy of the event loop —
+//! one event heap, SM residency slots, the TLB walk, the dual-mode
+//! address mapping, interconnect queuing, and per-stack `MemBackend`
+//! dispatch. The copies could silently diverge, which is fatal for the
+//! multiprogrammed results (§6.5): contention between co-running request
+//! streams is exactly where placement policies earn or lose their wins,
+//! so the engine arbitrating those streams must be single-sourced.
+//!
+//! [`Engine`] owns the event-loop physics; callers stay in charge of
+//! *what* runs through a [`BlockSource`]: the source seeds the initial
+//! SM residency, refills a slot whenever a block retires, and (for
+//! multi-kernel scheduling) announces future kernel arrival times so the
+//! engine can wake idle slots. `sim.rs` and `multiprog.rs` are thin
+//! adapters over this module; `tests/differential` locks in that the
+//! unified loop is cycle-identical to the pre-refactor copies for every
+//! mechanism under both DRAM backends.
+
+use crate::addr::{AddressMapper, Granularity};
+use crate::config::SystemConfig;
+use crate::gpu::{Sm, Topology};
+use crate::mem::{self, MemBackend, MemStats};
+use crate::net::Interconnect;
+use crate::stats::{AccessStats, RunReport};
+use crate::trace::KernelTrace;
+use crate::vm::{Tlb, VirtualMemory};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Event key ordering by time (f64 bit-monotonic for non-negative reals),
+/// tie-broken by sequence number for determinism.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TimeKey(u64, u64);
+
+/// Build a heap key from an event time and a sequence number.
+///
+/// Rejects NaN and negative times in **every** build profile: the
+/// `to_bits` ordering trick is only monotonic on non-negative reals, and
+/// before this was a hard assert a NaN produced in a release build would
+/// silently corrupt the heap order instead of failing loudly.
+#[inline]
+pub fn key(t: f64, seq: u64) -> TimeKey {
+    assert!(
+        t >= 0.0,
+        "event time must be a non-negative real, got {t}"
+    );
+    TimeKey(t.to_bits(), seq)
+}
+
+/// Fast deterministic hash for the L2-filter decision (splitmix finalizer).
+#[inline]
+pub fn line_hash(x: u64) -> u64 {
+    let mut z = x.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z ^ (z >> 31)
+}
+
+/// One application (kernel) the engine can execute blocks of.
+#[derive(Clone, Copy, Debug)]
+pub struct AppCtx<'a> {
+    pub trace: &'a KernelTrace,
+    /// Base virtual address of each of the app's objects (by `Access::obj`).
+    pub obj_base: &'a [u64],
+}
+
+/// A block scheduled by a [`BlockSource`]: which app, and which entry of
+/// that app's `trace.blocks` (an index, not a `block_id`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockRef {
+    pub app: u32,
+    pub block: u32,
+}
+
+/// Supplies thread-blocks to the engine. This is the seam between the
+/// shared event-loop physics and each caller's scheduling policy.
+pub trait BlockSource {
+    /// Seed the initial SM residency at t=0. Call `place(sm_id, slot,
+    /// block)` once per occupied slot; the call order defines the event
+    /// sequence order at t=0 (and therefore tie-breaking), so adapters
+    /// reproduce their historical fill order here.
+    fn seed(&mut self, topo: &Topology, place: &mut dyn FnMut(usize, usize, BlockRef));
+
+    /// A residency slot on `sm` is free at `now`: return the next block
+    /// for it, or `None` to leave the slot idle. `retired` names the block
+    /// that just finished (`None` when the slot wakes on a kernel
+    /// arrival rather than a retirement).
+    fn refill(&mut self, sm: Sm, retired: Option<BlockRef>, now: f64) -> Option<BlockRef>;
+
+    /// Earliest time strictly after `now` at which new work may arrive
+    /// (staggered kernel launches). Idle slots re-arm on this; `None`
+    /// (the default) means work never appears except at refill time.
+    fn next_arrival_after(&self, _now: f64) -> Option<f64> {
+        None
+    }
+}
+
+/// Knobs distinguishing the historical callers. Both default to the
+/// single-kernel (`sim.rs`) behaviour.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineOptions {
+    /// Apply the deterministic stack-level L2 filter (`sim.rs` semantics).
+    /// The multiprogrammed path has never modelled the L2; flipping this
+    /// on there would change its golden numbers.
+    pub l2_filter: bool,
+    /// Migrate FGP pages to the first-touching stack (migration-FTA).
+    pub migrate_on_first_touch: bool,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        Self {
+            l2_filter: true,
+            migrate_on_first_touch: false,
+        }
+    }
+}
+
+/// Raw counters out of one engine run, before report shaping.
+#[derive(Clone, Debug, Default)]
+pub struct EngineRaw {
+    pub stats: AccessStats,
+    /// Completion time of the whole run (max over all events).
+    pub end_time: f64,
+    /// Completion time of each app's last event (0.0 if it never ran).
+    pub app_end: Vec<f64>,
+    pub mean_mem_latency: f64,
+    pub tlb_hit_rate: f64,
+    pub row_hit_rate: f64,
+    pub stack_bytes: Vec<u64>,
+    pub remote_bytes: u64,
+    pub mem: MemStats,
+    pub migrated_pages: u64,
+}
+
+impl EngineRaw {
+    /// Shape the raw counters into a [`RunReport`]; callers fill in the
+    /// mechanism name and placement page counts.
+    pub fn to_report(&self, cfg: &SystemConfig, workload: String) -> RunReport {
+        RunReport {
+            workload,
+            mechanism: String::new(),
+            cycles: self.end_time,
+            accesses: self.stats,
+            stack_bytes: self.stack_bytes.clone(),
+            remote_bytes: self.remote_bytes,
+            mean_mem_latency: self.mean_mem_latency,
+            tlb_hit_rate: self.tlb_hit_rate,
+            row_hit_rate: self.row_hit_rate,
+            mem_backend: cfg.mem_backend.to_string(),
+            bank_conflicts: self.mem.row_conflicts,
+            refresh_stalls: self.mem.refresh_stalls,
+            cgp_pages: 0,
+            fgp_pages: 0,
+            migrated_pages: self.migrated_pages,
+            app_cycles: Vec::new(),
+            app_slowdown: Vec::new(),
+            weighted_speedup: 0.0,
+        }
+    }
+}
+
+/// Heap events. Ordering beyond the `TimeKey` is never consulted (the
+/// sequence number is unique) but the derive keeps the heap total-ordered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    /// A resident block issues its next window of accesses.
+    Window {
+        app: u32,
+        block: u32,
+        next: u32,
+        sm: u32,
+        slot: u32,
+    },
+    /// A kernel arrival: sweep all idle residency slots for new work, in
+    /// the same slot-major order as the t=0 seeding (so a late kernel's
+    /// block→SM assignment matches the one it would get running alone).
+    Arrival,
+}
+
+/// The shared simulation core: one event heap over all SM residency
+/// slots, routing every access through TLB → address map → local
+/// crossbar / remote ports → the owning stack's DRAM backend.
+pub struct Engine<'a> {
+    pub cfg: &'a SystemConfig,
+    pub apps: Vec<AppCtx<'a>>,
+    pub vm: &'a mut VirtualMemory,
+    pub opts: EngineOptions,
+}
+
+impl<'a> Engine<'a> {
+    /// Run to completion, pulling blocks from `source`.
+    pub fn run(self, source: &mut dyn BlockSource) -> EngineRaw {
+        let Engine {
+            cfg,
+            apps,
+            vm,
+            opts,
+        } = self;
+        let topo = Topology::new(cfg);
+        let mapper = AddressMapper::new(cfg);
+        let mut net = Interconnect::new(cfg);
+        // DRAM timing is pluggable (fixed-latency vs bank-level); the
+        // backend may only shape time, never which accesses occur.
+        let mut stacks: Vec<Box<dyn MemBackend>> = mem::make_backends(cfg);
+        let mut tlbs: Vec<Tlb> = (0..topo.sms.len())
+            .map(|_| Tlb::new(cfg.tlb_entries))
+            .collect();
+
+        let cyc = cfg.cycles_per_ns();
+        let l2_threshold = (cfg.l2_hit_rate * u32::MAX as f64) as u64;
+        let l2_hit_cycles = cfg.l2_hit_ns * cyc;
+        let tlb_miss_cycles = cfg.tlb_miss_ns * cyc;
+        let line = cfg.line_size;
+        let page_shift = cfg.page_size.trailing_zeros();
+        let mlp = cfg.mlp_per_block;
+        let compute = cfg.compute_cycles_per_access as f64;
+
+        let mut stats = AccessStats::default();
+        let mut migrated: u64 = 0;
+        let mut migrated_pages: Vec<bool> = if opts.migrate_on_first_touch {
+            vec![false; vm.mapped_pages() as usize]
+        } else {
+            Vec::new()
+        };
+        let mut latency_sum = 0.0f64;
+        let mut latency_n: u64 = 0;
+        let mut end_time = 0.0f64;
+        let mut app_end = vec![0.0f64; apps.len()];
+        let mut seq: u64 = 0;
+
+        let mut heap: BinaryHeap<Reverse<(TimeKey, Ev)>> = BinaryHeap::new();
+        let slots_per_sm = cfg.blocks_per_sm;
+        let mut occupied = vec![false; topo.sms.len() * slots_per_sm];
+        // Per-SM issue-bandwidth server: resident blocks share the SM's
+        // execution resources, so their compute phases serialize.
+        let mut sm_free: Vec<f64> = vec![0.0; topo.sms.len()];
+
+        // Initial fill, in the source's dispatch order.
+        source.seed(&topo, &mut |sm, slot, br| {
+            debug_assert!(slot < slots_per_sm, "slot {slot} out of range");
+            debug_assert!(!occupied[sm * slots_per_sm + slot], "slot seeded twice");
+            occupied[sm * slots_per_sm + slot] = true;
+            heap.push(Reverse((
+                key(0.0, seq),
+                Ev::Window {
+                    app: br.app,
+                    block: br.block,
+                    next: 0,
+                    sm: sm as u32,
+                    slot: slot as u32,
+                },
+            )));
+            seq += 1;
+        });
+        // At most one arrival event is outstanding; `armed` holds its time.
+        let mut armed: Option<f64> = None;
+        if let Some(ta) = source.next_arrival_after(0.0) {
+            if ta > 0.0 {
+                heap.push(Reverse((key(ta, seq), Ev::Arrival)));
+                seq += 1;
+                armed = Some(ta);
+            }
+        }
+
+        while let Some(Reverse((tk, ev))) = heap.pop() {
+            let now = f64::from_bits(tk.0);
+            let (app, block, next, sm, slot) = match ev {
+                Ev::Arrival => {
+                    armed = None;
+                    // Fill idle slots in the seeding order (slot-major).
+                    for slot in 0..slots_per_sm {
+                        for smo in &topo.sms {
+                            if occupied[smo.id * slots_per_sm + slot] {
+                                continue;
+                            }
+                            if let Some(br) = source.refill(*smo, None, now) {
+                                occupied[smo.id * slots_per_sm + slot] = true;
+                                heap.push(Reverse((
+                                    key(now, seq),
+                                    Ev::Window {
+                                        app: br.app,
+                                        block: br.block,
+                                        next: 0,
+                                        sm: smo.id as u32,
+                                        slot: slot as u32,
+                                    },
+                                )));
+                                seq += 1;
+                            }
+                        }
+                    }
+                    if let Some(ta) = source.next_arrival_after(now) {
+                        if ta > now {
+                            heap.push(Reverse((key(ta, seq), Ev::Arrival)));
+                            seq += 1;
+                            armed = Some(ta);
+                        }
+                    }
+                    continue;
+                }
+                Ev::Window {
+                    app,
+                    block,
+                    next,
+                    sm,
+                    slot,
+                } => (app, block, next, sm, slot),
+            };
+
+            let actx = &apps[app as usize];
+            let smo = topo.sms[sm as usize];
+            let blk = &actx.trace.blocks[block as usize];
+            let begin = next as usize;
+            let end = (begin + mlp).min(blk.accesses.len());
+
+            // Issue one window of accesses; the block stalls until the
+            // slowest completes, then pays its compute debt.
+            let mut window_done = now;
+            for a in &blk.accesses[begin..end] {
+                let vaddr = actx.obj_base[a.obj as usize] + a.offset;
+                // Stack-level L2 filter (deterministic per line).
+                if opts.l2_filter {
+                    let vline = vaddr / line;
+                    if line_hash(vline) & 0xFFFF_FFFF < l2_threshold {
+                        stats.l2_hits += 1;
+                        window_done = window_done.max(now + l2_hit_cycles);
+                        continue;
+                    }
+                }
+                // TLB + translation.
+                let vpn = vaddr >> page_shift;
+                let mut t = now;
+                let pte = match tlbs[smo.id].lookup(vpn) {
+                    Some(pte) => pte,
+                    None => {
+                        t += tlb_miss_cycles;
+                        let pte = vm
+                            .pte_of(vaddr)
+                            .expect("workload access beyond mapped object");
+                        tlbs[smo.id].fill(vpn, pte);
+                        pte
+                    }
+                };
+                let mut paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
+                let mut gran = pte.granularity;
+                // Migration-based first touch: the first NDP access to an
+                // FGP page pulls the whole page into the toucher's stack.
+                if opts.migrate_on_first_touch
+                    && gran == Granularity::Fgp
+                    && !migrated_pages[vpn as usize]
+                {
+                    migrated_pages[vpn as usize] = true;
+                    if vm.migrate_to_cgp(vaddr, smo.stack).is_ok() {
+                        migrated += 1;
+                        // Page copy: page_size bytes arrive over the remote
+                        // ingress port (3/4 of the stripes are remote).
+                        let copy_bytes =
+                            cfg.page_size * (cfg.num_stacks as u64 - 1) / cfg.num_stacks as u64;
+                        t = net.remote_hop(
+                            t,
+                            (smo.stack + 1) % cfg.num_stacks,
+                            smo.stack,
+                            copy_bytes,
+                        );
+                        let pte = vm.pte_of(vaddr).unwrap();
+                        tlbs[smo.id].fill(vpn, pte);
+                        paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
+                        gran = pte.granularity;
+                    }
+                }
+                let dst = mapper.stack_of(paddr, gran);
+                let done = if dst == smo.stack {
+                    stats.local += 1;
+                    let t1 = net.local_hop(t, dst, line);
+                    stacks[dst].access(t1, paddr, line).done
+                } else {
+                    stats.remote += 1;
+                    // Request out, serve at the owner, response back.
+                    let t1 = net.remote_hop(t, smo.stack, dst, line);
+                    let t2 = stacks[dst].access(t1, paddr, line).done;
+                    net.remote_hop(t2, dst, smo.stack, line)
+                };
+                latency_sum += done - now;
+                latency_n += 1;
+                window_done = window_done.max(done);
+            }
+            let issued = (end - begin) as f64;
+            // Compute occupies the SM serially across its resident blocks.
+            let c_start = window_done.max(sm_free[smo.id]);
+            let t_next = c_start + compute * issued;
+            sm_free[smo.id] = t_next;
+            end_time = end_time.max(t_next);
+            app_end[app as usize] = app_end[app as usize].max(t_next);
+
+            if end < blk.accesses.len() {
+                heap.push(Reverse((
+                    key(t_next, seq),
+                    Ev::Window {
+                        app,
+                        block,
+                        next: end as u32,
+                        sm,
+                        slot,
+                    },
+                )));
+                seq += 1;
+            } else {
+                // Block retires; ask the source for this slot's next block.
+                match source.refill(smo, Some(BlockRef { app, block }), t_next) {
+                    Some(br) => {
+                        heap.push(Reverse((
+                            key(t_next, seq),
+                            Ev::Window {
+                                app: br.app,
+                                block: br.block,
+                                next: 0,
+                                sm,
+                                slot,
+                            },
+                        )));
+                        seq += 1;
+                    }
+                    None => {
+                        occupied[sm as usize * slots_per_sm + slot as usize] = false;
+                        // Re-arm only if no arrival event is pending; a
+                        // pending one sweeps this freed slot when it fires.
+                        if armed.is_none() {
+                            if let Some(ta) = source.next_arrival_after(t_next) {
+                                if ta > t_next {
+                                    heap.push(Reverse((key(ta, seq), Ev::Arrival)));
+                                    seq += 1;
+                                    armed = Some(ta);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let tlb_hits: u64 = tlbs.iter().map(|t| t.hits).sum();
+        let tlb_total: u64 = tlbs.iter().map(|t| t.hits + t.misses).sum();
+        let row_hit_rate = {
+            let rates: Vec<f64> = stacks.iter().map(|s| s.row_hit_rate()).collect();
+            crate::stats::mean(&rates)
+        };
+        let mut mem_stats = MemStats::default();
+        for s in &stacks {
+            mem_stats.add(&s.stats());
+        }
+        EngineRaw {
+            stats,
+            end_time,
+            app_end,
+            mean_mem_latency: if latency_n == 0 {
+                0.0
+            } else {
+                latency_sum / latency_n as f64
+            },
+            tlb_hit_rate: if tlb_total == 0 {
+                0.0
+            } else {
+                tlb_hits as f64 / tlb_total as f64
+            },
+            row_hit_rate,
+            stack_bytes: stacks.iter().map(|s| s.bytes_served()).collect(),
+            remote_bytes: net.remote_bytes(),
+            mem: mem_stats,
+            migrated_pages: migrated,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_orders_by_time_then_seq() {
+        assert!(key(1.0, 5) < key(2.0, 0));
+        assert!(key(1.0, 0) < key(1.0, 1));
+        assert!(key(0.0, 0) < key(f64::MIN_POSITIVE, 0));
+        // Bit-monotonic over representative magnitudes.
+        let times = [0.0, 1e-9, 0.5, 1.0, 1e6, 1e15, f64::MAX];
+        for w in times.windows(2) {
+            assert!(key(w[0], 0) < key(w[1], 0), "{} !< {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative real")]
+    fn key_rejects_negative_time_in_all_profiles() {
+        // A plain `debug_assert!` would let this through in release
+        // builds, where f64 bit-ordering silently inverts for negatives.
+        key(-1.0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative real")]
+    fn key_rejects_nan_time_in_all_profiles() {
+        key(f64::NAN, 0);
+    }
+
+    #[test]
+    fn line_hash_is_deterministic_and_spread() {
+        assert_eq!(line_hash(42), line_hash(42));
+        // Crude avalanche check: neighbours land far apart.
+        assert_ne!(line_hash(1) >> 32, line_hash(2) >> 32);
+    }
+}

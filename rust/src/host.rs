@@ -79,6 +79,7 @@ pub fn run_host_sweep(
         cgp_pages: 0,
         fgp_pages: 0,
         migrated_pages: 0,
+        ..Default::default()
     }
 }
 

@@ -44,6 +44,19 @@
 //! never observe them, so local/remote access *counts* are byte-identical
 //! across backends (`tests/backends.rs` enforces this).
 //!
+//! ## Simulation engine
+//!
+//! The discrete-event substrate — event heap, SM residency slots, TLB
+//! walk, interconnect queuing, per-stack backend dispatch — is
+//! single-sourced in [`engine`]. The single-kernel path ([`sim`]) and the
+//! multiprogrammed paths ([`multiprog`]) are thin adapters that plug a
+//! [`engine::BlockSource`] into it; `tests/differential` proves both
+//! adapters cycle-identical to the pre-refactor standalone loops.
+//! [`multiprog::run_multi`] adds true multi-kernel scheduling on top:
+//! more kernels than stacks, staggered arrivals, SM time-sharing under a
+//! per-app fairness policy, and per-app slowdown / weighted-speedup
+//! reporting.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -68,6 +81,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod engine;
 pub mod gpu;
 pub mod harness;
 pub mod host;

@@ -8,6 +8,9 @@
 //! coda compare <BENCH>            # all mechanisms side by side
 //! coda classify [BENCH]           # Fig-3 histogram + Table-2 category
 //! coda suite [--mechanism ...]    # all 20 benchmarks
+//! coda mix <B1,B2,...> [--placement fgp|cgp] [--policy affinity|baseline|steal]
+//!                      [--fairness fcfs|rr|least] [--stagger CYCLES]
+//!                      # multi-kernel mix; may name more apps than stacks
 //! coda config                     # print the default config (Table 1)
 //! ```
 
@@ -231,6 +234,71 @@ fn cmd_suite(args: &Args) -> coda::Result<()> {
     Ok(())
 }
 
+fn cmd_mix(args: &Args) -> coda::Result<()> {
+    use coda::multiprog::{run_multi, KernelLaunch, MixPlacement, MultiMix};
+    let cfg = load_config(args)?;
+    let benches = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: coda mix <B1,B2,...> [--placement fgp|cgp]"))?;
+    let placement_s = args.opt("placement").unwrap_or("cgp");
+    let placement = MixPlacement::parse(placement_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown placement {placement_s} (expected fgp|cgp)"))?;
+    let policy_s = args.opt("policy").unwrap_or("affinity");
+    let policy = coda::sched::Policy::parse(policy_s).ok_or_else(|| {
+        anyhow::anyhow!("unknown policy {policy_s} (expected affinity|baseline|steal)")
+    })?;
+    let fairness = match args.opt("fairness") {
+        None => cfg.mix_fairness,
+        Some(s) => coda::sched::FairnessPolicy::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown fairness {s} (expected fcfs|rr|least)"))?,
+    };
+    let stagger: f64 = args.opt_parse("stagger", cfg.mix_stagger_cycles)?;
+    anyhow::ensure!(
+        stagger.is_finite() && stagger >= 0.0,
+        "--stagger must be a non-negative real"
+    );
+    let built: Vec<_> = benches
+        .split(',')
+        .map(|n| suite::build(n.trim(), &cfg))
+        .collect::<coda::Result<_>>()?;
+    let mix = MultiMix {
+        launches: built
+            .iter()
+            .enumerate()
+            .map(|(i, b)| KernelLaunch {
+                app: b,
+                arrival: i as f64 * stagger,
+            })
+            .collect(),
+    };
+    let r = run_multi(&cfg, &mix, placement, policy, fairness)?;
+    if args.has_flag("json") {
+        println!("{}", Json::from(&r).render());
+        return Ok(());
+    }
+    let mut t = Table::new(&["app", "home", "arrival", "response", "slowdown"]);
+    for (i, b) in built.iter().enumerate() {
+        t.row(&[
+            b.name.to_string(),
+            coda::multiprog::home_of(i, &cfg).to_string(),
+            format!("{:.0}", mix.launches[i].arrival),
+            format!("{:.0}", r.app_cycles[i]),
+            f2(r.app_slowdown[i]),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "{} ({}): cycles={:.0} remote%={} weighted_speedup={:.3}",
+        r.workload,
+        r.mechanism,
+        r.cycles,
+        pct(r.accesses.remote_fraction()),
+        r.weighted_speedup
+    );
+    Ok(())
+}
+
 fn cmd_sweep(args: &Args) -> coda::Result<()> {
     // coda sweep <BENCH> --key remote_bw_gbs --values 16,32,64,128,256
     let cfg0 = load_config(args)?;
@@ -318,13 +386,14 @@ fn main() {
         Some("sweep") => cmd_sweep(&args),
         Some("trace") => cmd_trace(&args),
         Some("suite") => cmd_suite(&args),
+        Some("mix") => cmd_mix(&args),
         Some("config") => {
             print!("{}", SystemConfig::default().to_toml_string());
             Ok(())
         }
         _ => {
             eprintln!(
-                "usage: coda <run|compare|classify|plan|sweep|trace|suite|config> [args]\n\
+                "usage: coda <run|compare|classify|plan|sweep|trace|suite|mix|config> [args]\n\
                  benchmarks: {}",
                 suite::names().join(" ")
             );

@@ -1,22 +1,32 @@
-//! Multiprogrammed workloads (§6.5, Fig 12).
+//! Multiprogrammed workloads (§6.5, Fig 12) and multi-kernel scheduling.
 //!
-//! Several applications run concurrently, one pinned to each memory
-//! stack's SMs. With FGP-Only hardware every application's pages spread
-//! over all stacks — guaranteed remote traffic from everyone. With CGP
-//! hardware, each application's pages can be allocated in its own stack
-//! ("it is infeasible or difficult to reduce remote data accesses in the
-//! presence of multiple workloads" otherwise).
+//! Several applications run concurrently. With FGP-Only hardware every
+//! application's pages spread over all stacks — guaranteed remote traffic
+//! from everyone. With CGP hardware, each application's pages can be
+//! allocated in its own stack ("it is infeasible or difficult to reduce
+//! remote data accesses in the presence of multiple workloads" otherwise).
+//!
+//! Two entry points share the event-loop physics of [`crate::engine`]:
+//!
+//! * [`run_mix`] — the paper's Fig 12 shape: up to `num_stacks` apps, app
+//!   `i` pinned to stack `i`'s SMs, all launched at t=0. Cycle-identical
+//!   to the pre-refactor standalone loop (`tests/differential` locks this
+//!   in), and now also reports TLB/latency/row-hit statistics.
+//! * [`run_multi`] — true multi-kernel scheduling: a mix may hold **more
+//!   kernels than stacks** (homes wrap round-robin), kernels launch at
+//!   staggered arrival times, and SMs are time-shared at block granularity
+//!   under the block-level [`Policy`] plus a per-app [`FairnessPolicy`].
+//!   The report carries per-app slowdown (response time vs running alone
+//!   under the same placement) and weighted speedup (Σ T_alone/T_shared).
 
-use crate::addr::AddressMapper;
 use crate::config::SystemConfig;
-use crate::gpu::Topology;
-use crate::mem::{self, MemBackend, MemStats};
-use crate::net::Interconnect;
-use crate::stats::{AccessStats, RunReport};
-use crate::vm::{Tlb, VirtualMemory};
+use crate::engine::{AppCtx, BlockRef, BlockSource, Engine, EngineOptions, EngineRaw};
+use crate::gpu::{Sm, Topology};
+use crate::sched::{FairnessPolicy, Policy};
+use crate::stats::{self, RunReport};
+use crate::vm::VirtualMemory;
 use crate::workloads::BuiltWorkload;
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::VecDeque;
 
 /// Placement style for a multiprogrammed run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -27,31 +37,57 @@ pub enum MixPlacement {
     CgpLocal,
 }
 
+impl MixPlacement {
+    /// Parse a CLI spelling; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim() {
+            "fgp" | "fgp-only" => Some(Self::FgpOnly),
+            "cgp" | "cgp-local" => Some(Self::CgpLocal),
+            _ => None,
+        }
+    }
+}
+
 /// One application mix: up to `num_stacks` workloads, app `i` homed on
 /// stack `i`.
 pub struct Mix<'a> {
     pub apps: Vec<&'a BuiltWorkload>,
 }
 
-/// Simulate a mix; returns (per-app cycles, combined report).
-pub fn run_mix(
-    cfg: &SystemConfig,
-    mix: &Mix<'_>,
-    placement: MixPlacement,
-) -> crate::Result<(Vec<f64>, RunReport)> {
-    assert!(mix.apps.len() <= cfg.num_stacks);
-    let topo = Topology::new(cfg);
-    let mapper = AddressMapper::new(cfg);
-    let mut net = Interconnect::new(cfg);
-    let mut stacks: Vec<Box<dyn MemBackend>> = mem::make_backends(cfg);
-    let mut tlbs: Vec<Tlb> = (0..topo.sms.len())
-        .map(|_| Tlb::new(cfg.tlb_entries))
-        .collect();
+/// One kernel in a multi-kernel mix: the workload plus its launch time
+/// (in SM cycles).
+pub struct KernelLaunch<'a> {
+    pub app: &'a BuiltWorkload,
+    pub arrival: f64,
+}
 
-    // One shared physical memory, per-app virtual spaces.
+/// A multi-kernel mix: any number of kernels; app `i` is homed on stack
+/// [`home_of`]`(i)`, so oversubscribed mixes time-share SMs.
+pub struct MultiMix<'a> {
+    pub launches: Vec<KernelLaunch<'a>>,
+}
+
+/// Home stack of app `i` in a mix: wraps round-robin over the stacks.
+/// The single source of the rule — mapping, scheduling and the CLI's
+/// reporting all go through here.
+#[inline]
+pub fn home_of(app_idx: usize, cfg: &SystemConfig) -> usize {
+    app_idx % cfg.num_stacks
+}
+
+/// Map every app's objects into one shared physical memory (per-app
+/// virtual bases), homing app `i` on stack `i % num_stacks`. Both the
+/// joint run and the run-alone baselines use this, so physical layout —
+/// and therefore bank/row behaviour — is identical between them.
+fn map_mix(
+    cfg: &SystemConfig,
+    apps: &[&BuiltWorkload],
+    placement: MixPlacement,
+) -> crate::Result<(VirtualMemory, Vec<Vec<u64>>)> {
     let mut vm = VirtualMemory::new(cfg);
     let mut app_bases: Vec<Vec<u64>> = Vec::new();
-    for (home, app) in mix.apps.iter().enumerate() {
+    for (i, app) in apps.iter().enumerate() {
+        let home = home_of(i, cfg);
         let mut bases = Vec::new();
         for obj in &app.trace.objects {
             let pages = obj.bytes.div_ceil(cfg.page_size).max(1);
@@ -63,125 +99,318 @@ pub fn run_mix(
         }
         app_bases.push(bases);
     }
+    Ok((vm, app_bases))
+}
 
-    // Per-app block queues; each app's blocks run on its home stack's SMs.
-    let line = cfg.line_size;
-    let cyc = cfg.cycles_per_ns();
-    let page_shift = cfg.page_size.trailing_zeros();
-    let tlb_miss_cycles = cfg.tlb_miss_ns * cyc;
-    let mlp = cfg.mlp_per_block;
-    let compute = cfg.compute_cycles_per_access as f64;
+/// [`BlockSource`] reproducing the historical `run_mix` dispatch exactly:
+/// app `i`'s blocks run only on stack `i`'s SMs, in launch order, and a
+/// retiring block's slot refills from the same app.
+struct MixSource {
+    next_block: Vec<usize>,
+    num_blocks: Vec<usize>,
+}
 
-    let mut stats = AccessStats::default();
-    let mut app_end = vec![0.0f64; mix.apps.len()];
-    let mut seq = 0u64;
-    // Events: (time_bits, seq, app, block_idx, next_access, sm_id).
-    let mut heap: BinaryHeap<Reverse<(u64, u64, u32, u32, u32, u32)>> = BinaryHeap::new();
-    let mut next_block: Vec<usize> = vec![0; mix.apps.len()];
-    // Per-SM issue-bandwidth server (see sim.rs).
-    let mut sm_free: Vec<f64> = vec![0.0; topo.sms.len()];
-
-    // Seed each app's home-stack SM slots.
-    for (app_idx, app) in mix.apps.iter().enumerate() {
-        let sms: Vec<usize> = topo.sms_of_stack(app_idx).map(|s| s.id).collect();
-        let capacity = sms.len() * cfg.blocks_per_sm;
-        for slot in 0..capacity {
-            if next_block[app_idx] >= app.trace.blocks.len() {
-                break;
-            }
-            let b = next_block[app_idx];
-            next_block[app_idx] += 1;
-            heap.push(Reverse((
-                0f64.to_bits(),
-                seq,
-                app_idx as u32,
-                b as u32,
-                0,
-                sms[slot % sms.len()] as u32,
-            )));
-            seq += 1;
-        }
-    }
-
-    while let Some(Reverse((tb, _, app_idx, block_idx, next_acc, sm_id))) = heap.pop() {
-        let now = f64::from_bits(tb);
-        let app = mix.apps[app_idx as usize];
-        let home = app_idx as usize;
-        let block = &app.trace.blocks[block_idx as usize];
-        let begin = next_acc as usize;
-        let endw = (begin + mlp).min(block.accesses.len());
-        let mut window_done = now;
-        for a in &block.accesses[begin..endw] {
-            let vaddr = app_bases[home][a.obj as usize] + a.offset;
-            let vpn = vaddr >> page_shift;
-            let mut t = now;
-            let pte = match tlbs[sm_id as usize].lookup(vpn) {
-                Some(p) => p,
-                None => {
-                    t += tlb_miss_cycles;
-                    let p = vm.pte_of(vaddr).expect("mapped");
-                    tlbs[sm_id as usize].fill(vpn, p);
-                    p
+impl BlockSource for MixSource {
+    fn seed(&mut self, topo: &Topology, place: &mut dyn FnMut(usize, usize, BlockRef)) {
+        // Seed each app's home-stack SM slots.
+        for app in 0..self.num_blocks.len() {
+            let sms: Vec<usize> = topo.sms_of_stack(app).map(|s| s.id).collect();
+            let capacity = sms.len() * topo.blocks_per_sm;
+            for slot in 0..capacity {
+                if self.next_block[app] >= self.num_blocks[app] {
+                    break;
                 }
-            };
-            let paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
-            let dst = mapper.stack_of(paddr, pte.granularity);
-            let done = if dst == home {
-                stats.local += 1;
-                let t1 = net.local_hop(t, dst, line);
-                stacks[dst].access(t1, paddr, line).done
-            } else {
-                stats.remote += 1;
-                let t1 = net.remote_hop(t, home, dst, line);
-                let t2 = stacks[dst].access(t1, paddr, line).done;
-                net.remote_hop(t2, dst, home, line)
-            };
-            window_done = window_done.max(done);
-        }
-        let c_start = window_done.max(sm_free[sm_id as usize]);
-        let t_next = c_start + compute * (endw - begin) as f64;
-        sm_free[sm_id as usize] = t_next;
-        app_end[home] = app_end[home].max(t_next);
-        if endw < block.accesses.len() {
-            heap.push(Reverse((
-                t_next.to_bits(),
-                seq,
-                app_idx,
-                block_idx,
-                endw as u32,
-                sm_id,
-            )));
-            seq += 1;
-        } else if next_block[home] < app.trace.blocks.len() {
-            let b = next_block[home];
-            next_block[home] += 1;
-            heap.push(Reverse((t_next.to_bits(), seq, app_idx, b as u32, 0, sm_id)));
-            seq += 1;
+                let b = self.next_block[app];
+                self.next_block[app] += 1;
+                place(
+                    sms[slot % sms.len()],
+                    slot / sms.len(),
+                    BlockRef {
+                        app: app as u32,
+                        block: b as u32,
+                    },
+                );
+            }
         }
     }
 
-    let mut mem_stats = MemStats::default();
-    for s in &stacks {
-        mem_stats.add(&s.stats());
+    fn refill(&mut self, _sm: Sm, retired: Option<BlockRef>, _now: f64) -> Option<BlockRef> {
+        let app = retired?.app as usize;
+        if self.next_block[app] < self.num_blocks[app] {
+            let b = self.next_block[app];
+            self.next_block[app] += 1;
+            Some(BlockRef {
+                app: app as u32,
+                block: b as u32,
+            })
+        } else {
+            None
+        }
     }
-    let report = RunReport {
-        workload: mix
-            .apps
+}
+
+/// Simulate a mix; returns (per-app completion cycles, combined report).
+pub fn run_mix(
+    cfg: &SystemConfig,
+    mix: &Mix<'_>,
+    placement: MixPlacement,
+) -> crate::Result<(Vec<f64>, RunReport)> {
+    anyhow::ensure!(
+        mix.apps.len() <= cfg.num_stacks,
+        "run_mix pins one app per stack ({} apps > {} stacks); use run_multi \
+         for oversubscribed mixes",
+        mix.apps.len(),
+        cfg.num_stacks
+    );
+    let (mut vm, app_bases) = map_mix(cfg, &mix.apps, placement)?;
+    let apps: Vec<AppCtx<'_>> = mix
+        .apps
+        .iter()
+        .zip(&app_bases)
+        .map(|(a, b)| AppCtx {
+            trace: &a.trace,
+            obj_base: b.as_slice(),
+        })
+        .collect();
+    let mut source = MixSource {
+        next_block: vec![0; mix.apps.len()],
+        num_blocks: mix.apps.iter().map(|a| a.trace.blocks.len()).collect(),
+    };
+    let raw = Engine {
+        cfg,
+        apps,
+        vm: &mut vm,
+        opts: EngineOptions {
+            // The multiprogrammed path has never modelled the L2 filter;
+            // keeping it off preserves the historical cycle counts.
+            l2_filter: false,
+            migrate_on_first_touch: false,
+        },
+    }
+    .run(&mut source);
+    let mut report = raw.to_report(
+        cfg,
+        mix.apps
             .iter()
             .map(|a| a.name)
             .collect::<Vec<_>>()
             .join("+"),
-        mechanism: format!("{placement:?}"),
-        cycles: app_end.iter().cloned().fold(0.0, f64::max),
-        accesses: stats,
-        stack_bytes: stacks.iter().map(|s| s.bytes_served()).collect(),
-        remote_bytes: net.remote_bytes(),
-        mem_backend: cfg.mem_backend.to_string(),
-        bank_conflicts: mem_stats.row_conflicts,
-        refresh_stalls: mem_stats.refresh_stalls,
-        ..Default::default()
-    };
-    Ok((app_end, report))
+    );
+    report.mechanism = format!("{placement:?}");
+    report.app_cycles = raw.app_end.clone();
+    Ok((raw.app_end, report))
+}
+
+/// [`BlockSource`] for multi-kernel scheduling: per-app FIFO block
+/// queues, arrival times, home stacks, and the fairness arbiter.
+struct MultiKernelSource {
+    queues: Vec<VecDeque<u32>>,
+    arrival: Vec<f64>,
+    home: Vec<usize>,
+    policy: Policy,
+    fairness: FairnessPolicy,
+    issued: Vec<u64>,
+    rr_cursor: usize,
+}
+
+impl MultiKernelSource {
+    fn new(
+        launches: &[(usize, f64)], // (num_blocks, arrival) per app
+        cfg: &SystemConfig,
+        policy: Policy,
+        fairness: FairnessPolicy,
+        only_app: Option<usize>,
+    ) -> Self {
+        let queues = launches
+            .iter()
+            .enumerate()
+            .map(|(i, &(n, _))| {
+                if only_app.is_some_and(|o| o != i) {
+                    VecDeque::new()
+                } else {
+                    (0..n as u32).collect()
+                }
+            })
+            .collect();
+        Self {
+            queues,
+            arrival: launches.iter().map(|&(_, t)| t).collect(),
+            home: (0..launches.len()).map(|i| home_of(i, cfg)).collect(),
+            policy,
+            fairness,
+            issued: vec![0; launches.len()],
+            rr_cursor: 0,
+        }
+    }
+
+    /// Apps with pending blocks that have arrived by `now` and whose
+    /// blocks may run on `stack` under the block-level policy.
+    fn eligible(&self, stack: usize, now: f64) -> Vec<usize> {
+        let arrived: Vec<usize> = (0..self.queues.len())
+            .filter(|&i| !self.queues[i].is_empty() && self.arrival[i] <= now)
+            .collect();
+        match self.policy {
+            Policy::Baseline => arrived,
+            Policy::Affinity => arrived
+                .into_iter()
+                .filter(|&i| self.home[i] == stack)
+                .collect(),
+            Policy::AffinityStealing => {
+                let homed: Vec<usize> = arrived
+                    .iter()
+                    .copied()
+                    .filter(|&i| self.home[i] == stack)
+                    .collect();
+                if homed.is_empty() {
+                    arrived
+                } else {
+                    homed
+                }
+            }
+        }
+    }
+
+    fn pick(&mut self, stack: usize, now: f64) -> Option<BlockRef> {
+        let elig = self.eligible(stack, now);
+        if elig.is_empty() {
+            return None;
+        }
+        let app = match self.fairness {
+            FairnessPolicy::Fcfs => elig.into_iter().min_by(|&a, &b| {
+                self.arrival[a]
+                    .partial_cmp(&self.arrival[b])
+                    .expect("arrival times are finite")
+                    .then(a.cmp(&b))
+            })?,
+            FairnessPolicy::RoundRobin => {
+                let n = self.queues.len();
+                (1..=n)
+                    .map(|k| (self.rr_cursor + k) % n)
+                    .find(|i| elig.contains(i))?
+            }
+            FairnessPolicy::LeastIssued => elig.into_iter().min_by_key(|&i| (self.issued[i], i))?,
+        };
+        self.rr_cursor = app;
+        self.issued[app] += 1;
+        let block = self.queues[app].pop_front()?;
+        Some(BlockRef {
+            app: app as u32,
+            block,
+        })
+    }
+}
+
+impl BlockSource for MultiKernelSource {
+    fn seed(&mut self, topo: &Topology, place: &mut dyn FnMut(usize, usize, BlockRef)) {
+        // Breadth-first over SMs, as in the single-kernel path; only
+        // already-arrived apps participate at t=0.
+        for slot in 0..topo.blocks_per_sm {
+            for sm in &topo.sms {
+                if let Some(br) = self.pick(sm.stack, 0.0) {
+                    place(sm.id, slot, br);
+                }
+            }
+        }
+    }
+
+    fn refill(&mut self, sm: Sm, _retired: Option<BlockRef>, now: f64) -> Option<BlockRef> {
+        self.pick(sm.stack, now)
+    }
+
+    fn next_arrival_after(&self, now: f64) -> Option<f64> {
+        self.queues
+            .iter()
+            .zip(&self.arrival)
+            .filter(|(q, &t)| !q.is_empty() && t > now)
+            .map(|(_, &t)| t)
+            .fold(None, |m, t| {
+                Some(match m {
+                    None => t,
+                    Some(m) => m.min(t),
+                })
+            })
+    }
+}
+
+fn run_multi_inner(
+    cfg: &SystemConfig,
+    apps: &[&BuiltWorkload],
+    arrivals: &[f64],
+    only_app: Option<usize>,
+    placement: MixPlacement,
+    policy: Policy,
+    fairness: FairnessPolicy,
+) -> crate::Result<EngineRaw> {
+    let (mut vm, app_bases) = map_mix(cfg, apps, placement)?;
+    let app_ctxs: Vec<AppCtx<'_>> = apps
+        .iter()
+        .zip(&app_bases)
+        .map(|(a, b)| AppCtx {
+            trace: &a.trace,
+            obj_base: b.as_slice(),
+        })
+        .collect();
+    let launches: Vec<(usize, f64)> = apps
+        .iter()
+        .zip(arrivals)
+        .map(|(a, &t)| (a.trace.blocks.len(), t))
+        .collect();
+    let mut source = MultiKernelSource::new(&launches, cfg, policy, fairness, only_app);
+    Ok(Engine {
+        cfg,
+        apps: app_ctxs,
+        vm: &mut vm,
+        opts: EngineOptions {
+            l2_filter: false,
+            migrate_on_first_touch: false,
+        },
+    }
+    .run(&mut source))
+}
+
+/// Simulate a multi-kernel mix with time-shared SMs.
+///
+/// The returned report's `app_cycles` are per-app **response times**
+/// (completion − arrival), `app_slowdown` compares each against a
+/// run-alone baseline under the same placement and physical layout, and
+/// `weighted_speedup` is Σᵢ T_aloneᵢ / T_sharedᵢ (system throughput; N
+/// for a mix with no contention, smaller when apps interfere).
+pub fn run_multi(
+    cfg: &SystemConfig,
+    mix: &MultiMix<'_>,
+    placement: MixPlacement,
+    policy: Policy,
+    fairness: FairnessPolicy,
+) -> crate::Result<RunReport> {
+    let apps: Vec<&BuiltWorkload> = mix.launches.iter().map(|l| l.app).collect();
+    let arrivals: Vec<f64> = mix.launches.iter().map(|l| l.arrival).collect();
+    for (i, &t) in arrivals.iter().enumerate() {
+        anyhow::ensure!(
+            t >= 0.0 && t.is_finite(),
+            "arrival time of app {i} must be a non-negative real, got {t}"
+        );
+    }
+    let shared = run_multi_inner(cfg, &apps, &arrivals, None, placement, policy, fairness)?;
+    // Run-alone baselines: identical mapping (all apps' objects placed),
+    // only app i's blocks execute, so the only delta is contention.
+    let zero = vec![0.0; apps.len()];
+    let mut solo = Vec::with_capacity(apps.len());
+    for i in 0..apps.len() {
+        let raw = run_multi_inner(cfg, &apps, &zero, Some(i), placement, policy, fairness)?;
+        solo.push(raw.app_end[i]);
+    }
+    let resp: Vec<f64> = (0..apps.len())
+        .map(|i| (shared.app_end[i] - arrivals[i]).max(0.0))
+        .collect();
+    let mut report = shared.to_report(
+        cfg,
+        apps.iter().map(|a| a.name).collect::<Vec<_>>().join("+"),
+    );
+    report.mechanism = format!("{placement:?}+{policy:?}+{fairness}");
+    report.app_slowdown = stats::per_app_slowdown(&solo, &resp);
+    report.weighted_speedup = stats::weighted_speedup(&solo, &resp);
+    report.app_cycles = resp;
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -218,8 +447,87 @@ mod tests {
         let a = suite::build("NN", &cfg).unwrap();
         let b = suite::build("DC", &cfg).unwrap();
         let mix = Mix { apps: vec![&a, &b] };
-        let (times, _) = run_mix(&cfg, &mix, MixPlacement::CgpLocal).unwrap();
+        let (times, report) = run_mix(&cfg, &mix, MixPlacement::CgpLocal).unwrap();
         assert_eq!(times.len(), 2);
         assert!(times.iter().all(|&t| t > 0.0));
+        assert_eq!(report.app_cycles, times);
+    }
+
+    #[test]
+    fn oversubscribed_mix_runs_to_completion() {
+        // More kernels than stacks: homes wrap, SMs time-share.
+        let cfg = SystemConfig::test_small();
+        let built: Vec<_> = ["NN", "KM", "DC", "HS", "NN", "DC"]
+            .iter()
+            .map(|n| suite::build(n, &cfg).unwrap())
+            .collect();
+        let mix = MultiMix {
+            launches: built
+                .iter()
+                .map(|b| KernelLaunch {
+                    app: b,
+                    arrival: 0.0,
+                })
+                .collect(),
+        };
+        let r = run_multi(
+            &cfg,
+            &mix,
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::RoundRobin,
+        )
+        .unwrap();
+        let total: u64 = built.iter().map(|b| b.total_accesses()).sum();
+        assert_eq!(r.accesses.ndp_total(), total, "every block must execute");
+        assert_eq!(r.app_cycles.len(), 6);
+        assert_eq!(r.app_slowdown.len(), 6);
+        assert!(r.app_cycles.iter().all(|&t| t > 0.0));
+        assert!(r.app_slowdown.iter().all(|&s| s.is_finite() && s > 0.0));
+        assert!(r.weighted_speedup > 0.0 && r.weighted_speedup <= 6.0 + 1e-9);
+        // Stacks 0/1 host two apps each; someone must feel the sharing.
+        assert!(
+            r.app_slowdown.iter().any(|&s| s > 1.0 + 1e-9),
+            "oversubscription must show up as slowdown: {:?}",
+            r.app_slowdown
+        );
+    }
+
+    #[test]
+    fn rejects_bad_arrival_times() {
+        let cfg = SystemConfig::test_small();
+        let a = suite::build("NN", &cfg).unwrap();
+        let mix = MultiMix {
+            launches: vec![KernelLaunch {
+                app: &a,
+                arrival: -1.0,
+            }],
+        };
+        assert!(run_multi(
+            &cfg,
+            &mix,
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn run_mix_rejects_more_apps_than_stacks() {
+        let cfg = SystemConfig::test_small();
+        let a = suite::build("NN", &cfg).unwrap();
+        let app: &BuiltWorkload = &a;
+        let mix = Mix {
+            apps: vec![app; cfg.num_stacks + 1],
+        };
+        assert!(run_mix(&cfg, &mix, MixPlacement::CgpLocal).is_err());
+    }
+
+    #[test]
+    fn placement_parse() {
+        assert_eq!(MixPlacement::parse("fgp"), Some(MixPlacement::FgpOnly));
+        assert_eq!(MixPlacement::parse("cgp"), Some(MixPlacement::CgpLocal));
+        assert_eq!(MixPlacement::parse("x"), None);
     }
 }

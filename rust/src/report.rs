@@ -119,6 +119,20 @@ impl From<&RunReport> for Json {
                 "stack_bytes",
                 Json::Arr(r.stack_bytes.iter().map(|&b| Json::Num(b as f64)).collect()),
             );
+        // Multiprogrammed/multi-kernel extras, only when populated.
+        if !r.app_cycles.is_empty() {
+            o.push(
+                "app_cycles",
+                Json::Arr(r.app_cycles.iter().map(|&c| Json::Num(c)).collect()),
+            );
+        }
+        if !r.app_slowdown.is_empty() {
+            o.push(
+                "app_slowdown",
+                Json::Arr(r.app_slowdown.iter().map(|&s| Json::Num(s)).collect()),
+            )
+            .push("weighted_speedup", Json::Num(r.weighted_speedup));
+        }
         o
     }
 }
@@ -210,6 +224,23 @@ mod tests {
         let s = Json::from(&r).render();
         assert!(s.contains(r#""workload":"PR""#));
         assert!(s.contains(r#""cycles":123"#));
+    }
+
+    #[test]
+    fn multiprog_fields_render_only_when_populated() {
+        let plain = Json::from(&RunReport::default()).render();
+        assert!(!plain.contains("app_cycles"));
+        assert!(!plain.contains("weighted_speedup"));
+        let r = RunReport {
+            app_cycles: vec![10.0, 20.0],
+            app_slowdown: vec![1.0, 2.0],
+            weighted_speedup: 1.5,
+            ..Default::default()
+        };
+        let s = Json::from(&r).render();
+        assert!(s.contains(r#""app_cycles":[10,20]"#));
+        assert!(s.contains(r#""app_slowdown":[1,2]"#));
+        assert!(s.contains(r#""weighted_speedup":1.5"#));
     }
 
     #[test]

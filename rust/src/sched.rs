@@ -29,6 +29,55 @@ pub enum Policy {
     AffinityStealing,
 }
 
+impl Policy {
+    /// Parse a CLI spelling; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim() {
+            "baseline" => Some(Self::Baseline),
+            "affinity" => Some(Self::Affinity),
+            "steal" | "stealing" | "affinity-stealing" => Some(Self::AffinityStealing),
+            _ => None,
+        }
+    }
+}
+
+/// Inter-application arbitration for multi-kernel runs: when several
+/// co-resident kernels are eligible for a freed SM residency slot, the
+/// fairness policy decides whose block gets it. (The block-level
+/// [`Policy`] still decides *which* SMs an app's blocks may occupy.)
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum FairnessPolicy {
+    /// Earliest-arrived app first (ties broken by app index).
+    #[default]
+    Fcfs,
+    /// Rotate over eligible apps so each gets slots in turn.
+    RoundRobin,
+    /// App with the fewest dispatched blocks first (progress-based).
+    LeastIssued,
+}
+
+impl FairnessPolicy {
+    /// Parse a CLI/config spelling; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim() {
+            "fcfs" => Some(Self::Fcfs),
+            "rr" | "round-robin" | "round_robin" => Some(Self::RoundRobin),
+            "least" | "least-issued" | "least_issued" => Some(Self::LeastIssued),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for FairnessPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Fcfs => "fcfs",
+            Self::RoundRobin => "rr",
+            Self::LeastIssued => "least",
+        })
+    }
+}
+
 /// A work scheduler over a kernel launch of `num_blocks` blocks.
 #[derive(Debug)]
 pub struct Scheduler {
@@ -189,5 +238,27 @@ mod tests {
         c.num_stacks = 8;
         assert_eq!(affinity_stack(24 * 8, &c), 0);
         assert_eq!(affinity_stack(24 * 7, &c), 7);
+    }
+
+    #[test]
+    fn policy_and_fairness_parse() {
+        assert_eq!(Policy::parse("affinity"), Some(Policy::Affinity));
+        assert_eq!(Policy::parse("steal"), Some(Policy::AffinityStealing));
+        assert_eq!(Policy::parse("nope"), None);
+        assert_eq!(FairnessPolicy::parse("fcfs"), Some(FairnessPolicy::Fcfs));
+        assert_eq!(FairnessPolicy::parse("rr"), Some(FairnessPolicy::RoundRobin));
+        assert_eq!(
+            FairnessPolicy::parse("least"),
+            Some(FairnessPolicy::LeastIssued)
+        );
+        assert_eq!(FairnessPolicy::parse("zzz"), None);
+        // Display round-trips through parse (the config loader relies on it).
+        for f in [
+            FairnessPolicy::Fcfs,
+            FairnessPolicy::RoundRobin,
+            FairnessPolicy::LeastIssued,
+        ] {
+            assert_eq!(FairnessPolicy::parse(&f.to_string()), Some(f));
+        }
     }
 }

@@ -12,36 +12,20 @@
 //! charged per access — an SM-throughput model rather than a pipeline
 //! model. Blocks occupy SM residency slots; when one retires, the
 //! scheduler's policy picks the next (this is where Eq 1 bites).
+//!
+//! The event-loop physics live in the shared [`crate::engine`]; this
+//! module is the single-kernel adapter: it wires a [`Scheduler`] up as
+//! the engine's block source and shapes the raw counters into a
+//! [`RunReport`]. `tests/differential` locks in that this path is
+//! cycle-identical to the pre-refactor standalone loop.
 
-use crate::addr::{AddressMapper, Granularity};
 use crate::config::SystemConfig;
-use crate::gpu::Topology;
-use crate::mem::{self, MemBackend, MemStats};
-use crate::net::Interconnect;
+use crate::engine::{AppCtx, BlockRef, BlockSource, Engine, EngineOptions};
+use crate::gpu::{Sm, Topology};
 use crate::sched::{Policy, Scheduler};
-use crate::stats::{AccessStats, RunReport};
+use crate::stats::RunReport;
 use crate::trace::KernelTrace;
-use crate::vm::{Tlb, VirtualMemory};
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-
-/// Event key ordering by time (f64 bit-monotonic for non-negative values),
-/// tie-broken by sequence number for determinism.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
-struct TimeKey(u64, u64);
-
-fn key(t: f64, seq: u64) -> TimeKey {
-    debug_assert!(t >= 0.0);
-    TimeKey(t.to_bits(), seq)
-}
-
-#[derive(Clone, Copy, Debug)]
-struct SlotState {
-    /// Index into `trace.blocks`.
-    block_idx: u32,
-    /// Next access offset within the block's stream.
-    next_access: u32,
-}
+use crate::vm::VirtualMemory;
 
 /// One simulated kernel execution.
 pub struct KernelRun<'a> {
@@ -55,215 +39,70 @@ pub struct KernelRun<'a> {
     pub migrate_on_first_touch: bool,
 }
 
-/// Fast deterministic hash for the L2-filter decision (splitmix finalizer).
-#[inline]
-fn line_hash(x: u64) -> u64 {
-    let mut z = x.wrapping_mul(0x9E3779B97F4A7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-    z ^ (z >> 31)
+/// [`BlockSource`] over a single kernel launch: the [`Scheduler`] hands
+/// out `block_id`s by stack affinity; this maps them to trace indices.
+struct KernelSource {
+    sched: Scheduler,
+    /// block_id -> index in `trace.blocks` (blocks may be listed in any
+    /// order).
+    id_to_idx: Vec<u32>,
+}
+
+impl BlockSource for KernelSource {
+    fn seed(&mut self, topo: &Topology, place: &mut dyn FnMut(usize, usize, BlockRef)) {
+        // Initial fill: breadth-first over SMs (hardware distributes blocks
+        // across SMs before stacking occupancy on one).
+        for slot in 0..topo.blocks_per_sm {
+            for sm in &topo.sms {
+                if let Some(bid) = self.sched.next_for(sm.stack) {
+                    place(
+                        sm.id,
+                        slot,
+                        BlockRef {
+                            app: 0,
+                            block: self.id_to_idx[bid as usize],
+                        },
+                    );
+                }
+            }
+        }
+    }
+
+    fn refill(&mut self, sm: Sm, _retired: Option<BlockRef>, _now: f64) -> Option<BlockRef> {
+        self.sched.next_for(sm.stack).map(|bid| BlockRef {
+            app: 0,
+            block: self.id_to_idx[bid as usize],
+        })
+    }
 }
 
 impl<'a> KernelRun<'a> {
     /// Execute the kernel and return the run report.
     pub fn run(self) -> RunReport {
         let cfg = self.cfg;
-        let topo = Topology::new(cfg);
-        let mapper = AddressMapper::new(cfg);
-        let mut net = Interconnect::new(cfg);
-        // DRAM timing is pluggable (fixed-latency vs bank-level); the
-        // backend may only shape time, never which accesses occur.
-        let mut stacks: Vec<Box<dyn MemBackend>> = mem::make_backends(cfg);
-        let mut tlbs: Vec<Tlb> = (0..topo.sms.len())
-            .map(|_| Tlb::new(cfg.tlb_entries))
-            .collect();
-        let mut sched = Scheduler::new(self.policy, self.trace.num_blocks(), cfg);
-
-        // block_id -> index in trace.blocks (blocks may be listed in any order).
-        let mut id_to_idx = vec![u32::MAX; self.trace.num_blocks() as usize];
+        let num_blocks = self.trace.num_blocks();
+        let mut id_to_idx = vec![u32::MAX; num_blocks as usize];
         for (i, b) in self.trace.blocks.iter().enumerate() {
             id_to_idx[b.block_id as usize] = i as u32;
         }
-
-        let cyc = cfg.cycles_per_ns();
-        let l2_threshold = (self.cfg.l2_hit_rate * u32::MAX as f64) as u64;
-        let l2_hit_cycles = cfg.l2_hit_ns * cyc;
-        let tlb_miss_cycles = cfg.tlb_miss_ns * cyc;
-        let line = cfg.line_size;
-        let page_shift = cfg.page_size.trailing_zeros();
-        let mlp = cfg.mlp_per_block as u32;
-        let compute = cfg.compute_cycles_per_access as f64;
-
-        let mut stats = AccessStats::default();
-        let mut migrated: u64 = 0;
-        let mut migrated_pages: Vec<bool> = vec![false; self.vm.mapped_pages() as usize];
-        let mut latency_sum = 0.0f64;
-        let mut latency_n: u64 = 0;
-        let mut end_time = 0.0f64;
-        let mut seq: u64 = 0;
-
-        // (key, sm_index, slot_index) min-heap.
-        let mut heap: BinaryHeap<Reverse<(TimeKey, u32, u32)>> = BinaryHeap::new();
-        let slots_per_sm = cfg.blocks_per_sm;
-        let mut slots: Vec<Option<SlotState>> = vec![None; topo.sms.len() * slots_per_sm];
-        // Per-SM issue-bandwidth server: resident blocks share the SM's
-        // execution resources, so their compute phases serialize.
-        let mut sm_free: Vec<f64> = vec![0.0; topo.sms.len()];
-
-        // Initial fill: breadth-first over SMs (hardware distributes blocks
-        // across SMs before stacking occupancy on one).
-        for slot in 0..slots_per_sm {
-            for sm in &topo.sms {
-                if let Some(bid) = sched.next_for(sm.stack) {
-                    let idx = id_to_idx[bid as usize];
-                    slots[sm.id * slots_per_sm + slot] = Some(SlotState {
-                        block_idx: idx,
-                        next_access: 0,
-                    });
-                    heap.push(Reverse((key(0.0, seq), sm.id as u32, slot as u32)));
-                    seq += 1;
-                }
-            }
-        }
-
-        while let Some(Reverse((tk, sm_id, slot_id))) = heap.pop() {
-            let now = f64::from_bits(tk.0);
-            let sm = topo.sms[sm_id as usize];
-            let slot_key = sm_id as usize * slots_per_sm + slot_id as usize;
-            let Some(state) = slots[slot_key] else { continue };
-            let block = &self.trace.blocks[state.block_idx as usize];
-            let begin = state.next_access as usize;
-            let end = (begin + mlp as usize).min(block.accesses.len());
-
-            // Issue one window of accesses; the block stalls until the
-            // slowest completes, then pays its compute debt.
-            let mut window_done = now;
-            for a in &block.accesses[begin..end] {
-                let vaddr = self.obj_base[a.obj as usize] + a.offset;
-                let vline = vaddr / line;
-                // Stack-level L2 filter (deterministic per line).
-                if line_hash(vline) & 0xFFFF_FFFF < l2_threshold {
-                    stats.l2_hits += 1;
-                    window_done = window_done.max(now + l2_hit_cycles);
-                    continue;
-                }
-                // TLB + translation.
-                let vpn = vaddr >> page_shift;
-                let mut t = now;
-                let pte = match tlbs[sm.id].lookup(vpn) {
-                    Some(pte) => pte,
-                    None => {
-                        t += tlb_miss_cycles;
-                        let pte = self
-                            .vm
-                            .pte_of(vaddr)
-                            .expect("workload access beyond mapped object");
-                        tlbs[sm.id].fill(vpn, pte);
-                        pte
-                    }
-                };
-                let mut paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
-                let mut gran = pte.granularity;
-                // Migration-based first touch: the first NDP access to an
-                // FGP page pulls the whole page into the toucher's stack.
-                if self.migrate_on_first_touch
-                    && gran == Granularity::Fgp
-                    && !migrated_pages[vpn as usize]
-                {
-                    migrated_pages[vpn as usize] = true;
-                    if self.vm.migrate_to_cgp(vaddr, sm.stack).is_ok() {
-                        migrated += 1;
-                        // Page copy: page_size bytes arrive over the remote
-                        // ingress port (3/4 of the stripes are remote).
-                        let copy_bytes =
-                            cfg.page_size * (cfg.num_stacks as u64 - 1) / cfg.num_stacks as u64;
-                        t = net.remote_hop(t, (sm.stack + 1) % cfg.num_stacks, sm.stack, copy_bytes);
-                        let pte = self.vm.pte_of(vaddr).unwrap();
-                        tlbs[sm.id].fill(vpn, pte);
-                        paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
-                        gran = pte.granularity;
-                    }
-                }
-                let dst = mapper.stack_of(paddr, gran);
-                let done = if dst == sm.stack {
-                    stats.local += 1;
-                    let t1 = net.local_hop(t, dst, line);
-                    stacks[dst].access(t1, paddr, line).done
-                } else {
-                    stats.remote += 1;
-                    // Request out, serve at the owner, response back.
-                    let t1 = net.remote_hop(t, sm.stack, dst, line);
-                    let t2 = stacks[dst].access(t1, paddr, line).done;
-                    net.remote_hop(t2, dst, sm.stack, line)
-                };
-                latency_sum += done - now;
-                latency_n += 1;
-                window_done = window_done.max(done);
-            }
-            let issued = (end - begin) as f64;
-            // Compute occupies the SM serially across its resident blocks.
-            let c_start = window_done.max(sm_free[sm.id]);
-            let t_next = c_start + compute * issued;
-            sm_free[sm.id] = t_next;
-            end_time = end_time.max(t_next);
-
-            if end < block.accesses.len() {
-                slots[slot_key] = Some(SlotState {
-                    block_idx: state.block_idx,
-                    next_access: end as u32,
-                });
-                heap.push(Reverse((key(t_next, seq), sm_id, slot_id)));
-                seq += 1;
-            } else {
-                // Block retires; pull the next one for this stack.
-                match sched.next_for(sm.stack) {
-                    Some(bid) => {
-                        slots[slot_key] = Some(SlotState {
-                            block_idx: id_to_idx[bid as usize],
-                            next_access: 0,
-                        });
-                        heap.push(Reverse((key(t_next, seq), sm_id, slot_id)));
-                        seq += 1;
-                    }
-                    None => slots[slot_key] = None,
-                }
-            }
-        }
-
-        let tlb_hits: u64 = tlbs.iter().map(|t| t.hits).sum();
-        let tlb_total: u64 = tlbs.iter().map(|t| t.hits + t.misses).sum();
-        let row_hit_rate = {
-            let rates: Vec<f64> = stacks.iter().map(|s| s.row_hit_rate()).collect();
-            crate::stats::mean(&rates)
+        let mut source = KernelSource {
+            sched: Scheduler::new(self.policy, num_blocks, cfg),
+            id_to_idx,
         };
-        let mut mem_stats = MemStats::default();
-        for s in &stacks {
-            mem_stats.add(&s.stats());
-        }
-        RunReport {
-            workload: self.trace.name.clone(),
-            mechanism: String::new(),
-            cycles: end_time,
-            accesses: stats,
-            stack_bytes: stacks.iter().map(|s| s.bytes_served()).collect(),
-            remote_bytes: net.remote_bytes(),
-            mean_mem_latency: if latency_n == 0 {
-                0.0
-            } else {
-                latency_sum / latency_n as f64
+        let raw = Engine {
+            cfg,
+            apps: vec![AppCtx {
+                trace: self.trace,
+                obj_base: self.obj_base,
+            }],
+            vm: self.vm,
+            opts: EngineOptions {
+                l2_filter: true,
+                migrate_on_first_touch: self.migrate_on_first_touch,
             },
-            tlb_hit_rate: if tlb_total == 0 {
-                0.0
-            } else {
-                tlb_hits as f64 / tlb_total as f64
-            },
-            row_hit_rate,
-            mem_backend: cfg.mem_backend.to_string(),
-            bank_conflicts: mem_stats.row_conflicts,
-            refresh_stalls: mem_stats.refresh_stalls,
-            cgp_pages: 0,
-            fgp_pages: 0,
-            migrated_pages: migrated,
         }
+        .run(&mut source);
+        raw.to_report(cfg, self.trace.name.clone())
     }
 }
 
@@ -312,6 +151,7 @@ pub fn map_objects(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::addr::{AddressMapper, Granularity};
     use crate::placement::{PlacementPlan, Placement};
     use crate::sched::affinity_stack;
     use crate::trace::{Access, BlockTrace, ObjectDesc};

@@ -77,6 +77,14 @@ pub struct RunReport {
     pub fgp_pages: u64,
     /// Pages migrated (migration-based baselines only).
     pub migrated_pages: u64,
+    /// Multiprogrammed runs: per-app completion/response cycles.
+    pub app_cycles: Vec<f64>,
+    /// Multi-kernel runs: per-app slowdown vs running alone under the
+    /// same placement (1.0 = no interference).
+    pub app_slowdown: Vec<f64>,
+    /// Multi-kernel runs: Σ T_alone/T_shared over apps (system
+    /// throughput; equals the app count when there is no contention).
+    pub weighted_speedup: f64,
 }
 
 impl RunReport {
@@ -107,6 +115,29 @@ impl RunReport {
             max / mean
         }
     }
+}
+
+/// Per-app slowdown of a shared run vs run-alone baselines: shared/alone
+/// per app. Degenerate apps (zero time on either side) report 1.0.
+pub fn per_app_slowdown(alone: &[f64], shared: &[f64]) -> Vec<f64> {
+    assert_eq!(alone.len(), shared.len(), "per-app length mismatch");
+    alone
+        .iter()
+        .zip(shared)
+        .map(|(&a, &s)| if a > 0.0 && s > 0.0 { s / a } else { 1.0 })
+        .collect()
+}
+
+/// Weighted speedup (system throughput): Σᵢ T_aloneᵢ / T_sharedᵢ. Equals
+/// the app count when co-running costs nothing; each contended app
+/// contributes its reciprocal slowdown. Degenerate apps contribute 1.0.
+pub fn weighted_speedup(alone: &[f64], shared: &[f64]) -> f64 {
+    assert_eq!(alone.len(), shared.len(), "per-app length mismatch");
+    alone
+        .iter()
+        .zip(shared)
+        .map(|(&a, &s)| if a > 0.0 && s > 0.0 { a / s } else { 1.0 })
+        .sum()
 }
 
 /// Geometric mean of positive values (the paper's cross-benchmark average).
@@ -202,6 +233,18 @@ mod tests {
     fn cv_of_constant_is_zero() {
         assert_eq!(coeff_of_variation(&[3.0, 3.0, 3.0]), 0.0);
         assert!(coeff_of_variation(&[1.0, 100.0]) > 0.9);
+    }
+
+    #[test]
+    fn slowdown_and_weighted_speedup() {
+        let alone = [100.0, 200.0, 0.0];
+        let shared = [200.0, 200.0, 0.0];
+        assert_eq!(per_app_slowdown(&alone, &shared), vec![2.0, 1.0, 1.0]);
+        // 0.5 + 1.0 + 1.0
+        assert!((weighted_speedup(&alone, &shared) - 2.5).abs() < 1e-12);
+        // No contention: weighted speedup equals the app count.
+        let same = [50.0, 60.0];
+        assert!((weighted_speedup(&same, &same) - 2.0).abs() < 1e-12);
     }
 
     #[test]

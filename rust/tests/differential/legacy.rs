@@ -1,0 +1,383 @@
+//! Frozen copies of the pre-refactor event loops, kept as reference
+//! implementations for the differential suite.
+//!
+//! `legacy_kernel_run` is the standalone `sim::KernelRun::run` body and
+//! `legacy_run_mix` the standalone `multiprog::run_mix` body exactly as
+//! they existed before the shared `engine` module was extracted (PR 2).
+//! They are test-only oracles: the differential tests assert the unified
+//! engine reproduces their cycle counts bit-for-bit for every mechanism
+//! under both DRAM backends. Do not "improve" these — their value is
+//! that they never change.
+
+use coda::addr::{AddressMapper, Granularity};
+use coda::config::SystemConfig;
+use coda::gpu::Topology;
+use coda::mem::{self, MemBackend, MemStats};
+use coda::net::Interconnect;
+use coda::sched::{Policy, Scheduler};
+use coda::stats::{AccessStats, RunReport};
+use coda::trace::KernelTrace;
+use coda::vm::{Tlb, VirtualMemory};
+use coda::workloads::BuiltWorkload;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct TimeKey(u64, u64);
+
+fn key(t: f64, seq: u64) -> TimeKey {
+    debug_assert!(t >= 0.0);
+    TimeKey(t.to_bits(), seq)
+}
+
+#[derive(Clone, Copy, Debug)]
+struct SlotState {
+    block_idx: u32,
+    next_access: u32,
+}
+
+#[inline]
+fn line_hash(x: u64) -> u64 {
+    let mut z = x.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z ^ (z >> 31)
+}
+
+/// The pre-refactor single-kernel event loop, verbatim.
+pub fn legacy_kernel_run(
+    cfg: &SystemConfig,
+    trace: &KernelTrace,
+    vm: &mut VirtualMemory,
+    obj_base: &[u64],
+    policy: Policy,
+    migrate_on_first_touch: bool,
+) -> RunReport {
+    let topo = Topology::new(cfg);
+    let mapper = AddressMapper::new(cfg);
+    let mut net = Interconnect::new(cfg);
+    let mut stacks: Vec<Box<dyn MemBackend>> = mem::make_backends(cfg);
+    let mut tlbs: Vec<Tlb> = (0..topo.sms.len())
+        .map(|_| Tlb::new(cfg.tlb_entries))
+        .collect();
+    let mut sched = Scheduler::new(policy, trace.num_blocks(), cfg);
+
+    let mut id_to_idx = vec![u32::MAX; trace.num_blocks() as usize];
+    for (i, b) in trace.blocks.iter().enumerate() {
+        id_to_idx[b.block_id as usize] = i as u32;
+    }
+
+    let cyc = cfg.cycles_per_ns();
+    let l2_threshold = (cfg.l2_hit_rate * u32::MAX as f64) as u64;
+    let l2_hit_cycles = cfg.l2_hit_ns * cyc;
+    let tlb_miss_cycles = cfg.tlb_miss_ns * cyc;
+    let line = cfg.line_size;
+    let page_shift = cfg.page_size.trailing_zeros();
+    let mlp = cfg.mlp_per_block as u32;
+    let compute = cfg.compute_cycles_per_access as f64;
+
+    let mut stats = AccessStats::default();
+    let mut migrated: u64 = 0;
+    let mut migrated_pages: Vec<bool> = vec![false; vm.mapped_pages() as usize];
+    let mut latency_sum = 0.0f64;
+    let mut latency_n: u64 = 0;
+    let mut end_time = 0.0f64;
+    let mut seq: u64 = 0;
+
+    let mut heap: BinaryHeap<Reverse<(TimeKey, u32, u32)>> = BinaryHeap::new();
+    let slots_per_sm = cfg.blocks_per_sm;
+    let mut slots: Vec<Option<SlotState>> = vec![None; topo.sms.len() * slots_per_sm];
+    let mut sm_free: Vec<f64> = vec![0.0; topo.sms.len()];
+
+    for slot in 0..slots_per_sm {
+        for sm in &topo.sms {
+            if let Some(bid) = sched.next_for(sm.stack) {
+                let idx = id_to_idx[bid as usize];
+                slots[sm.id * slots_per_sm + slot] = Some(SlotState {
+                    block_idx: idx,
+                    next_access: 0,
+                });
+                heap.push(Reverse((key(0.0, seq), sm.id as u32, slot as u32)));
+                seq += 1;
+            }
+        }
+    }
+
+    while let Some(Reverse((tk, sm_id, slot_id))) = heap.pop() {
+        let now = f64::from_bits(tk.0);
+        let sm = topo.sms[sm_id as usize];
+        let slot_key = sm_id as usize * slots_per_sm + slot_id as usize;
+        let Some(state) = slots[slot_key] else { continue };
+        let block = &trace.blocks[state.block_idx as usize];
+        let begin = state.next_access as usize;
+        let end = (begin + mlp as usize).min(block.accesses.len());
+
+        let mut window_done = now;
+        for a in &block.accesses[begin..end] {
+            let vaddr = obj_base[a.obj as usize] + a.offset;
+            let vline = vaddr / line;
+            if line_hash(vline) & 0xFFFF_FFFF < l2_threshold {
+                stats.l2_hits += 1;
+                window_done = window_done.max(now + l2_hit_cycles);
+                continue;
+            }
+            let vpn = vaddr >> page_shift;
+            let mut t = now;
+            let pte = match tlbs[sm.id].lookup(vpn) {
+                Some(pte) => pte,
+                None => {
+                    t += tlb_miss_cycles;
+                    let pte = vm
+                        .pte_of(vaddr)
+                        .expect("workload access beyond mapped object");
+                    tlbs[sm.id].fill(vpn, pte);
+                    pte
+                }
+            };
+            let mut paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
+            let mut gran = pte.granularity;
+            if migrate_on_first_touch
+                && gran == Granularity::Fgp
+                && !migrated_pages[vpn as usize]
+            {
+                migrated_pages[vpn as usize] = true;
+                if vm.migrate_to_cgp(vaddr, sm.stack).is_ok() {
+                    migrated += 1;
+                    let copy_bytes =
+                        cfg.page_size * (cfg.num_stacks as u64 - 1) / cfg.num_stacks as u64;
+                    t = net.remote_hop(t, (sm.stack + 1) % cfg.num_stacks, sm.stack, copy_bytes);
+                    let pte = vm.pte_of(vaddr).unwrap();
+                    tlbs[sm.id].fill(vpn, pte);
+                    paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
+                    gran = pte.granularity;
+                }
+            }
+            let dst = mapper.stack_of(paddr, gran);
+            let done = if dst == sm.stack {
+                stats.local += 1;
+                let t1 = net.local_hop(t, dst, line);
+                stacks[dst].access(t1, paddr, line).done
+            } else {
+                stats.remote += 1;
+                let t1 = net.remote_hop(t, sm.stack, dst, line);
+                let t2 = stacks[dst].access(t1, paddr, line).done;
+                net.remote_hop(t2, dst, sm.stack, line)
+            };
+            latency_sum += done - now;
+            latency_n += 1;
+            window_done = window_done.max(done);
+        }
+        let issued = (end - begin) as f64;
+        let c_start = window_done.max(sm_free[sm.id]);
+        let t_next = c_start + compute * issued;
+        sm_free[sm.id] = t_next;
+        end_time = end_time.max(t_next);
+
+        if end < block.accesses.len() {
+            slots[slot_key] = Some(SlotState {
+                block_idx: state.block_idx,
+                next_access: end as u32,
+            });
+            heap.push(Reverse((key(t_next, seq), sm_id, slot_id)));
+            seq += 1;
+        } else {
+            match sched.next_for(sm.stack) {
+                Some(bid) => {
+                    slots[slot_key] = Some(SlotState {
+                        block_idx: id_to_idx[bid as usize],
+                        next_access: 0,
+                    });
+                    heap.push(Reverse((key(t_next, seq), sm_id, slot_id)));
+                    seq += 1;
+                }
+                None => slots[slot_key] = None,
+            }
+        }
+    }
+
+    let tlb_hits: u64 = tlbs.iter().map(|t| t.hits).sum();
+    let tlb_total: u64 = tlbs.iter().map(|t| t.hits + t.misses).sum();
+    let row_hit_rate = {
+        let rates: Vec<f64> = stacks.iter().map(|s| s.row_hit_rate()).collect();
+        coda::stats::mean(&rates)
+    };
+    let mut mem_stats = MemStats::default();
+    for s in &stacks {
+        mem_stats.add(&s.stats());
+    }
+    RunReport {
+        workload: trace.name.clone(),
+        mechanism: String::new(),
+        cycles: end_time,
+        accesses: stats,
+        stack_bytes: stacks.iter().map(|s| s.bytes_served()).collect(),
+        remote_bytes: net.remote_bytes(),
+        mean_mem_latency: if latency_n == 0 {
+            0.0
+        } else {
+            latency_sum / latency_n as f64
+        },
+        tlb_hit_rate: if tlb_total == 0 {
+            0.0
+        } else {
+            tlb_hits as f64 / tlb_total as f64
+        },
+        row_hit_rate,
+        mem_backend: cfg.mem_backend.to_string(),
+        bank_conflicts: mem_stats.row_conflicts,
+        refresh_stalls: mem_stats.refresh_stalls,
+        cgp_pages: 0,
+        fgp_pages: 0,
+        migrated_pages: migrated,
+        ..Default::default()
+    }
+}
+
+/// Placement style, mirroring `multiprog::MixPlacement` for the frozen
+/// loop (kept separate so the oracle has zero dependence on the code
+/// under test).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LegacyMixPlacement {
+    FgpOnly,
+    CgpLocal,
+}
+
+/// The pre-refactor multiprogrammed event loop, verbatim.
+pub fn legacy_run_mix(
+    cfg: &SystemConfig,
+    apps: &[&BuiltWorkload],
+    placement: LegacyMixPlacement,
+) -> coda::Result<(Vec<f64>, RunReport)> {
+    assert!(apps.len() <= cfg.num_stacks);
+    let topo = Topology::new(cfg);
+    let mapper = AddressMapper::new(cfg);
+    let mut net = Interconnect::new(cfg);
+    let mut stacks: Vec<Box<dyn MemBackend>> = mem::make_backends(cfg);
+    let mut tlbs: Vec<Tlb> = (0..topo.sms.len())
+        .map(|_| Tlb::new(cfg.tlb_entries))
+        .collect();
+
+    let mut vm = VirtualMemory::new(cfg);
+    let mut app_bases: Vec<Vec<u64>> = Vec::new();
+    for (home, app) in apps.iter().enumerate() {
+        let mut bases = Vec::new();
+        for obj in &app.trace.objects {
+            let pages = obj.bytes.div_ceil(cfg.page_size).max(1);
+            let base = match placement {
+                LegacyMixPlacement::FgpOnly => vm.map_fgp(pages)?,
+                LegacyMixPlacement::CgpLocal => vm.map_cgp(pages, |_| home)?,
+            };
+            bases.push(base);
+        }
+        app_bases.push(bases);
+    }
+
+    let line = cfg.line_size;
+    let cyc = cfg.cycles_per_ns();
+    let page_shift = cfg.page_size.trailing_zeros();
+    let tlb_miss_cycles = cfg.tlb_miss_ns * cyc;
+    let mlp = cfg.mlp_per_block;
+    let compute = cfg.compute_cycles_per_access as f64;
+
+    let mut stats = AccessStats::default();
+    let mut app_end = vec![0.0f64; apps.len()];
+    let mut seq = 0u64;
+    let mut heap: BinaryHeap<Reverse<(u64, u64, u32, u32, u32, u32)>> = BinaryHeap::new();
+    let mut next_block: Vec<usize> = vec![0; apps.len()];
+    let mut sm_free: Vec<f64> = vec![0.0; topo.sms.len()];
+
+    for (app_idx, app) in apps.iter().enumerate() {
+        let sms: Vec<usize> = topo.sms_of_stack(app_idx).map(|s| s.id).collect();
+        let capacity = sms.len() * cfg.blocks_per_sm;
+        for slot in 0..capacity {
+            if next_block[app_idx] >= app.trace.blocks.len() {
+                break;
+            }
+            let b = next_block[app_idx];
+            next_block[app_idx] += 1;
+            heap.push(Reverse((
+                0f64.to_bits(),
+                seq,
+                app_idx as u32,
+                b as u32,
+                0,
+                sms[slot % sms.len()] as u32,
+            )));
+            seq += 1;
+        }
+    }
+
+    while let Some(Reverse((tb, _, app_idx, block_idx, next_acc, sm_id))) = heap.pop() {
+        let now = f64::from_bits(tb);
+        let app = apps[app_idx as usize];
+        let home = app_idx as usize;
+        let block = &app.trace.blocks[block_idx as usize];
+        let begin = next_acc as usize;
+        let endw = (begin + mlp).min(block.accesses.len());
+        let mut window_done = now;
+        for a in &block.accesses[begin..endw] {
+            let vaddr = app_bases[home][a.obj as usize] + a.offset;
+            let vpn = vaddr >> page_shift;
+            let mut t = now;
+            let pte = match tlbs[sm_id as usize].lookup(vpn) {
+                Some(p) => p,
+                None => {
+                    t += tlb_miss_cycles;
+                    let p = vm.pte_of(vaddr).expect("mapped");
+                    tlbs[sm_id as usize].fill(vpn, p);
+                    p
+                }
+            };
+            let paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
+            let dst = mapper.stack_of(paddr, pte.granularity);
+            let done = if dst == home {
+                stats.local += 1;
+                let t1 = net.local_hop(t, dst, line);
+                stacks[dst].access(t1, paddr, line).done
+            } else {
+                stats.remote += 1;
+                let t1 = net.remote_hop(t, home, dst, line);
+                let t2 = stacks[dst].access(t1, paddr, line).done;
+                net.remote_hop(t2, dst, home, line)
+            };
+            window_done = window_done.max(done);
+        }
+        let c_start = window_done.max(sm_free[sm_id as usize]);
+        let t_next = c_start + compute * (endw - begin) as f64;
+        sm_free[sm_id as usize] = t_next;
+        app_end[home] = app_end[home].max(t_next);
+        if endw < block.accesses.len() {
+            heap.push(Reverse((
+                t_next.to_bits(),
+                seq,
+                app_idx,
+                block_idx,
+                endw as u32,
+                sm_id,
+            )));
+            seq += 1;
+        } else if next_block[home] < app.trace.blocks.len() {
+            let b = next_block[home];
+            next_block[home] += 1;
+            heap.push(Reverse((t_next.to_bits(), seq, app_idx, b as u32, 0, sm_id)));
+            seq += 1;
+        }
+    }
+
+    let mut mem_stats = MemStats::default();
+    for s in &stacks {
+        mem_stats.add(&s.stats());
+    }
+    let report = RunReport {
+        workload: apps.iter().map(|a| a.name).collect::<Vec<_>>().join("+"),
+        mechanism: format!("{placement:?}"),
+        cycles: app_end.iter().cloned().fold(0.0, f64::max),
+        accesses: stats,
+        stack_bytes: stacks.iter().map(|s| s.bytes_served()).collect(),
+        remote_bytes: net.remote_bytes(),
+        mem_backend: cfg.mem_backend.to_string(),
+        bank_conflicts: mem_stats.row_conflicts,
+        refresh_stalls: mem_stats.refresh_stalls,
+        ..Default::default()
+    };
+    Ok((app_end, report))
+}

@@ -1,0 +1,246 @@
+//! Differential suite: the unified `engine` must be **cycle-identical**
+//! to the pre-refactor event loops (frozen in `legacy.rs`) for every
+//! mechanism × workload × DRAM backend, and its numbers are additionally
+//! locked into golden snapshots under `tests/golden/` so drift is caught
+//! across machines and over time.
+//!
+//! Golden convention: a missing snapshot (or one whose first line is the
+//! `# PENDING-RECORD` sentinel) is recorded on first run; afterwards any
+//! mismatch fails. Regenerate intentionally with
+//! `CODA_UPDATE_GOLDEN=1 cargo test --test differential`.
+
+mod legacy;
+
+use coda::config::{MemBackendKind, SystemConfig};
+use coda::coordinator::{Coordinator, Mechanism};
+use coda::multiprog::{run_mix, Mix, MixPlacement};
+use coda::sim::{map_objects, KernelRun};
+use coda::stats::RunReport;
+use coda::workloads::suite;
+use legacy::LegacyMixPlacement;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+const MECHS: [Mechanism; 7] = [
+    Mechanism::FgpOnly,
+    Mechanism::CgpOnly,
+    Mechanism::CgpFta,
+    Mechanism::MigrationFta,
+    Mechanism::Coda,
+    Mechanism::FgpAffinity,
+    Mechanism::CodaStealing,
+];
+
+/// Representative slice of the workload suite: block-exclusive graph
+/// (PR, DC), core-exclusive (KM, NN), and sharing (HS3D) behaviour.
+const WORKLOADS: [&str; 5] = ["PR", "DC", "KM", "NN", "HS3D"];
+
+fn cfg_for(backend: MemBackendKind) -> SystemConfig {
+    let mut c = SystemConfig::test_small();
+    c.mem_backend = backend;
+    c
+}
+
+/// Field-by-field comparison of everything the legacy loop reported.
+/// Cycle counts are compared bit-exactly: the refactor must not move a
+/// single f64 operation.
+fn assert_reports_identical(new: &RunReport, old: &RunReport, what: &str) {
+    assert_eq!(new.cycles.to_bits(), old.cycles.to_bits(), "{what}: cycles");
+    assert_eq!(new.accesses, old.accesses, "{what}: access counts");
+    assert_eq!(new.stack_bytes, old.stack_bytes, "{what}: stack bytes");
+    assert_eq!(new.remote_bytes, old.remote_bytes, "{what}: remote bytes");
+    assert_eq!(new.bank_conflicts, old.bank_conflicts, "{what}: conflicts");
+    assert_eq!(
+        new.refresh_stalls, old.refresh_stalls,
+        "{what}: refresh stalls"
+    );
+    assert_eq!(
+        new.migrated_pages, old.migrated_pages,
+        "{what}: migrated pages"
+    );
+}
+
+#[test]
+fn unified_engine_matches_legacy_kernel_loop() {
+    for backend in [MemBackendKind::FixedLatency, MemBackendKind::BankLevel] {
+        let cfg = cfg_for(backend);
+        let coord = Coordinator::new(cfg.clone());
+        for name in WORKLOADS {
+            let wl = suite::build(name, &cfg).unwrap();
+            for mech in MECHS {
+                let plan = coord.plan_for(&wl, mech);
+                let policy = mech.policy();
+                let (mut vm_new, bases_new, _, _) =
+                    map_objects(&cfg, &wl.trace, &plan).unwrap();
+                let new = KernelRun {
+                    cfg: &cfg,
+                    trace: &wl.trace,
+                    vm: &mut vm_new,
+                    obj_base: &bases_new,
+                    policy,
+                    migrate_on_first_touch: plan.migrate_on_first_touch,
+                }
+                .run();
+                let (mut vm_old, bases_old, _, _) =
+                    map_objects(&cfg, &wl.trace, &plan).unwrap();
+                let old = legacy::legacy_kernel_run(
+                    &cfg,
+                    &wl.trace,
+                    &mut vm_old,
+                    &bases_old,
+                    policy,
+                    plan.migrate_on_first_touch,
+                );
+                let what = format!("{name}/{}/{}", mech.name(), cfg.mem_backend);
+                assert_reports_identical(&new, &old, &what);
+                assert_eq!(
+                    new.mean_mem_latency.to_bits(),
+                    old.mean_mem_latency.to_bits(),
+                    "{what}: latency"
+                );
+                assert_eq!(
+                    new.tlb_hit_rate.to_bits(),
+                    old.tlb_hit_rate.to_bits(),
+                    "{what}: tlb"
+                );
+                assert_eq!(
+                    new.row_hit_rate.to_bits(),
+                    old.row_hit_rate.to_bits(),
+                    "{what}: row hit rate"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn unified_engine_matches_legacy_mix_loop() {
+    for backend in [MemBackendKind::FixedLatency, MemBackendKind::BankLevel] {
+        let cfg = cfg_for(backend);
+        let a = suite::build("NN", &cfg).unwrap();
+        let b = suite::build("KM", &cfg).unwrap();
+        let c = suite::build("DC", &cfg).unwrap();
+        let d = suite::build("HS", &cfg).unwrap();
+        let mixes: [Vec<&coda::workloads::BuiltWorkload>; 2] =
+            [vec![&a, &b, &c, &d], vec![&a, &c]];
+        for apps in &mixes {
+            for (placement, legacy_placement) in [
+                (MixPlacement::FgpOnly, LegacyMixPlacement::FgpOnly),
+                (MixPlacement::CgpLocal, LegacyMixPlacement::CgpLocal),
+            ] {
+                let mix = Mix { apps: apps.clone() };
+                let (times_new, rep_new) = run_mix(&cfg, &mix, placement).unwrap();
+                let (times_old, rep_old) =
+                    legacy::legacy_run_mix(&cfg, apps, legacy_placement).unwrap();
+                let what = format!(
+                    "mix[{}]/{placement:?}/{}",
+                    rep_new.workload, cfg.mem_backend
+                );
+                assert_eq!(
+                    times_new.len(),
+                    times_old.len(),
+                    "{what}: app count"
+                );
+                for (i, (tn, to)) in times_new.iter().zip(&times_old).enumerate() {
+                    assert_eq!(tn.to_bits(), to.to_bits(), "{what}: app {i} cycles");
+                }
+                assert_reports_identical(&rep_new, &rep_old, &what);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden cycle snapshots.
+// ---------------------------------------------------------------------------
+
+fn golden_path(file: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join(file)
+}
+
+/// Sentinel first line marking a committed-but-not-yet-recorded snapshot
+/// (see `tests/golden_report.rs` for the rationale).
+const PENDING: &str = "# PENDING-RECORD";
+
+fn check_golden(file: &str, got: &str) {
+    let path = golden_path(file);
+    let update = std::env::var("CODA_UPDATE_GOLDEN").is_ok();
+    match std::fs::read_to_string(&path) {
+        Ok(want) if !update && !want.starts_with(PENDING) => {
+            assert_eq!(
+                got, want,
+                "golden snapshot {file} drifted; if the change is intentional \
+                 rerun with CODA_UPDATE_GOLDEN=1 and commit {path:?}"
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, got).unwrap();
+            eprintln!("recorded golden snapshot at {path:?}");
+        }
+    }
+}
+
+fn render_cycles_snapshot(backend: MemBackendKind) -> String {
+    let cfg = cfg_for(backend);
+    let coord = Coordinator::new(cfg.clone());
+    let mut out = format!(
+        "# golden engine cycles ({} backend, test_small)\n\
+         # workload | mechanism | cycles | local | remote | l2_hits\n",
+        cfg.mem_backend
+    );
+    for name in WORKLOADS {
+        let wl = suite::build(name, &cfg).unwrap();
+        for mech in MECHS {
+            let r = coord.run(&wl, mech).unwrap();
+            writeln!(
+                out,
+                "{name} | {} | {} | {} | {} | {}",
+                mech.name(),
+                r.cycles,
+                r.accesses.local,
+                r.accesses.remote,
+                r.accesses.l2_hits
+            )
+            .unwrap();
+        }
+    }
+    // Multiprogrammed rows: the Fig 12 mix under both placements.
+    let a = suite::build("NN", &cfg).unwrap();
+    let b = suite::build("KM", &cfg).unwrap();
+    let c = suite::build("DC", &cfg).unwrap();
+    let d = suite::build("HS", &cfg).unwrap();
+    for placement in [MixPlacement::FgpOnly, MixPlacement::CgpLocal] {
+        let mix = Mix {
+            apps: vec![&a, &b, &c, &d],
+        };
+        let (_, r) = run_mix(&cfg, &mix, placement).unwrap();
+        writeln!(
+            out,
+            "mix:{} | {placement:?} | {} | {} | {} | {}",
+            r.workload, r.cycles, r.accesses.local, r.accesses.remote, r.accesses.l2_hits
+        )
+        .unwrap();
+    }
+    out
+}
+
+#[test]
+fn engine_cycles_match_golden_fixed() {
+    let got = render_cycles_snapshot(MemBackendKind::FixedLatency);
+    assert_eq!(
+        got,
+        render_cycles_snapshot(MemBackendKind::FixedLatency),
+        "snapshot is not deterministic"
+    );
+    check_golden("engine_cycles_fixed.txt", &got);
+}
+
+#[test]
+fn engine_cycles_match_golden_bank() {
+    let got = render_cycles_snapshot(MemBackendKind::BankLevel);
+    check_golden("engine_cycles_bank.txt", &got);
+}

@@ -1,0 +1,263 @@
+//! Multi-kernel scheduling tests: the N-apps-equals-N-sequential-runs
+//! equivalence property when contention is disabled, oversubscribed
+//! mixes (more kernels than stacks), staggered arrivals, fairness
+//! policies, and the multiprogrammed placement expectations under both
+//! DRAM backends.
+
+use coda::config::{MemBackendKind, SystemConfig};
+use coda::coordinator::Coordinator;
+use coda::multiprog::{run_mix, run_multi, KernelLaunch, Mix, MixPlacement, MultiMix};
+use coda::sched::{FairnessPolicy, Policy};
+use coda::workloads::suite;
+use coda::workloads::BuiltWorkload;
+
+fn cfg_for(backend: MemBackendKind) -> SystemConfig {
+    let mut c = SystemConfig::test_small();
+    c.mem_backend = backend;
+    c
+}
+
+fn build_apps(names: &[&str], cfg: &SystemConfig) -> Vec<Box<BuiltWorkload>> {
+    names.iter().map(|n| suite::build(n, cfg).unwrap()).collect()
+}
+
+fn launches_at<'a>(
+    apps: &'a [Box<BuiltWorkload>],
+    arrival_of: impl Fn(usize) -> f64,
+) -> MultiMix<'a> {
+    MultiMix {
+        launches: apps
+            .iter()
+            .enumerate()
+            .map(|(i, a)| KernelLaunch {
+                app: a,
+                arrival: arrival_of(i),
+            })
+            .collect(),
+    }
+}
+
+/// The headline equivalence property: with contention disabled — one app
+/// per stack, CGP-local placement (disjoint footprints, no remote
+/// traffic), affinity scheduling (disjoint SMs) — running N apps
+/// together is **bit-identical** to running each alone. `run_multi`
+/// computes the run-alone baselines internally over the same physical
+/// layout, so every per-app slowdown must be exactly 1.0 and weighted
+/// speedup exactly N, under both DRAM backends (the bank-level model's
+/// refresh windows are absolute-time-based, so even they can't leak
+/// across disjoint stacks).
+#[test]
+fn n_apps_equal_n_sequential_runs_without_contention() {
+    for backend in [MemBackendKind::FixedLatency, MemBackendKind::BankLevel] {
+        let cfg = cfg_for(backend);
+        let apps = build_apps(&["NN", "KM", "DC", "HS"], &cfg);
+        let mix = launches_at(&apps, |_| 0.0);
+        let r = run_multi(
+            &cfg,
+            &mix,
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        )
+        .unwrap();
+        assert_eq!(r.accesses.remote, 0, "{backend:?}: CGP-local must be local");
+        for (i, &s) in r.app_slowdown.iter().enumerate() {
+            assert_eq!(
+                s, 1.0,
+                "{backend:?}: app {i} must be unaffected by co-runners, slowdown {s}"
+            );
+        }
+        assert_eq!(
+            r.weighted_speedup, 4.0,
+            "{backend:?}: weighted speedup must be exactly N"
+        );
+    }
+}
+
+/// The converse: under FGP-Only placement the apps share every stack's
+/// DRAM and the remote links, so co-running must cost someone something.
+#[test]
+fn fgp_contention_shows_up_as_slowdown() {
+    let cfg = cfg_for(MemBackendKind::FixedLatency);
+    let apps = build_apps(&["NN", "KM", "DC", "HS"], &cfg);
+    let mix = launches_at(&apps, |_| 0.0);
+    let r = run_multi(
+        &cfg,
+        &mix,
+        MixPlacement::FgpOnly,
+        Policy::Affinity,
+        FairnessPolicy::Fcfs,
+    )
+    .unwrap();
+    assert!(r.accesses.remote > 0);
+    assert!(
+        r.app_slowdown.iter().any(|&s| s > 1.01),
+        "shared remote links must slow someone down: {:?}",
+        r.app_slowdown
+    );
+    assert!(
+        r.weighted_speedup < 4.0 - 1e-6,
+        "weighted speedup {} must reflect contention",
+        r.weighted_speedup
+    );
+}
+
+/// Staggering far enough apart removes all SM/time overlap, so the
+/// no-contention equivalence holds even through the staggered path
+/// (arrival bookkeeping, idle-slot wakeups) when footprints are
+/// stack-disjoint.
+#[test]
+fn staggered_disjoint_apps_still_equal_solo_runs() {
+    let cfg = cfg_for(MemBackendKind::FixedLatency);
+    let apps = build_apps(&["NN", "DC"], &cfg);
+    let mix = launches_at(&apps, |i| i as f64 * 1e7);
+    let r = run_multi(
+        &cfg,
+        &mix,
+        MixPlacement::CgpLocal,
+        Policy::Affinity,
+        FairnessPolicy::Fcfs,
+    )
+    .unwrap();
+    // App 0 (arrival 0) matches its solo run bit-exactly; app 1's whole
+    // timeline is shifted by its arrival offset, and f64 addition is not
+    // shift-invariant, so it matches only to rounding error.
+    assert_eq!(r.app_slowdown[0], 1.0, "app 0 runs exactly as if alone");
+    for (i, &s) in r.app_slowdown.iter().enumerate() {
+        assert!((s - 1.0).abs() < 1e-6, "staggered app {i} slowdown {s}");
+    }
+    // Response times are measured from each app's arrival, not t=0.
+    let total: u64 = apps.iter().map(|a| a.total_accesses()).sum();
+    assert_eq!(r.accesses.ndp_total(), total);
+    assert!(r.cycles >= 1e7, "second app cannot finish before it arrives");
+    assert!(
+        r.app_cycles[1] < r.cycles,
+        "response time must subtract the arrival offset"
+    );
+}
+
+/// A staggered oversubscribed mix must still execute every block, and a
+/// late-arriving kernel must wake idle SMs (the arrival-event path).
+#[test]
+fn late_arrival_wakes_idle_sms() {
+    let cfg = cfg_for(MemBackendKind::FixedLatency);
+    let apps = build_apps(&["NN", "DC"], &cfg);
+    // App 1 arrives long after app 0 has fully drained: without arrival
+    // wakeups its blocks would never be scheduled and the run would
+    // report half the accesses.
+    let mix = launches_at(&apps, |i| i as f64 * 5e7);
+    let r = run_multi(
+        &cfg,
+        &mix,
+        MixPlacement::CgpLocal,
+        Policy::Baseline,
+        FairnessPolicy::Fcfs,
+    )
+    .unwrap();
+    let total: u64 = apps.iter().map(|a| a.total_accesses()).sum();
+    assert_eq!(r.accesses.ndp_total(), total, "late kernel must still run");
+}
+
+/// Oversubscription: more kernels than stacks, all three fairness
+/// policies. Every policy must run every block, deterministically.
+#[test]
+fn oversubscribed_mix_under_every_fairness_policy() {
+    let cfg = cfg_for(MemBackendKind::FixedLatency);
+    let apps = build_apps(&["NN", "KM", "DC", "HS", "NN", "KM"], &cfg);
+    let total: u64 = apps.iter().map(|a| a.total_accesses()).sum();
+    for fairness in [
+        FairnessPolicy::Fcfs,
+        FairnessPolicy::RoundRobin,
+        FairnessPolicy::LeastIssued,
+    ] {
+        let mix = launches_at(&apps, |_| 0.0);
+        let r1 = run_multi(&cfg, &mix, MixPlacement::CgpLocal, Policy::Affinity, fairness)
+            .unwrap();
+        let mix2 = launches_at(&apps, |_| 0.0);
+        let r2 = run_multi(&cfg, &mix2, MixPlacement::CgpLocal, Policy::Affinity, fairness)
+            .unwrap();
+        assert_eq!(r1.accesses.ndp_total(), total, "{fairness}: lost blocks");
+        assert_eq!(r1.cycles, r2.cycles, "{fairness}: nondeterministic");
+        assert_eq!(r1.app_cycles, r2.app_cycles, "{fairness}: nondeterministic");
+        assert_eq!(r1.app_slowdown.len(), 6);
+        assert!(r1.weighted_speedup > 0.0 && r1.weighted_speedup <= 6.0 + 1e-9);
+        // Apps doubled up on stacks 0/1 contend; apps 2/3 run alone on
+        // their stacks and must be untouched under affinity scheduling.
+        assert_eq!(r1.app_slowdown[2], 1.0, "{fairness}");
+        assert_eq!(r1.app_slowdown[3], 1.0, "{fairness}");
+        assert!(
+            r1.app_slowdown.iter().any(|&s| s > 1.0 + 1e-9),
+            "{fairness}: time-sharing must cost the doubled-up apps"
+        );
+    }
+}
+
+/// The coordinator façade exposes the same machinery.
+#[test]
+fn coordinator_run_multi_facade() {
+    let cfg = cfg_for(MemBackendKind::FixedLatency);
+    let apps = build_apps(&["NN", "DC"], &cfg);
+    let coord = Coordinator::new(cfg.clone());
+    let launches: Vec<(&BuiltWorkload, f64)> = apps.iter().map(|a| (&**a, 0.0)).collect();
+    let r = coord
+        .run_multi(&launches, MixPlacement::CgpLocal, Policy::Affinity)
+        .unwrap();
+    assert_eq!(r.app_slowdown, vec![1.0, 1.0]);
+    let (times, rep) = coord
+        .run_mix(
+            &apps.iter().map(|a| &**a).collect::<Vec<_>>(),
+            MixPlacement::CgpLocal,
+        )
+        .unwrap();
+    assert_eq!(times.len(), 2);
+    assert_eq!(rep.accesses.remote, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Multiprogrammed placement expectations (satellite).
+// ---------------------------------------------------------------------------
+
+/// CGP-local placement of disjoint per-app footprints serves every
+/// access from the home stack — zero remote traffic — under both
+/// backends, and the per-stack byte counts are backend-invariant.
+#[test]
+fn cgp_local_yields_zero_remote_under_both_backends() {
+    let mut byte_splits = Vec::new();
+    for backend in [MemBackendKind::FixedLatency, MemBackendKind::BankLevel] {
+        let cfg = cfg_for(backend);
+        let apps = build_apps(&["NN", "KM", "DC", "HS"], &cfg);
+        let refs: Vec<&BuiltWorkload> = apps.iter().map(|a| &**a).collect();
+        let mix = Mix { apps: refs };
+        let (_, r) = run_mix(&cfg, &mix, MixPlacement::CgpLocal).unwrap();
+        let total: u64 = apps.iter().map(|a| a.total_accesses()).sum();
+        assert_eq!(r.accesses.remote, 0, "{backend:?}");
+        assert_eq!(r.accesses.local, total, "{backend:?}");
+        assert_eq!(r.remote_bytes, 0, "{backend:?}");
+        byte_splits.push(r.stack_bytes.clone());
+    }
+    assert_eq!(
+        byte_splits[0], byte_splits[1],
+        "per-stack traffic split must not depend on the DRAM backend"
+    );
+}
+
+/// FGP-Only placement stripes every app's pages over all stacks, so with
+/// N stacks roughly (N-1)/N of each app's accesses are remote.
+#[test]
+fn fgp_only_yields_interleaved_expectation_under_both_backends() {
+    for backend in [MemBackendKind::FixedLatency, MemBackendKind::BankLevel] {
+        let cfg = cfg_for(backend);
+        let apps = build_apps(&["NN", "KM", "DC", "HS"], &cfg);
+        let refs: Vec<&BuiltWorkload> = apps.iter().map(|a| &**a).collect();
+        let mix = Mix { apps: refs };
+        let (_, r) = run_mix(&cfg, &mix, MixPlacement::FgpOnly).unwrap();
+        let total: u64 = apps.iter().map(|a| a.total_accesses()).sum();
+        assert_eq!(r.accesses.ndp_total(), total, "{backend:?}");
+        let expect = (cfg.num_stacks - 1) as f64 / cfg.num_stacks as f64;
+        let rf = r.accesses.remote_fraction();
+        assert!(
+            (rf - expect).abs() < 0.08,
+            "{backend:?}: remote fraction {rf} vs interleaved expectation {expect}"
+        );
+    }
+}
