@@ -19,10 +19,10 @@ fn main() -> coda::Result<()> {
     for name in suite::names() {
         let wl = suite::build(name, &cfg)?;
         let n = wl.trace.objects.len();
-        let (vm_f, base_f, _, _) = map_objects(&cfg, &wl.trace, &PlacementPlan::all_fgp(n))?;
-        let (vm_c, base_c, _, _) = map_objects(&cfg, &wl.trace, &cgp_only_plan(n, &cfg))?;
-        let r_f = run_host_sweep(&cfg, &wl.trace, &vm_f, &base_f);
-        let r_c = run_host_sweep(&cfg, &wl.trace, &vm_c, &base_c);
+        let (mut vm_f, base_f, _, _) = map_objects(&cfg, &wl.trace, &PlacementPlan::all_fgp(n))?;
+        let (mut vm_c, base_c, _, _) = map_objects(&cfg, &wl.trace, &cgp_only_plan(n, &cfg))?;
+        let r_f = run_host_sweep(&cfg, &wl.trace, &mut vm_f, &base_f);
+        let r_c = run_host_sweep(&cfg, &wl.trace, &mut vm_c, &base_c);
         let s = r_c.cycles / r_f.cycles;
         speedups.push(s);
         t.row(&[

@@ -16,6 +16,11 @@ pub const VALUE_OPTS: &[&str] = &[
     "policy",
     "fairness",
     "stagger",
+    "host",
+    "host-mlp",
+    "host-passes",
+    "key",
+    "values",
 ];
 
 /// Parsed command line.
@@ -129,6 +134,36 @@ mod tests {
         assert_eq!(a.opt("policy"), Some("affinity"));
         assert_eq!(a.opt_parse("stagger", 0.0f64).unwrap(), 5000.0);
         assert!(a.flags.is_empty());
+    }
+
+    #[test]
+    fn hostmix_options_take_values() {
+        let a = Args::parse(
+            &argv(&[
+                "hostmix", "NN,KM", "--host", "DC", "--host-mlp", "32", "--host-passes", "2",
+                "--placement", "cgp",
+            ]),
+            VALUE_OPTS,
+        )
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("hostmix"));
+        assert_eq!(a.positional, vec!["NN,KM"]);
+        assert_eq!(a.opt("host"), Some("DC"));
+        assert_eq!(a.opt("host-mlp"), Some("32"));
+        assert_eq!(a.opt("host-passes"), Some("2"));
+        assert!(a.flags.is_empty());
+    }
+
+    #[test]
+    fn sweep_options_take_values() {
+        let a = Args::parse(
+            &argv(&["sweep", "PR", "--key", "remote_bw_gbs", "--values", "16,32"]),
+            VALUE_OPTS,
+        )
+        .unwrap();
+        assert_eq!(a.opt("key"), Some("remote_bw_gbs"));
+        assert_eq!(a.opt("values"), Some("16,32"));
+        assert_eq!(a.positional, vec!["PR"]);
     }
 
     #[test]

@@ -149,6 +149,26 @@ pub struct SystemConfig {
     /// `i * mix_stagger_cycles` SM cycles (CLI `--stagger N`).
     pub mix_stagger_cycles: f64,
 
+    // --- concurrent host traffic (CHoNDA-style co-location) ------------------
+    /// Outstanding host requests per issue window — the host-intensity
+    /// knob (an aggressive OoO core + MLP prefetchers; the legacy
+    /// `HOST_MLP` window semantics). `0` disables host traffic entirely,
+    /// making `coda hostmix` degenerate to the NDP-only run.
+    pub host_mlp: usize,
+    /// Sweeps the host stream makes over its working set; more passes
+    /// sustain host pressure for longer NDP kernels. `0` disables host
+    /// traffic.
+    pub host_passes: u64,
+    /// Fraction of host cache lines resident in host-local DDR instead of
+    /// the stacks (deterministic per line). Those accesses never touch
+    /// the host ports or stack DRAM — CHoNDA's host-side memory.
+    pub host_ddr_fraction: f64,
+    /// Aggregate bandwidth of the host-local DDR (GB/s).
+    pub host_ddr_bw_gbs: f64,
+    /// Channels of the host-local DDR (it reuses the stack backend model
+    /// selected by `mem_backend`, scaled to these parameters).
+    pub host_ddr_channels: usize,
+
     // --- misc ----------------------------------------------------------------
     /// Global PRNG seed for workload synthesis.
     pub seed: u64,
@@ -193,6 +213,11 @@ impl Default for SystemConfig {
             compute_cycles_per_access: 440,
             mix_fairness: crate::sched::FairnessPolicy::Fcfs,
             mix_stagger_cycles: 0.0,
+            host_mlp: crate::host::HOST_MLP,
+            host_passes: 1,
+            host_ddr_fraction: 0.0,
+            host_ddr_bw_gbs: 64.0,
+            host_ddr_channels: 2,
             seed: 0xC0DA,
         }
     }
@@ -282,6 +307,21 @@ impl SystemConfig {
                 self.mix_stagger_cycles
             );
         }
+        if !self.host_ddr_fraction.is_finite() || !(0.0..=1.0).contains(&self.host_ddr_fraction) {
+            bail!(
+                "host_ddr_fraction must be in [0,1], got {}",
+                self.host_ddr_fraction
+            );
+        }
+        if !self.host_ddr_bw_gbs.is_finite() || self.host_ddr_bw_gbs <= 0.0 {
+            bail!(
+                "host_ddr_bw_gbs must be positive, got {}",
+                self.host_ddr_bw_gbs
+            );
+        }
+        if self.host_ddr_channels == 0 {
+            bail!("host_ddr_channels must be positive");
+        }
         Ok(())
     }
 
@@ -342,6 +382,11 @@ impl SystemConfig {
                     })?
             }
             "mix_stagger_cycles" => parse!(mix_stagger_cycles, f64),
+            "host_mlp" => parse!(host_mlp, usize),
+            "host_passes" => parse!(host_passes, u64),
+            "host_ddr_fraction" => parse!(host_ddr_fraction, f64),
+            "host_ddr_bw_gbs" => parse!(host_ddr_bw_gbs, f64),
+            "host_ddr_channels" => parse!(host_ddr_channels, usize),
             "seed" => parse!(seed, u64),
             _ => bail!("unknown config key: {key}"),
         }
@@ -420,6 +465,11 @@ impl SystemConfig {
             ),
             ("mix_fairness", self.mix_fairness.to_string()),
             ("mix_stagger_cycles", self.mix_stagger_cycles.to_string()),
+            ("host_mlp", self.host_mlp.to_string()),
+            ("host_passes", self.host_passes.to_string()),
+            ("host_ddr_fraction", self.host_ddr_fraction.to_string()),
+            ("host_ddr_bw_gbs", self.host_ddr_bw_gbs.to_string()),
+            ("host_ddr_channels", self.host_ddr_channels.to_string()),
             ("seed", self.seed.to_string()),
         ]
         .into_iter()
@@ -534,6 +584,37 @@ mod tests {
         c.mix_stagger_cycles = -1.0;
         assert!(c.validate().is_err());
         c.mix_stagger_cycles = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn host_knobs_parse_and_validate() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.host_mlp, crate::host::HOST_MLP);
+        assert_eq!(c.host_passes, 1);
+        assert_eq!(c.host_ddr_fraction, 0.0);
+        c.set("host_mlp", "16").unwrap();
+        c.set("host_passes", "4").unwrap();
+        c.set("host_ddr_fraction", "0.5").unwrap();
+        c.set("host_ddr_bw_gbs", "32").unwrap();
+        c.set("host_ddr_channels", "4").unwrap();
+        assert!(c.validate().is_ok());
+        assert_eq!(c.host_mlp, 16);
+        assert_eq!(c.host_passes, 4);
+        assert_eq!(c.host_ddr_fraction, 0.5);
+        // Zero intensity is legal (it disables host traffic)...
+        c.set("host_mlp", "0").unwrap();
+        assert!(c.validate().is_ok());
+        // ...but the DDR parameters must stay sane.
+        c.host_ddr_fraction = 1.5;
+        assert!(c.validate().is_err());
+        c.host_ddr_fraction = f64::NAN;
+        assert!(c.validate().is_err());
+        c.host_ddr_fraction = 0.5;
+        c.host_ddr_bw_gbs = 0.0;
+        assert!(c.validate().is_err());
+        c.host_ddr_bw_gbs = 64.0;
+        c.host_ddr_channels = 0;
         assert!(c.validate().is_err());
     }
 

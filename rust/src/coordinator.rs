@@ -203,6 +203,33 @@ impl Coordinator {
         };
         crate::multiprog::run_multi(&self.cfg, &mix, placement, policy, self.cfg.mix_fairness)
     }
+
+    /// Run a CHoNDA-style co-run: the NDP `launches` (possibly empty)
+    /// concurrently with a host request stream sweeping `host`'s objects
+    /// at the config's host intensity (`host_mlp`/`host_passes`). Uses
+    /// the config's `mix_fairness`.
+    pub fn run_hostmix(
+        &self,
+        launches: &[(&BuiltWorkload, f64)],
+        host: Option<&BuiltWorkload>,
+        placement: crate::multiprog::MixPlacement,
+        policy: Policy,
+    ) -> crate::Result<RunReport> {
+        let mix = crate::multiprog::MultiMix {
+            launches: launches
+                .iter()
+                .map(|&(app, arrival)| crate::multiprog::KernelLaunch { app, arrival })
+                .collect(),
+        };
+        crate::multiprog::run_hostmix(
+            &self.cfg,
+            &mix,
+            host,
+            placement,
+            policy,
+            self.cfg.mix_fairness,
+        )
+    }
 }
 
 #[cfg(test)]

@@ -17,6 +17,15 @@
 //! adapters over this module; `tests/differential` locks in that the
 //! unified loop is cycle-identical to the pre-refactor copies for every
 //! mechanism under both DRAM backends.
+//!
+//! Besides NDP thread-blocks, the engine can co-run a **host-processor
+//! request stream** ([`HostStream`], CHoNDA-style — arXiv 1908.06362):
+//! an MLP-limited window of host requests injected through the per-stack
+//! Host ports, contending with NDP accesses for interconnect slots and
+//! per-stack DRAM dispatch inside the *same* event heap. With no host
+//! stream attached (or `host_mlp = 0`) the engine executes exactly as
+//! before — not one extra f64 operation — so NDP-only results stay
+//! bit-identical; `tests/host_contention.rs` locks that in.
 
 use crate::addr::{AddressMapper, Granularity};
 use crate::config::SystemConfig;
@@ -75,6 +84,26 @@ pub struct BlockRef {
 
 /// Supplies thread-blocks to the engine. This is the seam between the
 /// shared event-loop physics and each caller's scheduling policy.
+///
+/// # Contract
+///
+/// The source owns *which block runs where*; the engine owns *when
+/// everything happens*. The engine calls the three methods in a strict
+/// pattern — [`seed`](Self::seed) exactly once before any event fires,
+/// then [`refill`](Self::refill) every time a residency slot frees, and
+/// [`next_arrival_after`](Self::next_arrival_after) whenever a slot
+/// would otherwise idle forever — and a source must uphold:
+///
+/// * **Exactly-once dispatch.** Every block is handed out at most once
+///   across `seed` + `refill`; the engine never returns blocks.
+/// * **Determinism.** Decisions may depend only on the call sequence and
+///   `now` values, never on ambient state (clocks, randomness), or the
+///   differential/golden suites break.
+/// * **Arrival honesty.** `next_arrival_after(now)` must be strictly
+///   greater than `now` and must not under-promise: if work will become
+///   eligible at `t`, some call must eventually report a time `<= t`,
+///   otherwise idle slots sleep through the arrival and blocks are lost.
+///   Returning `None` means "no future work beyond what refill sees".
 pub trait BlockSource {
     /// Seed the initial SM residency at t=0. Call `place(sm_id, slot,
     /// block)` once per occupied slot; the call order defines the event
@@ -94,6 +123,28 @@ pub trait BlockSource {
     fn next_arrival_after(&self, _now: f64) -> Option<f64> {
         None
     }
+}
+
+/// A host-processor request stream co-running with the NDP kernels
+/// (CHoNDA-style concurrent host + NDP execution).
+///
+/// The host sweeps `trace`'s objects line by line (the data a host-side
+/// application streams through), `cfg.host_passes` times over, issuing
+/// `cfg.host_mlp` requests per window: all requests of a window launch at
+/// the same instant and the next window launches when the slowest
+/// completes — the legacy `run_host_sweep` window semantics, now executed
+/// inside the shared event heap so host and NDP traffic contend for host
+/// ports, interconnect slots and per-stack DRAM dispatch. A per-line
+/// deterministic hash diverts `cfg.host_ddr_fraction` of the lines to
+/// host-local DDR (see [`crate::mem::make_host_ddr`]), which never
+/// touches the stacks.
+#[derive(Clone, Copy, Debug)]
+pub struct HostStream<'a> {
+    /// The host application's access footprint (objects are swept whole;
+    /// block structure is ignored — the host is not a GPU).
+    pub trace: &'a KernelTrace,
+    /// Base virtual address of each object (by object index).
+    pub obj_base: &'a [u64],
 }
 
 /// Knobs distinguishing the historical callers. Both default to the
@@ -132,6 +183,14 @@ pub struct EngineRaw {
     pub remote_bytes: u64,
     pub mem: MemStats,
     pub migrated_pages: u64,
+    /// Completion time of the host request stream (0.0 without one).
+    pub host_end: f64,
+    /// Bytes delivered over the per-stack host ports.
+    pub host_bytes: u64,
+    /// Bytes served by host-local DDR.
+    pub host_ddr_bytes: u64,
+    /// Host-port transfers that queued behind a busy port.
+    pub host_port_stalls: u64,
 }
 
 impl EngineRaw {
@@ -141,7 +200,10 @@ impl EngineRaw {
         RunReport {
             workload,
             mechanism: String::new(),
-            cycles: self.end_time,
+            // Whole-run makespan: the later of the NDP and host sides.
+            // Without host traffic `host_end` is 0.0 and `max` returns
+            // `end_time` bit-exactly (event times are non-negative).
+            cycles: self.end_time.max(self.host_end),
             accesses: self.stats,
             stack_bytes: self.stack_bytes.clone(),
             remote_bytes: self.remote_bytes,
@@ -157,6 +219,20 @@ impl EngineRaw {
             app_cycles: Vec::new(),
             app_slowdown: Vec::new(),
             weighted_speedup: 0.0,
+            host_cycles: self.host_end,
+            host_slowdown: 0.0,
+            ndp_slowdown: 0.0,
+            host_bytes: self.host_bytes,
+            host_ddr_bytes: self.host_ddr_bytes,
+            host_port_stalls: self.host_port_stalls,
+            host_bw_share: {
+                let total: u64 = self.stack_bytes.iter().sum();
+                if total == 0 {
+                    0.0
+                } else {
+                    self.host_bytes as f64 / total as f64
+                }
+            },
         }
     }
 }
@@ -177,6 +253,9 @@ enum Ev {
     /// the same slot-major order as the t=0 seeding (so a late kernel's
     /// block→SM assignment matches the one it would get running alone).
     Arrival,
+    /// The host stream issues its next window of `host_mlp` requests
+    /// (`next` = global line index of the window's first request).
+    HostWindow { next: u64 },
 }
 
 /// The shared simulation core: one event heap over all SM residency
@@ -187,7 +266,13 @@ pub struct Engine<'a> {
     pub apps: Vec<AppCtx<'a>>,
     pub vm: &'a mut VirtualMemory,
     pub opts: EngineOptions,
+    /// Concurrent host request stream, if any (`None` = NDP only).
+    pub host: Option<HostStream<'a>>,
 }
+
+/// Salt decorrelating the host-DDR line hash from the L2-filter hash
+/// (both use [`line_hash`] on the line address).
+const HOST_DDR_SALT: u64 = 0x5A17_C0DA_DD2A_2026;
 
 impl<'a> Engine<'a> {
     /// Run to completion, pulling blocks from `source`.
@@ -197,6 +282,7 @@ impl<'a> Engine<'a> {
             apps,
             vm,
             opts,
+            host,
         } = self;
         let topo = Topology::new(cfg);
         let mapper = AddressMapper::new(cfg);
@@ -216,6 +302,39 @@ impl<'a> Engine<'a> {
         let page_shift = cfg.page_size.trailing_zeros();
         let mlp = cfg.mlp_per_block;
         let compute = cfg.compute_cycles_per_access as f64;
+
+        // Host stream: precompute the per-object starting line (global
+        // line index space, one pass), the lines per pass, and the total
+        // line count across all passes. `None` disables host traffic
+        // entirely — zero-intensity runs take the exact pre-host code
+        // path, so NDP results stay bit-identical.
+        let host = host.and_then(|h| {
+            if cfg.host_mlp == 0 || cfg.host_passes == 0 {
+                return None;
+            }
+            let mut starts = Vec::with_capacity(h.trace.objects.len());
+            let mut acc = 0u64;
+            for o in &h.trace.objects {
+                starts.push(acc);
+                acc += o.bytes.div_ceil(line);
+            }
+            let total = acc.saturating_mul(cfg.host_passes);
+            if total == 0 {
+                None
+            } else {
+                Some((h, starts, acc, total))
+            }
+        });
+        // Scaled by 2^32 (not u32::MAX) so a fraction of exactly 1.0
+        // admits every masked hash value.
+        let host_ddr_threshold = (cfg.host_ddr_fraction * (1u64 << 32) as f64) as u64;
+        let mut host_ddr: Option<Box<dyn MemBackend>> = if host.is_some() && host_ddr_threshold > 0
+        {
+            Some(mem::make_host_ddr(cfg))
+        } else {
+            None
+        };
+        let mut host_end = 0.0f64;
 
         let mut stats = AccessStats::default();
         let mut migrated: u64 = 0;
@@ -263,6 +382,12 @@ impl<'a> Engine<'a> {
                 armed = Some(ta);
             }
         }
+        // The host stream starts streaming at t=0, after the NDP seeds
+        // (host windows are self-perpetuating: each schedules the next).
+        if host.is_some() {
+            heap.push(Reverse((key(0.0, seq), Ev::HostWindow { next: 0 })));
+            seq += 1;
+        }
 
         while let Some(Reverse((tk, ev))) = heap.pop() {
             let now = f64::from_bits(tk.0);
@@ -297,6 +422,51 @@ impl<'a> Engine<'a> {
                             seq += 1;
                             armed = Some(ta);
                         }
+                    }
+                    continue;
+                }
+                Ev::HostWindow { next } => {
+                    let (hs, starts, per_pass, total) =
+                        host.as_ref().expect("host event without a host stream");
+                    // One window: up to `host_mlp` requests all issued at
+                    // `now`; the stream stalls until the slowest drains
+                    // (the legacy `run_host_sweep` window semantics).
+                    let end_i = (next + cfg.host_mlp as u64).min(*total);
+                    let mut window_done = 0.0f64;
+                    for i in next..end_i {
+                        let j = i % per_pass;
+                        let k = starts.partition_point(|&s| s <= j) - 1;
+                        let vaddr = hs.obj_base[k] + (j - starts[k]) * line;
+                        let done = if host_ddr_threshold > 0
+                            && line_hash((vaddr / line) ^ HOST_DDR_SALT) & 0xFFFF_FFFF
+                                < host_ddr_threshold
+                        {
+                            // Host-private line: served by host-local DDR,
+                            // never touching the stacks.
+                            stats.host_ddr += 1;
+                            host_ddr
+                                .as_mut()
+                                .expect("host DDR backend")
+                                .access(now, vaddr, line)
+                                .done
+                        } else {
+                            let (paddr, gran) = vm
+                                .translate(vaddr)
+                                .expect("host access beyond mapped object");
+                            let dst = mapper.stack_of(paddr, gran);
+                            stats.host += 1;
+                            let t1 = net.host_hop(now, dst, line);
+                            stacks[dst].access(t1, paddr, line).done
+                        };
+                        window_done = window_done.max(done);
+                        host_end = host_end.max(done);
+                    }
+                    if end_i < *total {
+                        heap.push(Reverse((
+                            key(window_done.max(now), seq),
+                            Ev::HostWindow { next: end_i },
+                        )));
+                        seq += 1;
                     }
                     continue;
                 }
@@ -469,6 +639,10 @@ impl<'a> Engine<'a> {
             remote_bytes: net.remote_bytes(),
             mem: mem_stats,
             migrated_pages: migrated,
+            host_end,
+            host_bytes: net.host_bytes(),
+            host_ddr_bytes: host_ddr.as_ref().map(|d| d.bytes_served()).unwrap_or(0),
+            host_port_stalls: net.host_port_stalls(),
         }
     }
 }

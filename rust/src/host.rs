@@ -1,4 +1,4 @@
-//! Host-processor execution model (§6.6, Fig 13).
+//! Host-processor execution model (§6.6, Fig 13) and its CHoNDA bridge.
 //!
 //! When an application runs on the host, its memory requests travel over
 //! the per-stack Host ports. Fine-grain interleaving spreads a sequential
@@ -6,81 +6,66 @@
 //! bandwidth); coarse-grain interleaving serializes each page's worth of
 //! requests onto a single stack's port — which is why the paper keeps FGP
 //! as the default and localizes selectively.
+//!
+//! The sweep used to be a standalone sequential loop; it now executes as
+//! a [`crate::engine::HostStream`] inside the shared event engine — the
+//! same machinery that co-runs host traffic against NDP kernels in
+//! [`crate::multiprog::run_hostmix`] — with [`run_host_sweep`] as the
+//! degenerate host-alone case. `tests/host_contention.rs` keeps a frozen
+//! copy of the pre-engine loop and proves this path reproduces it
+//! bit-exactly under both DRAM backends.
 
-use crate::addr::AddressMapper;
 use crate::config::SystemConfig;
-use crate::mem::{self, MemBackend, MemStats};
-use crate::net::Interconnect;
+use crate::engine::{BlockRef, BlockSource, Engine, EngineOptions, HostStream};
+use crate::gpu::{Sm, Topology};
 use crate::stats::RunReport;
 use crate::trace::KernelTrace;
 use crate::vm::VirtualMemory;
 
 /// Outstanding host requests (an aggressive OoO core + MLP prefetchers).
-const HOST_MLP: usize = 64;
+/// This is the default for `SystemConfig::host_mlp`, the host-intensity
+/// knob; the legacy sweep always used exactly this window.
+pub const HOST_MLP: usize = 64;
+
+/// A [`BlockSource`] that supplies no thread-blocks: the engine runs
+/// host traffic only.
+struct NoBlocks;
+
+impl BlockSource for NoBlocks {
+    fn seed(&mut self, _topo: &Topology, _place: &mut dyn FnMut(usize, usize, BlockRef)) {}
+
+    fn refill(&mut self, _sm: Sm, _retired: Option<BlockRef>, _now: f64) -> Option<BlockRef> {
+        None
+    }
+}
 
 /// Run a host-side streaming sweep over every object of `trace` (the data
 /// the kernel would consume), with the objects mapped by `vm`.
 /// Returns a report whose `cycles` reflect host execution time.
+///
+/// Uses `cfg.host_mlp` requests in flight (default [`HOST_MLP`], the
+/// legacy window) and `cfg.host_passes` sweeps; a zero for either yields
+/// an empty report, since it disables host traffic.
 pub fn run_host_sweep(
     cfg: &SystemConfig,
     trace: &KernelTrace,
-    vm: &VirtualMemory,
+    vm: &mut VirtualMemory,
     obj_base: &[u64],
 ) -> RunReport {
-    let mapper = AddressMapper::new(cfg);
-    let mut net = Interconnect::new(cfg);
-    let mut stacks: Vec<Box<dyn MemBackend>> = mem::make_backends(cfg);
-    let line = cfg.line_size;
-    let mut host_accesses = 0u64;
-    let mut window: Vec<f64> = Vec::with_capacity(HOST_MLP);
-    let mut now = 0.0f64;
-    let mut end = 0.0f64;
-    for (obj, desc) in trace.objects.iter().enumerate() {
-        let lines = desc.bytes.div_ceil(line);
-        for l in 0..lines {
-            let vaddr = obj_base[obj] + l * line;
-            let (paddr, gran) = vm.translate(vaddr).expect("mapped");
-            let stack = mapper.stack_of(paddr, gran);
-            let t1 = net.host_hop(now, stack, line);
-            let done = stacks[stack].access(t1, paddr, line).done;
-            host_accesses += 1;
-            window.push(done);
-            end = end.max(done);
-            if window.len() == HOST_MLP {
-                // The core stalls until the oldest window drains.
-                now = window.iter().cloned().fold(0.0, f64::max).max(now);
-                window.clear();
-            }
-        }
-    }
-    let mut mem_stats = MemStats::default();
-    for s in &stacks {
-        mem_stats.add(&s.stats());
-    }
-    RunReport {
-        workload: trace.name.clone(),
-        mechanism: "host".into(),
-        cycles: end,
-        accesses: crate::stats::AccessStats {
-            host: host_accesses,
-            ..Default::default()
+    let raw = Engine {
+        cfg,
+        apps: Vec::new(),
+        vm,
+        opts: EngineOptions {
+            l2_filter: false,
+            migrate_on_first_touch: false,
         },
-        stack_bytes: stacks.iter().map(|s| s.bytes_served()).collect(),
-        remote_bytes: 0,
-        mean_mem_latency: 0.0,
-        tlb_hit_rate: 0.0,
-        row_hit_rate: {
-            let rates: Vec<f64> = stacks.iter().map(|s| s.row_hit_rate()).collect();
-            crate::stats::mean(&rates)
-        },
-        mem_backend: cfg.mem_backend.to_string(),
-        bank_conflicts: mem_stats.row_conflicts,
-        refresh_stalls: mem_stats.refresh_stalls,
-        cgp_pages: 0,
-        fgp_pages: 0,
-        migrated_pages: 0,
-        ..Default::default()
+        host: Some(HostStream { trace, obj_base }),
     }
+    .run(&mut NoBlocks);
+    let mut report = raw.to_report(cfg, trace.name.clone());
+    report.mechanism = "host".into();
+    report
 }
 
 #[cfg(test)]
@@ -98,10 +83,10 @@ mod tests {
         let wl = suite::build("NN", &cfg).unwrap();
         let fgp_plan = PlacementPlan::all_fgp(wl.trace.objects.len());
         let cgp_plan = cgp_only_plan(wl.trace.objects.len(), &cfg);
-        let (vm_f, base_f, _, _) = map_objects(&cfg, &wl.trace, &fgp_plan).unwrap();
-        let (vm_c, base_c, _, _) = map_objects(&cfg, &wl.trace, &cgp_plan).unwrap();
-        let r_f = run_host_sweep(&cfg, &wl.trace, &vm_f, &base_f);
-        let r_c = run_host_sweep(&cfg, &wl.trace, &vm_c, &base_c);
+        let (mut vm_f, base_f, _, _) = map_objects(&cfg, &wl.trace, &fgp_plan).unwrap();
+        let (mut vm_c, base_c, _, _) = map_objects(&cfg, &wl.trace, &cgp_plan).unwrap();
+        let r_f = run_host_sweep(&cfg, &wl.trace, &mut vm_f, &base_f);
+        let r_c = run_host_sweep(&cfg, &wl.trace, &mut vm_c, &base_c);
         let speedup = r_c.cycles / r_f.cycles;
         assert!(
             speedup > 1.2,
@@ -120,8 +105,8 @@ mod tests {
         let cfg = SystemConfig::test_small();
         let wl = suite::build("NN", &cfg).unwrap();
         let plan = PlacementPlan::all_fgp(wl.trace.objects.len());
-        let (vm, base, _, _) = map_objects(&cfg, &wl.trace, &plan).unwrap();
-        let r = run_host_sweep(&cfg, &wl.trace, &vm, &base);
+        let (mut vm, base, _, _) = map_objects(&cfg, &wl.trace, &plan).unwrap();
+        let r = run_host_sweep(&cfg, &wl.trace, &mut vm, &base);
         let lines: u64 = wl
             .trace
             .objects
@@ -129,5 +114,34 @@ mod tests {
             .map(|o| o.bytes.div_ceil(cfg.line_size))
             .sum();
         assert_eq!(r.accesses.host, lines);
+        assert_eq!(r.accesses.ndp_total(), 0, "no NDP side in a host sweep");
+        assert_eq!(r.cycles, r.host_cycles);
+    }
+
+    #[test]
+    fn zero_intensity_sweep_is_empty() {
+        let mut cfg = SystemConfig::test_small();
+        cfg.host_mlp = 0;
+        let wl = suite::build("NN", &cfg).unwrap();
+        let plan = PlacementPlan::all_fgp(wl.trace.objects.len());
+        let (mut vm, base, _, _) = map_objects(&cfg, &wl.trace, &plan).unwrap();
+        let r = run_host_sweep(&cfg, &wl.trace, &mut vm, &base);
+        assert_eq!(r.accesses.host, 0);
+        assert_eq!(r.cycles, 0.0);
+    }
+
+    #[test]
+    fn extra_passes_sustain_traffic() {
+        let cfg1 = SystemConfig::test_small();
+        let mut cfg3 = SystemConfig::test_small();
+        cfg3.host_passes = 3;
+        let wl = suite::build("NN", &cfg1).unwrap();
+        let plan = PlacementPlan::all_fgp(wl.trace.objects.len());
+        let (mut vm, base, _, _) = map_objects(&cfg1, &wl.trace, &plan).unwrap();
+        let r1 = run_host_sweep(&cfg1, &wl.trace, &mut vm, &base);
+        let (mut vm3, base3, _, _) = map_objects(&cfg3, &wl.trace, &plan).unwrap();
+        let r3 = run_host_sweep(&cfg3, &wl.trace, &mut vm3, &base3);
+        assert_eq!(r3.accesses.host, 3 * r1.accesses.host);
+        assert!(r3.cycles > r1.cycles);
     }
 }

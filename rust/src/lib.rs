@@ -57,6 +57,21 @@
 //! per-app fairness policy, and per-app slowdown / weighted-speedup
 //! reporting.
 //!
+//! ## Concurrent host + NDP execution (CHoNDA-style)
+//!
+//! The engine can co-run a host-processor request stream
+//! ([`engine::HostStream`]) with the NDP kernels: an MLP-limited window
+//! of host requests (`host_mlp`/`host_passes` in [`config`]) injected
+//! through the per-stack host ports, contending with NDP traffic for
+//! interconnect slots and DRAM dispatch — the scenario CHoNDA
+//! (arXiv 1908.06362) studies. [`multiprog::run_hostmix`] (CLI:
+//! `coda hostmix`) reports per-source bandwidth share, host and NDP
+//! slowdowns vs run-alone, and host-port contention stalls; an optional
+//! host-local DDR ([`mem::make_host_ddr`], `host_ddr_fraction`) absorbs
+//! the host's private lines. Host-alone runs reproduce the legacy
+//! [`host::run_host_sweep`] cycles bit-exactly, and zero host intensity
+//! leaves NDP runs bit-identical (`tests/host_contention.rs`).
+//!
 //! ## Quickstart
 //!
 //! ```no_run

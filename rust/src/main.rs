@@ -1,5 +1,6 @@
 //! The `coda` CLI: run benchmarks under any mechanism, classify workloads
-//! (Fig 3 / Table 2), sweep parameters, and dump configs.
+//! (Fig 3 / Table 2), co-run host + NDP traffic, sweep parameters, and
+//! dump configs.
 //!
 //! ```text
 //! coda run <BENCH> [--mechanism coda|fgp|cgp|fta|migrate|fgp-affinity|steal]
@@ -11,7 +12,11 @@
 //! coda mix <B1,B2,...> [--placement fgp|cgp] [--policy affinity|baseline|steal]
 //!                      [--fairness fcfs|rr|least] [--stagger CYCLES]
 //!                      # multi-kernel mix; may name more apps than stacks
+//! coda hostmix <B1,..|-> [--host BENCH] [--host-mlp N] [--host-passes N]
+//!                      # NDP kernels + a concurrent host request stream
+//!                      # contending for the stacks; "-" = host alone
 //! coda config                     # print the default config (Table 1)
+//! coda help                       # full quickstart with examples
 //! ```
 
 use coda::cli::Args;
@@ -234,15 +239,18 @@ fn cmd_suite(args: &Args) -> coda::Result<()> {
     Ok(())
 }
 
-fn cmd_mix(args: &Args) -> coda::Result<()> {
-    use coda::multiprog::{run_multi, KernelLaunch, MixPlacement, MultiMix};
-    let cfg = load_config(args)?;
-    let benches = args
-        .positional
-        .first()
-        .ok_or_else(|| anyhow::anyhow!("usage: coda mix <B1,B2,...> [--placement fgp|cgp]"))?;
+/// The placement/policy/fairness/stagger knobs `mix` and `hostmix` share.
+fn mix_knobs(
+    args: &Args,
+    cfg: &SystemConfig,
+) -> coda::Result<(
+    coda::multiprog::MixPlacement,
+    coda::sched::Policy,
+    coda::sched::FairnessPolicy,
+    f64,
+)> {
     let placement_s = args.opt("placement").unwrap_or("cgp");
-    let placement = MixPlacement::parse(placement_s)
+    let placement = coda::multiprog::MixPlacement::parse(placement_s)
         .ok_or_else(|| anyhow::anyhow!("unknown placement {placement_s} (expected fgp|cgp)"))?;
     let policy_s = args.opt("policy").unwrap_or("affinity");
     let policy = coda::sched::Policy::parse(policy_s).ok_or_else(|| {
@@ -258,6 +266,17 @@ fn cmd_mix(args: &Args) -> coda::Result<()> {
         stagger.is_finite() && stagger >= 0.0,
         "--stagger must be a non-negative real"
     );
+    Ok((placement, policy, fairness, stagger))
+}
+
+fn cmd_mix(args: &Args) -> coda::Result<()> {
+    use coda::multiprog::{run_multi, KernelLaunch, MultiMix};
+    let cfg = load_config(args)?;
+    let benches = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: coda mix <B1,B2,...> [--placement fgp|cgp]"))?;
+    let (placement, policy, fairness, stagger) = mix_knobs(args, &cfg)?;
     let built: Vec<_> = benches
         .split(',')
         .map(|n| suite::build(n.trim(), &cfg))
@@ -295,6 +314,86 @@ fn cmd_mix(args: &Args) -> coda::Result<()> {
         r.cycles,
         pct(r.accesses.remote_fraction()),
         r.weighted_speedup
+    );
+    Ok(())
+}
+
+fn cmd_hostmix(args: &Args) -> coda::Result<()> {
+    use coda::multiprog::{run_hostmix, KernelLaunch, MultiMix};
+    let mut cfg = load_config(args)?;
+    // --host-mlp / --host-passes are sugar for the config keys.
+    if let Some(v) = args.opt("host-mlp") {
+        cfg.set("host_mlp", v)?;
+    }
+    if let Some(v) = args.opt("host-passes") {
+        cfg.set("host_passes", v)?;
+    }
+    cfg.validate()?;
+    let spec = args.positional.first().ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: coda hostmix <B1,B2,...|-> [--host BENCH] [--host-mlp N] \
+             [--host-passes N] [--placement fgp|cgp]"
+        )
+    })?;
+    let ndp_names: Vec<&str> = if spec.as_str() == "-" {
+        Vec::new()
+    } else {
+        spec.split(',').map(str::trim).collect()
+    };
+    // The host streams its own application's data; default to the first
+    // NDP bench (host and NDP touching the same program's footprint).
+    let host_name = args
+        .opt("host")
+        .or_else(|| ndp_names.first().copied())
+        .ok_or_else(|| anyhow::anyhow!("host-alone hostmix needs --host BENCH"))?;
+    let (placement, policy, fairness, stagger) = mix_knobs(args, &cfg)?;
+    let built: Vec<_> = ndp_names
+        .iter()
+        .map(|n| suite::build(n, &cfg))
+        .collect::<coda::Result<_>>()?;
+    let host_wl = suite::build(host_name, &cfg)?;
+    let mix = MultiMix {
+        launches: built
+            .iter()
+            .enumerate()
+            .map(|(i, b)| KernelLaunch {
+                app: b,
+                arrival: i as f64 * stagger,
+            })
+            .collect(),
+    };
+    let r = run_hostmix(&cfg, &mix, Some(&host_wl), placement, policy, fairness)?;
+    if args.has_flag("json") {
+        println!("{}", Json::from(&r).render());
+        return Ok(());
+    }
+    let mut t = Table::new(&["source", "home", "arrival", "cycles", "slowdown"]);
+    for (i, b) in built.iter().enumerate() {
+        t.row(&[
+            format!("ndp:{}", b.name),
+            coda::multiprog::home_of(i, &cfg).to_string(),
+            format!("{:.0}", mix.launches[i].arrival),
+            format!("{:.0}", r.app_cycles[i]),
+            f2(r.app_slowdown[i]),
+        ]);
+    }
+    t.row(&[
+        format!("host:{}", host_wl.name),
+        "-".into(),
+        "0".into(),
+        format!("{:.0}", r.host_cycles),
+        f2(r.host_slowdown),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "{} ({}): cycles={:.0} ndp_slowdown={} host_bw_share={} port_stalls={} host_ddr={}",
+        r.workload,
+        r.mechanism,
+        r.cycles,
+        f2(r.ndp_slowdown),
+        pct(r.host_bw_share),
+        r.host_port_stalls,
+        r.accesses.host_ddr,
     );
     Ok(())
 }
@@ -368,6 +467,62 @@ fn cmd_trace(args: &Args) -> coda::Result<()> {
     Ok(())
 }
 
+/// The quickstart the `help` command (and README) promise: every command
+/// with one example invocation, plus the shape of a JSON report.
+fn print_help() {
+    println!(
+        "coda — NDP simulator for CODA (co-location of computation and data)\n\
+         \n\
+         USAGE: coda <COMMAND> [OPTIONS]\n\
+         \n\
+         COMMANDS (one example each)\n\
+         \x20 run <BENCH>          one benchmark under one mechanism\n\
+         \x20                        coda run PR --mechanism coda --mem-backend bank --json\n\
+         \x20 compare <BENCH>      all mechanisms side by side\n\
+         \x20                        coda compare KM\n\
+         \x20 classify [BENCH]     Fig-3 page-sharing histogram + Table-2 category\n\
+         \x20                        coda classify BFS\n\
+         \x20 plan <BENCH>         per-object placement plan from CODA's analysis\n\
+         \x20                        coda plan NN\n\
+         \x20 suite                all 20 benchmarks under one mechanism\n\
+         \x20                        coda suite --mechanism coda\n\
+         \x20 mix <B1,B2,...>      multi-kernel NDP mix (more kernels than stacks OK)\n\
+         \x20                        coda mix NN,KM,DC,HS --placement cgp --fairness rr\n\
+         \x20 hostmix <B1,..|->    NDP kernels + concurrent host stream contending\n\
+         \x20                      for the stacks (CHoNDA-style); \"-\" = host alone\n\
+         \x20                        coda hostmix NN --host KM --host-mlp 64\n\
+         \x20                        coda hostmix - --host NN   # legacy host sweep\n\
+         \x20 sweep <BENCH>        sweep one config key\n\
+         \x20                        coda sweep PR --key remote_bw_gbs --values 8,16,64\n\
+         \x20 trace record|replay  record / replay a workload trace\n\
+         \x20                        coda trace record PR pr.trace\n\
+         \x20 config               print the default config (Table 1) as TOML\n\
+         \x20                        coda config > system.toml\n\
+         \x20 help                 this text\n\
+         \n\
+         COMMON OPTIONS\n\
+         \x20 --mechanism coda|fgp|cgp|fta|migrate|fgp-affinity|steal\n\
+         \x20 --mem-backend fixed|bank        DRAM timing backend\n\
+         \x20 --config FILE  --set k=v,...    config file / inline overrides\n\
+         \x20 --json                          machine-readable report\n\
+         \x20 hostmix: --host BENCH --host-mlp N --host-passes N (host intensity)\n\
+         \n\
+         JSON REPORTS (--json) always carry: workload, mechanism, cycles\n\
+         (simulated SM cycles), local/remote (NDP accesses by serving\n\
+         stack), l2_hits, remote_fraction, remote_bytes, mean_mem_latency,\n\
+         tlb_hit_rate, row_hit_rate, mem_backend, bank_conflicts,\n\
+         refresh_stalls, cgp_pages/fgp_pages/migrated_pages (placement),\n\
+         stack_bytes (per-stack DRAM bytes). Mix runs add app_cycles,\n\
+         app_slowdown, weighted_speedup; hostmix runs add host, host_ddr\n\
+         (host accesses by destination), host_cycles, host_slowdown,\n\
+         ndp_slowdown, host_bytes, host_ddr_bytes, host_port_stalls and\n\
+         host_bw_share. Full field descriptions: README.md.\n\
+         \n\
+         benchmarks: {}",
+        suite::names().join(" ")
+    );
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match Args::parse(&argv, coda::cli::VALUE_OPTS) {
@@ -387,16 +542,17 @@ fn main() {
         Some("trace") => cmd_trace(&args),
         Some("suite") => cmd_suite(&args),
         Some("mix") => cmd_mix(&args),
+        Some("hostmix") => cmd_hostmix(&args),
         Some("config") => {
             print!("{}", SystemConfig::default().to_toml_string());
             Ok(())
         }
+        Some("help") => {
+            print_help();
+            Ok(())
+        }
         _ => {
-            eprintln!(
-                "usage: coda <run|compare|classify|plan|sweep|trace|suite|mix|config> [args]\n\
-                 benchmarks: {}",
-                suite::names().join(" ")
-            );
+            print_help();
             std::process::exit(2);
         }
     };

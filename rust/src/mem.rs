@@ -80,6 +80,23 @@ impl MemStats {
 /// A per-stack DRAM timing model. One instance models one stack; the
 /// simulator owns `num_stacks` of them and routes each request to the
 /// owning stack's backend.
+///
+/// # Contract: backends shape time, never behaviour
+///
+/// A backend decides **when** an access completes, never **whether** or
+/// **where** one happens. Placement, address translation, scheduling and
+/// the interconnect route requests without ever consulting the timing
+/// model, so switching backends may move cycle counts but must leave
+/// every access count — local/remote splits, per-stack byte totals,
+/// migration decisions — bit-identical (`tests/backends.rs` and the
+/// differential suite enforce this). A backend that leaked timing into
+/// behaviour would make cross-backend comparisons meaningless.
+///
+/// Implementations must also be **deterministic** (same access sequence
+/// in, same completion times out — the golden snapshots depend on it)
+/// and must accept non-decreasing *per-caller* `now` values without
+/// assuming global time ordering: concurrent request streams (multiple
+/// SMs, the host port) interleave arbitrarily.
 pub trait MemBackend {
     /// Service one access of `bytes` at *stack-local* physical address
     /// `addr` arriving at time `now`.
@@ -117,6 +134,21 @@ pub fn make_backend(cfg: &SystemConfig) -> Box<dyn MemBackend> {
 /// Build one backend per stack (the shape the simulators consume).
 pub fn make_backends(cfg: &SystemConfig) -> Vec<Box<dyn MemBackend>> {
     (0..cfg.num_stacks).map(|_| make_backend(cfg)).collect()
+}
+
+/// Build the host-local DDR timing model (CHoNDA-style host memory).
+///
+/// The host's DDR sits behind the same [`MemBackend`] seam as the
+/// stacks — the kind selected by `cfg.mem_backend` — but scaled to DDR
+/// parameters: `host_ddr_bw_gbs` aggregate bandwidth over
+/// `host_ddr_channels` channels. Addresses handed to it are host-side
+/// line addresses (the DDR owns its own address space; only timing and
+/// byte accounting matter).
+pub fn make_host_ddr(cfg: &SystemConfig) -> Box<dyn MemBackend> {
+    let mut ddr_cfg = cfg.clone();
+    ddr_cfg.local_bw_gbs = cfg.host_ddr_bw_gbs;
+    ddr_cfg.channels_per_stack = cfg.host_ddr_channels;
+    make_backend(&ddr_cfg)
 }
 
 // ---------------------------------------------------------------------------
@@ -509,6 +541,23 @@ mod tests {
         assert_eq!(make_backend(&c).kind(), MemBackendKind::FixedLatency);
         assert_eq!(make_backend(&bank_cfg()).kind(), MemBackendKind::BankLevel);
         assert_eq!(make_backends(&c).len(), c.num_stacks);
+    }
+
+    #[test]
+    fn host_ddr_follows_backend_kind_and_is_slower_than_hbm() {
+        let c = cfg();
+        assert_eq!(make_host_ddr(&c).kind(), MemBackendKind::FixedLatency);
+        assert_eq!(make_host_ddr(&bank_cfg()).kind(), MemBackendKind::BankLevel);
+        // Saturating both with the same dense stream, the DDR (64 GB/s, 2
+        // channels) must finish later than a stack's HBM (256 GB/s, 8).
+        let mut hbm = make_backend(&c);
+        let mut ddr = make_host_ddr(&c);
+        let (mut t_hbm, mut t_ddr) = (0.0f64, 0.0f64);
+        for i in 0..1024u64 {
+            t_hbm = t_hbm.max(hbm.access(0.0, i * 128, 128).done);
+            t_ddr = t_ddr.max(ddr.access(0.0, i * 128, 128).done);
+        }
+        assert!(t_ddr > t_hbm, "ddr {t_ddr} must be slower than hbm {t_hbm}");
     }
 
     // -- BankLevel ----------------------------------------------------------

@@ -6,7 +6,7 @@
 //! allocated in its own stack ("it is infeasible or difficult to reduce
 //! remote data accesses in the presence of multiple workloads" otherwise).
 //!
-//! Two entry points share the event-loop physics of [`crate::engine`]:
+//! Three entry points share the event-loop physics of [`crate::engine`]:
 //!
 //! * [`run_mix`] — the paper's Fig 12 shape: up to `num_stacks` apps, app
 //!   `i` pinned to stack `i`'s SMs, all launched at t=0. Cycle-identical
@@ -18,9 +18,15 @@
 //!   under the block-level [`Policy`] plus a per-app [`FairnessPolicy`].
 //!   The report carries per-app slowdown (response time vs running alone
 //!   under the same placement) and weighted speedup (Σ T_alone/T_shared).
+//! * [`run_hostmix`] — CHoNDA-style concurrent host + NDP execution: the
+//!   NDP mix of `run_multi` co-runs with a host-processor request stream
+//!   ([`HostStream`]) injected through the per-stack host ports, so both
+//!   sides contend for interconnect slots and DRAM dispatch. The report
+//!   adds per-source bandwidth share, host slowdown and NDP slowdown vs
+//!   each side running alone on the same physical layout.
 
 use crate::config::SystemConfig;
-use crate::engine::{AppCtx, BlockRef, BlockSource, Engine, EngineOptions, EngineRaw};
+use crate::engine::{AppCtx, BlockRef, BlockSource, Engine, EngineOptions, EngineRaw, HostStream};
 use crate::gpu::{Sm, Topology};
 use crate::sched::{FairnessPolicy, Policy};
 use crate::stats::{self, RunReport};
@@ -186,6 +192,7 @@ pub fn run_mix(
             l2_filter: false,
             migrate_on_first_touch: false,
         },
+        host: None,
     }
     .run(&mut source);
     let mut report = raw.to_report(
@@ -364,6 +371,7 @@ fn run_multi_inner(
             l2_filter: false,
             migrate_on_first_touch: false,
         },
+        host: None,
     }
     .run(&mut source))
 }
@@ -410,6 +418,172 @@ pub fn run_multi(
     report.app_slowdown = stats::per_app_slowdown(&solo, &resp);
     report.weighted_speedup = stats::weighted_speedup(&solo, &resp);
     report.app_cycles = resp;
+    Ok(report)
+}
+
+/// Simulate a CHoNDA-style co-run: an NDP mix (possibly empty) plus a
+/// concurrent host request stream sweeping `host`'s objects.
+///
+/// The physical layout maps the NDP apps first — exactly as [`run_multi`]
+/// would — then the host objects, fine-grain interleaved (FGP is the
+/// host's preferred granularity, Fig 13). Because the host pages come
+/// last, the NDP side's layout is byte-identical to its `run_multi`
+/// layout, which is what makes the two degenerate cases exact:
+///
+/// * **Zero host intensity** (`host_mlp == 0`, `host_passes == 0`, or
+///   `host = None`): the NDP run is cycle-identical (bit-exact f64) to
+///   [`run_multi`]'s shared run.
+/// * **Host alone** (empty `ndp` mix): the host stream reproduces the
+///   legacy `host::run_host_sweep` cycles bit-exactly.
+///
+/// The report's host fields compare each side against itself running
+/// alone **on the same physical layout**: `ndp_slowdown` is the NDP
+/// makespan vs the mix without host traffic, `host_slowdown` the host
+/// completion vs the stream without NDP kernels, `app_slowdown` /
+/// `weighted_speedup` are per-app response times vs the host-free run
+/// (so they isolate host interference, unlike [`run_multi`]'s solo-run
+/// baselines which isolate app-vs-app interference), and `host_bw_share`
+/// is the host's fraction of all bytes the stack DRAMs served.
+pub fn run_hostmix(
+    cfg: &SystemConfig,
+    ndp: &MultiMix<'_>,
+    host: Option<&BuiltWorkload>,
+    placement: MixPlacement,
+    policy: Policy,
+    fairness: FairnessPolicy,
+) -> crate::Result<RunReport> {
+    let apps: Vec<&BuiltWorkload> = ndp.launches.iter().map(|l| l.app).collect();
+    let arrivals: Vec<f64> = ndp.launches.iter().map(|l| l.arrival).collect();
+    for (i, &t) in arrivals.iter().enumerate() {
+        anyhow::ensure!(
+            t >= 0.0 && t.is_finite(),
+            "arrival time of app {i} must be a non-negative real, got {t}"
+        );
+    }
+    anyhow::ensure!(
+        host.is_some() || !apps.is_empty(),
+        "hostmix needs a host stream, at least one NDP kernel, or both"
+    );
+    let host_active = host.is_some() && cfg.host_mlp > 0 && cfg.host_passes > 0;
+
+    // Shared physical layout: NDP apps first (identical to run_multi's
+    // layout), host objects after, fine-grain interleaved.
+    let (mut vm, app_bases) = map_mix(cfg, &apps, placement)?;
+    let host_bases: Vec<u64> = match host {
+        Some(h) => {
+            let mut bases = Vec::with_capacity(h.trace.objects.len());
+            for obj in &h.trace.objects {
+                let pages = obj.bytes.div_ceil(cfg.page_size).max(1);
+                bases.push(vm.map_fgp(pages)?);
+            }
+            bases
+        }
+        None => Vec::new(),
+    };
+    let launches: Vec<(usize, f64)> = apps
+        .iter()
+        .zip(&arrivals)
+        .map(|(a, &t)| (a.trace.blocks.len(), t))
+        .collect();
+
+    let exec = |with_ndp: bool, with_host: bool, vm: &mut VirtualMemory| -> EngineRaw {
+        let app_ctxs: Vec<AppCtx<'_>> = if with_ndp {
+            apps.iter()
+                .zip(&app_bases)
+                .map(|(a, b)| AppCtx {
+                    trace: &a.trace,
+                    obj_base: b.as_slice(),
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let mut source = MultiKernelSource::new(
+            if with_ndp { launches.as_slice() } else { &[] },
+            cfg,
+            policy,
+            fairness,
+            None,
+        );
+        let host_stream = if with_host {
+            host.map(|h| HostStream {
+                trace: &h.trace,
+                obj_base: &host_bases,
+            })
+        } else {
+            None
+        };
+        Engine {
+            cfg,
+            apps: app_ctxs,
+            vm,
+            opts: EngineOptions {
+                l2_filter: false,
+                migrate_on_first_touch: false,
+            },
+            host: host_stream,
+        }
+        .run(&mut source)
+    };
+
+    let shared = exec(!apps.is_empty(), host_active, &mut vm);
+    // Run-alone baselines over the identical layout, only when both
+    // sources actually ran (otherwise shared *is* the run-alone case).
+    let both = host_active && !apps.is_empty();
+    let ndp_alone = both.then(|| exec(true, false, &mut vm));
+    let host_alone = both.then(|| exec(false, true, &mut vm));
+
+    let resp: Vec<f64> = (0..apps.len())
+        .map(|i| (shared.app_end[i] - arrivals[i]).max(0.0))
+        .collect();
+    let n = apps.len();
+    let (ndp_slowdown, host_slowdown, app_slowdown, weighted) =
+        match (&ndp_alone, &host_alone) {
+            (Some(na), Some(ha)) => {
+                let resp_alone: Vec<f64> = (0..n)
+                    .map(|i| (na.app_end[i] - arrivals[i]).max(0.0))
+                    .collect();
+                let ndp_sd = if na.end_time > 0.0 {
+                    shared.end_time / na.end_time
+                } else {
+                    1.0
+                };
+                let host_sd = if ha.host_end > 0.0 {
+                    shared.host_end / ha.host_end
+                } else {
+                    1.0
+                };
+                (
+                    ndp_sd,
+                    host_sd,
+                    stats::per_app_slowdown(&resp_alone, &resp),
+                    stats::weighted_speedup(&resp_alone, &resp),
+                )
+            }
+            // Only one source ran: nothing contended with it.
+            _ => (
+                if n > 0 { 1.0 } else { 0.0 },
+                if host_active { 1.0 } else { 0.0 },
+                vec![1.0; n],
+                n as f64,
+            ),
+        };
+
+    let ndp_names = apps.iter().map(|a| a.name).collect::<Vec<_>>().join("+");
+    // Only label a host co-runner that actually streamed (zero intensity
+    // must not claim a co-run it never executed).
+    let workload = match (if host_active { host } else { None }, ndp_names.is_empty()) {
+        (Some(h), true) => format!("host:{}", h.name),
+        (Some(h), false) => format!("{ndp_names}|host:{}", h.name),
+        (None, _) => ndp_names,
+    };
+    let mut report = shared.to_report(cfg, workload);
+    report.mechanism = format!("hostmix:{placement:?}+{policy:?}+{fairness}");
+    report.app_cycles = resp;
+    report.app_slowdown = app_slowdown;
+    report.weighted_speedup = weighted;
+    report.ndp_slowdown = ndp_slowdown;
+    report.host_slowdown = host_slowdown;
     Ok(report)
 }
 
@@ -529,5 +703,85 @@ mod tests {
         assert_eq!(MixPlacement::parse("fgp"), Some(MixPlacement::FgpOnly));
         assert_eq!(MixPlacement::parse("cgp"), Some(MixPlacement::CgpLocal));
         assert_eq!(MixPlacement::parse("x"), None);
+    }
+
+    #[test]
+    fn hostmix_rejects_empty_run() {
+        let cfg = SystemConfig::test_small();
+        let mix = MultiMix { launches: vec![] };
+        assert!(run_hostmix(
+            &cfg,
+            &mix,
+            None,
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn hostmix_host_alone_serves_every_line() {
+        let cfg = SystemConfig::test_small();
+        let h = suite::build("NN", &cfg).unwrap();
+        let mix = MultiMix { launches: vec![] };
+        let r = run_hostmix(
+            &cfg,
+            &mix,
+            Some(&h),
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        )
+        .unwrap();
+        let lines: u64 = h
+            .trace
+            .objects
+            .iter()
+            .map(|o| o.bytes.div_ceil(cfg.line_size))
+            .sum();
+        assert_eq!(r.accesses.host, lines);
+        assert_eq!(r.accesses.ndp_total(), 0);
+        assert!(r.cycles > 0.0);
+        assert_eq!(r.cycles, r.host_cycles);
+        assert!((r.host_bw_share - 1.0).abs() < 1e-12, "host owns all bytes");
+        assert_eq!(r.host_slowdown, 1.0, "nothing contended with the host");
+        assert_eq!(r.ndp_slowdown, 0.0, "no NDP side ran");
+        assert_eq!(r.workload, "host:NN");
+    }
+
+    #[test]
+    fn hostmix_contention_is_reported() {
+        let cfg = SystemConfig::test_small();
+        let a = suite::build("NN", &cfg).unwrap();
+        let h = suite::build("KM", &cfg).unwrap();
+        let mix = MultiMix {
+            launches: vec![KernelLaunch {
+                app: &a,
+                arrival: 0.0,
+            }],
+        };
+        let r = run_hostmix(
+            &cfg,
+            &mix,
+            Some(&h),
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        )
+        .unwrap();
+        assert!(r.accesses.host > 0 && r.accesses.ndp_total() > 0);
+        assert!(r.host_bw_share > 0.0 && r.host_bw_share < 1.0);
+        // The host's issue order is fixed, so NDP traffic can only delay
+        // it; the NDP side additionally tolerates a hair of block→SM
+        // reshuffle noise under the compute-heavy default config.
+        assert!(
+            r.ndp_slowdown >= 1.0 - 1e-3,
+            "ndp slowdown {}",
+            r.ndp_slowdown
+        );
+        assert!(r.host_slowdown >= 1.0, "host slowdown {}", r.host_slowdown);
+        assert_eq!(r.app_cycles.len(), 1);
+        assert_eq!(r.workload, "NN|host:KM");
     }
 }

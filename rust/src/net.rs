@@ -23,6 +23,7 @@ pub struct Link {
     bytes_sent: u64,
     transfers: u64,
     queued_cycles: f64,
+    stalled: u64,
 }
 
 impl Link {
@@ -35,6 +36,7 @@ impl Link {
             bytes_sent: 0,
             transfers: 0,
             queued_cycles: 0.0,
+            stalled: 0,
         }
     }
 
@@ -42,6 +44,9 @@ impl Link {
     #[inline]
     pub fn transfer(&mut self, now: f64, bytes: u64) -> f64 {
         let start = now.max(self.next_free);
+        if start > now {
+            self.stalled += 1;
+        }
         self.queued_cycles += start - now;
         let occupancy = bytes as f64 / self.bytes_per_cycle;
         self.next_free = start + occupancy;
@@ -52,6 +57,12 @@ impl Link {
 
     pub fn bytes_sent(&self) -> u64 {
         self.bytes_sent
+    }
+
+    /// Transfers that found the port busy and had to queue behind it
+    /// (the port-contention stall count the hostmix report surfaces).
+    pub fn stalls(&self) -> u64 {
+        self.stalled
     }
 
     /// Mean queuing delay per transfer, in cycles.
@@ -136,6 +147,17 @@ impl Interconnect {
     pub fn remote_bytes(&self) -> u64 {
         self.remote_out.iter().map(|l| l.bytes_sent()).sum()
     }
+
+    /// Total bytes delivered over the per-stack host ports.
+    pub fn host_bytes(&self) -> u64 {
+        self.host.iter().map(|l| l.bytes_sent()).sum()
+    }
+
+    /// Host-port transfers that queued behind a busy port (contention
+    /// between the host stream and itself/other traffic on that stack).
+    pub fn host_port_stalls(&self) -> u64 {
+        self.host.iter().map(|l| l.stalls()).sum()
+    }
 }
 
 #[cfg(test)]
@@ -198,5 +220,29 @@ mod tests {
         l.transfer(0.0, 500);
         assert!((l.utilization(1000.0) - 0.5).abs() < 1e-9);
         assert_eq!(l.bytes_sent(), 500);
+    }
+
+    #[test]
+    fn stall_counting() {
+        let mut l = Link::new(1.0, 0.0);
+        assert_eq!(l.stalls(), 0);
+        l.transfer(0.0, 100); // port free: no stall
+        assert_eq!(l.stalls(), 0);
+        l.transfer(0.0, 100); // port busy until t=100: stalls
+        assert_eq!(l.stalls(), 1);
+        l.transfer(500.0, 100); // port free again by t=500
+        assert_eq!(l.stalls(), 1);
+    }
+
+    #[test]
+    fn host_port_accounting() {
+        let c = cfg();
+        let mut net = Interconnect::new(&c);
+        assert_eq!(net.host_bytes(), 0);
+        net.host_hop(0.0, 0, 128);
+        net.host_hop(0.0, 1, 128);
+        net.host_hop(0.0, 0, 128); // queues behind the first stack-0 hop
+        assert_eq!(net.host_bytes(), 3 * 128);
+        assert_eq!(net.host_port_stalls(), 1);
     }
 }

@@ -133,6 +133,18 @@ impl From<&RunReport> for Json {
             )
             .push("weighted_speedup", Json::Num(r.weighted_speedup));
         }
+        // Concurrent-host extras, only when a host stream actually ran.
+        if r.accesses.host_total() > 0 || r.host_cycles > 0.0 {
+            o.push("host", Json::Num(r.accesses.host as f64))
+                .push("host_ddr", Json::Num(r.accesses.host_ddr as f64))
+                .push("host_cycles", Json::Num(r.host_cycles))
+                .push("host_slowdown", Json::Num(r.host_slowdown))
+                .push("ndp_slowdown", Json::Num(r.ndp_slowdown))
+                .push("host_bytes", Json::Num(r.host_bytes as f64))
+                .push("host_ddr_bytes", Json::Num(r.host_ddr_bytes as f64))
+                .push("host_port_stalls", Json::Num(r.host_port_stalls as f64))
+                .push("host_bw_share", Json::Num(r.host_bw_share));
+        }
         o
     }
 }
@@ -241,6 +253,36 @@ mod tests {
         assert!(s.contains(r#""app_cycles":[10,20]"#));
         assert!(s.contains(r#""app_slowdown":[1,2]"#));
         assert!(s.contains(r#""weighted_speedup":1.5"#));
+    }
+
+    #[test]
+    fn host_fields_render_only_when_host_ran() {
+        let plain = Json::from(&RunReport::default()).render();
+        assert!(!plain.contains("host_cycles"));
+        assert!(!plain.contains("host_bw_share"));
+        let r = RunReport {
+            accesses: crate::stats::AccessStats {
+                host: 100,
+                host_ddr: 20,
+                ..Default::default()
+            },
+            host_cycles: 500.0,
+            host_slowdown: 1.25,
+            ndp_slowdown: 1.5,
+            host_bytes: 12800,
+            host_ddr_bytes: 2560,
+            host_port_stalls: 7,
+            host_bw_share: 0.4,
+            ..Default::default()
+        };
+        let s = Json::from(&r).render();
+        assert!(s.contains(r#""host":100"#));
+        assert!(s.contains(r#""host_ddr":20"#));
+        assert!(s.contains(r#""host_cycles":500"#));
+        assert!(s.contains(r#""host_slowdown":1.25"#));
+        assert!(s.contains(r#""ndp_slowdown":1.5"#));
+        assert!(s.contains(r#""host_port_stalls":7"#));
+        assert!(s.contains(r#""host_bw_share":0.4"#));
     }
 
     #[test]

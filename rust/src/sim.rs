@@ -100,6 +100,7 @@ impl<'a> KernelRun<'a> {
                 l2_filter: true,
                 migrate_on_first_touch: self.migrate_on_first_touch,
             },
+            host: None,
         }
         .run(&mut source);
         raw.to_report(cfg, self.trace.name.clone())

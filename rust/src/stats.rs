@@ -11,6 +11,9 @@ pub struct AccessStats {
     pub remote: u64,
     /// Issued by the host over the Host network.
     pub host: u64,
+    /// Host accesses served by host-local DDR instead of the stacks
+    /// (CHoNDA-style host memory; see `SystemConfig::host_ddr_fraction`).
+    pub host_ddr: u64,
     /// Absorbed by the stack-level L2 before reaching DRAM.
     pub l2_hits: u64,
 }
@@ -43,7 +46,13 @@ impl AccessStats {
         self.local += other.local;
         self.remote += other.remote;
         self.host += other.host;
+        self.host_ddr += other.host_ddr;
         self.l2_hits += other.l2_hits;
+    }
+
+    /// Host accesses issued, regardless of where they were served.
+    pub fn host_total(&self) -> u64 {
+        self.host + self.host_ddr
     }
 }
 
@@ -85,6 +94,26 @@ pub struct RunReport {
     /// Multi-kernel runs: Σ T_alone/T_shared over apps (system
     /// throughput; equals the app count when there is no contention).
     pub weighted_speedup: f64,
+    /// Concurrent-host runs: completion time of the host request stream
+    /// (0.0 when no host traffic ran).
+    pub host_cycles: f64,
+    /// Concurrent-host runs: host completion vs the host running alone on
+    /// the same physical layout (1.0 = NDP traffic cost the host nothing;
+    /// 0.0 when no host stream ran or no baseline applies).
+    pub host_slowdown: f64,
+    /// Concurrent-host runs: NDP makespan vs the NDP mix running without
+    /// the host stream (1.0 = host traffic cost the NDP side nothing; 0.0
+    /// when no NDP kernels ran or no baseline applies).
+    pub ndp_slowdown: f64,
+    /// Bytes delivered to the host over the per-stack host ports.
+    pub host_bytes: u64,
+    /// Bytes served by host-local DDR (never touched the stacks).
+    pub host_ddr_bytes: u64,
+    /// Host-port transfers that queued behind a busy port.
+    pub host_port_stalls: u64,
+    /// Host share of all bytes the stack DRAMs served (per-source
+    /// bandwidth split; the NDP side's share is `1.0 - host_bw_share`).
+    pub host_bw_share: f64,
 }
 
 impl RunReport {
@@ -187,11 +216,13 @@ mod tests {
             local: 75,
             remote: 25,
             host: 10,
+            host_ddr: 5,
             l2_hits: 0,
         };
         assert!((s.remote_fraction() - 0.25).abs() < 1e-12);
         assert!((s.local_fraction() - 0.75).abs() < 1e-12);
         assert_eq!(s.ndp_total(), 100);
+        assert_eq!(s.host_total(), 15);
     }
 
     #[test]

@@ -1,0 +1,447 @@
+//! Host + NDP concurrent-contention tests (CHoNDA-style co-location).
+//!
+//! The pre-engine sequential host sweep is frozen below as an oracle
+//! (the same convention as `tests/differential/legacy.rs`): the engine's
+//! [`coda::engine::HostStream`] path must reproduce it **bit-exactly**
+//! under both DRAM backends. On top of that:
+//!
+//! * zero-intensity host traffic must leave the NDP run cycle-identical
+//!   (bit-exact f64) to the `run_multi` baseline,
+//! * host-alone `hostmix` must reproduce the legacy host-sweep cycles,
+//! * higher host intensity must never make the NDP side faster, and
+//! * the host-DDR split must divert traffic without perturbing NDP
+//!   timing when it absorbs everything.
+
+use coda::config::{MemBackendKind, SystemConfig};
+use coda::host::run_host_sweep;
+use coda::multiprog::{
+    run_hostmix, run_multi, KernelLaunch, MixPlacement, MultiMix,
+};
+use coda::placement::{cgp_only_plan, PlacementPlan};
+use coda::sched::{FairnessPolicy, Policy};
+use coda::sim::map_objects;
+use coda::workloads::{suite, BuiltWorkload};
+
+/// Frozen copy of the pre-refactor `host::run_host_sweep` event loop
+/// (PR 1 state), kept verbatim as the timing oracle. Do not modernize.
+mod legacy {
+    use coda::addr::AddressMapper;
+    use coda::config::SystemConfig;
+    use coda::mem::{self, MemBackend, MemStats};
+    use coda::net::Interconnect;
+    use coda::stats::RunReport;
+    use coda::trace::KernelTrace;
+    use coda::vm::VirtualMemory;
+
+    /// Outstanding host requests (an aggressive OoO core + MLP prefetchers).
+    const HOST_MLP: usize = 64;
+
+    pub fn legacy_host_sweep(
+        cfg: &SystemConfig,
+        trace: &KernelTrace,
+        vm: &VirtualMemory,
+        obj_base: &[u64],
+    ) -> RunReport {
+        let mapper = AddressMapper::new(cfg);
+        let mut net = Interconnect::new(cfg);
+        let mut stacks: Vec<Box<dyn MemBackend>> = mem::make_backends(cfg);
+        let line = cfg.line_size;
+        let mut host_accesses = 0u64;
+        let mut window: Vec<f64> = Vec::with_capacity(HOST_MLP);
+        let mut now = 0.0f64;
+        let mut end = 0.0f64;
+        for (obj, desc) in trace.objects.iter().enumerate() {
+            let lines = desc.bytes.div_ceil(line);
+            for l in 0..lines {
+                let vaddr = obj_base[obj] + l * line;
+                let (paddr, gran) = vm.translate(vaddr).expect("mapped");
+                let stack = mapper.stack_of(paddr, gran);
+                let t1 = net.host_hop(now, stack, line);
+                let done = stacks[stack].access(t1, paddr, line).done;
+                host_accesses += 1;
+                window.push(done);
+                end = end.max(done);
+                if window.len() == HOST_MLP {
+                    // The core stalls until the oldest window drains.
+                    now = window.iter().cloned().fold(0.0, f64::max).max(now);
+                    window.clear();
+                }
+            }
+        }
+        let mut mem_stats = MemStats::default();
+        for s in &stacks {
+            mem_stats.add(&s.stats());
+        }
+        RunReport {
+            workload: trace.name.clone(),
+            mechanism: "host".into(),
+            cycles: end,
+            accesses: coda::stats::AccessStats {
+                host: host_accesses,
+                ..Default::default()
+            },
+            stack_bytes: stacks.iter().map(|s| s.bytes_served()).collect(),
+            remote_bytes: 0,
+            mean_mem_latency: 0.0,
+            tlb_hit_rate: 0.0,
+            row_hit_rate: {
+                let rates: Vec<f64> = stacks.iter().map(|s| s.row_hit_rate()).collect();
+                coda::stats::mean(&rates)
+            },
+            mem_backend: cfg.mem_backend.to_string(),
+            bank_conflicts: mem_stats.row_conflicts,
+            refresh_stalls: mem_stats.refresh_stalls,
+            cgp_pages: 0,
+            fgp_pages: 0,
+            migrated_pages: 0,
+            ..Default::default()
+        }
+    }
+}
+
+fn cfg_for(backend: MemBackendKind) -> SystemConfig {
+    let mut c = SystemConfig::test_small();
+    c.mem_backend = backend;
+    c
+}
+
+const BACKENDS: [MemBackendKind; 2] = [MemBackendKind::FixedLatency, MemBackendKind::BankLevel];
+
+/// The engine-hosted sweep is bit-identical to the frozen sequential
+/// loop: cycles, access counts, per-stack bytes, row behaviour — for
+/// both interleavings under both DRAM backends.
+#[test]
+fn engine_host_sweep_matches_frozen_legacy() {
+    for backend in BACKENDS {
+        let cfg = cfg_for(backend);
+        let wl = suite::build("NN", &cfg).unwrap();
+        let n = wl.trace.objects.len();
+        let plans = [PlacementPlan::all_fgp(n), cgp_only_plan(n, &cfg)];
+        for (pi, plan) in plans.iter().enumerate() {
+            let (mut vm_new, bases_new, _, _) = map_objects(&cfg, &wl.trace, plan).unwrap();
+            let new = run_host_sweep(&cfg, &wl.trace, &mut vm_new, &bases_new);
+            let (vm_old, bases_old, _, _) = map_objects(&cfg, &wl.trace, plan).unwrap();
+            let old = legacy::legacy_host_sweep(&cfg, &wl.trace, &vm_old, &bases_old);
+            let what = format!("plan {pi}/{backend:?}");
+            assert_eq!(new.cycles.to_bits(), old.cycles.to_bits(), "{what}: cycles");
+            assert_eq!(new.accesses.host, old.accesses.host, "{what}: accesses");
+            assert_eq!(new.accesses.ndp_total(), 0, "{what}: no NDP traffic");
+            assert_eq!(new.stack_bytes, old.stack_bytes, "{what}: stack bytes");
+            assert_eq!(
+                new.row_hit_rate.to_bits(),
+                old.row_hit_rate.to_bits(),
+                "{what}: row hit rate"
+            );
+            assert_eq!(new.bank_conflicts, old.bank_conflicts, "{what}: conflicts");
+            assert_eq!(
+                new.refresh_stalls, old.refresh_stalls,
+                "{what}: refresh stalls"
+            );
+            assert_eq!(new.mechanism, "host", "{what}");
+        }
+    }
+}
+
+/// Host-alone `hostmix` (no NDP kernels) reproduces the legacy sweep's
+/// cycles bit-exactly: same FGP layout, same window walk, now merely
+/// executed through the shared event heap.
+#[test]
+fn host_alone_hostmix_reproduces_legacy_sweep() {
+    for backend in BACKENDS {
+        let cfg = cfg_for(backend);
+        let h = suite::build("NN", &cfg).unwrap();
+        let mix = MultiMix { launches: vec![] };
+        let r = run_hostmix(
+            &cfg,
+            &mix,
+            Some(&h),
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        )
+        .unwrap();
+        let (vm, bases, _, _) =
+            map_objects(&cfg, &h.trace, &PlacementPlan::all_fgp(h.trace.objects.len())).unwrap();
+        let old = legacy::legacy_host_sweep(&cfg, &h.trace, &vm, &bases);
+        assert_eq!(
+            r.cycles.to_bits(),
+            old.cycles.to_bits(),
+            "{backend:?}: host-alone hostmix must equal the legacy sweep"
+        );
+        assert_eq!(r.host_cycles.to_bits(), old.cycles.to_bits(), "{backend:?}");
+        assert_eq!(r.accesses.host, old.accesses.host, "{backend:?}");
+        assert_eq!(r.stack_bytes, old.stack_bytes, "{backend:?}");
+        assert!((r.host_bw_share - 1.0).abs() < 1e-12, "{backend:?}");
+    }
+}
+
+/// Zero-rate host traffic is a true no-op: with `host_mlp = 0` (and
+/// likewise with no host workload at all) the NDP side of `hostmix` is
+/// cycle-identical — bit-exact f64 — to the plain `run_multi` baseline,
+/// under both DRAM backends.
+#[test]
+fn zero_intensity_host_is_cycle_identical_to_run_multi() {
+    for backend in BACKENDS {
+        let cfg = cfg_for(backend);
+        let a = suite::build("NN", &cfg).unwrap();
+        let b = suite::build("KM", &cfg).unwrap();
+        let apps: Vec<&BuiltWorkload> = vec![&a, &b];
+        let mk_mix = || MultiMix {
+            launches: apps
+                .iter()
+                .map(|&app| KernelLaunch { app, arrival: 0.0 })
+                .collect(),
+        };
+        let base = run_multi(
+            &cfg,
+            &mk_mix(),
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        )
+        .unwrap();
+        let mut zero = cfg.clone();
+        zero.host_mlp = 0;
+        let host = suite::build("DC", &zero).unwrap();
+        for host_arg in [Some(&*host), None] {
+            let r = run_hostmix(
+                &zero,
+                &mk_mix(),
+                host_arg,
+                MixPlacement::CgpLocal,
+                Policy::Affinity,
+                FairnessPolicy::Fcfs,
+            )
+            .unwrap();
+            let what = format!("{backend:?}/host={:?}", host_arg.map(|h| h.name));
+            assert_eq!(r.cycles.to_bits(), base.cycles.to_bits(), "{what}: cycles");
+            assert_eq!(r.app_cycles.len(), base.app_cycles.len(), "{what}");
+            for (i, (x, y)) in r.app_cycles.iter().zip(&base.app_cycles).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}: app {i} cycles");
+            }
+            assert_eq!(r.accesses, base.accesses, "{what}: access counts");
+            assert_eq!(r.accesses.host_total(), 0, "{what}: no host traffic");
+            assert_eq!(r.host_cycles, 0.0, "{what}");
+            assert_eq!(r.host_bw_share, 0.0, "{what}");
+        }
+        // host_passes = 0 disables traffic the same way.
+        let mut nopass = cfg.clone();
+        nopass.host_passes = 0;
+        let r = run_hostmix(
+            &nopass,
+            &mk_mix(),
+            Some(&host),
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        )
+        .unwrap();
+        assert_eq!(r.cycles.to_bits(), base.cycles.to_bits(), "{backend:?}");
+    }
+}
+
+/// Concurrent host traffic must cost both sides something: the NDP mix
+/// slows down versus running host-free, the host slows down versus
+/// streaming alone, the bandwidth split names both parties, and the host
+/// ports record queuing. The NDP side is made memory-bound
+/// (`compute_cycles_per_access = 0`) so DRAM-channel interference cannot
+/// hide behind SM compute serialization.
+#[test]
+fn contention_slows_both_sides_and_is_accounted() {
+    let mut cfg = cfg_for(MemBackendKind::FixedLatency);
+    cfg.host_passes = 4; // sustain host pressure across the NDP run
+    cfg.compute_cycles_per_access = 0; // memory-bound NDP side
+    let a = suite::build("NN", &cfg).unwrap();
+    let h = suite::build("KM", &cfg).unwrap();
+    let mix = MultiMix {
+        launches: vec![KernelLaunch {
+            app: &a,
+            arrival: 0.0,
+        }],
+    };
+    let r = run_hostmix(
+        &cfg,
+        &mix,
+        Some(&h),
+        MixPlacement::CgpLocal,
+        Policy::Affinity,
+        FairnessPolicy::Fcfs,
+    )
+    .unwrap();
+    assert!(
+        r.ndp_slowdown > 1.0,
+        "host traffic must slow the NDP side: {}",
+        r.ndp_slowdown
+    );
+    assert!(
+        r.host_slowdown > 1.0,
+        "NDP traffic must slow the host: {}",
+        r.host_slowdown
+    );
+    assert!(
+        r.app_slowdown.iter().all(|&s| s >= 1.0),
+        "per-app host interference: {:?}",
+        r.app_slowdown
+    );
+    assert!(
+        r.host_bw_share > 0.0 && r.host_bw_share < 1.0,
+        "both sources must own part of the DRAM bytes: {}",
+        r.host_bw_share
+    );
+    assert!(
+        r.host_port_stalls > 0,
+        "a 64-deep window over 4 ports must queue somewhere"
+    );
+    // Byte accounting closes: host port bytes + NDP bytes = stack bytes.
+    let total: u64 = r.stack_bytes.iter().sum();
+    let ndp_bytes = r.accesses.ndp_total() * cfg.line_size;
+    assert_eq!(r.host_bytes + ndp_bytes, total, "byte accounting");
+    assert_eq!(r.host_bytes, r.accesses.host * cfg.line_size);
+}
+
+/// Contention monotonicity: raising the host-intensity knob (requests in
+/// flight) never makes the NDP kernel finish earlier.
+///
+/// Host pages are distinct physical pages from the NDP's, so host
+/// traffic can only close the NDP's DRAM rows, occupy its channels, or
+/// queue ahead of it — every mechanism is harmful. Two sources of slack
+/// remain, and the tolerances reflect them: intensities above zero can
+/// tie (a gentler window drains the same total host bytes over a longer
+/// period, which can interfere with the NDP run by a near-identical
+/// amount), and contention-shifted retire order can reshuffle block→SM
+/// assignment by a hair. Zero → full intensity must be strictly harmful.
+#[test]
+fn host_intensity_never_speeds_up_ndp() {
+    for backend in BACKENDS {
+        let mut cycles = Vec::new();
+        for mlp in [0usize, 8, 64] {
+            let mut cfg = cfg_for(backend);
+            cfg.host_mlp = mlp;
+            cfg.host_passes = 4;
+            cfg.compute_cycles_per_access = 0; // memory-bound NDP side
+            let a = suite::build("NN", &cfg).unwrap();
+            let h = suite::build("KM", &cfg).unwrap();
+            let mix = MultiMix {
+                launches: vec![KernelLaunch {
+                    app: &a,
+                    arrival: 0.0,
+                }],
+            };
+            let r = run_hostmix(
+                &cfg,
+                &mix,
+                Some(&h),
+                MixPlacement::CgpLocal,
+                Policy::Affinity,
+                FairnessPolicy::Fcfs,
+            )
+            .unwrap();
+            cycles.push(r.app_cycles[0]);
+        }
+        for w in cycles.windows(2) {
+            assert!(
+                w[1] >= w[0] * (1.0 - 1e-3),
+                "{backend:?}: more host traffic decreased NDP cycles: {cycles:?}"
+            );
+        }
+        assert!(
+            cycles[2] > cycles[0] * 1.001,
+            "{backend:?}: full host intensity must visibly cost the NDP side: {cycles:?}"
+        );
+    }
+}
+
+/// Host-DDR split: with `host_ddr_fraction = 1.0` every host line is
+/// served by host-local DDR — the stacks, host ports and therefore the
+/// NDP side are untouched (bit-exact vs a host-free run). A 0.5 split
+/// sends traffic both ways and still serves every line exactly once.
+#[test]
+fn host_ddr_absorbs_traffic_without_touching_stacks() {
+    let mk = |ddr_fraction: f64, mlp: usize| {
+        let mut cfg = cfg_for(MemBackendKind::FixedLatency);
+        cfg.host_ddr_fraction = ddr_fraction;
+        cfg.host_mlp = mlp;
+        cfg
+    };
+    let cfg = mk(1.0, 64);
+    let a = suite::build("NN", &cfg).unwrap();
+    let h = suite::build("KM", &cfg).unwrap();
+    let lines: u64 = h
+        .trace
+        .objects
+        .iter()
+        .map(|o| o.bytes.div_ceil(cfg.line_size))
+        .sum();
+    let mix = || MultiMix {
+        launches: vec![KernelLaunch {
+            app: &a,
+            arrival: 0.0,
+        }],
+    };
+    let run = |cfg: &SystemConfig, host: Option<&BuiltWorkload>| {
+        run_hostmix(
+            cfg,
+            &mix(),
+            host,
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        )
+        .unwrap()
+    };
+    let all_ddr = run(&cfg, Some(&h));
+    assert_eq!(all_ddr.accesses.host, 0, "no host line may reach a stack");
+    assert_eq!(all_ddr.accesses.host_ddr, lines);
+    assert_eq!(all_ddr.host_bytes, 0);
+    assert_eq!(all_ddr.host_ddr_bytes, lines * cfg.line_size);
+    assert_eq!(all_ddr.host_bw_share, 0.0);
+    assert!(all_ddr.host_cycles > 0.0);
+    let baseline = run(&mk(0.0, 0), None);
+    assert_eq!(
+        all_ddr.app_cycles[0].to_bits(),
+        baseline.app_cycles[0].to_bits(),
+        "DDR-only host traffic must leave NDP timing bit-identical"
+    );
+    assert!(
+        (all_ddr.ndp_slowdown - 1.0).abs() < 1e-12,
+        "ndp slowdown {}",
+        all_ddr.ndp_slowdown
+    );
+
+    let half = run(&mk(0.5, 64), Some(&h));
+    assert_eq!(half.accesses.host + half.accesses.host_ddr, lines);
+    assert!(half.accesses.host > 0 && half.accesses.host_ddr > 0);
+    assert!(half.host_bw_share > 0.0 && half.host_bw_share < 1.0);
+}
+
+/// Determinism across repeated co-runs (the heap interleaving of host
+/// and NDP events is fully ordered by (time, seq)).
+#[test]
+fn hostmix_is_deterministic() {
+    let cfg = cfg_for(MemBackendKind::BankLevel);
+    let a = suite::build("NN", &cfg).unwrap();
+    let h = suite::build("KM", &cfg).unwrap();
+    let run = || {
+        let mix = MultiMix {
+            launches: vec![KernelLaunch {
+                app: &a,
+                arrival: 0.0,
+            }],
+        };
+        run_hostmix(
+            &cfg,
+            &mix,
+            Some(&h),
+            MixPlacement::FgpOnly,
+            Policy::Baseline,
+            FairnessPolicy::Fcfs,
+        )
+        .unwrap()
+    };
+    let x = run();
+    let y = run();
+    assert_eq!(x.cycles.to_bits(), y.cycles.to_bits());
+    assert_eq!(x.host_cycles.to_bits(), y.host_cycles.to_bits());
+    assert_eq!(x.accesses, y.accesses);
+    assert_eq!(x.host_port_stalls, y.host_port_stalls);
+}
