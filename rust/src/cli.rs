@@ -6,7 +6,11 @@ use anyhow::bail;
 use std::collections::HashMap;
 
 /// Option names the `coda` CLI accepts with a value (`--opt value` /
-/// `--opt=value`). Kept here so the binary and tests agree on the set.
+/// `--opt=value`). Kept here so the binary and tests agree on the set:
+/// `tests/cli_opts.rs` scans `main.rs` and fails if an option it consumes
+/// is missing here (an unregistered `--opt value` silently parses as a
+/// flag followed by a positional — the bug class behind the historical
+/// `sweep --key/--values` fix).
 pub const VALUE_OPTS: &[&str] = &[
     "mechanism",
     "config",
@@ -21,6 +25,7 @@ pub const VALUE_OPTS: &[&str] = &[
     "host-passes",
     "key",
     "values",
+    "baselines",
 ];
 
 /// Parsed command line.

@@ -10,6 +10,129 @@
 use anyhow::{bail, Context};
 use std::collections::BTreeMap;
 
+/// One `key = value` assignment from TOML-subset text, tagged with the
+/// innermost `[section]` / `[[section]]` header above it.
+///
+/// The shared grammar (used by [`SystemConfig::from_toml_str`], which
+/// ignores sections, and by [`crate::spec::ExperimentSpec::from_toml_str`],
+/// which does not): one assignment per line, `#` starts a comment,
+/// `[name]` and `[[name]]` headers open a section. Every header occurrence
+/// bumps that section's `instance` counter, which is how `[[kernel]]`
+/// array-of-tables entries are told apart.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TomlItem {
+    /// 1-based source line of the assignment.
+    pub lineno: usize,
+    /// Enclosing section name (empty before any header).
+    pub section: String,
+    /// 0-based occurrence index of the enclosing section's header.
+    pub instance: usize,
+    pub key: String,
+    /// Trimmed, with one level of surrounding double quotes removed.
+    pub value: String,
+}
+
+/// Strip a `#` comment, ignoring `#` inside a double-quoted span (the
+/// subset has no escaped quotes, so a simple quote toggle is exact).
+fn strip_comment(raw: &str) -> &str {
+    let mut in_quotes = false;
+    for (i, c) in raw.char_indices() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &raw[..i],
+            _ => {}
+        }
+    }
+    raw
+}
+
+/// Remove exactly one level of surrounding double quotes, if present.
+fn unquote(v: &str) -> &str {
+    v.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .unwrap_or(v)
+}
+
+/// A `[section]` / `[[section]]` header occurrence. Emitted even for
+/// key-less tables, so schemas can reject truncated array entries
+/// instead of silently dropping them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TomlSection {
+    /// 1-based source line of the header.
+    pub lineno: usize,
+    pub name: String,
+    /// 0-based occurrence index of this name's headers.
+    pub instance: usize,
+}
+
+/// A tokenized TOML-subset document: every section header plus every
+/// `key = value` assignment.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TomlDoc {
+    pub sections: Vec<TomlSection>,
+    pub items: Vec<TomlItem>,
+}
+
+impl TomlDoc {
+    /// How many headers open section `name` (counts key-less tables too).
+    pub fn section_count(&self, name: &str) -> usize {
+        self.sections.iter().filter(|s| s.name == name).count()
+    }
+}
+
+/// Parse TOML-subset text into its tokenized form. This is the one
+/// tokenizer behind every `.toml` the project reads; richer schemas
+/// (the experiment spec) interpret the section tags.
+/// Values may not contain double quotes (there is no escape syntax);
+/// an interior quote is a hard error rather than silent corruption.
+pub fn parse_toml_subset(text: &str) -> crate::Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    let mut instance = 0usize;
+    let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') && line.ends_with(']') {
+            let name = line
+                .trim_matches(|c| c == '[' || c == ']')
+                .trim()
+                .to_string();
+            let n = counts.entry(name.clone()).or_insert(0);
+            instance = *n;
+            *n += 1;
+            doc.sections.push(TomlSection {
+                lineno: i + 1,
+                name: name.clone(),
+                instance,
+            });
+            section = name;
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", i + 1))?;
+        let value = unquote(v.trim());
+        if value.contains('"') {
+            bail!(
+                "line {}: double quotes are not allowed inside values \
+                 (the TOML subset has no escape syntax)",
+                i + 1
+            );
+        }
+        doc.items.push(TomlItem {
+            lineno: i + 1,
+            section: section.clone(),
+            instance,
+            key: k.trim().to_string(),
+            value: value.to_string(),
+        });
+    }
+    Ok(doc)
+}
+
 /// Which DRAM timing backend serves memory accesses (see [`crate::mem`]).
 ///
 /// * [`MemBackendKind::FixedLatency`] — the original channel model: open-row
@@ -397,15 +520,9 @@ impl SystemConfig {
     /// optional `[section]` headers (ignored — the namespace is flat).
     pub fn from_toml_str(text: &str) -> crate::Result<Self> {
         let mut cfg = Self::default();
-        for (lineno, raw) in text.lines().enumerate() {
-            let line = raw.split('#').next().unwrap_or("").trim();
-            if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
-                continue;
-            }
-            let (k, v) = line
-                .split_once('=')
-                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
-            cfg.set(k.trim(), v)?;
+        for item in parse_toml_subset(text)?.items {
+            cfg.set(&item.key, &item.value)
+                .with_context(|| format!("line {}", item.lineno))?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -534,6 +651,49 @@ mod tests {
     #[test]
     fn rejects_unknown_key() {
         assert!(SystemConfig::from_toml_str("nope = 1\n").is_err());
+    }
+
+    #[test]
+    fn toml_subset_items_carry_sections_and_instances() {
+        let text = "top = 1\n[a]\nx = \"q\"\n[[k]]\nw = 1\n[[k]]\nw = 2 # c\n[a]\ny = 3\n";
+        let doc = parse_toml_subset(text).unwrap();
+        let tags: Vec<(&str, usize, &str, &str)> = doc
+            .items
+            .iter()
+            .map(|i| (i.section.as_str(), i.instance, i.key.as_str(), i.value.as_str()))
+            .collect();
+        assert_eq!(
+            tags,
+            vec![
+                ("", 0, "top", "1"),
+                ("a", 0, "x", "q"),
+                ("k", 0, "w", "1"),
+                ("k", 1, "w", "2"),
+                ("a", 1, "y", "3"),
+            ]
+        );
+        assert_eq!(doc.items[0].lineno, 1);
+        assert_eq!(doc.items[4].lineno, 9);
+        assert_eq!(doc.section_count("k"), 2);
+        assert_eq!(doc.section_count("a"), 2);
+        assert_eq!(doc.section_count("nope"), 0);
+        assert!(parse_toml_subset("no equals sign\n").is_err());
+    }
+
+    #[test]
+    fn toml_subset_quote_handling() {
+        // Key-less headers are still recorded.
+        let doc = parse_toml_subset("[a]\n[[k]]\n").unwrap();
+        assert!(doc.items.is_empty());
+        assert_eq!(doc.section_count("a"), 1);
+        assert_eq!(doc.section_count("k"), 1);
+        // '#' inside a quoted value is content, not a comment.
+        let doc = parse_toml_subset("x = \"a#b\" # real comment\n").unwrap();
+        assert_eq!(doc.items[0].value, "a#b");
+        // Exactly one level of quotes is stripped; interior quotes error
+        // (serialize→parse must never silently corrupt a value).
+        assert!(parse_toml_subset("x = \"a\"b\"\n").is_err());
+        assert!(parse_toml_subset("x = a\"b\n").is_err());
     }
 
     #[test]

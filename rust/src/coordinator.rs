@@ -8,15 +8,21 @@
 //! and (5) simulates execution under the matching scheduling policy. The
 //! same coordinator drives every baseline so comparisons are
 //! apples-to-apples.
+//!
+//! Since the experiment-API redesign the pipeline itself lives in
+//! [`crate::session`]: every `run_*` method here constructs the matching
+//! [`crate::spec::ExperimentSpec`] and lowers it through a
+//! [`Session`], so the coordinator is a convenience facade over the one
+//! declarative entry point (and is proven cycle-identical to the
+//! pre-redesign code by `tests/spec_equiv.rs`).
 
-use crate::analysis::{analyze_kernel, profile_trace, ObjectPattern};
 use crate::config::SystemConfig;
-use crate::placement::{self, PlacementPlan};
-use crate::sched::{affinity_stack, Policy};
-use crate::sim::{map_objects, KernelRun};
+use crate::placement::PlacementPlan;
+use crate::sched::Policy;
+use crate::session::Session;
+use crate::spec::{ExperimentSpec, WorkloadSel};
 use crate::stats::RunReport;
 use crate::workloads::BuiltWorkload;
-use std::collections::HashMap;
 
 /// The mechanisms of §6 (Fig 8/14 plus the footnote-6 migration variant
 /// and the work-stealing extension of §4.3.1).
@@ -39,6 +45,45 @@ pub enum Mechanism {
 }
 
 impl Mechanism {
+    /// Every mechanism, in the paper's presentation order.
+    pub const ALL: [Mechanism; 7] = [
+        Mechanism::FgpOnly,
+        Mechanism::CgpOnly,
+        Mechanism::CgpFta,
+        Mechanism::MigrationFta,
+        Mechanism::Coda,
+        Mechanism::FgpAffinity,
+        Mechanism::CodaStealing,
+    ];
+
+    /// Parse a CLI/spec spelling; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.trim() {
+            "fgp" | "fgp-only" => Mechanism::FgpOnly,
+            "cgp" | "cgp-only" => Mechanism::CgpOnly,
+            "fta" => Mechanism::CgpFta,
+            "migrate" => Mechanism::MigrationFta,
+            "coda" => Mechanism::Coda,
+            "fgp-affinity" => Mechanism::FgpAffinity,
+            "steal" => Mechanism::CodaStealing,
+            _ => return None,
+        })
+    }
+
+    /// Canonical CLI/spec spelling (round-trips through [`Self::parse`];
+    /// [`Self::name`] is the human-facing report label instead).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Mechanism::FgpOnly => "fgp",
+            Mechanism::CgpOnly => "cgp",
+            Mechanism::CgpFta => "fta",
+            Mechanism::MigrationFta => "migrate",
+            Mechanism::Coda => "coda",
+            Mechanism::FgpAffinity => "fgp-affinity",
+            Mechanism::CodaStealing => "steal",
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Mechanism::FgpOnly => "FGP-Only",
@@ -82,85 +127,24 @@ impl Coordinator {
         self
     }
 
-    /// Build the placement plan a mechanism uses for a workload.
+    /// Build the placement plan a mechanism uses for a workload
+    /// (delegates to [`crate::session::plan_for_mechanism`], which owns
+    /// the analysis/profiler pipeline since the experiment-API redesign).
     pub fn plan_for(&self, wl: &BuiltWorkload, mech: Mechanism) -> PlacementPlan {
-        let n = wl.trace.objects.len();
-        match mech {
-            Mechanism::FgpOnly | Mechanism::FgpAffinity => PlacementPlan::all_fgp(n),
-            Mechanism::CgpOnly => placement::cgp_only_plan(n, &self.cfg),
-            Mechanism::CgpFta => placement::fta_plan(&wl.trace, &self.cfg),
-            Mechanism::MigrationFta => placement::migration_fta_plan(n),
-            Mechanism::Coda | Mechanism::CodaStealing => {
-                // Compile-time analysis where IR exists...
-                let compile: HashMap<u16, ObjectPattern> = wl
-                    .ir
-                    .as_ref()
-                    .map(|ir| analyze_kernel(ir, &wl.env))
-                    .unwrap_or_default();
-                // ...profiler for the rest (§4.3.2's fallback). The
-                // profiler sees a trace sample, as a real profiling run
-                // would.
-                let cfg = &self.cfg;
-                let profile =
-                    profile_trace(&wl.trace, cfg.page_size, |b| affinity_stack(b, cfg));
-                placement::coda_plan(n, &compile, &profile, cfg)
-            }
-        }
-    }
-
-    /// Fraction of a workload's accesses that land on objects the plan
-    /// localizes (CGP or page-overridden).
-    fn localizable_traffic(&self, wl: &BuiltWorkload, plan: &PlacementPlan) -> f64 {
-        let mut per_obj = vec![0u64; wl.trace.objects.len()];
-        for b in &wl.trace.blocks {
-            for a in &b.accesses {
-                per_obj[a.obj as usize] += 1;
-            }
-        }
-        let total: u64 = per_obj.iter().sum();
-        let localized: u64 = per_obj
-            .iter()
-            .enumerate()
-            .filter(|(o, _)| {
-                !matches!(plan.per_object[*o], crate::placement::Placement::Fgp)
-            })
-            .map(|(_, n)| *n)
-            .sum();
-        if total == 0 {
-            0.0
-        } else {
-            localized as f64 / total as f64
-        }
+        crate::session::plan_for_mechanism(&self.cfg, wl, mech)
     }
 
     /// Run one workload under one mechanism.
+    ///
+    /// A thin wrapper since the experiment-API redesign: it builds the
+    /// single-kernel [`ExperimentSpec`] and lowers it through
+    /// [`Session`], which owns the plan/fallback/mapping pipeline
+    /// (including §6.4's no-degradation guarantee).
+    /// `tests/spec_equiv.rs` proves this wrapper cycle-identical to the
+    /// frozen pre-spec implementation.
     pub fn run(&self, wl: &BuiltWorkload, mech: Mechanism) -> crate::Result<RunReport> {
-        let mut plan = self.plan_for(wl, mech);
-        let mut policy = mech.policy();
-        // §6.4's no-degradation guarantee: when nothing meaningful is
-        // localizable, CODA's plan degenerates to the baseline's — all-FGP
-        // placement with unrestricted scheduling — so sharing-dominated
-        // workloads behave exactly like FGP-Only.
-        if matches!(mech, Mechanism::Coda | Mechanism::CodaStealing)
-            && self.localizable_traffic(wl, &plan) < 0.05
-        {
-            plan = PlacementPlan::all_fgp(wl.trace.objects.len());
-            policy = crate::sched::Policy::Baseline;
-        }
-        let (mut vm, bases, cgp_pages, fgp_pages) = map_objects(&self.cfg, &wl.trace, &plan)?;
-        let mut report = KernelRun {
-            cfg: &self.cfg,
-            trace: &wl.trace,
-            vm: &mut vm,
-            obj_base: &bases,
-            policy,
-            migrate_on_first_touch: plan.migrate_on_first_touch,
-        }
-        .run();
-        report.mechanism = mech.name().into();
-        report.cgp_pages = cgp_pages;
-        report.fgp_pages = fgp_pages;
-        Ok(report)
+        let spec = ExperimentSpec::kernel(WorkloadSel::Prebuilt(wl), mech);
+        Ok(Session::new(self.cfg.clone(), spec)?.run()?.run)
     }
 
     /// Run a workload under several mechanisms (sharing the generated

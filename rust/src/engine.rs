@@ -13,10 +13,13 @@
 //! *what* runs through a [`BlockSource`]: the source seeds the initial
 //! SM residency, refills a slot whenever a block retires, and (for
 //! multi-kernel scheduling) announces future kernel arrival times so the
-//! engine can wake idle slots. `sim.rs` and `multiprog.rs` are thin
-//! adapters over this module; `tests/differential` locks in that the
-//! unified loop is cycle-identical to the pre-refactor copies for every
-//! mechanism under both DRAM backends.
+//! engine can wake idle slots. `sim.rs` is the single-kernel adapter and
+//! `session.rs` — the lowering layer behind the declarative
+//! [`crate::spec::ExperimentSpec`] API — owns every multiprogrammed and
+//! host-co-run dispatch; `tests/differential` locks in that the unified
+//! loop is cycle-identical to the pre-refactor copies for every mechanism
+//! under both DRAM backends, and `tests/spec_equiv.rs` extends the same
+//! guarantee to the spec lowering.
 //!
 //! Besides NDP thread-blocks, the engine can co-run a **host-processor
 //! request stream** ([`HostStream`], CHoNDA-style — arXiv 1908.06362):

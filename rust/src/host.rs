@@ -16,8 +16,8 @@
 //! bit-exactly under both DRAM backends.
 
 use crate::config::SystemConfig;
-use crate::engine::{BlockRef, BlockSource, Engine, EngineOptions, HostStream};
-use crate::gpu::{Sm, Topology};
+use crate::session::Session;
+use crate::spec::ExperimentSpec;
 use crate::stats::RunReport;
 use crate::trace::KernelTrace;
 use crate::vm::VirtualMemory;
@@ -27,18 +27,6 @@ use crate::vm::VirtualMemory;
 /// knob; the legacy sweep always used exactly this window.
 pub const HOST_MLP: usize = 64;
 
-/// A [`BlockSource`] that supplies no thread-blocks: the engine runs
-/// host traffic only.
-struct NoBlocks;
-
-impl BlockSource for NoBlocks {
-    fn seed(&mut self, _topo: &Topology, _place: &mut dyn FnMut(usize, usize, BlockRef)) {}
-
-    fn refill(&mut self, _sm: Sm, _retired: Option<BlockRef>, _now: f64) -> Option<BlockRef> {
-        None
-    }
-}
-
 /// Run a host-side streaming sweep over every object of `trace` (the data
 /// the kernel would consume), with the objects mapped by `vm`.
 /// Returns a report whose `cycles` reflect host execution time.
@@ -46,26 +34,24 @@ impl BlockSource for NoBlocks {
 /// Uses `cfg.host_mlp` requests in flight (default [`HOST_MLP`], the
 /// legacy window) and `cfg.host_passes` sweeps; a zero for either yields
 /// an empty report, since it disables host traffic.
+///
+/// A thin wrapper since the experiment-API redesign: it builds the
+/// host-alone [`ExperimentSpec`] and runs it through
+/// [`Session::run_host_in`] over the caller's existing layout. The
+/// lowering cannot fail for a host-only spec (the spec carries no
+/// overrides and the caller's config is trusted as-is, exactly as the
+/// pre-spec implementation did), so the signature stays infallible.
 pub fn run_host_sweep(
     cfg: &SystemConfig,
     trace: &KernelTrace,
     vm: &mut VirtualMemory,
     obj_base: &[u64],
 ) -> RunReport {
-    let raw = Engine {
-        cfg,
-        apps: Vec::new(),
-        vm,
-        opts: EngineOptions {
-            l2_filter: false,
-            migrate_on_first_touch: false,
-        },
-        host: Some(HostStream { trace, obj_base }),
-    }
-    .run(&mut NoBlocks);
-    let mut report = raw.to_report(cfg, trace.name.clone());
-    report.mechanism = "host".into();
-    report
+    let spec = ExperimentSpec::host_sweep(trace);
+    Session::new(cfg.clone(), spec)
+        .and_then(|s| s.run_host_in(vm, obj_base))
+        .map(|r| r.run)
+        .expect("host-alone spec lowering is infallible")
 }
 
 #[cfg(test)]

@@ -72,6 +72,24 @@
 //! [`host::run_host_sweep`] cycles bit-exactly, and zero host intensity
 //! leaves NDP runs bit-identical (`tests/host_contention.rs`).
 //!
+//! ## The declarative experiment API
+//!
+//! Every scenario above is launched through one front door: a
+//! serializable [`spec::ExperimentSpec`] describes the traffic sources
+//! (NDP kernels with placement/mechanism/home/arrival, an optional host
+//! stream with intensity overrides), system-config overrides, scheduling
+//! and fairness policies, requested baselines, and an optional parameter
+//! sweep; a [`session::Session`] lowers any spec into one shared-engine
+//! run and returns a structured [`session::Report`] (a superset of
+//! [`stats::RunReport`]). The classic entry points —
+//! [`coordinator::Coordinator::run`], [`multiprog::run_mix`],
+//! [`multiprog::run_multi`], [`multiprog::run_hostmix`],
+//! [`host::run_host_sweep`] — are thin wrappers that construct a spec,
+//! and `tests/spec_equiv.rs` proves each cycle-identical (bit-exact f64,
+//! both DRAM backends) to its frozen pre-redesign implementation. Specs
+//! round-trip through the project's TOML subset (`coda run <spec.toml>`;
+//! examples under `examples/*.toml`).
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -83,6 +101,19 @@
 //! let wl = suite::build("PR", &cfg).unwrap();
 //! let report = Coordinator::new(cfg).run(&*wl, Mechanism::Coda).unwrap();
 //! println!("cycles={} remote={}", report.cycles, report.accesses.remote);
+//! ```
+//!
+//! The same run, declaratively:
+//!
+//! ```no_run
+//! use coda::config::SystemConfig;
+//! use coda::coordinator::Mechanism;
+//! use coda::session::Session;
+//! use coda::spec::{ExperimentSpec, WorkloadSel};
+//!
+//! let spec = ExperimentSpec::kernel(WorkloadSel::named("PR").unwrap(), Mechanism::Coda);
+//! let report = Session::new(SystemConfig::default(), spec).unwrap().run().unwrap();
+//! println!("{}", report.to_json().render());
 //! ```
 
 // Style lints the long-form test suites trip constantly without adding
@@ -109,7 +140,9 @@ pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod sched;
+pub mod session;
 pub mod sim;
+pub mod spec;
 pub mod stats;
 pub mod trace;
 pub mod vm;

@@ -1,44 +1,44 @@
 //! The `coda` CLI: run benchmarks under any mechanism, classify workloads
-//! (Fig 3 / Table 2), co-run host + NDP traffic, sweep parameters, and
-//! dump configs.
+//! (Fig 3 / Table 2), co-run host + NDP traffic, sweep parameters, dump
+//! configs — and run any declarative experiment spec from a TOML file.
 //!
 //! ```text
-//! coda run <BENCH> [--mechanism coda|fgp|cgp|fta|migrate|fgp-affinity|steal]
-//!                  [--mem-backend fixed|bank]
-//!                  [--config file.toml] [--set key=value]... [--json]
+//! coda run <BENCH>        [--mechanism coda|fgp|cgp|fta|migrate|fgp-affinity|steal]
+//!                         [--mem-backend fixed|bank]
+//!                         [--config file.toml] [--set key=value]... [--json]
+//! coda run <SPEC.toml>    # declarative experiment spec (see examples/)
 //! coda compare <BENCH>            # all mechanisms side by side
 //! coda classify [BENCH]           # Fig-3 histogram + Table-2 category
 //! coda suite [--mechanism ...]    # all 20 benchmarks
 //! coda mix <B1,B2,...> [--placement fgp|cgp] [--policy affinity|baseline|steal]
 //!                      [--fairness fcfs|rr|least] [--stagger CYCLES]
+//!                      [--baselines auto|none|solo|host-split]
 //!                      # multi-kernel mix; may name more apps than stacks
 //! coda hostmix <B1,..|-> [--host BENCH] [--host-mlp N] [--host-passes N]
 //!                      # NDP kernels + a concurrent host request stream
 //!                      # contending for the stacks; "-" = host alone
+//! coda sweep <BENCH> [--key k --values v1,v2,...]
 //! coda config                     # print the default config (Table 1)
 //! coda help                       # full quickstart with examples
 //! ```
+//!
+//! Every command is a thin builder over the same [`coda::spec`] →
+//! [`coda::session`] pipeline; `coda run <spec.toml>` reproduces any of
+//! them from a file alone.
 
 use coda::cli::Args;
 use coda::config::SystemConfig;
 use coda::coordinator::{Coordinator, Mechanism};
 use coda::report::{f2, pct, Json, Table};
 use coda::sched::affinity_stack;
+use coda::session::{self, Report, Session, SourceKind};
+use coda::spec::{Baselines, ExperimentSpec, OutputFormat, SweepSpec, WorkloadSel};
 use coda::stats::RunReport;
 use coda::trace::{classify, sharing_histogram};
 use coda::workloads::suite;
 
 fn mechanism_of(name: &str) -> coda::Result<Mechanism> {
-    Ok(match name {
-        "fgp" | "fgp-only" => Mechanism::FgpOnly,
-        "cgp" | "cgp-only" => Mechanism::CgpOnly,
-        "fta" => Mechanism::CgpFta,
-        "migrate" => Mechanism::MigrationFta,
-        "coda" => Mechanism::Coda,
-        "fgp-affinity" => Mechanism::FgpAffinity,
-        "steal" => Mechanism::CodaStealing,
-        other => anyhow::bail!("unknown mechanism {other}"),
-    })
+    Mechanism::parse(name).ok_or_else(|| anyhow::anyhow!("unknown mechanism {name}"))
 }
 
 fn load_config(args: &Args) -> coda::Result<SystemConfig> {
@@ -64,6 +64,16 @@ fn load_config(args: &Args) -> coda::Result<SystemConfig> {
     Ok(cfg)
 }
 
+/// The `--baselines` override shared by `run`, `mix` and `hostmix`.
+fn baselines_opt(args: &Args) -> coda::Result<Option<Baselines>> {
+    match args.opt("baselines") {
+        None => Ok(None),
+        Some(s) => Baselines::parse(s).map(Some).ok_or_else(|| {
+            anyhow::anyhow!("unknown baselines {s} (expected auto|none|solo|host-split)")
+        }),
+    }
+}
+
 fn print_report(r: &RunReport, json: bool) {
     if json {
         println!("{}", Json::from(r).render());
@@ -82,17 +92,94 @@ fn print_report(r: &RunReport, json: bool) {
     }
 }
 
+/// Render a session [`Report`]: the classic one-liner for single-kernel
+/// runs, a per-source table plus summary footer for everything else.
+fn print_spec_report(r: &Report, json: bool) {
+    if json {
+        println!("{}", r.to_json().render());
+        return;
+    }
+    if let Some(name) = &r.spec_name {
+        println!("# {name}");
+    }
+    if r.sources.len() == 1
+        && r.sources[0].kind == SourceKind::Ndp
+        && r.run.app_cycles.is_empty()
+    {
+        print_report(&r.run, false);
+        return;
+    }
+    let mut t = Table::new(&["source", "home", "arrival", "cycles", "slowdown"]);
+    for s in &r.sources {
+        t.row(&[
+            format!("{}:{}", s.kind, s.workload),
+            s.home.map(|h| h.to_string()).unwrap_or_else(|| "-".into()),
+            format!("{:.0}", s.arrival),
+            format!("{:.0}", s.cycles),
+            s.slowdown.map(f2).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!("{}", t.render());
+    let mut line = format!(
+        "{} ({}): cycles={:.0} remote%={}",
+        r.run.workload,
+        r.run.mechanism,
+        r.run.cycles,
+        pct(r.run.accesses.remote_fraction()),
+    );
+    if !r.run.app_slowdown.is_empty() {
+        line.push_str(&format!(" weighted_speedup={:.3}", r.run.weighted_speedup));
+    }
+    if r.run.accesses.host_total() > 0 || r.run.host_cycles > 0.0 {
+        line.push_str(&format!(
+            " ndp_slowdown={} host_bw_share={} port_stalls={} host_ddr={}",
+            f2(r.run.ndp_slowdown),
+            pct(r.run.host_bw_share),
+            r.run.host_port_stalls,
+            r.run.accesses.host_ddr,
+        ));
+    }
+    println!("{line}");
+}
+
+/// `coda run <SPEC.toml>`: load, lower and run a declarative experiment
+/// spec (expanding its sweep section into one report per value). CLI
+/// config options layer *under* the spec's `[system]` overrides.
+fn cmd_run_spec(args: &Args, path: &str) -> coda::Result<()> {
+    let base = load_config(args)?;
+    let mut spec = ExperimentSpec::from_file(path)?;
+    if let Some(b) = baselines_opt(args)? {
+        spec.output.baselines = b;
+    }
+    let json = args.has_flag("json") || spec.output.format == OutputFormat::Json;
+    for r in session::run_spec(&base, &spec)? {
+        print_spec_report(&r, json);
+    }
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> coda::Result<()> {
-    let cfg = load_config(args)?;
-    let bench = args
+    let arg = args
         .positional
         .first()
-        .ok_or_else(|| anyhow::anyhow!("usage: coda run <BENCH>"))?;
+        .ok_or_else(|| anyhow::anyhow!("usage: coda run <BENCH|SPEC.toml>"))?;
+    // A `.toml` argument takes the declarative spec path; anything else
+    // is a benchmark name (the classic single-kernel command). The
+    // suffix — not file existence — decides, so a stray file named like
+    // a benchmark can never shadow it.
+    if arg.ends_with(".toml") {
+        return cmd_run_spec(args, arg);
+    }
+    let cfg = load_config(args)?;
     let mech = mechanism_of(args.opt("mechanism").unwrap_or("coda"))?;
-    let wl = suite::build(bench, &cfg)?;
-    let coord = Coordinator::new(cfg);
-    let r = coord.run(&wl, mech)?;
-    print_report(&r, args.has_flag("json"));
+    let mut spec = ExperimentSpec::kernel(WorkloadSel::named(arg)?, mech);
+    if let Some(b) = baselines_opt(args)? {
+        // Kernel dispatch runs no baselines; Session::new rejects a
+        // request it would otherwise have to drop silently.
+        spec.output.baselines = b;
+    }
+    let r = Session::new(cfg, spec)?.run()?;
+    print_report(&r.run, args.has_flag("json"));
     Ok(())
 }
 
@@ -270,56 +357,49 @@ fn mix_knobs(
 }
 
 fn cmd_mix(args: &Args) -> coda::Result<()> {
-    use coda::multiprog::{run_multi, KernelLaunch, MultiMix};
     let cfg = load_config(args)?;
     let benches = args
         .positional
         .first()
         .ok_or_else(|| anyhow::anyhow!("usage: coda mix <B1,B2,...> [--placement fgp|cgp]"))?;
     let (placement, policy, fairness, stagger) = mix_knobs(args, &cfg)?;
-    let built: Vec<_> = benches
+    let launches: Vec<(WorkloadSel<'static>, f64)> = benches
         .split(',')
-        .map(|n| suite::build(n.trim(), &cfg))
+        .enumerate()
+        .map(|(i, n)| Ok((WorkloadSel::named(n.trim())?, i as f64 * stagger)))
         .collect::<coda::Result<_>>()?;
-    let mix = MultiMix {
-        launches: built
-            .iter()
-            .enumerate()
-            .map(|(i, b)| KernelLaunch {
-                app: b,
-                arrival: i as f64 * stagger,
-            })
-            .collect(),
-    };
-    let r = run_multi(&cfg, &mix, placement, policy, fairness)?;
+    let mut spec = ExperimentSpec::shared(launches, placement, policy, fairness);
+    if let Some(b) = baselines_opt(args)? {
+        spec.output.baselines = b;
+    }
+    let r = Session::new(cfg, spec)?.run()?;
     if args.has_flag("json") {
-        println!("{}", Json::from(&r).render());
+        println!("{}", r.to_json().render());
         return Ok(());
     }
     let mut t = Table::new(&["app", "home", "arrival", "response", "slowdown"]);
-    for (i, b) in built.iter().enumerate() {
+    for s in &r.sources {
         t.row(&[
-            b.name.to_string(),
-            coda::multiprog::home_of(i, &cfg).to_string(),
-            format!("{:.0}", mix.launches[i].arrival),
-            format!("{:.0}", r.app_cycles[i]),
-            f2(r.app_slowdown[i]),
+            s.workload.clone(),
+            s.home.map(|h| h.to_string()).unwrap_or_else(|| "-".into()),
+            format!("{:.0}", s.arrival),
+            format!("{:.0}", s.cycles),
+            s.slowdown.map(f2).unwrap_or_else(|| "-".into()),
         ]);
     }
     println!("{}", t.render());
     println!(
         "{} ({}): cycles={:.0} remote%={} weighted_speedup={:.3}",
-        r.workload,
-        r.mechanism,
-        r.cycles,
-        pct(r.accesses.remote_fraction()),
-        r.weighted_speedup
+        r.run.workload,
+        r.run.mechanism,
+        r.run.cycles,
+        pct(r.run.accesses.remote_fraction()),
+        r.run.weighted_speedup
     );
     Ok(())
 }
 
 fn cmd_hostmix(args: &Args) -> coda::Result<()> {
-    use coda::multiprog::{run_hostmix, KernelLaunch, MultiMix};
     let mut cfg = load_config(args)?;
     // --host-mlp / --host-passes are sugar for the config keys.
     if let Some(v) = args.opt("host-mlp") {
@@ -329,16 +409,16 @@ fn cmd_hostmix(args: &Args) -> coda::Result<()> {
         cfg.set("host_passes", v)?;
     }
     cfg.validate()?;
-    let spec = args.positional.first().ok_or_else(|| {
+    let spec_arg = args.positional.first().ok_or_else(|| {
         anyhow::anyhow!(
             "usage: coda hostmix <B1,B2,...|-> [--host BENCH] [--host-mlp N] \
              [--host-passes N] [--placement fgp|cgp]"
         )
     })?;
-    let ndp_names: Vec<&str> = if spec.as_str() == "-" {
+    let ndp_names: Vec<&str> = if spec_arg.as_str() == "-" {
         Vec::new()
     } else {
-        spec.split(',').map(str::trim).collect()
+        spec_arg.split(',').map(str::trim).collect()
     };
     // The host streams its own application's data; default to the first
     // NDP bench (host and NDP touching the same program's footprint).
@@ -347,53 +427,46 @@ fn cmd_hostmix(args: &Args) -> coda::Result<()> {
         .or_else(|| ndp_names.first().copied())
         .ok_or_else(|| anyhow::anyhow!("host-alone hostmix needs --host BENCH"))?;
     let (placement, policy, fairness, stagger) = mix_knobs(args, &cfg)?;
-    let built: Vec<_> = ndp_names
+    let launches: Vec<(WorkloadSel<'static>, f64)> = ndp_names
         .iter()
-        .map(|n| suite::build(n, &cfg))
+        .enumerate()
+        .map(|(i, n)| Ok((WorkloadSel::named(n)?, i as f64 * stagger)))
         .collect::<coda::Result<_>>()?;
-    let host_wl = suite::build(host_name, &cfg)?;
-    let mix = MultiMix {
-        launches: built
-            .iter()
-            .enumerate()
-            .map(|(i, b)| KernelLaunch {
-                app: b,
-                arrival: i as f64 * stagger,
-            })
-            .collect(),
-    };
-    let r = run_hostmix(&cfg, &mix, Some(&host_wl), placement, policy, fairness)?;
+    let mut spec = ExperimentSpec::hostmix(
+        launches,
+        Some(WorkloadSel::named(host_name)?),
+        placement,
+        policy,
+        fairness,
+    );
+    if let Some(b) = baselines_opt(args)? {
+        spec.output.baselines = b;
+    }
+    let r = Session::new(cfg, spec)?.run()?;
     if args.has_flag("json") {
-        println!("{}", Json::from(&r).render());
+        println!("{}", r.to_json().render());
         return Ok(());
     }
     let mut t = Table::new(&["source", "home", "arrival", "cycles", "slowdown"]);
-    for (i, b) in built.iter().enumerate() {
+    for s in &r.sources {
         t.row(&[
-            format!("ndp:{}", b.name),
-            coda::multiprog::home_of(i, &cfg).to_string(),
-            format!("{:.0}", mix.launches[i].arrival),
-            format!("{:.0}", r.app_cycles[i]),
-            f2(r.app_slowdown[i]),
+            format!("{}:{}", s.kind, s.workload),
+            s.home.map(|h| h.to_string()).unwrap_or_else(|| "-".into()),
+            format!("{:.0}", s.arrival),
+            format!("{:.0}", s.cycles),
+            s.slowdown.map(f2).unwrap_or_else(|| "-".into()),
         ]);
     }
-    t.row(&[
-        format!("host:{}", host_wl.name),
-        "-".into(),
-        "0".into(),
-        format!("{:.0}", r.host_cycles),
-        f2(r.host_slowdown),
-    ]);
     println!("{}", t.render());
     println!(
         "{} ({}): cycles={:.0} ndp_slowdown={} host_bw_share={} port_stalls={} host_ddr={}",
-        r.workload,
-        r.mechanism,
-        r.cycles,
-        f2(r.ndp_slowdown),
-        pct(r.host_bw_share),
-        r.host_port_stalls,
-        r.accesses.host_ddr,
+        r.run.workload,
+        r.run.mechanism,
+        r.run.cycles,
+        f2(r.run.ndp_slowdown),
+        pct(r.run.host_bw_share),
+        r.run.host_port_stalls,
+        r.run.accesses.host_ddr,
     );
     Ok(())
 }
@@ -407,21 +480,30 @@ fn cmd_sweep(args: &Args) -> coda::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("usage: coda sweep <BENCH> --key k --values v1,v2"))?;
     let key = args.opt("key").unwrap_or("remote_bw_gbs");
     let values = args.opt("values").unwrap_or("16,32,64,128,256");
+    let sweep = SweepSpec {
+        key: key.to_string(),
+        values: values.split(',').map(|v| v.to_string()).collect(),
+    };
+    let baselines = baselines_opt(args)?;
+    // Two sweeping specs — the FGP baseline and CODA — zipped per value.
+    let run_all = |mech: Mechanism| -> coda::Result<Vec<Report>> {
+        let mut spec = ExperimentSpec::kernel(WorkloadSel::named(bench)?, mech);
+        spec.sweep = Some(sweep.clone());
+        if let Some(b) = baselines {
+            spec.output.baselines = b;
+        }
+        session::run_spec(&cfg0, &spec)
+    };
+    let fgp = run_all(Mechanism::FgpOnly)?;
+    let coda_r = run_all(Mechanism::Coda)?;
     let mut t = Table::new(&[key, "FGP cycles", "CODA cycles", "speedup", "CODA remote%"]);
-    for v in values.split(',') {
-        let mut cfg = cfg0.clone();
-        cfg.set(key, v)?;
-        cfg.validate()?;
-        let wl = suite::build(bench, &cfg)?;
-        let coord = Coordinator::new(cfg);
-        let fgp = coord.run(&wl, Mechanism::FgpOnly)?;
-        let coda = coord.run(&wl, Mechanism::Coda)?;
+    for ((v, f), c) in sweep.values.iter().zip(&fgp).zip(&coda_r) {
         t.row(&[
-            v.to_string(),
-            format!("{:.0}", fgp.cycles),
-            format!("{:.0}", coda.cycles),
-            f2(coda.speedup_over(&fgp)),
-            pct(coda.accesses.remote_fraction()),
+            v.clone(),
+            format!("{:.0}", f.run.cycles),
+            format!("{:.0}", c.run.cycles),
+            f2(c.run.speedup_over(&f.run)),
+            pct(c.run.accesses.remote_fraction()),
         ]);
     }
     println!("{}", t.render());
@@ -478,6 +560,10 @@ fn print_help() {
          COMMANDS (one example each)\n\
          \x20 run <BENCH>          one benchmark under one mechanism\n\
          \x20                        coda run PR --mechanism coda --mem-backend bank --json\n\
+         \x20 run <SPEC.toml>      a declarative experiment spec: kernels, host\n\
+         \x20                      stream, config overrides, baselines, sweeps —\n\
+         \x20                      every scenario below, from one file\n\
+         \x20                        coda run examples/hostmix_nn_km.toml --json\n\
          \x20 compare <BENCH>      all mechanisms side by side\n\
          \x20                        coda compare KM\n\
          \x20 classify [BENCH]     Fig-3 page-sharing histogram + Table-2 category\n\
@@ -505,6 +591,8 @@ fn print_help() {
          \x20 --mem-backend fixed|bank        DRAM timing backend\n\
          \x20 --config FILE  --set k=v,...    config file / inline overrides\n\
          \x20 --json                          machine-readable report\n\
+         \x20 --baselines auto|none|solo|host-split   run-alone baseline policy\n\
+         \x20                                 (none skips the extra runs — fast sweeps)\n\
          \x20 hostmix: --host BENCH --host-mlp N --host-passes N (host intensity)\n\
          \n\
          JSON REPORTS (--json) always carry: workload, mechanism, cycles\n\
@@ -516,7 +604,9 @@ fn print_help() {
          app_slowdown, weighted_speedup; hostmix runs add host, host_ddr\n\
          (host accesses by destination), host_cycles, host_slowdown,\n\
          ndp_slowdown, host_bytes, host_ddr_bytes, host_port_stalls and\n\
-         host_bw_share. Full field descriptions: README.md.\n\
+         host_bw_share. Spec-driven runs add spec (the label) and sources\n\
+         (per-source kind/workload/home/arrival/cycles/slowdown). Full\n\
+         field descriptions: README.md; spec schema: examples/*.toml.\n\
          \n\
          benchmarks: {}",
         suite::names().join(" ")

@@ -9,9 +9,7 @@
 //! Three entry points share the event-loop physics of [`crate::engine`]:
 //!
 //! * [`run_mix`] — the paper's Fig 12 shape: up to `num_stacks` apps, app
-//!   `i` pinned to stack `i`'s SMs, all launched at t=0. Cycle-identical
-//!   to the pre-refactor standalone loop (`tests/differential` locks this
-//!   in), and now also reports TLB/latency/row-hit statistics.
+//!   `i` pinned to stack `i`'s SMs, all launched at t=0.
 //! * [`run_multi`] — true multi-kernel scheduling: a mix may hold **more
 //!   kernels than stacks** (homes wrap round-robin), kernels launch at
 //!   staggered arrival times, and SMs are time-shared at block granularity
@@ -20,19 +18,24 @@
 //!   under the same placement) and weighted speedup (Σ T_alone/T_shared).
 //! * [`run_hostmix`] — CHoNDA-style concurrent host + NDP execution: the
 //!   NDP mix of `run_multi` co-runs with a host-processor request stream
-//!   ([`HostStream`]) injected through the per-stack host ports, so both
-//!   sides contend for interconnect slots and DRAM dispatch. The report
-//!   adds per-source bandwidth share, host slowdown and NDP slowdown vs
-//!   each side running alone on the same physical layout.
+//!   injected through the per-stack host ports, so both sides contend for
+//!   interconnect slots and DRAM dispatch. The report adds per-source
+//!   bandwidth share, host slowdown and NDP slowdown vs each side running
+//!   alone on the same physical layout.
+//!
+//! All three are thin wrappers since the experiment-API redesign: each
+//! constructs an [`ExperimentSpec`] (pinned / shared / hostmix shape) and
+//! lowers it through [`crate::session::Session`], which owns the mapping,
+//! dispatch and baseline machinery. `tests/spec_equiv.rs` keeps frozen
+//! copies of the pre-spec implementations as oracles and proves these
+//! wrappers cycle-identical (bit-exact f64) under both DRAM backends.
 
 use crate::config::SystemConfig;
-use crate::engine::{AppCtx, BlockRef, BlockSource, Engine, EngineOptions, EngineRaw, HostStream};
-use crate::gpu::{Sm, Topology};
 use crate::sched::{FairnessPolicy, Policy};
-use crate::stats::{self, RunReport};
-use crate::vm::VirtualMemory;
+use crate::session::Session;
+use crate::spec::{ExperimentSpec, WorkloadSel};
+use crate::stats::RunReport;
 use crate::workloads::BuiltWorkload;
-use std::collections::VecDeque;
 
 /// Placement style for a multiprogrammed run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,6 +54,17 @@ impl MixPlacement {
             "cgp" | "cgp-local" => Some(Self::CgpLocal),
             _ => None,
         }
+    }
+}
+
+impl std::fmt::Display for MixPlacement {
+    /// Canonical CLI/spec spelling (round-trips through
+    /// [`MixPlacement::parse`]; report labels use the `Debug` form).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::FgpOnly => "fgp",
+            Self::CgpLocal => "cgp",
+        })
     }
 }
 
@@ -81,80 +95,6 @@ pub fn home_of(app_idx: usize, cfg: &SystemConfig) -> usize {
     app_idx % cfg.num_stacks
 }
 
-/// Map every app's objects into one shared physical memory (per-app
-/// virtual bases), homing app `i` on stack `i % num_stacks`. Both the
-/// joint run and the run-alone baselines use this, so physical layout —
-/// and therefore bank/row behaviour — is identical between them.
-fn map_mix(
-    cfg: &SystemConfig,
-    apps: &[&BuiltWorkload],
-    placement: MixPlacement,
-) -> crate::Result<(VirtualMemory, Vec<Vec<u64>>)> {
-    let mut vm = VirtualMemory::new(cfg);
-    let mut app_bases: Vec<Vec<u64>> = Vec::new();
-    for (i, app) in apps.iter().enumerate() {
-        let home = home_of(i, cfg);
-        let mut bases = Vec::new();
-        for obj in &app.trace.objects {
-            let pages = obj.bytes.div_ceil(cfg.page_size).max(1);
-            let base = match placement {
-                MixPlacement::FgpOnly => vm.map_fgp(pages)?,
-                MixPlacement::CgpLocal => vm.map_cgp(pages, |_| home)?,
-            };
-            bases.push(base);
-        }
-        app_bases.push(bases);
-    }
-    Ok((vm, app_bases))
-}
-
-/// [`BlockSource`] reproducing the historical `run_mix` dispatch exactly:
-/// app `i`'s blocks run only on stack `i`'s SMs, in launch order, and a
-/// retiring block's slot refills from the same app.
-struct MixSource {
-    next_block: Vec<usize>,
-    num_blocks: Vec<usize>,
-}
-
-impl BlockSource for MixSource {
-    fn seed(&mut self, topo: &Topology, place: &mut dyn FnMut(usize, usize, BlockRef)) {
-        // Seed each app's home-stack SM slots.
-        for app in 0..self.num_blocks.len() {
-            let sms: Vec<usize> = topo.sms_of_stack(app).map(|s| s.id).collect();
-            let capacity = sms.len() * topo.blocks_per_sm;
-            for slot in 0..capacity {
-                if self.next_block[app] >= self.num_blocks[app] {
-                    break;
-                }
-                let b = self.next_block[app];
-                self.next_block[app] += 1;
-                place(
-                    sms[slot % sms.len()],
-                    slot / sms.len(),
-                    BlockRef {
-                        app: app as u32,
-                        block: b as u32,
-                    },
-                );
-            }
-        }
-    }
-
-    fn refill(&mut self, _sm: Sm, retired: Option<BlockRef>, _now: f64) -> Option<BlockRef> {
-        let app = retired?.app as usize;
-        if self.next_block[app] < self.num_blocks[app] {
-            let b = self.next_block[app];
-            self.next_block[app] += 1;
-            Some(BlockRef {
-                app: app as u32,
-                block: b as u32,
-            })
-        } else {
-            None
-        }
-    }
-}
-
 /// Simulate a mix; returns (per-app completion cycles, combined report).
 pub fn run_mix(
     cfg: &SystemConfig,
@@ -168,212 +108,12 @@ pub fn run_mix(
         mix.apps.len(),
         cfg.num_stacks
     );
-    let (mut vm, app_bases) = map_mix(cfg, &mix.apps, placement)?;
-    let apps: Vec<AppCtx<'_>> = mix
-        .apps
-        .iter()
-        .zip(&app_bases)
-        .map(|(a, b)| AppCtx {
-            trace: &a.trace,
-            obj_base: b.as_slice(),
-        })
-        .collect();
-    let mut source = MixSource {
-        next_block: vec![0; mix.apps.len()],
-        num_blocks: mix.apps.iter().map(|a| a.trace.blocks.len()).collect(),
-    };
-    let raw = Engine {
-        cfg,
-        apps,
-        vm: &mut vm,
-        opts: EngineOptions {
-            // The multiprogrammed path has never modelled the L2 filter;
-            // keeping it off preserves the historical cycle counts.
-            l2_filter: false,
-            migrate_on_first_touch: false,
-        },
-        host: None,
-    }
-    .run(&mut source);
-    let mut report = raw.to_report(
-        cfg,
-        mix.apps
-            .iter()
-            .map(|a| a.name)
-            .collect::<Vec<_>>()
-            .join("+"),
+    let spec = ExperimentSpec::pinned(
+        mix.apps.iter().map(|&a| WorkloadSel::Prebuilt(a)).collect(),
+        placement,
     );
-    report.mechanism = format!("{placement:?}");
-    report.app_cycles = raw.app_end.clone();
-    Ok((raw.app_end, report))
-}
-
-/// [`BlockSource`] for multi-kernel scheduling: per-app FIFO block
-/// queues, arrival times, home stacks, and the fairness arbiter.
-struct MultiKernelSource {
-    queues: Vec<VecDeque<u32>>,
-    arrival: Vec<f64>,
-    home: Vec<usize>,
-    policy: Policy,
-    fairness: FairnessPolicy,
-    issued: Vec<u64>,
-    rr_cursor: usize,
-}
-
-impl MultiKernelSource {
-    fn new(
-        launches: &[(usize, f64)], // (num_blocks, arrival) per app
-        cfg: &SystemConfig,
-        policy: Policy,
-        fairness: FairnessPolicy,
-        only_app: Option<usize>,
-    ) -> Self {
-        let queues = launches
-            .iter()
-            .enumerate()
-            .map(|(i, &(n, _))| {
-                if only_app.is_some_and(|o| o != i) {
-                    VecDeque::new()
-                } else {
-                    (0..n as u32).collect()
-                }
-            })
-            .collect();
-        Self {
-            queues,
-            arrival: launches.iter().map(|&(_, t)| t).collect(),
-            home: (0..launches.len()).map(|i| home_of(i, cfg)).collect(),
-            policy,
-            fairness,
-            issued: vec![0; launches.len()],
-            rr_cursor: 0,
-        }
-    }
-
-    /// Apps with pending blocks that have arrived by `now` and whose
-    /// blocks may run on `stack` under the block-level policy.
-    fn eligible(&self, stack: usize, now: f64) -> Vec<usize> {
-        let arrived: Vec<usize> = (0..self.queues.len())
-            .filter(|&i| !self.queues[i].is_empty() && self.arrival[i] <= now)
-            .collect();
-        match self.policy {
-            Policy::Baseline => arrived,
-            Policy::Affinity => arrived
-                .into_iter()
-                .filter(|&i| self.home[i] == stack)
-                .collect(),
-            Policy::AffinityStealing => {
-                let homed: Vec<usize> = arrived
-                    .iter()
-                    .copied()
-                    .filter(|&i| self.home[i] == stack)
-                    .collect();
-                if homed.is_empty() {
-                    arrived
-                } else {
-                    homed
-                }
-            }
-        }
-    }
-
-    fn pick(&mut self, stack: usize, now: f64) -> Option<BlockRef> {
-        let elig = self.eligible(stack, now);
-        if elig.is_empty() {
-            return None;
-        }
-        let app = match self.fairness {
-            FairnessPolicy::Fcfs => elig.into_iter().min_by(|&a, &b| {
-                self.arrival[a]
-                    .partial_cmp(&self.arrival[b])
-                    .expect("arrival times are finite")
-                    .then(a.cmp(&b))
-            })?,
-            FairnessPolicy::RoundRobin => {
-                let n = self.queues.len();
-                (1..=n)
-                    .map(|k| (self.rr_cursor + k) % n)
-                    .find(|i| elig.contains(i))?
-            }
-            FairnessPolicy::LeastIssued => elig.into_iter().min_by_key(|&i| (self.issued[i], i))?,
-        };
-        self.rr_cursor = app;
-        self.issued[app] += 1;
-        let block = self.queues[app].pop_front()?;
-        Some(BlockRef {
-            app: app as u32,
-            block,
-        })
-    }
-}
-
-impl BlockSource for MultiKernelSource {
-    fn seed(&mut self, topo: &Topology, place: &mut dyn FnMut(usize, usize, BlockRef)) {
-        // Breadth-first over SMs, as in the single-kernel path; only
-        // already-arrived apps participate at t=0.
-        for slot in 0..topo.blocks_per_sm {
-            for sm in &topo.sms {
-                if let Some(br) = self.pick(sm.stack, 0.0) {
-                    place(sm.id, slot, br);
-                }
-            }
-        }
-    }
-
-    fn refill(&mut self, sm: Sm, _retired: Option<BlockRef>, now: f64) -> Option<BlockRef> {
-        self.pick(sm.stack, now)
-    }
-
-    fn next_arrival_after(&self, now: f64) -> Option<f64> {
-        self.queues
-            .iter()
-            .zip(&self.arrival)
-            .filter(|(q, &t)| !q.is_empty() && t > now)
-            .map(|(_, &t)| t)
-            .fold(None, |m, t| {
-                Some(match m {
-                    None => t,
-                    Some(m) => m.min(t),
-                })
-            })
-    }
-}
-
-fn run_multi_inner(
-    cfg: &SystemConfig,
-    apps: &[&BuiltWorkload],
-    arrivals: &[f64],
-    only_app: Option<usize>,
-    placement: MixPlacement,
-    policy: Policy,
-    fairness: FairnessPolicy,
-) -> crate::Result<EngineRaw> {
-    let (mut vm, app_bases) = map_mix(cfg, apps, placement)?;
-    let app_ctxs: Vec<AppCtx<'_>> = apps
-        .iter()
-        .zip(&app_bases)
-        .map(|(a, b)| AppCtx {
-            trace: &a.trace,
-            obj_base: b.as_slice(),
-        })
-        .collect();
-    let launches: Vec<(usize, f64)> = apps
-        .iter()
-        .zip(arrivals)
-        .map(|(a, &t)| (a.trace.blocks.len(), t))
-        .collect();
-    let mut source = MultiKernelSource::new(&launches, cfg, policy, fairness, only_app);
-    Ok(Engine {
-        cfg,
-        apps: app_ctxs,
-        vm: &mut vm,
-        opts: EngineOptions {
-            l2_filter: false,
-            migrate_on_first_touch: false,
-        },
-        host: None,
-    }
-    .run(&mut source))
+    let report = Session::new(cfg.clone(), spec)?.run()?.run;
+    Ok((report.app_cycles.clone(), report))
 }
 
 /// Simulate a multi-kernel mix with time-shared SMs.
@@ -390,35 +130,16 @@ pub fn run_multi(
     policy: Policy,
     fairness: FairnessPolicy,
 ) -> crate::Result<RunReport> {
-    let apps: Vec<&BuiltWorkload> = mix.launches.iter().map(|l| l.app).collect();
-    let arrivals: Vec<f64> = mix.launches.iter().map(|l| l.arrival).collect();
-    for (i, &t) in arrivals.iter().enumerate() {
-        anyhow::ensure!(
-            t >= 0.0 && t.is_finite(),
-            "arrival time of app {i} must be a non-negative real, got {t}"
-        );
-    }
-    let shared = run_multi_inner(cfg, &apps, &arrivals, None, placement, policy, fairness)?;
-    // Run-alone baselines: identical mapping (all apps' objects placed),
-    // only app i's blocks execute, so the only delta is contention.
-    let zero = vec![0.0; apps.len()];
-    let mut solo = Vec::with_capacity(apps.len());
-    for i in 0..apps.len() {
-        let raw = run_multi_inner(cfg, &apps, &zero, Some(i), placement, policy, fairness)?;
-        solo.push(raw.app_end[i]);
-    }
-    let resp: Vec<f64> = (0..apps.len())
-        .map(|i| (shared.app_end[i] - arrivals[i]).max(0.0))
-        .collect();
-    let mut report = shared.to_report(
-        cfg,
-        apps.iter().map(|a| a.name).collect::<Vec<_>>().join("+"),
+    let spec = ExperimentSpec::shared(
+        mix.launches
+            .iter()
+            .map(|l| (WorkloadSel::Prebuilt(l.app), l.arrival))
+            .collect(),
+        placement,
+        policy,
+        fairness,
     );
-    report.mechanism = format!("{placement:?}+{policy:?}+{fairness}");
-    report.app_slowdown = stats::per_app_slowdown(&solo, &resp);
-    report.weighted_speedup = stats::weighted_speedup(&solo, &resp);
-    report.app_cycles = resp;
-    Ok(report)
+    Ok(Session::new(cfg.clone(), spec)?.run()?.run)
 }
 
 /// Simulate a CHoNDA-style co-run: an NDP mix (possibly empty) plus a
@@ -452,139 +173,17 @@ pub fn run_hostmix(
     policy: Policy,
     fairness: FairnessPolicy,
 ) -> crate::Result<RunReport> {
-    let apps: Vec<&BuiltWorkload> = ndp.launches.iter().map(|l| l.app).collect();
-    let arrivals: Vec<f64> = ndp.launches.iter().map(|l| l.arrival).collect();
-    for (i, &t) in arrivals.iter().enumerate() {
-        anyhow::ensure!(
-            t >= 0.0 && t.is_finite(),
-            "arrival time of app {i} must be a non-negative real, got {t}"
-        );
-    }
-    anyhow::ensure!(
-        host.is_some() || !apps.is_empty(),
-        "hostmix needs a host stream, at least one NDP kernel, or both"
+    let spec = ExperimentSpec::hostmix(
+        ndp.launches
+            .iter()
+            .map(|l| (WorkloadSel::Prebuilt(l.app), l.arrival))
+            .collect(),
+        host.map(WorkloadSel::Prebuilt),
+        placement,
+        policy,
+        fairness,
     );
-    let host_active = host.is_some() && cfg.host_mlp > 0 && cfg.host_passes > 0;
-
-    // Shared physical layout: NDP apps first (identical to run_multi's
-    // layout), host objects after, fine-grain interleaved.
-    let (mut vm, app_bases) = map_mix(cfg, &apps, placement)?;
-    let host_bases: Vec<u64> = match host {
-        Some(h) => {
-            let mut bases = Vec::with_capacity(h.trace.objects.len());
-            for obj in &h.trace.objects {
-                let pages = obj.bytes.div_ceil(cfg.page_size).max(1);
-                bases.push(vm.map_fgp(pages)?);
-            }
-            bases
-        }
-        None => Vec::new(),
-    };
-    let launches: Vec<(usize, f64)> = apps
-        .iter()
-        .zip(&arrivals)
-        .map(|(a, &t)| (a.trace.blocks.len(), t))
-        .collect();
-
-    let exec = |with_ndp: bool, with_host: bool, vm: &mut VirtualMemory| -> EngineRaw {
-        let app_ctxs: Vec<AppCtx<'_>> = if with_ndp {
-            apps.iter()
-                .zip(&app_bases)
-                .map(|(a, b)| AppCtx {
-                    trace: &a.trace,
-                    obj_base: b.as_slice(),
-                })
-                .collect()
-        } else {
-            Vec::new()
-        };
-        let mut source = MultiKernelSource::new(
-            if with_ndp { launches.as_slice() } else { &[] },
-            cfg,
-            policy,
-            fairness,
-            None,
-        );
-        let host_stream = if with_host {
-            host.map(|h| HostStream {
-                trace: &h.trace,
-                obj_base: &host_bases,
-            })
-        } else {
-            None
-        };
-        Engine {
-            cfg,
-            apps: app_ctxs,
-            vm,
-            opts: EngineOptions {
-                l2_filter: false,
-                migrate_on_first_touch: false,
-            },
-            host: host_stream,
-        }
-        .run(&mut source)
-    };
-
-    let shared = exec(!apps.is_empty(), host_active, &mut vm);
-    // Run-alone baselines over the identical layout, only when both
-    // sources actually ran (otherwise shared *is* the run-alone case).
-    let both = host_active && !apps.is_empty();
-    let ndp_alone = both.then(|| exec(true, false, &mut vm));
-    let host_alone = both.then(|| exec(false, true, &mut vm));
-
-    let resp: Vec<f64> = (0..apps.len())
-        .map(|i| (shared.app_end[i] - arrivals[i]).max(0.0))
-        .collect();
-    let n = apps.len();
-    let (ndp_slowdown, host_slowdown, app_slowdown, weighted) =
-        match (&ndp_alone, &host_alone) {
-            (Some(na), Some(ha)) => {
-                let resp_alone: Vec<f64> = (0..n)
-                    .map(|i| (na.app_end[i] - arrivals[i]).max(0.0))
-                    .collect();
-                let ndp_sd = if na.end_time > 0.0 {
-                    shared.end_time / na.end_time
-                } else {
-                    1.0
-                };
-                let host_sd = if ha.host_end > 0.0 {
-                    shared.host_end / ha.host_end
-                } else {
-                    1.0
-                };
-                (
-                    ndp_sd,
-                    host_sd,
-                    stats::per_app_slowdown(&resp_alone, &resp),
-                    stats::weighted_speedup(&resp_alone, &resp),
-                )
-            }
-            // Only one source ran: nothing contended with it.
-            _ => (
-                if n > 0 { 1.0 } else { 0.0 },
-                if host_active { 1.0 } else { 0.0 },
-                vec![1.0; n],
-                n as f64,
-            ),
-        };
-
-    let ndp_names = apps.iter().map(|a| a.name).collect::<Vec<_>>().join("+");
-    // Only label a host co-runner that actually streamed (zero intensity
-    // must not claim a co-run it never executed).
-    let workload = match (if host_active { host } else { None }, ndp_names.is_empty()) {
-        (Some(h), true) => format!("host:{}", h.name),
-        (Some(h), false) => format!("{ndp_names}|host:{}", h.name),
-        (None, _) => ndp_names,
-    };
-    let mut report = shared.to_report(cfg, workload);
-    report.mechanism = format!("hostmix:{placement:?}+{policy:?}+{fairness}");
-    report.app_cycles = resp;
-    report.app_slowdown = app_slowdown;
-    report.weighted_speedup = weighted;
-    report.ndp_slowdown = ndp_slowdown;
-    report.host_slowdown = host_slowdown;
-    Ok(report)
+    Ok(Session::new(cfg.clone(), spec)?.run()?.run)
 }
 
 #[cfg(test)]
@@ -703,6 +302,10 @@ mod tests {
         assert_eq!(MixPlacement::parse("fgp"), Some(MixPlacement::FgpOnly));
         assert_eq!(MixPlacement::parse("cgp"), Some(MixPlacement::CgpLocal));
         assert_eq!(MixPlacement::parse("x"), None);
+        // Display round-trips through parse.
+        for p in [MixPlacement::FgpOnly, MixPlacement::CgpLocal] {
+            assert_eq!(MixPlacement::parse(&p.to_string()), Some(p));
+        }
     }
 
     #[test]

@@ -149,6 +149,163 @@ impl From<&RunReport> for Json {
     }
 }
 
+/// Validate that `text` is one syntactically well-formed JSON value
+/// (the RFC 8259 grammar, permissive only about leading zeros in
+/// numbers; no semantic checks). The writer above is hand rolled, so the
+/// test suite can assert every emitted report actually parses without an
+/// external JSON dependency.
+pub fn validate_json(text: &str) -> Result<(), String> {
+    let b = text.as_bytes();
+    let mut i = 0usize;
+    fn skip_ws(b: &[u8], i: &mut usize) {
+        while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+            *i += 1;
+        }
+    }
+    fn value(b: &[u8], i: &mut usize, depth: usize) -> Result<(), String> {
+        if depth > 128 {
+            return Err("nesting too deep".into());
+        }
+        skip_ws(b, i);
+        match b.get(*i) {
+            None => Err("unexpected end of input".into()),
+            Some(b'{') => {
+                *i += 1;
+                skip_ws(b, i);
+                if b.get(*i) == Some(&b'}') {
+                    *i += 1;
+                    return Ok(());
+                }
+                loop {
+                    skip_ws(b, i);
+                    string(b, i)?;
+                    skip_ws(b, i);
+                    if b.get(*i) != Some(&b':') {
+                        return Err(format!("expected ':' at byte {i}"));
+                    }
+                    *i += 1;
+                    value(b, i, depth + 1)?;
+                    skip_ws(b, i);
+                    match b.get(*i) {
+                        Some(b',') => *i += 1,
+                        Some(b'}') => {
+                            *i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(format!("expected ',' or '}}' at byte {i}")),
+                    }
+                }
+            }
+            Some(b'[') => {
+                *i += 1;
+                skip_ws(b, i);
+                if b.get(*i) == Some(&b']') {
+                    *i += 1;
+                    return Ok(());
+                }
+                loop {
+                    value(b, i, depth + 1)?;
+                    skip_ws(b, i);
+                    match b.get(*i) {
+                        Some(b',') => *i += 1,
+                        Some(b']') => {
+                            *i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(format!("expected ',' or ']' at byte {i}")),
+                    }
+                }
+            }
+            Some(b'"') => string(b, i),
+            Some(b't') => literal(b, i, "true"),
+            Some(b'f') => literal(b, i, "false"),
+            Some(b'n') => literal(b, i, "null"),
+            Some(c) if c.is_ascii_digit() || *c == b'-' => number(b, i),
+            Some(c) => Err(format!("unexpected byte {:?} at {i}", *c as char)),
+        }
+    }
+    fn literal(b: &[u8], i: &mut usize, word: &str) -> Result<(), String> {
+        if b[*i..].starts_with(word.as_bytes()) {
+            *i += word.len();
+            Ok(())
+        } else {
+            Err(format!("bad literal at byte {i}"))
+        }
+    }
+    fn string(b: &[u8], i: &mut usize) -> Result<(), String> {
+        if b.get(*i) != Some(&b'"') {
+            return Err(format!("expected string at byte {i}"));
+        }
+        *i += 1;
+        while let Some(&c) = b.get(*i) {
+            match c {
+                b'"' => {
+                    *i += 1;
+                    return Ok(());
+                }
+                b'\\' => {
+                    *i += 1;
+                    match b.get(*i) {
+                        Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => {
+                            *i += 1
+                        }
+                        Some(b'u') => {
+                            if b.len() < *i + 5
+                                || !b[*i + 1..*i + 5].iter().all(u8::is_ascii_hexdigit)
+                            {
+                                return Err(format!("bad \\u escape at byte {i}"));
+                            }
+                            *i += 5;
+                        }
+                        _ => return Err(format!("bad escape at byte {i}")),
+                    }
+                }
+                0x00..=0x1F => return Err(format!("raw control byte in string at {i}")),
+                _ => *i += 1,
+            }
+        }
+        Err("unterminated string".into())
+    }
+    fn number(b: &[u8], i: &mut usize) -> Result<(), String> {
+        let start = *i;
+        if b.get(*i) == Some(&b'-') {
+            *i += 1;
+        }
+        let digits = |b: &[u8], i: &mut usize| {
+            let s = *i;
+            while *i < b.len() && b[*i].is_ascii_digit() {
+                *i += 1;
+            }
+            *i > s
+        };
+        if !digits(b, i) {
+            return Err(format!("bad number at byte {start}"));
+        }
+        if b.get(*i) == Some(&b'.') {
+            *i += 1;
+            if !digits(b, i) {
+                return Err(format!("bad fraction at byte {start}"));
+            }
+        }
+        if matches!(b.get(*i), Some(b'e' | b'E')) {
+            *i += 1;
+            if matches!(b.get(*i), Some(b'+' | b'-')) {
+                *i += 1;
+            }
+            if !digits(b, i) {
+                return Err(format!("bad exponent at byte {start}"));
+            }
+        }
+        Ok(())
+    }
+    value(b, &mut i, 0)?;
+    skip_ws(b, &mut i);
+    if i != b.len() {
+        return Err(format!("trailing bytes after value at byte {i}"));
+    }
+    Ok(())
+}
+
 /// A fixed-width text table (the shape each figure's harness prints).
 #[derive(Debug, Default)]
 pub struct Table {
@@ -283,6 +440,51 @@ mod tests {
         assert!(s.contains(r#""ndp_slowdown":1.5"#));
         assert!(s.contains(r#""host_port_stalls":7"#));
         assert!(s.contains(r#""host_bw_share":0.4"#));
+    }
+
+    #[test]
+    fn validator_accepts_what_the_writer_emits() {
+        let mut o = Json::obj();
+        o.push("s", Json::Str("a\"b\\c\nd\u{1}".into()))
+            .push("n", Json::Num(-1.5e-3))
+            .push("i", Json::Num(42.0))
+            .push("inf", Json::Num(f64::INFINITY))
+            .push("b", Json::Bool(true))
+            .push(
+                "a",
+                Json::Arr(vec![Json::Null, Json::Obj(vec![]), Json::Arr(vec![])]),
+            );
+        validate_json(&o.render()).unwrap();
+        let r = RunReport {
+            workload: "PR".into(),
+            app_cycles: vec![1.0, 2.5],
+            app_slowdown: vec![1.0],
+            host_cycles: 3.0,
+            stack_bytes: vec![1, 2],
+            ..Default::default()
+        };
+        validate_json(&Json::from(&r).render()).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_malformed_json() {
+        for bad in [
+            "",
+            "{",
+            "{\"a\":1,}",
+            "[1 2]",
+            "{\"a\" 1}",
+            "\"unterminated",
+            "01x",
+            "1.2.3",
+            "{\"a\":1} trailing",
+            "nul",
+            "{\"a\":\"\\q\"}",
+        ] {
+            assert!(validate_json(bad).is_err(), "accepted {bad:?}");
+        }
+        validate_json("123").unwrap();
+        validate_json(" [1, -2.5e3, \"x\", null] ").unwrap();
     }
 
     #[test]

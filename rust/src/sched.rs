@@ -41,6 +41,17 @@ impl Policy {
     }
 }
 
+impl std::fmt::Display for Policy {
+    /// Canonical CLI/spec spelling (round-trips through [`Policy::parse`]).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Baseline => "baseline",
+            Self::Affinity => "affinity",
+            Self::AffinityStealing => "steal",
+        })
+    }
+}
+
 /// Inter-application arbitration for multi-kernel runs: when several
 /// co-resident kernels are eligible for a freed SM residency slot, the
 /// fairness policy decides whose block gets it. (The block-level

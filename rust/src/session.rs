@@ -1,0 +1,1399 @@
+//! Spec lowering: a [`Session`] turns one [`ExperimentSpec`] into one
+//! shared-engine run ([`crate::engine`]) and shapes the result into a
+//! [`Report`].
+//!
+//! This module owns everything the legacy entry points used to implement
+//! separately — the Fig-12 pinned dispatch, multi-kernel time-sharing with
+//! arrivals and fairness, the CHoNDA host co-run, the single-kernel
+//! coordinator pipeline (analysis → placement plan → mapped run), and the
+//! run-alone baseline orchestration behind every slowdown number.
+//! `Coordinator::run*`, `multiprog::run_mix/run_multi/run_hostmix` and
+//! `host::run_host_sweep` are thin wrappers that construct a spec and call
+//! in here; `tests/spec_equiv.rs` freezes their pre-redesign bodies as
+//! oracles and proves the lowering cycle-identical (bit-exact f64) for
+//! mechanisms × workloads × both DRAM backends.
+//!
+//! Lowering is deliberately *literal*: each dispatch mode reproduces its
+//! historical pipeline exactly — same mapping order, same block dispatch
+//! order, same report labels — because the equivalence guarantee is what
+//! lets every caller migrate to specs without re-validating results.
+
+use crate::analysis::{analyze_kernel, profile_trace, ObjectPattern};
+use crate::config::SystemConfig;
+use crate::coordinator::Mechanism;
+use crate::engine::{
+    AppCtx, BlockRef, BlockSource, Engine, EngineOptions, EngineRaw, HostStream,
+};
+use crate::gpu::{Sm, Topology};
+use crate::multiprog::{home_of, MixPlacement};
+use crate::placement::{self, PlacementPlan};
+use crate::report::Json;
+use crate::sched::{affinity_stack, FairnessPolicy, Policy};
+use crate::sim::{map_objects, KernelRun};
+use crate::spec::{Baselines, Dispatch, ExperimentSpec, WorkloadSel};
+use crate::stats::{self, RunReport};
+use crate::trace::KernelTrace;
+use crate::vm::VirtualMemory;
+use crate::workloads::{suite, BuiltWorkload};
+use anyhow::{bail, ensure};
+use std::collections::{HashMap, VecDeque};
+
+// ---------------------------------------------------------------------------
+// Report.
+// ---------------------------------------------------------------------------
+
+/// What kind of traffic a [`SourceReport`] row describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SourceKind {
+    /// An NDP kernel (thread-blocks on the stacks' SMs).
+    Ndp,
+    /// The host-processor request stream.
+    Host,
+}
+
+impl std::fmt::Display for SourceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Ndp => "ndp",
+            Self::Host => "host",
+        })
+    }
+}
+
+/// Per-source outcome of a session run.
+#[derive(Clone, Debug)]
+pub struct SourceReport {
+    pub kind: SourceKind,
+    pub workload: String,
+    /// Home stack (NDP kernels under pinned/shared dispatch).
+    pub home: Option<usize>,
+    /// Launch time in SM cycles.
+    pub arrival: f64,
+    /// Response cycles (completion − arrival; host: stream completion).
+    pub cycles: f64,
+    /// Slowdown vs the run-alone baseline, when one was computed
+    /// (`None` under `baselines = none` and for solo kernel runs).
+    pub slowdown: Option<f64>,
+}
+
+/// The structured result of one session run: the familiar [`RunReport`]
+/// (every field the legacy entry points produced) plus the per-source
+/// breakdown and the spec label. Derefs to [`RunReport`] so existing
+/// report consumers keep working unchanged.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// The spec's `name` label (sweep points get `key=value` appended).
+    pub spec_name: Option<String>,
+    /// One row per declared traffic source, NDP kernels first.
+    pub sources: Vec<SourceReport>,
+    /// The aggregate run report (superset semantics: identical to what
+    /// the matching legacy entry point returned).
+    pub run: RunReport,
+}
+
+impl std::ops::Deref for Report {
+    type Target = RunReport;
+
+    fn deref(&self) -> &RunReport {
+        &self.run
+    }
+}
+
+impl Report {
+    /// JSON rendering: the [`RunReport`] object extended with `spec`
+    /// (when the spec was named) and a `sources` array.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::from(&self.run);
+        if let Some(name) = &self.spec_name {
+            o.push("spec", Json::Str(name.clone()));
+        }
+        if !self.sources.is_empty() {
+            o.push(
+                "sources",
+                Json::Arr(
+                    self.sources
+                        .iter()
+                        .map(|s| {
+                            let mut so = Json::obj();
+                            so.push("kind", Json::Str(s.kind.to_string()))
+                                .push("workload", Json::Str(s.workload.clone()))
+                                .push(
+                                    "home",
+                                    match s.home {
+                                        Some(h) => Json::Num(h as f64),
+                                        None => Json::Null,
+                                    },
+                                )
+                                .push("arrival", Json::Num(s.arrival))
+                                .push("cycles", Json::Num(s.cycles));
+                            if let Some(sd) = s.slowdown {
+                                so.push("slowdown", Json::Num(sd));
+                            }
+                            so
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        o
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Placement planning (moved from `Coordinator`; it delegates here).
+// ---------------------------------------------------------------------------
+
+/// Build the per-object placement plan a mechanism uses for a workload:
+/// compile-time symbolic analysis where IR exists, the §4.3.2 trace
+/// profiler for the rest.
+pub fn plan_for_mechanism(
+    cfg: &SystemConfig,
+    wl: &BuiltWorkload,
+    mech: Mechanism,
+) -> PlacementPlan {
+    let n = wl.trace.objects.len();
+    match mech {
+        Mechanism::FgpOnly | Mechanism::FgpAffinity => PlacementPlan::all_fgp(n),
+        Mechanism::CgpOnly => placement::cgp_only_plan(n, cfg),
+        Mechanism::CgpFta => placement::fta_plan(&wl.trace, cfg),
+        Mechanism::MigrationFta => placement::migration_fta_plan(n),
+        Mechanism::Coda | Mechanism::CodaStealing => {
+            let compile: HashMap<u16, ObjectPattern> = wl
+                .ir
+                .as_ref()
+                .map(|ir| analyze_kernel(ir, &wl.env))
+                .unwrap_or_default();
+            // The profiler sees a trace sample, as a real profiling run
+            // would.
+            let profile =
+                profile_trace(&wl.trace, cfg.page_size, |b| affinity_stack(b, cfg));
+            placement::coda_plan(n, &compile, &profile, cfg)
+        }
+    }
+}
+
+/// Fraction of a workload's accesses that land on objects the plan
+/// localizes (CGP or page-overridden) — the §6.4 no-degradation test.
+fn localizable_traffic(wl: &BuiltWorkload, plan: &PlacementPlan) -> f64 {
+    let mut per_obj = vec![0u64; wl.trace.objects.len()];
+    for b in &wl.trace.blocks {
+        for a in &b.accesses {
+            per_obj[a.obj as usize] += 1;
+        }
+    }
+    let total: u64 = per_obj.iter().sum();
+    let localized: u64 = per_obj
+        .iter()
+        .enumerate()
+        .filter(|(o, _)| !matches!(plan.per_object[*o], placement::Placement::Fgp))
+        .map(|(_, n)| *n)
+        .sum();
+    if total == 0 {
+        0.0
+    } else {
+        localized as f64 / total as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workload resolution.
+// ---------------------------------------------------------------------------
+
+/// A resolved traffic-source workload: suite-built (owned) or borrowed
+/// from the caller through the spec.
+enum Wl<'x> {
+    Owned(Box<BuiltWorkload>),
+    Borrowed(&'x BuiltWorkload),
+    RawTrace(&'x KernelTrace),
+}
+
+impl Wl<'_> {
+    fn resolve<'x>(sel: &WorkloadSel<'x>, cfg: &SystemConfig) -> crate::Result<Wl<'x>> {
+        Ok(match *sel {
+            WorkloadSel::Named(n) => Wl::Owned(suite::build(n, cfg)?),
+            WorkloadSel::Prebuilt(w) => Wl::Borrowed(w),
+            WorkloadSel::Trace(t) => Wl::RawTrace(t),
+        })
+    }
+
+    fn built(&self) -> crate::Result<&BuiltWorkload> {
+        match self {
+            Wl::Owned(b) => Ok(b),
+            Wl::Borrowed(w) => Ok(w),
+            Wl::RawTrace(_) => bail!(
+                "a kernel source needs a built workload; bare traces are only \
+                 valid for the host stream"
+            ),
+        }
+    }
+
+    fn trace(&self) -> &KernelTrace {
+        match self {
+            Wl::Owned(b) => &b.trace,
+            Wl::Borrowed(w) => &w.trace,
+            Wl::RawTrace(t) => t,
+        }
+    }
+
+    fn name(&self) -> &str {
+        match self {
+            Wl::Owned(b) => b.name,
+            Wl::Borrowed(w) => w.name,
+            Wl::RawTrace(t) => &t.name,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Block sources (moved from `multiprog`, parameterized by home stacks).
+// ---------------------------------------------------------------------------
+
+/// [`BlockSource`] reproducing the historical `run_mix` dispatch exactly:
+/// app `i`'s blocks run only on its home stack's SMs, in launch order,
+/// and a retiring block's slot refills from the same app.
+struct PinnedSource {
+    next_block: Vec<usize>,
+    num_blocks: Vec<usize>,
+    homes: Vec<usize>,
+}
+
+impl BlockSource for PinnedSource {
+    fn seed(&mut self, topo: &Topology, place: &mut dyn FnMut(usize, usize, BlockRef)) {
+        // Seed each app's home-stack SM slots.
+        for app in 0..self.num_blocks.len() {
+            let sms: Vec<usize> = topo.sms_of_stack(self.homes[app]).map(|s| s.id).collect();
+            let capacity = sms.len() * topo.blocks_per_sm;
+            for slot in 0..capacity {
+                if self.next_block[app] >= self.num_blocks[app] {
+                    break;
+                }
+                let b = self.next_block[app];
+                self.next_block[app] += 1;
+                place(
+                    sms[slot % sms.len()],
+                    slot / sms.len(),
+                    BlockRef {
+                        app: app as u32,
+                        block: b as u32,
+                    },
+                );
+            }
+        }
+    }
+
+    fn refill(&mut self, _sm: Sm, retired: Option<BlockRef>, _now: f64) -> Option<BlockRef> {
+        let app = retired?.app as usize;
+        if self.next_block[app] < self.num_blocks[app] {
+            let b = self.next_block[app];
+            self.next_block[app] += 1;
+            Some(BlockRef {
+                app: app as u32,
+                block: b as u32,
+            })
+        } else {
+            None
+        }
+    }
+}
+
+/// [`BlockSource`] for multi-kernel scheduling: per-app FIFO block
+/// queues, arrival times, home stacks, and the fairness arbiter.
+struct SharedSource {
+    queues: Vec<VecDeque<u32>>,
+    arrival: Vec<f64>,
+    home: Vec<usize>,
+    policy: Policy,
+    fairness: FairnessPolicy,
+    issued: Vec<u64>,
+    rr_cursor: usize,
+}
+
+impl SharedSource {
+    fn new(
+        launches: &[(usize, f64)], // (num_blocks, arrival) per app
+        homes: &[usize],
+        policy: Policy,
+        fairness: FairnessPolicy,
+        only_app: Option<usize>,
+    ) -> Self {
+        let queues = launches
+            .iter()
+            .enumerate()
+            .map(|(i, &(n, _))| {
+                if only_app.is_some_and(|o| o != i) {
+                    VecDeque::new()
+                } else {
+                    (0..n as u32).collect()
+                }
+            })
+            .collect();
+        Self {
+            queues,
+            arrival: launches.iter().map(|&(_, t)| t).collect(),
+            home: homes.to_vec(),
+            policy,
+            fairness,
+            issued: vec![0; launches.len()],
+            rr_cursor: 0,
+        }
+    }
+
+    /// Apps with pending blocks that have arrived by `now` and whose
+    /// blocks may run on `stack` under the block-level policy.
+    fn eligible(&self, stack: usize, now: f64) -> Vec<usize> {
+        let arrived: Vec<usize> = (0..self.queues.len())
+            .filter(|&i| !self.queues[i].is_empty() && self.arrival[i] <= now)
+            .collect();
+        match self.policy {
+            Policy::Baseline => arrived,
+            Policy::Affinity => arrived
+                .into_iter()
+                .filter(|&i| self.home[i] == stack)
+                .collect(),
+            Policy::AffinityStealing => {
+                let homed: Vec<usize> = arrived
+                    .iter()
+                    .copied()
+                    .filter(|&i| self.home[i] == stack)
+                    .collect();
+                if homed.is_empty() {
+                    arrived
+                } else {
+                    homed
+                }
+            }
+        }
+    }
+
+    fn pick(&mut self, stack: usize, now: f64) -> Option<BlockRef> {
+        let elig = self.eligible(stack, now);
+        if elig.is_empty() {
+            return None;
+        }
+        let app = match self.fairness {
+            FairnessPolicy::Fcfs => elig.into_iter().min_by(|&a, &b| {
+                self.arrival[a]
+                    .partial_cmp(&self.arrival[b])
+                    .expect("arrival times are finite")
+                    .then(a.cmp(&b))
+            })?,
+            FairnessPolicy::RoundRobin => {
+                let n = self.queues.len();
+                (1..=n)
+                    .map(|k| (self.rr_cursor + k) % n)
+                    .find(|i| elig.contains(i))?
+            }
+            FairnessPolicy::LeastIssued => elig.into_iter().min_by_key(|&i| (self.issued[i], i))?,
+        };
+        self.rr_cursor = app;
+        self.issued[app] += 1;
+        let block = self.queues[app].pop_front()?;
+        Some(BlockRef {
+            app: app as u32,
+            block,
+        })
+    }
+}
+
+impl BlockSource for SharedSource {
+    fn seed(&mut self, topo: &Topology, place: &mut dyn FnMut(usize, usize, BlockRef)) {
+        // Breadth-first over SMs, as in the single-kernel path; only
+        // already-arrived apps participate at t=0.
+        for slot in 0..topo.blocks_per_sm {
+            for sm in &topo.sms {
+                if let Some(br) = self.pick(sm.stack, 0.0) {
+                    place(sm.id, slot, br);
+                }
+            }
+        }
+    }
+
+    fn refill(&mut self, sm: Sm, _retired: Option<BlockRef>, now: f64) -> Option<BlockRef> {
+        self.pick(sm.stack, now)
+    }
+
+    fn next_arrival_after(&self, now: f64) -> Option<f64> {
+        self.queues
+            .iter()
+            .zip(&self.arrival)
+            .filter(|(q, &t)| !q.is_empty() && t > now)
+            .map(|(_, &t)| t)
+            .fold(None, |m, t| {
+                Some(match m {
+                    None => t,
+                    Some(m) => m.min(t),
+                })
+            })
+    }
+}
+
+/// One engine execution of a shared-dispatch layout: the NDP kernels in
+/// `launches` (optionally restricted to `only_app`) co-running with an
+/// optional host stream. Every shared/pinned baseline and co-run goes
+/// through here, so they share the event-loop physics by construction.
+#[allow(clippy::too_many_arguments)]
+fn exec_shared(
+    cfg: &SystemConfig,
+    apps: &[&BuiltWorkload],
+    app_bases: &[Vec<u64>],
+    launches: &[(usize, f64)],
+    homes: &[usize],
+    policy: Policy,
+    fairness: FairnessPolicy,
+    only_app: Option<usize>,
+    host: Option<HostStream<'_>>,
+    vm: &mut VirtualMemory,
+) -> EngineRaw {
+    let app_ctxs: Vec<AppCtx<'_>> = apps
+        .iter()
+        .zip(app_bases)
+        .map(|(a, b)| AppCtx {
+            trace: &a.trace,
+            obj_base: b.as_slice(),
+        })
+        .collect();
+    let mut source = SharedSource::new(launches, homes, policy, fairness, only_app);
+    Engine {
+        cfg,
+        apps: app_ctxs,
+        vm,
+        opts: EngineOptions {
+            // The multiprogrammed paths have never modelled the L2
+            // filter; keeping it off preserves the historical cycles.
+            l2_filter: false,
+            migrate_on_first_touch: false,
+        },
+        host,
+    }
+    .run(&mut source)
+}
+
+// ---------------------------------------------------------------------------
+// Session.
+// ---------------------------------------------------------------------------
+
+/// A validated, runnable experiment: the spec plus its fully-resolved
+/// system configuration and dispatch mode.
+pub struct Session<'a> {
+    spec: ExperimentSpec<'a>,
+    cfg: SystemConfig,
+    dispatch: Dispatch,
+    baselines: Baselines,
+}
+
+impl<'a> Session<'a> {
+    /// Resolve `spec` against `base`: apply the `[system]` and host
+    /// overrides, settle `auto` dispatch/baselines, and validate the spec
+    /// shape. The config is re-validated only when the spec modified it —
+    /// a pristine base config is the caller's responsibility, exactly as
+    /// it was for the legacy entry points.
+    pub fn new(base: SystemConfig, spec: ExperimentSpec<'a>) -> crate::Result<Session<'a>> {
+        let mut cfg = base;
+        for (k, v) in &spec.overrides {
+            cfg.set(k, v)?;
+        }
+        let mut modified = !spec.overrides.is_empty();
+        if let Some(h) = &spec.host {
+            if let Some(m) = h.mlp {
+                cfg.host_mlp = m;
+            }
+            if let Some(p) = h.passes {
+                cfg.host_passes = p;
+            }
+            if let Some(f) = h.ddr_fraction {
+                cfg.host_ddr_fraction = f;
+            }
+            modified |= h.mlp.is_some() || h.passes.is_some() || h.ddr_fraction.is_some();
+        }
+        if modified {
+            cfg.validate()?;
+        }
+
+        let dispatch = match spec.dispatch {
+            Dispatch::Auto => {
+                if spec.host.is_none()
+                    && spec.kernels.len() == 1
+                    && spec.kernels[0].mechanism.is_some()
+                {
+                    Dispatch::Kernel
+                } else {
+                    Dispatch::Shared
+                }
+            }
+            d => d,
+        };
+        // Kernel and pinned dispatch never ran baselines historically, so
+        // `auto` resolves to `none` there; an *explicit* solo/host-split
+        // request on those dispatches is rejected below rather than
+        // silently dropped.
+        let baselines = match (spec.output.baselines, dispatch) {
+            (Baselines::Auto, Dispatch::Kernel | Dispatch::Pinned) => Baselines::None,
+            (Baselines::Auto, _) => {
+                if spec.host.is_some() {
+                    Baselines::HostSplit
+                } else {
+                    Baselines::Solo
+                }
+            }
+            (b, _) => b,
+        };
+
+        // Shape validation. A spec that cannot mean what it says is a
+        // hard error — lowering never silently drops a field.
+        for (i, k) in spec.kernels.iter().enumerate() {
+            ensure!(
+                !matches!(k.workload, WorkloadSel::Trace(_)),
+                "kernel {i}: bare traces are only valid for the host stream"
+            );
+            ensure!(
+                k.arrival >= 0.0 && k.arrival.is_finite(),
+                "arrival time of app {i} must be a non-negative real, got {}",
+                k.arrival
+            );
+            if let Some(h) = k.home {
+                ensure!(
+                    h < cfg.num_stacks,
+                    "kernel {i}: home stack {h} out of range (num_stacks = {})",
+                    cfg.num_stacks
+                );
+            }
+        }
+        match dispatch {
+            Dispatch::Kernel => {
+                ensure!(
+                    spec.kernels.len() == 1,
+                    "kernel dispatch runs exactly one kernel, got {}",
+                    spec.kernels.len()
+                );
+                ensure!(
+                    spec.host.is_none(),
+                    "kernel dispatch cannot co-run a host stream; use shared dispatch"
+                );
+                let k = &spec.kernels[0];
+                ensure!(
+                    k.arrival == 0.0 && k.home.is_none() && k.placement.is_none(),
+                    "kernel dispatch takes its placement from the mechanism; \
+                     arrival/home/placement overrides do not apply"
+                );
+                ensure!(
+                    baselines == Baselines::None,
+                    "kernel dispatch runs no baselines; remove the explicit \
+                     baselines = {baselines} (or use shared dispatch)"
+                );
+            }
+            Dispatch::Pinned => {
+                ensure!(
+                    spec.kernels.len() <= cfg.num_stacks,
+                    "pinned dispatch pins one app per stack ({} apps > {} stacks); \
+                     use shared dispatch for oversubscribed mixes",
+                    spec.kernels.len(),
+                    cfg.num_stacks
+                );
+                ensure!(
+                    spec.host.is_none(),
+                    "pinned dispatch cannot co-run a host stream; use shared dispatch"
+                );
+                let mut seen = vec![false; cfg.num_stacks];
+                for (i, k) in spec.kernels.iter().enumerate() {
+                    ensure!(
+                        k.mechanism.is_none(),
+                        "kernel {i}: mechanism only applies to kernel dispatch"
+                    );
+                    ensure!(
+                        k.arrival == 0.0,
+                        "pinned dispatch launches every app at t=0 (kernel {i} \
+                         arrives at {}); use shared dispatch for staggered mixes",
+                        k.arrival
+                    );
+                    let home = k.home.unwrap_or_else(|| home_of(i, &cfg));
+                    ensure!(
+                        !seen[home],
+                        "pinned dispatch needs distinct home stacks (stack {home} \
+                         is claimed twice)"
+                    );
+                    seen[home] = true;
+                }
+                ensure!(
+                    baselines == Baselines::None,
+                    "pinned dispatch runs no baselines; remove the explicit \
+                     baselines = {baselines} (or use shared dispatch)"
+                );
+            }
+            Dispatch::Shared => {
+                ensure!(
+                    !spec.kernels.is_empty() || spec.host.is_some(),
+                    "an experiment needs at least one traffic source (an NDP \
+                     kernel or a host stream)"
+                );
+                for (i, k) in spec.kernels.iter().enumerate() {
+                    ensure!(
+                        k.mechanism.is_none(),
+                        "kernel {i}: mechanism only applies to kernel dispatch \
+                         (use placement = fgp|cgp for mixes)"
+                    );
+                }
+                ensure!(
+                    !(baselines == Baselines::Solo && spec.host.is_some()),
+                    "solo baselines compare NDP apps against each other and \
+                     cannot apply to a host co-run; use host-split or none"
+                );
+            }
+            Dispatch::Auto => unreachable!("dispatch was resolved above"),
+        }
+        Ok(Session {
+            spec,
+            cfg,
+            dispatch,
+            baselines,
+        })
+    }
+
+    /// The fully-resolved system configuration this session runs under.
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// The resolved dispatch mode (`auto` settled).
+    pub fn dispatch(&self) -> Dispatch {
+        self.dispatch
+    }
+
+    /// Lower the spec and run it to completion.
+    pub fn run(&self) -> crate::Result<Report> {
+        match self.dispatch {
+            Dispatch::Kernel => self.run_kernel(),
+            Dispatch::Pinned => self.run_pinned(),
+            Dispatch::Shared => self.run_shared(),
+            Dispatch::Auto => unreachable!("dispatch was resolved in Session::new"),
+        }
+    }
+
+    /// Default mix placement of kernel `i` (spec default + override).
+    fn placement_of(&self, i: usize) -> MixPlacement {
+        self.spec.kernels[i].placement.unwrap_or(self.spec.placement)
+    }
+
+    /// Home stack of kernel `i` (wraps round-robin unless overridden).
+    fn home_stack(&self, i: usize) -> usize {
+        self.spec.kernels[i]
+            .home
+            .unwrap_or_else(|| home_of(i, &self.cfg))
+    }
+
+    fn fairness(&self) -> FairnessPolicy {
+        self.spec.fairness.unwrap_or(self.cfg.mix_fairness)
+    }
+
+    /// Map every kernel's objects into one shared physical memory
+    /// (per-app virtual bases), each app on its home stack. Both joint
+    /// runs and run-alone baselines use this, so physical layout — and
+    /// therefore bank/row behaviour — is identical between them.
+    fn map_kernels(
+        &self,
+        apps: &[&BuiltWorkload],
+    ) -> crate::Result<(VirtualMemory, Vec<Vec<u64>>)> {
+        let cfg = &self.cfg;
+        let mut vm = VirtualMemory::new(cfg);
+        let mut app_bases: Vec<Vec<u64>> = Vec::new();
+        for (i, app) in apps.iter().enumerate() {
+            let home = self.home_stack(i);
+            let mut bases = Vec::new();
+            for obj in &app.trace.objects {
+                let pages = obj.bytes.div_ceil(cfg.page_size).max(1);
+                let base = match self.placement_of(i) {
+                    MixPlacement::FgpOnly => vm.map_fgp(pages)?,
+                    MixPlacement::CgpLocal => vm.map_cgp(pages, |_| home)?,
+                };
+                bases.push(base);
+            }
+            app_bases.push(bases);
+        }
+        Ok((vm, app_bases))
+    }
+
+    /// The single-kernel coordinator pipeline: analysis-driven placement
+    /// plan, §6.4 no-degradation fallback, mapped run with the L2 filter
+    /// and (for migration baselines) first-touch page migration.
+    fn run_kernel(&self) -> crate::Result<Report> {
+        let cfg = &self.cfg;
+        let k = &self.spec.kernels[0];
+        let wl = Wl::resolve(&k.workload, cfg)?;
+        let wl = wl.built()?;
+        let mech = k.mechanism.unwrap_or(Mechanism::Coda);
+        let mut plan = plan_for_mechanism(cfg, wl, mech);
+        let mut policy = mech.policy();
+        // §6.4's no-degradation guarantee: when nothing meaningful is
+        // localizable, CODA's plan degenerates to the baseline's — all-FGP
+        // placement with unrestricted scheduling — so sharing-dominated
+        // workloads behave exactly like FGP-Only.
+        if matches!(mech, Mechanism::Coda | Mechanism::CodaStealing)
+            && localizable_traffic(wl, &plan) < 0.05
+        {
+            plan = PlacementPlan::all_fgp(wl.trace.objects.len());
+            policy = Policy::Baseline;
+        }
+        let (mut vm, bases, cgp_pages, fgp_pages) = map_objects(cfg, &wl.trace, &plan)?;
+        let mut report = KernelRun {
+            cfg,
+            trace: &wl.trace,
+            vm: &mut vm,
+            obj_base: &bases,
+            policy,
+            migrate_on_first_touch: plan.migrate_on_first_touch,
+        }
+        .run();
+        report.mechanism = mech.name().into();
+        report.cgp_pages = cgp_pages;
+        report.fgp_pages = fgp_pages;
+        Ok(Report {
+            spec_name: self.spec.name.clone(),
+            sources: vec![SourceReport {
+                kind: SourceKind::Ndp,
+                workload: wl.name.to_string(),
+                home: None,
+                arrival: 0.0,
+                cycles: report.cycles,
+                slowdown: None,
+            }],
+            run: report,
+        })
+    }
+
+    /// The Fig-12 pinned mix: app `i` runs only on its home stack's SMs.
+    fn run_pinned(&self) -> crate::Result<Report> {
+        let cfg = &self.cfg;
+        let wls: Vec<Wl<'_>> = self
+            .spec
+            .kernels
+            .iter()
+            .map(|k| Wl::resolve(&k.workload, cfg))
+            .collect::<crate::Result<_>>()?;
+        let apps: Vec<&BuiltWorkload> =
+            wls.iter().map(|w| w.built()).collect::<crate::Result<_>>()?;
+        let homes: Vec<usize> = (0..apps.len()).map(|i| self.home_stack(i)).collect();
+        let (mut vm, app_bases) = self.map_kernels(&apps)?;
+        let app_ctxs: Vec<AppCtx<'_>> = apps
+            .iter()
+            .zip(&app_bases)
+            .map(|(a, b)| AppCtx {
+                trace: &a.trace,
+                obj_base: b.as_slice(),
+            })
+            .collect();
+        let mut source = PinnedSource {
+            next_block: vec![0; apps.len()],
+            num_blocks: apps.iter().map(|a| a.trace.blocks.len()).collect(),
+            homes: homes.clone(),
+        };
+        let raw = Engine {
+            cfg,
+            apps: app_ctxs,
+            vm: &mut vm,
+            opts: EngineOptions {
+                l2_filter: false,
+                migrate_on_first_touch: false,
+            },
+            host: None,
+        }
+        .run(&mut source);
+        let mut report = raw.to_report(
+            cfg,
+            apps.iter().map(|a| a.name).collect::<Vec<_>>().join("+"),
+        );
+        report.mechanism = format!("{:?}", self.spec.placement);
+        report.app_cycles = raw.app_end.clone();
+        let sources = apps
+            .iter()
+            .enumerate()
+            .map(|(i, a)| SourceReport {
+                kind: SourceKind::Ndp,
+                workload: a.name.to_string(),
+                home: Some(homes[i]),
+                arrival: 0.0,
+                cycles: raw.app_end[i],
+                slowdown: None,
+            })
+            .collect();
+        Ok(Report {
+            spec_name: self.spec.name.clone(),
+            sources,
+            run: report,
+        })
+    }
+
+    /// General shared dispatch: the multi-kernel mix (time-shared SMs,
+    /// arrivals, fairness) optionally co-running the host stream, plus
+    /// whichever run-alone baselines the spec requested.
+    fn run_shared(&self) -> crate::Result<Report> {
+        let cfg = &self.cfg;
+        let policy = self.spec.policy;
+        let fairness = self.fairness();
+        let wls: Vec<Wl<'_>> = self
+            .spec
+            .kernels
+            .iter()
+            .map(|k| Wl::resolve(&k.workload, cfg))
+            .collect::<crate::Result<_>>()?;
+        let apps: Vec<&BuiltWorkload> =
+            wls.iter().map(|w| w.built()).collect::<crate::Result<_>>()?;
+        let arrivals: Vec<f64> = self.spec.kernels.iter().map(|k| k.arrival).collect();
+        let homes: Vec<usize> = (0..apps.len()).map(|i| self.home_stack(i)).collect();
+        let host_wl = match &self.spec.host {
+            Some(h) => Some(Wl::resolve(&h.workload, cfg)?),
+            None => None,
+        };
+        let host_active =
+            host_wl.is_some() && cfg.host_mlp > 0 && cfg.host_passes > 0;
+
+        // Shared physical layout: NDP apps first (identical to the
+        // NDP-only layout), host objects after, fine-grain interleaved
+        // (FGP is the host's preferred granularity, Fig 13).
+        let (mut vm, app_bases) = self.map_kernels(&apps)?;
+        let host_bases: Vec<u64> = match &host_wl {
+            Some(h) => {
+                let t = h.trace();
+                let mut bases = Vec::with_capacity(t.objects.len());
+                for obj in &t.objects {
+                    let pages = obj.bytes.div_ceil(cfg.page_size).max(1);
+                    bases.push(vm.map_fgp(pages)?);
+                }
+                bases
+            }
+            None => Vec::new(),
+        };
+        let launches: Vec<(usize, f64)> = apps
+            .iter()
+            .zip(&arrivals)
+            .map(|(a, &t)| (a.trace.blocks.len(), t))
+            .collect();
+        let host_stream = if host_active {
+            host_wl.as_ref().map(|h| HostStream {
+                trace: h.trace(),
+                obj_base: &host_bases,
+            })
+        } else {
+            None
+        };
+
+        let shared = exec_shared(
+            cfg,
+            &apps,
+            &app_bases,
+            &launches,
+            &homes,
+            policy,
+            fairness,
+            None,
+            host_stream,
+            &mut vm,
+        );
+        let n = apps.len();
+        let resp = stats::response_times(&shared.app_end, &arrivals);
+
+        // Labels. The host co-runner is only named when it actually
+        // streamed (zero intensity must not claim a co-run it never
+        // executed).
+        let ndp_names = apps.iter().map(|a| a.name).collect::<Vec<_>>().join("+");
+        // The hostmix flavor (label + degenerate-slowdown semantics) is
+        // what run_hostmix always reported, even with no host declared.
+        let hostmix_flavor =
+            self.spec.host.is_some() || self.baselines == Baselines::HostSplit;
+        let workload = match (
+            if host_active { host_wl.as_ref() } else { None },
+            ndp_names.is_empty(),
+        ) {
+            (Some(h), true) => format!("host:{}", h.name()),
+            (Some(h), false) => format!("{ndp_names}|host:{}", h.name()),
+            (None, _) => ndp_names,
+        };
+        let mut report = shared.to_report(cfg, workload);
+        report.mechanism = if hostmix_flavor {
+            format!("hostmix:{:?}+{policy:?}+{fairness}", self.spec.placement)
+        } else {
+            format!("{:?}+{policy:?}+{fairness}", self.spec.placement)
+        };
+
+        let mut app_slowdown: Option<Vec<f64>> = None;
+        match self.baselines {
+            Baselines::Solo => {
+                // Run-alone baselines: identical mapping (all apps'
+                // objects placed), only app i's blocks execute, so the
+                // only delta is app-vs-app contention.
+                let launches_zero: Vec<(usize, f64)> =
+                    launches.iter().map(|&(b, _)| (b, 0.0)).collect();
+                let mut solo = Vec::with_capacity(n);
+                for i in 0..n {
+                    let (mut vm_i, bases_i) = self.map_kernels(&apps)?;
+                    let raw = exec_shared(
+                        cfg,
+                        &apps,
+                        &bases_i,
+                        &launches_zero,
+                        &homes,
+                        policy,
+                        fairness,
+                        Some(i),
+                        None,
+                        &mut vm_i,
+                    );
+                    solo.push(raw.app_end[i]);
+                }
+                report.app_slowdown = stats::per_app_slowdown(&solo, &resp);
+                report.weighted_speedup = stats::weighted_speedup(&solo, &resp);
+                app_slowdown = Some(report.app_slowdown.clone());
+            }
+            Baselines::HostSplit => {
+                // Each side vs itself running alone on the identical
+                // layout, only when both sources actually ran (otherwise
+                // the shared run *is* the run-alone case).
+                let both = host_active && !apps.is_empty();
+                let ndp_alone = both.then(|| {
+                    exec_shared(
+                        cfg, &apps, &app_bases, &launches, &homes, policy, fairness,
+                        None, None, &mut vm,
+                    )
+                });
+                let host_alone = both.then(|| {
+                    exec_shared(
+                        cfg,
+                        &[],
+                        &[],
+                        &[],
+                        &[],
+                        policy,
+                        fairness,
+                        None,
+                        host_stream,
+                        &mut vm,
+                    )
+                });
+                let (ndp_sd, host_sd, app_sd, weighted) = match (&ndp_alone, &host_alone)
+                {
+                    (Some(na), Some(ha)) => {
+                        let resp_alone = stats::response_times(&na.app_end, &arrivals);
+                        let ndp_sd = if na.end_time > 0.0 {
+                            shared.end_time / na.end_time
+                        } else {
+                            1.0
+                        };
+                        let host_sd = if ha.host_end > 0.0 {
+                            shared.host_end / ha.host_end
+                        } else {
+                            1.0
+                        };
+                        (
+                            ndp_sd,
+                            host_sd,
+                            stats::per_app_slowdown(&resp_alone, &resp),
+                            stats::weighted_speedup(&resp_alone, &resp),
+                        )
+                    }
+                    // Only one source ran: nothing contended with it.
+                    _ => (
+                        if n > 0 { 1.0 } else { 0.0 },
+                        if host_active { 1.0 } else { 0.0 },
+                        vec![1.0; n],
+                        n as f64,
+                    ),
+                };
+                report.app_slowdown = app_sd;
+                report.weighted_speedup = weighted;
+                report.ndp_slowdown = ndp_sd;
+                report.host_slowdown = host_sd;
+                app_slowdown = Some(report.app_slowdown.clone());
+            }
+            Baselines::None => {}
+            Baselines::Auto => unreachable!("baselines were resolved in Session::new"),
+        }
+        report.app_cycles = resp.clone();
+
+        let mut sources: Vec<SourceReport> = apps
+            .iter()
+            .enumerate()
+            .map(|(i, a)| SourceReport {
+                kind: SourceKind::Ndp,
+                workload: a.name.to_string(),
+                home: Some(homes[i]),
+                arrival: arrivals[i],
+                cycles: resp[i],
+                slowdown: app_slowdown.as_ref().map(|s| s[i]),
+            })
+            .collect();
+        if let Some(h) = &host_wl {
+            // The row is emitted whenever the spec declared a host (so
+            // table shapes are stable), but a stream that never ran
+            // (zero intensity) reports no slowdown rather than a phantom
+            // 0.0 co-run figure.
+            sources.push(SourceReport {
+                kind: SourceKind::Host,
+                workload: h.name().to_string(),
+                home: None,
+                arrival: 0.0,
+                cycles: report.host_cycles,
+                slowdown: (host_active && self.baselines != Baselines::None)
+                    .then_some(report.host_slowdown),
+            });
+        }
+        Ok(Report {
+            spec_name: self.spec.name.clone(),
+            sources,
+            run: report,
+        })
+    }
+
+    /// Legacy host-sweep seam: run the spec's host stream over a layout
+    /// the caller already mapped (`vm` + per-object `obj_base`), exactly
+    /// as `host::run_host_sweep` always did. The spec must declare a host
+    /// stream and no kernels.
+    pub fn run_host_in(
+        &self,
+        vm: &mut VirtualMemory,
+        obj_base: &[u64],
+    ) -> crate::Result<Report> {
+        ensure!(
+            self.spec.kernels.is_empty() && self.spec.host.is_some(),
+            "run_host_in runs a host-only spec over an external layout"
+        );
+        let cfg = &self.cfg;
+        let host_wl = Wl::resolve(&self.spec.host.as_ref().expect("checked").workload, cfg)?;
+        let raw = exec_shared(
+            cfg,
+            &[],
+            &[],
+            &[],
+            &[],
+            self.spec.policy,
+            self.fairness(),
+            None,
+            Some(HostStream {
+                trace: host_wl.trace(),
+                obj_base,
+            }),
+            vm,
+        );
+        let mut report = raw.to_report(cfg, host_wl.name().to_string());
+        report.mechanism = "host".into();
+        let sources = vec![SourceReport {
+            kind: SourceKind::Host,
+            workload: host_wl.name().to_string(),
+            home: None,
+            arrival: 0.0,
+            cycles: report.host_cycles,
+            slowdown: None,
+        }];
+        Ok(Report {
+            spec_name: self.spec.name.clone(),
+            sources,
+            run: report,
+        })
+    }
+}
+
+/// Run a spec end to end, expanding its `[sweep]` section: one [`Report`]
+/// per sweep value (a single report without one). Each sweep point reruns
+/// the whole spec with `key = value` appended to its `[system]` overrides
+/// and the point recorded in the report's `spec` label — this is what
+/// makes parameter sweeps batchable from one file.
+pub fn run_spec<'a>(
+    base: &SystemConfig,
+    spec: &ExperimentSpec<'a>,
+) -> crate::Result<Vec<Report>> {
+    match &spec.sweep {
+        None => Ok(vec![Session::new(base.clone(), spec.clone())?.run()?]),
+        Some(sw) => {
+            let mut out = Vec::with_capacity(sw.values.len());
+            for v in &sw.values {
+                let mut point = spec.clone();
+                point.sweep = None;
+                point.overrides.push((sw.key.clone(), v.clone()));
+                point.name = Some(match &spec.name {
+                    Some(n) => format!("{n}[{}={v}]", sw.key),
+                    None => format!("{}={v}", sw.key),
+                });
+                out.push(Session::new(base.clone(), point)?.run()?);
+            }
+            Ok(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::{HostSpec, KernelSpec, OutputSpec, SweepSpec};
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::test_small()
+    }
+
+    #[test]
+    fn auto_dispatch_and_baselines_resolve() {
+        let k = ExperimentSpec::kernel(WorkloadSel::Named("NN"), Mechanism::Coda);
+        let mut auto = k.clone();
+        auto.dispatch = Dispatch::Auto;
+        let s = Session::new(cfg(), auto).unwrap();
+        assert_eq!(s.dispatch(), Dispatch::Kernel);
+        let mix = ExperimentSpec::shared(
+            vec![(WorkloadSel::Named("NN"), 0.0)],
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        let s = Session::new(cfg(), mix).unwrap();
+        assert_eq!(s.dispatch(), Dispatch::Shared);
+        assert_eq!(s.baselines, Baselines::Solo);
+        let hm = ExperimentSpec::hostmix(
+            vec![],
+            Some(WorkloadSel::Named("NN")),
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        let mut hm_auto = hm;
+        hm_auto.output.baselines = Baselines::Auto;
+        let s = Session::new(cfg(), hm_auto).unwrap();
+        assert_eq!(s.baselines, Baselines::HostSplit);
+    }
+
+    #[test]
+    fn system_overrides_apply_and_validate() {
+        let mut spec = ExperimentSpec::kernel(WorkloadSel::Named("NN"), Mechanism::Coda);
+        spec.overrides.push(("mem_backend".into(), "bank".into()));
+        let s = Session::new(cfg(), spec).unwrap();
+        assert_eq!(
+            s.config().mem_backend,
+            crate::config::MemBackendKind::BankLevel
+        );
+        let mut bad = ExperimentSpec::kernel(WorkloadSel::Named("NN"), Mechanism::Coda);
+        bad.overrides.push(("num_stacks".into(), "3".into()));
+        assert!(Session::new(cfg(), bad).is_err());
+        let mut unknown = ExperimentSpec::kernel(WorkloadSel::Named("NN"), Mechanism::Coda);
+        unknown.overrides.push(("warp_speed".into(), "9".into()));
+        assert!(Session::new(cfg(), unknown).is_err());
+    }
+
+    #[test]
+    fn host_overrides_apply_to_config() {
+        let mut spec = ExperimentSpec::hostmix(
+            vec![],
+            Some(WorkloadSel::Named("NN")),
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        let h = spec.host.as_mut().unwrap();
+        h.mlp = Some(8);
+        h.passes = Some(3);
+        h.ddr_fraction = Some(0.25);
+        let s = Session::new(cfg(), spec).unwrap();
+        assert_eq!(s.config().host_mlp, 8);
+        assert_eq!(s.config().host_passes, 3);
+        assert_eq!(s.config().host_ddr_fraction, 0.25);
+    }
+
+    #[test]
+    fn shape_validation_rejects_nonsense() {
+        // Kernel dispatch with two kernels.
+        let mut two = ExperimentSpec::kernel(WorkloadSel::Named("NN"), Mechanism::Coda);
+        two.kernels.push(KernelSpec::new(WorkloadSel::Named("KM")));
+        assert!(Session::new(cfg(), two).is_err());
+        // Mechanism under shared dispatch.
+        let mut mixed = ExperimentSpec::shared(
+            vec![(WorkloadSel::Named("NN"), 0.0)],
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        mixed.kernels[0].mechanism = Some(Mechanism::Coda);
+        assert!(Session::new(cfg(), mixed).is_err());
+        // Negative arrival.
+        let mut late = ExperimentSpec::shared(
+            vec![(WorkloadSel::Named("NN"), -1.0)],
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        late.kernels[0].arrival = -1.0;
+        assert!(Session::new(cfg(), late).is_err());
+        // Home out of range.
+        let mut far = ExperimentSpec::shared(
+            vec![(WorkloadSel::Named("NN"), 0.0)],
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        far.kernels[0].home = Some(99);
+        assert!(Session::new(cfg(), far).is_err());
+        // Pinned with duplicate homes.
+        let mut dup = ExperimentSpec::pinned(
+            vec![WorkloadSel::Named("NN"), WorkloadSel::Named("KM")],
+            MixPlacement::CgpLocal,
+        );
+        dup.kernels[1].home = Some(0);
+        assert!(Session::new(cfg(), dup).is_err());
+        // No sources at all.
+        let empty = ExperimentSpec {
+            dispatch: Dispatch::Shared,
+            ..ExperimentSpec::default()
+        };
+        assert!(Session::new(cfg(), empty).is_err());
+        // Solo baselines with a host co-run.
+        let mut solo_host = ExperimentSpec::hostmix(
+            vec![(WorkloadSel::Named("NN"), 0.0)],
+            Some(WorkloadSel::Named("KM")),
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        solo_host.output.baselines = Baselines::Solo;
+        assert!(Session::new(cfg(), solo_host).is_err());
+        // Bare trace as a kernel workload.
+        let t = crate::workloads::suite::build("NN", &cfg()).unwrap();
+        let mut raw = ExperimentSpec::default();
+        raw.dispatch = Dispatch::Shared;
+        raw.kernels.push(KernelSpec::new(WorkloadSel::Trace(&t.trace)));
+        assert!(Session::new(cfg(), raw).is_err());
+        // Explicit baselines on dispatches that never run them must be a
+        // hard error, not a silent drop...
+        let mut kb = ExperimentSpec::kernel(WorkloadSel::Named("NN"), Mechanism::Coda);
+        kb.output.baselines = Baselines::Solo;
+        assert!(Session::new(cfg(), kb).is_err());
+        let mut pb = ExperimentSpec::pinned(
+            vec![WorkloadSel::Named("NN")],
+            MixPlacement::CgpLocal,
+        );
+        pb.output.baselines = Baselines::HostSplit;
+        assert!(Session::new(cfg(), pb).is_err());
+        // ...while auto (and an explicit none) resolve to none there.
+        let k_auto = ExperimentSpec::kernel(WorkloadSel::Named("NN"), Mechanism::Coda);
+        assert_eq!(
+            Session::new(cfg(), k_auto).unwrap().baselines,
+            Baselines::None
+        );
+    }
+
+    #[test]
+    fn inactive_host_row_reports_no_slowdown() {
+        // Declared host, zero intensity: the row stays (stable table
+        // shape) but claims no co-run slowdown.
+        let mut spec = ExperimentSpec::hostmix(
+            vec![(WorkloadSel::Named("NN"), 0.0)],
+            Some(WorkloadSel::Named("KM")),
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        spec.host.as_mut().unwrap().mlp = Some(0);
+        let r = Session::new(cfg(), spec).unwrap().run().unwrap();
+        let host_row = r.sources.last().unwrap();
+        assert_eq!(host_row.kind, SourceKind::Host);
+        assert_eq!(host_row.cycles, 0.0);
+        assert!(host_row.slowdown.is_none());
+    }
+
+    #[test]
+    fn baselines_none_skips_slowdowns() {
+        let mut spec = ExperimentSpec::shared(
+            vec![
+                (WorkloadSel::Named("NN"), 0.0),
+                (WorkloadSel::Named("KM"), 0.0),
+            ],
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        spec.output = OutputSpec {
+            baselines: Baselines::None,
+            ..OutputSpec::default()
+        };
+        let r = Session::new(cfg(), spec).unwrap().run().unwrap();
+        assert!(r.run.app_slowdown.is_empty());
+        assert_eq!(r.run.weighted_speedup, 0.0);
+        assert_eq!(r.sources.len(), 2);
+        assert!(r.sources.iter().all(|s| s.slowdown.is_none()));
+        assert!(r.run.cycles > 0.0);
+        // The shared run itself is identical — only baselines are skipped.
+        let full = ExperimentSpec::shared(
+            vec![
+                (WorkloadSel::Named("NN"), 0.0),
+                (WorkloadSel::Named("KM"), 0.0),
+            ],
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        let rf = Session::new(cfg(), full).unwrap().run().unwrap();
+        assert_eq!(r.run.cycles.to_bits(), rf.run.cycles.to_bits());
+        assert_eq!(rf.sources.len(), 2);
+        assert!(rf.sources.iter().all(|s| s.slowdown.is_some()));
+    }
+
+    #[test]
+    fn per_kernel_placement_and_home_overrides_work() {
+        // Two kernels, one FGP one CGP-local on an overridden home: the
+        // CGP kernel's traffic concentrates on its home stack.
+        let mut spec = ExperimentSpec::shared(
+            vec![
+                (WorkloadSel::Named("NN"), 0.0),
+                (WorkloadSel::Named("KM"), 0.0),
+            ],
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        spec.kernels[0].placement = Some(MixPlacement::FgpOnly);
+        spec.kernels[1].home = Some(3);
+        let r = Session::new(cfg(), spec).unwrap().run().unwrap();
+        assert_eq!(r.sources[0].home, Some(0));
+        assert_eq!(r.sources[1].home, Some(3));
+        // The FGP app generates remote traffic; the homed app does not.
+        assert!(r.run.accesses.remote > 0);
+        assert!(r.run.cycles > 0.0);
+    }
+
+    #[test]
+    fn report_json_is_a_superset_of_runreport_json() {
+        let mut spec = ExperimentSpec::hostmix(
+            vec![(WorkloadSel::Named("NN"), 0.0)],
+            Some(WorkloadSel::Named("KM")),
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        spec.name = Some("json-demo".into());
+        spec.host = Some(HostSpec::new(WorkloadSel::Named("KM")));
+        let r = Session::new(cfg(), spec).unwrap().run().unwrap();
+        let s = r.to_json().render();
+        crate::report::validate_json(&s).unwrap();
+        // Everything the plain RunReport emits is still there...
+        let plain = Json::from(&r.run).render();
+        crate::report::validate_json(&plain).unwrap();
+        assert!(s.starts_with(&plain[..plain.len() - 1]));
+        // ...plus the session extras.
+        assert!(s.contains("\"spec\":\"json-demo\""));
+        assert!(s.contains("\"sources\":["));
+        assert!(s.contains("\"kind\":\"host\""));
+    }
+
+    #[test]
+    fn sweep_expands_to_one_report_per_value() {
+        let mut spec = ExperimentSpec::kernel(WorkloadSel::Named("NN"), Mechanism::FgpOnly);
+        spec.sweep = Some(SweepSpec {
+            key: "remote_bw_gbs".into(),
+            values: vec!["8".into(), "256".into()],
+        });
+        let reports = run_spec(&cfg(), &spec).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].spec_name.as_deref(), Some("remote_bw_gbs=8"));
+        assert_eq!(reports[1].spec_name.as_deref(), Some("remote_bw_gbs=256"));
+        // Less remote bandwidth must cost cycles on an FGP run.
+        assert!(reports[0].run.cycles > reports[1].run.cycles);
+        // A bad sweep value surfaces as an error, not a silent skip.
+        let mut bad = ExperimentSpec::kernel(WorkloadSel::Named("NN"), Mechanism::FgpOnly);
+        bad.sweep = Some(SweepSpec {
+            key: "remote_bw_gbs".into(),
+            values: vec!["fast".into()],
+        });
+        assert!(run_spec(&cfg(), &bad).is_err());
+    }
+}

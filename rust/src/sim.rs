@@ -17,7 +17,9 @@
 //! module is the single-kernel adapter: it wires a [`Scheduler`] up as
 //! the engine's block source and shapes the raw counters into a
 //! [`RunReport`]. `tests/differential` locks in that this path is
-//! cycle-identical to the pre-refactor standalone loop.
+//! cycle-identical to the pre-refactor standalone loop. Since the
+//! experiment-API redesign, [`crate::session`] drives this adapter for
+//! every kernel-dispatch [`crate::spec::ExperimentSpec`].
 
 use crate::config::SystemConfig;
 use crate::engine::{AppCtx, BlockRef, BlockSource, Engine, EngineOptions};

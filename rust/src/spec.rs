@@ -1,0 +1,864 @@
+//! The declarative experiment API: one serializable [`ExperimentSpec`]
+//! describes *any* run the simulator can perform — a single kernel under a
+//! paper mechanism, a multi-kernel mix, concurrent host + NDP traffic, a
+//! host-alone sweep, or a one-key parameter sweep over all of those.
+//!
+//! Historically each scenario grew its own entry point (`Coordinator::run`,
+//! `multiprog::run_mix` / `run_multi` / `run_hostmix`,
+//! `host::run_host_sweep`), each with its own signature, CLI command and
+//! report subset. The spec collapses them into one shape — in the spirit
+//! of NDPage (arXiv 2502.14220): tailor the *interface* to the access
+//! pattern instead of multiplying special cases — and
+//! [`crate::session::Session`] lowers any spec into one shared-engine run.
+//! The legacy entry points survive as thin wrappers that construct a spec;
+//! `tests/spec_equiv.rs` proves each wrapper cycle-identical (bit-exact
+//! f64, both DRAM backends) to its frozen pre-redesign implementation.
+//!
+//! # TOML schema
+//!
+//! Specs serialize to the project's TOML subset (`coda run <spec.toml>`;
+//! tokenized by [`crate::config::parse_toml_subset`]):
+//!
+//! ```toml
+//! [experiment]
+//! name = "nn-vs-host"     # optional label, echoed in the JSON report
+//! dispatch = auto          # auto | kernel | pinned | shared
+//! placement = cgp          # default mix placement: fgp | cgp
+//! policy = affinity        # affinity | baseline | steal
+//! fairness = rr            # fcfs | rr | least (default: system mix_fairness)
+//!
+//! [output]
+//! format = table           # table | json
+//! baselines = auto         # auto | none | solo | host-split
+//!
+//! [system]                 # any SystemConfig key, applied in order
+//! mem_backend = bank
+//! stack_capacity = 134217728
+//!
+//! [sweep]                  # optional: rerun the spec per value of one key
+//! key = remote_bw_gbs
+//! values = 8,32,128
+//!
+//! [[kernel]]               # one table per NDP kernel
+//! workload = NN            # benchmark name (see `coda help`)
+//! arrival = 0              # launch time in SM cycles
+//! # placement = fgp        # per-kernel override of experiment.placement
+//! # mechanism = coda       # kernel dispatch only: analysis-driven placement
+//! # home = 2               # home-stack override (default: index % num_stacks)
+//!
+//! [host]                   # optional concurrent host stream
+//! workload = KM
+//! mlp = 32                 # override system host_mlp for this stream
+//! passes = 2
+//! ddr_fraction = 0.25
+//! ```
+//!
+//! # Dispatch modes
+//!
+//! * **kernel** — the single-kernel coordinator path: the kernel's
+//!   `mechanism` picks an analysis-driven per-object placement plan and the
+//!   matching scheduling policy (L2 filter and first-touch migration
+//!   included). Requires exactly one kernel and no host stream.
+//! * **pinned** — the paper's Fig 12 shape: at most one kernel per stack,
+//!   app *i*'s blocks run only on its home stack's SMs, all launched at
+//!   t=0.
+//! * **shared** — general multi-kernel scheduling (SM time-sharing under
+//!   `policy` + `fairness`, staggered arrivals, homes wrap) plus the
+//!   optional host stream; this is the CHoNDA-style co-run.
+//! * **auto** (default) — `kernel` when the spec is one kernel with a
+//!   `mechanism` and no host, `shared` otherwise.
+
+use crate::config::{parse_toml_subset, TomlItem};
+use crate::coordinator::Mechanism;
+use crate::multiprog::MixPlacement;
+use crate::sched::{FairnessPolicy, Policy};
+use crate::trace::KernelTrace;
+use crate::workloads::BuiltWorkload;
+use anyhow::{bail, Context};
+use std::fmt::Write as _;
+
+/// A traffic source's workload. TOML specs always name a suite benchmark;
+/// the legacy API wrappers pass the caller's already-built workload (or,
+/// for the host sweep, a bare trace) through unchanged so lowering is
+/// bit-exact with the pre-spec entry points.
+#[derive(Clone, Copy, Debug)]
+pub enum WorkloadSel<'a> {
+    /// A suite benchmark, resolved by `workloads::suite::build` at run time.
+    Named(&'static str),
+    /// A caller-owned workload, used as-is (API wrappers).
+    Prebuilt(&'a BuiltWorkload),
+    /// A bare access trace; only valid for the host stream, which never
+    /// needs block structure or IR (the `run_host_sweep` wrapper).
+    Trace(&'a KernelTrace),
+}
+
+impl<'a> WorkloadSel<'a> {
+    /// Resolve a user-typed benchmark name against the suite registry
+    /// (errors list the known names, as `suite::build` would).
+    pub fn named(name: &str) -> crate::Result<WorkloadSel<'static>> {
+        Ok(WorkloadSel::Named(ExperimentSpec::suite_name(name)?))
+    }
+
+    /// The workload's display name (suite name or trace name).
+    pub fn name(&self) -> &str {
+        match self {
+            WorkloadSel::Named(n) => n,
+            WorkloadSel::Prebuilt(w) => w.name,
+            WorkloadSel::Trace(t) => &t.name,
+        }
+    }
+}
+
+impl PartialEq for WorkloadSel<'_> {
+    /// Named selectors compare by name; borrowed ones by identity (two
+    /// spec clones referring to the same built workload are equal).
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (WorkloadSel::Named(a), WorkloadSel::Named(b)) => a == b,
+            (WorkloadSel::Prebuilt(a), WorkloadSel::Prebuilt(b)) => std::ptr::eq(*a, *b),
+            (WorkloadSel::Trace(a), WorkloadSel::Trace(b)) => std::ptr::eq(*a, *b),
+            _ => false,
+        }
+    }
+}
+
+/// One NDP kernel in the experiment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KernelSpec<'a> {
+    pub workload: WorkloadSel<'a>,
+    /// Launch time in SM cycles (0 = at simulation start).
+    pub arrival: f64,
+    /// Mix-placement override for this kernel's objects (default:
+    /// the experiment-level `placement`).
+    pub placement: Option<MixPlacement>,
+    /// Kernel-dispatch only: the analysis-driven mechanism.
+    pub mechanism: Option<Mechanism>,
+    /// Home-stack override (default: kernel index % num_stacks).
+    pub home: Option<usize>,
+}
+
+impl<'a> KernelSpec<'a> {
+    pub fn new(workload: WorkloadSel<'a>) -> Self {
+        Self {
+            workload,
+            arrival: 0.0,
+            placement: None,
+            mechanism: None,
+            home: None,
+        }
+    }
+}
+
+/// The optional concurrent host request stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostSpec<'a> {
+    pub workload: WorkloadSel<'a>,
+    /// Override of `SystemConfig::host_mlp` for this experiment.
+    pub mlp: Option<usize>,
+    /// Override of `SystemConfig::host_passes`.
+    pub passes: Option<u64>,
+    /// Override of `SystemConfig::host_ddr_fraction`.
+    pub ddr_fraction: Option<f64>,
+}
+
+impl<'a> HostSpec<'a> {
+    pub fn new(workload: WorkloadSel<'a>) -> Self {
+        Self {
+            workload,
+            mlp: None,
+            passes: None,
+            ddr_fraction: None,
+        }
+    }
+}
+
+/// How the session turns kernels into engine block dispatch (see the
+/// module docs for the three concrete modes).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Dispatch {
+    #[default]
+    Auto,
+    Kernel,
+    Pinned,
+    Shared,
+}
+
+impl Dispatch {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim() {
+            "auto" => Some(Self::Auto),
+            "kernel" => Some(Self::Kernel),
+            "pinned" => Some(Self::Pinned),
+            "shared" => Some(Self::Shared),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Dispatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Auto => "auto",
+            Self::Kernel => "kernel",
+            Self::Pinned => "pinned",
+            Self::Shared => "shared",
+        })
+    }
+}
+
+/// Which run-alone baselines the session executes to derive slowdowns.
+/// Baseline runs cost extra simulations; batch sweeps can turn them off.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Baselines {
+    /// Shared dispatch: `HostSplit` when a host stream is declared,
+    /// `Solo` otherwise. Kernel/pinned dispatch run no baselines, so
+    /// `auto` resolves to `None` there (and an explicit `solo` /
+    /// `host-split` is rejected rather than silently dropped).
+    #[default]
+    Auto,
+    /// No baseline runs: slowdown fields stay unset.
+    None,
+    /// Per-app solo runs (each kernel alone on the shared layout) — the
+    /// `run_multi` semantics isolating app-vs-app interference.
+    Solo,
+    /// Each side vs itself alone (NDP mix without host, host without NDP)
+    /// — the `run_hostmix` semantics isolating host interference.
+    HostSplit,
+}
+
+impl Baselines {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim() {
+            "auto" => Some(Self::Auto),
+            "none" => Some(Self::None),
+            "solo" => Some(Self::Solo),
+            "host-split" | "host_split" => Some(Self::HostSplit),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Baselines {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Auto => "auto",
+            Self::None => "none",
+            Self::Solo => "solo",
+            Self::HostSplit => "host-split",
+        })
+    }
+}
+
+/// Report rendering the spec asks the CLI for (`--json` still wins).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OutputFormat {
+    #[default]
+    Table,
+    Json,
+}
+
+impl OutputFormat {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim() {
+            "table" => Some(Self::Table),
+            "json" => Some(Self::Json),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for OutputFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Table => "table",
+            Self::Json => "json",
+        })
+    }
+}
+
+/// Requested outputs: rendering format and baseline policy.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OutputSpec {
+    pub format: OutputFormat,
+    pub baselines: Baselines,
+}
+
+/// A one-key parameter sweep: the spec is rerun once per value with
+/// `key = value` appended to its `[system]` overrides (what
+/// `coda sweep` always did, now batchable from a file).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SweepSpec {
+    pub key: String,
+    pub values: Vec<String>,
+}
+
+/// The declarative experiment description. See the module docs for the
+/// TOML schema and dispatch semantics; [`crate::session::Session`] is the
+/// only consumer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentSpec<'a> {
+    /// Optional label echoed in the report (`"spec"` in JSON).
+    pub name: Option<String>,
+    pub dispatch: Dispatch,
+    /// Default mix placement for kernels without an override.
+    pub placement: MixPlacement,
+    /// Block-level scheduling policy (pinned/shared dispatch).
+    pub policy: Policy,
+    /// Inter-app fairness (default: the system config's `mix_fairness`).
+    pub fairness: Option<FairnessPolicy>,
+    /// `[system]` config overrides, applied in order over the base config.
+    pub overrides: Vec<(String, String)>,
+    pub kernels: Vec<KernelSpec<'a>>,
+    pub host: Option<HostSpec<'a>>,
+    pub sweep: Option<SweepSpec>,
+    pub output: OutputSpec,
+}
+
+impl Default for ExperimentSpec<'_> {
+    fn default() -> Self {
+        Self {
+            name: None,
+            dispatch: Dispatch::Auto,
+            placement: MixPlacement::CgpLocal,
+            policy: Policy::Affinity,
+            fairness: None,
+            overrides: Vec::new(),
+            kernels: Vec::new(),
+            host: None,
+            sweep: None,
+            output: OutputSpec::default(),
+        }
+    }
+}
+
+impl<'a> ExperimentSpec<'a> {
+    /// Single-kernel coordinator run: `wl` under `mech` (what
+    /// `Coordinator::run` / `coda run <BENCH>` launch).
+    pub fn kernel(workload: WorkloadSel<'a>, mech: Mechanism) -> Self {
+        let mut k = KernelSpec::new(workload);
+        k.mechanism = Some(mech);
+        Self {
+            dispatch: Dispatch::Kernel,
+            kernels: vec![k],
+            ..Self::default()
+        }
+    }
+
+    /// Fig-12 pinned mix: one kernel per stack, all at t=0 (the
+    /// `multiprog::run_mix` shape).
+    pub fn pinned(workloads: Vec<WorkloadSel<'a>>, placement: MixPlacement) -> Self {
+        Self {
+            dispatch: Dispatch::Pinned,
+            placement,
+            kernels: workloads.into_iter().map(KernelSpec::new).collect(),
+            ..Self::default()
+        }
+    }
+
+    /// Multi-kernel mix with time-shared SMs (the `multiprog::run_multi`
+    /// shape): `launches` pairs each workload with its arrival cycle.
+    pub fn shared(
+        launches: Vec<(WorkloadSel<'a>, f64)>,
+        placement: MixPlacement,
+        policy: Policy,
+        fairness: FairnessPolicy,
+    ) -> Self {
+        Self {
+            dispatch: Dispatch::Shared,
+            placement,
+            policy,
+            fairness: Some(fairness),
+            kernels: launches
+                .into_iter()
+                .map(|(w, arrival)| {
+                    let mut k = KernelSpec::new(w);
+                    k.arrival = arrival;
+                    k
+                })
+                .collect(),
+            output: OutputSpec {
+                baselines: Baselines::Solo,
+                ..OutputSpec::default()
+            },
+            ..Self::default()
+        }
+    }
+
+    /// CHoNDA-style co-run (the `multiprog::run_hostmix` shape): the NDP
+    /// mix of [`Self::shared`] plus a concurrent host stream (which may be
+    /// the only source).
+    pub fn hostmix(
+        launches: Vec<(WorkloadSel<'a>, f64)>,
+        host: Option<WorkloadSel<'a>>,
+        placement: MixPlacement,
+        policy: Policy,
+        fairness: FairnessPolicy,
+    ) -> Self {
+        let mut spec = Self::shared(launches, placement, policy, fairness);
+        spec.host = host.map(HostSpec::new);
+        spec.output.baselines = Baselines::HostSplit;
+        spec
+    }
+
+    /// Host-alone sweep over a trace's objects (the `host::run_host_sweep`
+    /// shape).
+    pub fn host_sweep(trace: &'a KernelTrace) -> Self {
+        let mut spec = Self::default();
+        spec.dispatch = Dispatch::Shared;
+        spec.host = Some(HostSpec::new(WorkloadSel::Trace(trace)));
+        spec.output.baselines = Baselines::HostSplit;
+        spec
+    }
+
+    /// Resolve a suite benchmark name to its `'static` spelling, so TOML
+    /// specs share [`WorkloadSel::Named`] with the builders.
+    fn suite_name(name: &str) -> crate::Result<&'static str> {
+        crate::workloads::suite::ALL
+            .iter()
+            .map(|(n, _)| *n)
+            .find(|n| *n == name.trim())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown benchmark {name}; known: {:?}",
+                    crate::workloads::suite::names()
+                )
+            })
+    }
+
+    /// Parse a spec from TOML-subset text (see the module docs for the
+    /// schema). Unknown sections and keys are hard errors: a typo must not
+    /// silently change an experiment.
+    pub fn from_toml_str(text: &str) -> crate::Result<ExperimentSpec<'static>> {
+        let doc = parse_toml_subset(text)?;
+        // Header counts come from the tokenizer, independent of the
+        // assignments: a `[[kernel]]` or `[host]` table with no keys
+        // (e.g. a truncated file) must still fail the required-key
+        // checks below instead of silently shrinking the experiment.
+        let kernel_headers = doc.section_count("kernel");
+        let host_headers = doc.section_count("host");
+        anyhow::ensure!(host_headers <= 1, "at most one [host] section");
+        let items = doc.items;
+        let mut spec = ExperimentSpec::default();
+        // Kernels accumulate per [[kernel]] instance; the workload key is
+        // mandatory, so build through options and finalize below.
+        let mut kernels: Vec<(Option<&'static str>, KernelSpec<'static>)> = Vec::new();
+        let mut host: Option<HostSpec<'static>> = None;
+        let mut host_name: Option<&'static str> = None;
+        let mut sweep_key: Option<String> = None;
+        let mut sweep_values: Option<Vec<String>> = None;
+        for item in &items {
+            let TomlItem {
+                lineno,
+                section,
+                instance,
+                key,
+                value,
+            } = item;
+            let ctx = || format!("line {lineno}: [{section}] {key}");
+            match section.as_str() {
+                "experiment" => match key.as_str() {
+                    "name" => spec.name = Some(value.clone()),
+                    "dispatch" => {
+                        spec.dispatch = Dispatch::parse(value).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "{}: expected auto|kernel|pinned|shared, got {value}",
+                                ctx()
+                            )
+                        })?
+                    }
+                    "placement" => {
+                        spec.placement = MixPlacement::parse(value).ok_or_else(|| {
+                            anyhow::anyhow!("{}: expected fgp|cgp, got {value}", ctx())
+                        })?
+                    }
+                    "policy" => {
+                        spec.policy = Policy::parse(value).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "{}: expected affinity|baseline|steal, got {value}",
+                                ctx()
+                            )
+                        })?
+                    }
+                    "fairness" => {
+                        spec.fairness =
+                            Some(FairnessPolicy::parse(value).ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "{}: expected fcfs|rr|least, got {value}",
+                                    ctx()
+                                )
+                            })?)
+                    }
+                    _ => bail!("{}: unknown [experiment] key", ctx()),
+                },
+                "output" => match key.as_str() {
+                    "format" => {
+                        spec.output.format = OutputFormat::parse(value).ok_or_else(|| {
+                            anyhow::anyhow!("{}: expected table|json, got {value}", ctx())
+                        })?
+                    }
+                    "baselines" => {
+                        spec.output.baselines = Baselines::parse(value).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "{}: expected auto|none|solo|host-split, got {value}",
+                                ctx()
+                            )
+                        })?
+                    }
+                    _ => bail!("{}: unknown [output] key", ctx()),
+                },
+                // The system section is the flat SystemConfig namespace;
+                // keys are validated when the session applies them.
+                "system" => spec.overrides.push((key.clone(), value.clone())),
+                "sweep" => match key.as_str() {
+                    "key" => sweep_key = Some(value.clone()),
+                    "values" => {
+                        sweep_values = Some(
+                            value
+                                .split(',')
+                                .map(|v| v.trim().to_string())
+                                .filter(|v| !v.is_empty())
+                                .collect(),
+                        )
+                    }
+                    _ => bail!("{}: unknown [sweep] key", ctx()),
+                },
+                "kernel" => {
+                    while kernels.len() <= *instance {
+                        // Placeholder workload until the table names one.
+                        kernels.push((None, KernelSpec::new(WorkloadSel::Named("PR"))));
+                    }
+                    let (wl, k) = &mut kernels[*instance];
+                    match key.as_str() {
+                        "workload" => *wl = Some(Self::suite_name(value)?),
+                        "arrival" => {
+                            k.arrival =
+                                value.parse().with_context(|| {
+                                    format!("{}: bad number {value}", ctx())
+                                })?
+                        }
+                        "placement" => {
+                            k.placement =
+                                Some(MixPlacement::parse(value).ok_or_else(|| {
+                                    anyhow::anyhow!(
+                                        "{}: expected fgp|cgp, got {value}",
+                                        ctx()
+                                    )
+                                })?)
+                        }
+                        "mechanism" => {
+                            k.mechanism = Some(Mechanism::parse(value).ok_or_else(|| {
+                                anyhow::anyhow!("{}: unknown mechanism {value}", ctx())
+                            })?)
+                        }
+                        "home" => {
+                            k.home = Some(value.parse().with_context(|| {
+                                format!("{}: bad stack index {value}", ctx())
+                            })?)
+                        }
+                        _ => bail!("{}: unknown [[kernel]] key", ctx()),
+                    }
+                }
+                "host" => {
+                    anyhow::ensure!(
+                        *instance == 0,
+                        "line {lineno}: at most one [host] section"
+                    );
+                    let h = host
+                        .get_or_insert_with(|| HostSpec::new(WorkloadSel::Named("PR")));
+                    match key.as_str() {
+                        "workload" => host_name = Some(Self::suite_name(value)?),
+                        "mlp" => {
+                            h.mlp = Some(value.parse().with_context(|| {
+                                format!("{}: bad count {value}", ctx())
+                            })?)
+                        }
+                        "passes" => {
+                            h.passes = Some(value.parse().with_context(|| {
+                                format!("{}: bad count {value}", ctx())
+                            })?)
+                        }
+                        "ddr_fraction" => {
+                            h.ddr_fraction = Some(value.parse().with_context(|| {
+                                format!("{}: bad fraction {value}", ctx())
+                            })?)
+                        }
+                        _ => bail!("{}: unknown [host] key", ctx()),
+                    }
+                }
+                "" => bail!(
+                    "line {lineno}: key {key} outside a section (expected \
+                     [experiment], [output], [system], [sweep], [[kernel]] or [host])"
+                ),
+                other => bail!("line {lineno}: unknown section [{other}]"),
+            }
+        }
+        while kernels.len() < kernel_headers {
+            // Key-less trailing tables: surface the missing-workload error.
+            kernels.push((None, KernelSpec::new(WorkloadSel::Named("PR"))));
+        }
+        spec.kernels = kernels
+            .into_iter()
+            .enumerate()
+            .map(|(i, (wl, mut k))| {
+                let name =
+                    wl.ok_or_else(|| anyhow::anyhow!("[[kernel]] #{i} missing workload"))?;
+                k.workload = WorkloadSel::Named(name);
+                Ok(k)
+            })
+            .collect::<crate::Result<_>>()?;
+        if host_headers > 0 && host.is_none() {
+            host = Some(HostSpec::new(WorkloadSel::Named("PR")));
+        }
+        if let Some(mut h) = host {
+            let name = host_name
+                .ok_or_else(|| anyhow::anyhow!("[host] section missing workload"))?;
+            h.workload = WorkloadSel::Named(name);
+            spec.host = Some(h);
+        }
+        spec.sweep = match (sweep_key, sweep_values) {
+            (None, None) => None,
+            (Some(key), Some(values)) if !values.is_empty() => {
+                Some(SweepSpec { key, values })
+            }
+            _ => bail!("[sweep] needs both key and a non-empty values list"),
+        };
+        Ok(spec)
+    }
+
+    /// Load a spec file.
+    pub fn from_file(path: &str) -> crate::Result<ExperimentSpec<'static>> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading spec {path}"))?;
+        Self::from_toml_str(&text).with_context(|| format!("parsing spec {path}"))
+    }
+
+    /// Serialize to TOML-subset text. Round-trips through
+    /// [`Self::from_toml_str`] for specs whose workloads are
+    /// [`WorkloadSel::Named`]; borrowed workloads serialize by name (the
+    /// reparsed spec resolves them through the suite). The subset has no
+    /// escape syntax, so free-text fields (`name`, override values) must
+    /// not contain double quotes — the tokenizer rejects them at reparse
+    /// rather than silently corrupting the value.
+    pub fn to_toml_string(&self) -> String {
+        let mut out = String::from("# CODA experiment spec\n[experiment]\n");
+        if let Some(name) = &self.name {
+            let _ = writeln!(out, "name = \"{name}\"");
+        }
+        let _ = writeln!(out, "dispatch = {}", self.dispatch);
+        let _ = writeln!(out, "placement = {}", self.placement);
+        let _ = writeln!(out, "policy = {}", self.policy);
+        if let Some(f) = self.fairness {
+            let _ = writeln!(out, "fairness = {f}");
+        }
+        out.push_str("\n[output]\n");
+        let _ = writeln!(out, "format = {}", self.output.format);
+        let _ = writeln!(out, "baselines = {}", self.output.baselines);
+        if !self.overrides.is_empty() {
+            out.push_str("\n[system]\n");
+            for (k, v) in &self.overrides {
+                let _ = writeln!(out, "{k} = {v}");
+            }
+        }
+        if let Some(sw) = &self.sweep {
+            out.push_str("\n[sweep]\n");
+            let _ = writeln!(out, "key = {}", sw.key);
+            let _ = writeln!(out, "values = \"{}\"", sw.values.join(","));
+        }
+        for k in &self.kernels {
+            out.push_str("\n[[kernel]]\n");
+            let _ = writeln!(out, "workload = {}", k.workload.name());
+            let _ = writeln!(out, "arrival = {}", k.arrival);
+            if let Some(p) = k.placement {
+                let _ = writeln!(out, "placement = {p}");
+            }
+            if let Some(m) = k.mechanism {
+                let _ = writeln!(out, "mechanism = {}", m.key());
+            }
+            if let Some(h) = k.home {
+                let _ = writeln!(out, "home = {h}");
+            }
+        }
+        if let Some(h) = &self.host {
+            out.push_str("\n[host]\n");
+            let _ = writeln!(out, "workload = {}", h.workload.name());
+            if let Some(m) = h.mlp {
+                let _ = writeln!(out, "mlp = {m}");
+            }
+            if let Some(p) = h.passes {
+                let _ = writeln!(out, "passes = {p}");
+            }
+            if let Some(f) = h.ddr_fraction {
+                let _ = writeln!(out, "ddr_fraction = {f}");
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_spec() {
+        let text = r#"
+[experiment]
+name = "demo"
+dispatch = shared
+placement = fgp
+policy = steal
+fairness = least
+
+[output]
+format = json
+baselines = none
+
+[system]
+mem_backend = bank
+num_stacks = 8
+
+[sweep]
+key = remote_bw_gbs
+values = 8, 32
+
+[[kernel]]
+workload = NN
+arrival = 1000
+placement = cgp
+home = 3
+
+[[kernel]]
+workload = KM
+
+[host]
+workload = DC
+mlp = 16
+passes = 2
+ddr_fraction = 0.5
+"#;
+        let s = ExperimentSpec::from_toml_str(text).unwrap();
+        assert_eq!(s.name.as_deref(), Some("demo"));
+        assert_eq!(s.dispatch, Dispatch::Shared);
+        assert_eq!(s.placement, MixPlacement::FgpOnly);
+        assert_eq!(s.policy, Policy::AffinityStealing);
+        assert_eq!(s.fairness, Some(FairnessPolicy::LeastIssued));
+        assert_eq!(s.output.format, OutputFormat::Json);
+        assert_eq!(s.output.baselines, Baselines::None);
+        assert_eq!(
+            s.overrides,
+            vec![
+                ("mem_backend".into(), "bank".into()),
+                ("num_stacks".into(), "8".into())
+            ]
+        );
+        assert_eq!(
+            s.sweep,
+            Some(SweepSpec {
+                key: "remote_bw_gbs".into(),
+                values: vec!["8".into(), "32".into()]
+            })
+        );
+        assert_eq!(s.kernels.len(), 2);
+        assert_eq!(s.kernels[0].workload.name(), "NN");
+        assert_eq!(s.kernels[0].arrival, 1000.0);
+        assert_eq!(s.kernels[0].placement, Some(MixPlacement::CgpLocal));
+        assert_eq!(s.kernels[0].home, Some(3));
+        assert_eq!(s.kernels[1].workload.name(), "KM");
+        assert_eq!(s.kernels[1].arrival, 0.0);
+        let h = s.host.as_ref().unwrap();
+        assert_eq!(h.workload.name(), "DC");
+        assert_eq!(h.mlp, Some(16));
+        assert_eq!(h.passes, Some(2));
+        assert_eq!(h.ddr_fraction, Some(0.5));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        // Unknown section / key / values must be hard errors.
+        assert!(ExperimentSpec::from_toml_str("[nope]\nx = 1\n").is_err());
+        assert!(ExperimentSpec::from_toml_str("[experiment]\nnope = 1\n").is_err());
+        assert!(ExperimentSpec::from_toml_str("top = 1\n").is_err());
+        assert!(ExperimentSpec::from_toml_str("[experiment]\ndispatch = warp\n").is_err());
+        assert!(ExperimentSpec::from_toml_str("[[kernel]]\narrival = 5\n").is_err());
+        assert!(ExperimentSpec::from_toml_str("[[kernel]]\nworkload = NOPE\n").is_err());
+        assert!(ExperimentSpec::from_toml_str("[host]\nmlp = 4\n").is_err());
+        assert!(ExperimentSpec::from_toml_str("[sweep]\nkey = seed\n").is_err());
+        assert!(
+            ExperimentSpec::from_toml_str("[host]\nworkload = NN\n[host]\nworkload = KM\n")
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn keyless_trailing_tables_are_errors_not_dropped() {
+        // A truncated spec must fail loudly, not shrink the experiment.
+        assert!(ExperimentSpec::from_toml_str("[[kernel]]\n").is_err());
+        assert!(
+            ExperimentSpec::from_toml_str("[[kernel]]\nworkload = NN\n[[kernel]]\n")
+                .is_err()
+        );
+        assert!(ExperimentSpec::from_toml_str("[host]\n").is_err());
+        assert!(ExperimentSpec::from_toml_str("[host]\n[host]\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_quoted_values_survives_round_trip() {
+        let mut spec = ExperimentSpec::kernel(WorkloadSel::Named("NN"), Mechanism::Coda);
+        spec.name = Some("a#b".into());
+        let reparsed = ExperimentSpec::from_toml_str(&spec.to_toml_string()).unwrap();
+        assert_eq!(reparsed.name.as_deref(), Some("a#b"));
+        assert_eq!(reparsed, spec);
+    }
+
+    #[test]
+    fn builders_shape_legacy_scenarios() {
+        let k = ExperimentSpec::kernel(WorkloadSel::Named("PR"), Mechanism::Coda);
+        assert_eq!(k.dispatch, Dispatch::Kernel);
+        assert_eq!(k.kernels[0].mechanism, Some(Mechanism::Coda));
+        let p = ExperimentSpec::pinned(
+            vec![WorkloadSel::Named("NN"), WorkloadSel::Named("KM")],
+            MixPlacement::FgpOnly,
+        );
+        assert_eq!(p.dispatch, Dispatch::Pinned);
+        assert_eq!(p.kernels.len(), 2);
+        let s = ExperimentSpec::shared(
+            vec![(WorkloadSel::Named("NN"), 0.0), (WorkloadSel::Named("KM"), 5e3)],
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::RoundRobin,
+        );
+        assert_eq!(s.output.baselines, Baselines::Solo);
+        assert_eq!(s.kernels[1].arrival, 5e3);
+        let h = ExperimentSpec::hostmix(
+            vec![(WorkloadSel::Named("NN"), 0.0)],
+            Some(WorkloadSel::Named("KM")),
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        assert_eq!(h.output.baselines, Baselines::HostSplit);
+        assert_eq!(h.host.as_ref().unwrap().workload.name(), "KM");
+    }
+
+    #[test]
+    fn toml_round_trip_preserves_named_specs() {
+        let mut spec = ExperimentSpec::hostmix(
+            vec![(WorkloadSel::Named("NN"), 0.0), (WorkloadSel::Named("KM"), 2500.0)],
+            Some(WorkloadSel::Named("DC")),
+            MixPlacement::FgpOnly,
+            Policy::AffinityStealing,
+            FairnessPolicy::RoundRobin,
+        );
+        spec.name = Some("rt".into());
+        spec.overrides.push(("mem_backend".into(), "bank".into()));
+        spec.sweep = Some(SweepSpec {
+            key: "host_mlp".into(),
+            values: vec!["8".into(), "64".into()],
+        });
+        spec.kernels[0].home = Some(1);
+        spec.kernels[1].placement = Some(MixPlacement::CgpLocal);
+        spec.host.as_mut().unwrap().passes = Some(3);
+        let reparsed = ExperimentSpec::from_toml_str(&spec.to_toml_string()).unwrap();
+        assert_eq!(reparsed, spec);
+    }
+}

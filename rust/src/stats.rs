@@ -146,6 +146,18 @@ impl RunReport {
     }
 }
 
+/// Per-app response times: completion − arrival, clamped at zero (an app
+/// that never ran completes at 0.0, before its arrival). The single
+/// definition every mix/host path shares.
+pub fn response_times(app_end: &[f64], arrivals: &[f64]) -> Vec<f64> {
+    assert_eq!(app_end.len(), arrivals.len(), "per-app length mismatch");
+    app_end
+        .iter()
+        .zip(arrivals)
+        .map(|(&end, &t)| (end - t).max(0.0))
+        .collect()
+}
+
 /// Per-app slowdown of a shared run vs run-alone baselines: shared/alone
 /// per app. Degenerate apps (zero time on either side) report 1.0.
 pub fn per_app_slowdown(alone: &[f64], shared: &[f64]) -> Vec<f64> {
@@ -264,6 +276,14 @@ mod tests {
     fn cv_of_constant_is_zero() {
         assert_eq!(coeff_of_variation(&[3.0, 3.0, 3.0]), 0.0);
         assert!(coeff_of_variation(&[1.0, 100.0]) > 0.9);
+    }
+
+    #[test]
+    fn response_times_clamp_at_zero() {
+        assert_eq!(
+            response_times(&[100.0, 50.0, 0.0], &[10.0, 0.0, 5.0]),
+            vec![90.0, 50.0, 0.0]
+        );
     }
 
     #[test]

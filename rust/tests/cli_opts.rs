@@ -1,0 +1,97 @@
+//! Closes the bug class behind the historical `coda sweep --key/--values`
+//! fix: an `--opt value` that `main.rs` consumes but `cli::VALUE_OPTS`
+//! does not register silently parses as a *flag* followed by a stray
+//! positional — the option's value is dropped without any error.
+//!
+//! These tests scan the binary's source (compiled in via `include_str!`)
+//! for every `args.opt("...")` / `args.opt_parse("...")` /
+//! `args.has_flag("...")` call site and cross-check the literals against
+//! the registered set, in both directions, so the list can neither rot
+//! nor fall behind a new command.
+
+use coda::cli::{Args, VALUE_OPTS};
+use std::collections::BTreeSet;
+
+const MAIN_SRC: &str = include_str!("../src/main.rs");
+
+/// Collect the string literal following every occurrence of `pat`
+/// (call sites all use literal option names, enforced by the emptiness
+/// assertions below).
+fn literals_after(src: &str, pat: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut rest = src;
+    while let Some(pos) = rest.find(pat) {
+        rest = &rest[pos + pat.len()..];
+        if let Some(end) = rest.find('"') {
+            out.insert(rest[..end].to_string());
+            rest = &rest[end..];
+        }
+    }
+    out
+}
+
+fn consumed_value_opts() -> BTreeSet<String> {
+    let mut opts = literals_after(MAIN_SRC, ".opt(\"");
+    opts.extend(literals_after(MAIN_SRC, ".opt_parse(\""));
+    opts
+}
+
+#[test]
+fn every_value_option_main_consumes_is_registered() {
+    let consumed = consumed_value_opts();
+    assert!(
+        consumed.len() >= 10,
+        "the scan should find the CLI's option call sites, got {consumed:?}"
+    );
+    for opt in &consumed {
+        assert!(
+            VALUE_OPTS.contains(&opt.as_str()),
+            "--{opt} is consumed by main.rs as a value option but is missing \
+             from cli::VALUE_OPTS, so `--{opt} value` would silently parse as \
+             a flag plus a stray positional"
+        );
+    }
+}
+
+#[test]
+fn every_registered_value_option_is_consumed() {
+    let consumed = consumed_value_opts();
+    for opt in VALUE_OPTS {
+        assert!(
+            consumed.contains(*opt),
+            "cli::VALUE_OPTS registers --{opt} but main.rs never reads it; \
+             remove it or wire it up"
+        );
+    }
+}
+
+#[test]
+fn flags_never_collide_with_value_options() {
+    let flags = literals_after(MAIN_SRC, ".has_flag(\"");
+    assert!(!flags.is_empty(), "the scan should find the CLI's flags");
+    for f in &flags {
+        assert!(
+            !VALUE_OPTS.contains(&f.as_str()),
+            "--{f} is read both as a flag and as a value option"
+        );
+    }
+}
+
+/// End-to-end demonstration of the bug class: parsing `--opt value` with
+/// the option unregistered turns it into flag + positional; with it
+/// registered the value is captured. The registration test above is what
+/// keeps every real option on the working side of this line.
+#[test]
+fn unregistered_value_option_degrades_to_flag() {
+    let argv: Vec<String> = ["sweep", "PR", "--key", "remote_bw_gbs"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let broken = Args::parse(&argv, &[]).unwrap();
+    assert!(broken.has_flag("key"), "unregistered option parses as flag");
+    assert_eq!(broken.opt("key"), None);
+    assert_eq!(broken.positional, vec!["PR", "remote_bw_gbs"]);
+    let fixed = Args::parse(&argv, VALUE_OPTS).unwrap();
+    assert_eq!(fixed.opt("key"), Some("remote_bw_gbs"));
+    assert_eq!(fixed.positional, vec!["PR"]);
+}

@@ -1,0 +1,395 @@
+//! Differential suite for the experiment-API redesign: every legacy entry
+//! point is now a wrapper that constructs an `ExperimentSpec` and lowers
+//! it through `Session`, and each must be **cycle-identical (bit-exact
+//! f64)** to its frozen pre-redesign implementation (`oracle.rs`) for
+//! mechanisms × workloads × both DRAM backends. A final test proves the
+//! spec *file* path (`coda run <spec.toml>`) reproduces the wrapper
+//! reports from TOML alone.
+
+mod oracle;
+
+use coda::config::{MemBackendKind, SystemConfig};
+use coda::coordinator::{Coordinator, Mechanism};
+use coda::multiprog::{
+    run_hostmix, run_mix, run_multi, KernelLaunch, Mix, MixPlacement, MultiMix,
+};
+use coda::placement::{cgp_only_plan, PlacementPlan};
+use coda::sched::{FairnessPolicy, Policy};
+use coda::session;
+use coda::sim::map_objects;
+use coda::spec::ExperimentSpec;
+use coda::stats::RunReport;
+use coda::workloads::suite;
+
+const BACKENDS: [MemBackendKind; 2] =
+    [MemBackendKind::FixedLatency, MemBackendKind::BankLevel];
+
+fn cfg_for(backend: MemBackendKind) -> SystemConfig {
+    let mut c = SystemConfig::test_small();
+    c.mem_backend = backend;
+    c
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Field-by-field comparison of **everything** a `RunReport` carries; f64
+/// fields compare bit-exactly — the redesign must not move a single f64
+/// operation, relabel a mechanism, or drop a counter.
+fn assert_reports_identical(new: &RunReport, old: &RunReport, what: &str) {
+    assert_eq!(new.workload, old.workload, "{what}: workload label");
+    assert_eq!(new.mechanism, old.mechanism, "{what}: mechanism label");
+    assert_eq!(new.cycles.to_bits(), old.cycles.to_bits(), "{what}: cycles");
+    assert_eq!(new.accesses, old.accesses, "{what}: access counts");
+    assert_eq!(new.stack_bytes, old.stack_bytes, "{what}: stack bytes");
+    assert_eq!(new.remote_bytes, old.remote_bytes, "{what}: remote bytes");
+    assert_eq!(
+        new.mean_mem_latency.to_bits(),
+        old.mean_mem_latency.to_bits(),
+        "{what}: latency"
+    );
+    assert_eq!(
+        new.tlb_hit_rate.to_bits(),
+        old.tlb_hit_rate.to_bits(),
+        "{what}: tlb"
+    );
+    assert_eq!(
+        new.row_hit_rate.to_bits(),
+        old.row_hit_rate.to_bits(),
+        "{what}: row hit rate"
+    );
+    assert_eq!(new.mem_backend, old.mem_backend, "{what}: backend label");
+    assert_eq!(new.bank_conflicts, old.bank_conflicts, "{what}: conflicts");
+    assert_eq!(
+        new.refresh_stalls, old.refresh_stalls,
+        "{what}: refresh stalls"
+    );
+    assert_eq!(new.cgp_pages, old.cgp_pages, "{what}: cgp pages");
+    assert_eq!(new.fgp_pages, old.fgp_pages, "{what}: fgp pages");
+    assert_eq!(
+        new.migrated_pages, old.migrated_pages,
+        "{what}: migrated pages"
+    );
+    assert_eq!(
+        bits(&new.app_cycles),
+        bits(&old.app_cycles),
+        "{what}: app cycles"
+    );
+    assert_eq!(
+        bits(&new.app_slowdown),
+        bits(&old.app_slowdown),
+        "{what}: app slowdown"
+    );
+    assert_eq!(
+        new.weighted_speedup.to_bits(),
+        old.weighted_speedup.to_bits(),
+        "{what}: weighted speedup"
+    );
+    assert_eq!(
+        new.host_cycles.to_bits(),
+        old.host_cycles.to_bits(),
+        "{what}: host cycles"
+    );
+    assert_eq!(
+        new.host_slowdown.to_bits(),
+        old.host_slowdown.to_bits(),
+        "{what}: host slowdown"
+    );
+    assert_eq!(
+        new.ndp_slowdown.to_bits(),
+        old.ndp_slowdown.to_bits(),
+        "{what}: ndp slowdown"
+    );
+    assert_eq!(new.host_bytes, old.host_bytes, "{what}: host bytes");
+    assert_eq!(
+        new.host_ddr_bytes, old.host_ddr_bytes,
+        "{what}: host ddr bytes"
+    );
+    assert_eq!(
+        new.host_port_stalls, old.host_port_stalls,
+        "{what}: host port stalls"
+    );
+    assert_eq!(
+        new.host_bw_share.to_bits(),
+        old.host_bw_share.to_bits(),
+        "{what}: host bw share"
+    );
+    // Belt and braces: the rendered JSON must be byte-identical too.
+    assert_eq!(
+        coda::report::Json::from(new).render(),
+        coda::report::Json::from(old).render(),
+        "{what}: JSON"
+    );
+}
+
+/// `Coordinator::run` (now a spec wrapper) vs the frozen coordinator
+/// pipeline, for every mechanism under both backends. HS3D exercises the
+/// §6.4 no-degradation fallback inside the lowering.
+#[test]
+fn coordinator_run_matches_frozen_oracle() {
+    for backend in BACKENDS {
+        let cfg = cfg_for(backend);
+        let coord = Coordinator::new(cfg.clone());
+        for name in ["PR", "KM", "HS3D"] {
+            let wl = suite::build(name, &cfg).unwrap();
+            for mech in Mechanism::ALL {
+                let new = coord.run(&wl, mech).unwrap();
+                let old = oracle::coordinator_run(&cfg, &wl, mech);
+                let what = format!("run[{name}]/{}/{}", mech.name(), cfg.mem_backend);
+                assert_reports_identical(&new, &old, &what);
+            }
+        }
+    }
+}
+
+/// `multiprog::run_mix` (pinned dispatch) vs the frozen implementation.
+#[test]
+fn run_mix_matches_frozen_oracle() {
+    for backend in BACKENDS {
+        let cfg = cfg_for(backend);
+        let a = suite::build("NN", &cfg).unwrap();
+        let b = suite::build("KM", &cfg).unwrap();
+        let c = suite::build("DC", &cfg).unwrap();
+        let d = suite::build("HS", &cfg).unwrap();
+        let mixes: [Vec<&coda::workloads::BuiltWorkload>; 2] =
+            [vec![&a, &b, &c, &d], vec![&a, &c]];
+        for apps in &mixes {
+            for placement in [MixPlacement::FgpOnly, MixPlacement::CgpLocal] {
+                let mix = Mix { apps: apps.clone() };
+                let (times_new, rep_new) = run_mix(&cfg, &mix, placement).unwrap();
+                let (times_old, rep_old) =
+                    oracle::run_mix(&cfg, apps, placement).unwrap();
+                let what = format!(
+                    "mix[{}]/{placement:?}/{}",
+                    rep_new.workload, cfg.mem_backend
+                );
+                assert_eq!(bits(&times_new), bits(&times_old), "{what}: app times");
+                assert_reports_identical(&rep_new, &rep_old, &what);
+            }
+        }
+    }
+}
+
+/// `multiprog::run_multi` (shared dispatch + solo baselines) vs the
+/// frozen implementation: oversubscribed, staggered, per fairness policy.
+#[test]
+fn run_multi_matches_frozen_oracle() {
+    for backend in BACKENDS {
+        let cfg = cfg_for(backend);
+        let built: Vec<_> = ["NN", "KM", "DC", "HS", "NN"]
+            .iter()
+            .map(|n| suite::build(n, &cfg).unwrap())
+            .collect();
+        let launches: Vec<(&coda::workloads::BuiltWorkload, f64)> = built
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (&**b, i as f64 * 3000.0))
+            .collect();
+        for fairness in [FairnessPolicy::RoundRobin, FairnessPolicy::LeastIssued] {
+            let mix = MultiMix {
+                launches: launches
+                    .iter()
+                    .map(|&(app, arrival)| KernelLaunch { app, arrival })
+                    .collect(),
+            };
+            let new = run_multi(
+                &cfg,
+                &mix,
+                MixPlacement::CgpLocal,
+                Policy::Affinity,
+                fairness,
+            )
+            .unwrap();
+            let old = oracle::run_multi(
+                &cfg,
+                &launches,
+                MixPlacement::CgpLocal,
+                Policy::Affinity,
+                fairness,
+            )
+            .unwrap();
+            let what = format!("multi/{fairness}/{}", cfg.mem_backend);
+            assert_reports_identical(&new, &old, &what);
+        }
+    }
+}
+
+/// `multiprog::run_hostmix` vs the frozen implementation, covering the
+/// full co-run, host-alone, and the zero-intensity degenerate case.
+#[test]
+fn run_hostmix_matches_frozen_oracle() {
+    for backend in BACKENDS {
+        let cfg = cfg_for(backend);
+        let a = suite::build("NN", &cfg).unwrap();
+        let b = suite::build("KM", &cfg).unwrap();
+        let h = suite::build("DC", &cfg).unwrap();
+        let launches: Vec<(&coda::workloads::BuiltWorkload, f64)> =
+            vec![(&a, 0.0), (&b, 2000.0)];
+        let mut zero_intensity = cfg.clone();
+        zero_intensity.host_mlp = 0;
+        let check = |label: &str,
+                     ls: &[(&coda::workloads::BuiltWorkload, f64)],
+                     case_cfg: &SystemConfig| {
+            let mix = MultiMix {
+                launches: ls
+                    .iter()
+                    .map(|&(app, arrival)| KernelLaunch { app, arrival })
+                    .collect(),
+            };
+            let new = run_hostmix(
+                case_cfg,
+                &mix,
+                Some(&h),
+                MixPlacement::CgpLocal,
+                Policy::Affinity,
+                FairnessPolicy::Fcfs,
+            )
+            .unwrap();
+            let old = oracle::run_hostmix(
+                case_cfg,
+                ls,
+                Some(&h),
+                MixPlacement::CgpLocal,
+                Policy::Affinity,
+                FairnessPolicy::Fcfs,
+            )
+            .unwrap();
+            let what = format!("hostmix[{label}]/{}", case_cfg.mem_backend);
+            assert_reports_identical(&new, &old, &what);
+        };
+        check("corun", &launches, &cfg);
+        check("host-alone", &[], &cfg);
+        check("zero-intensity", &launches, &zero_intensity);
+
+        // host = None is still a hostmix-flavored run (label + degenerate
+        // slowdowns), not a run_multi.
+        let mix = MultiMix {
+            launches: vec![KernelLaunch {
+                app: &a,
+                arrival: 0.0,
+            }],
+        };
+        let new = run_hostmix(
+            &cfg,
+            &mix,
+            None,
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        )
+        .unwrap();
+        let old = oracle::run_hostmix(
+            &cfg,
+            &[(&a, 0.0)],
+            None,
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        )
+        .unwrap();
+        assert_reports_identical(&new, &old, &format!("hostmix[no-host]/{}", cfg.mem_backend));
+    }
+}
+
+/// `host::run_host_sweep` (external layout) vs the frozen implementation,
+/// under both the FGP and CGP layouts it is historically called with.
+#[test]
+fn host_sweep_matches_frozen_oracle() {
+    for backend in BACKENDS {
+        let cfg = cfg_for(backend);
+        let wl = suite::build("NN", &cfg).unwrap();
+        let plans = [
+            ("fgp", PlacementPlan::all_fgp(wl.trace.objects.len())),
+            ("cgp", cgp_only_plan(wl.trace.objects.len(), &cfg)),
+        ];
+        for (label, plan) in &plans {
+            let (mut vm_new, bases_new, _, _) =
+                map_objects(&cfg, &wl.trace, plan).unwrap();
+            let new = coda::host::run_host_sweep(&cfg, &wl.trace, &mut vm_new, &bases_new);
+            let (mut vm_old, bases_old, _, _) =
+                map_objects(&cfg, &wl.trace, plan).unwrap();
+            let old = oracle::host_sweep(&cfg, &wl.trace, &mut vm_old, &bases_old);
+            let what = format!("host-sweep[{label}]/{}", cfg.mem_backend);
+            assert_reports_identical(&new, &old, &what);
+        }
+    }
+}
+
+/// The acceptance check for `coda run <spec.toml>`: a spec parsed from
+/// TOML text alone reproduces the wrapper (and hence pre-redesign)
+/// reports bit-exactly — the CLI commands are just builders for the same
+/// specs.
+#[test]
+fn toml_specs_reproduce_legacy_cli_reports() {
+    let cfg = SystemConfig::test_small();
+
+    // `coda run NN --mechanism coda`.
+    let spec = ExperimentSpec::from_toml_str(
+        "[experiment]\ndispatch = kernel\n[[kernel]]\nworkload = NN\nmechanism = coda\n",
+    )
+    .unwrap();
+    let from_file = session::run_spec(&cfg, &spec).unwrap().remove(0);
+    let wl = suite::build("NN", &cfg).unwrap();
+    let direct = Coordinator::new(cfg.clone()).run(&wl, Mechanism::Coda).unwrap();
+    assert_reports_identical(&from_file.run, &direct, "spec-file run");
+
+    // `coda mix NN,KM --stagger 2000 --fairness rr`.
+    let spec = ExperimentSpec::from_toml_str(
+        "[experiment]\ndispatch = shared\nplacement = cgp\npolicy = affinity\n\
+         fairness = rr\n[output]\nbaselines = solo\n\
+         [[kernel]]\nworkload = NN\narrival = 0\n\
+         [[kernel]]\nworkload = KM\narrival = 2000\n",
+    )
+    .unwrap();
+    let from_file = session::run_spec(&cfg, &spec).unwrap().remove(0);
+    let a = suite::build("NN", &cfg).unwrap();
+    let b = suite::build("KM", &cfg).unwrap();
+    let mix = MultiMix {
+        launches: vec![
+            KernelLaunch {
+                app: &a,
+                arrival: 0.0,
+            },
+            KernelLaunch {
+                app: &b,
+                arrival: 2000.0,
+            },
+        ],
+    };
+    let direct = run_multi(
+        &cfg,
+        &mix,
+        MixPlacement::CgpLocal,
+        Policy::Affinity,
+        FairnessPolicy::RoundRobin,
+    )
+    .unwrap();
+    assert_reports_identical(&from_file.run, &direct, "spec-file mix");
+
+    // `coda hostmix NN --host KM --host-mlp 16`.
+    let spec = ExperimentSpec::from_toml_str(
+        "[experiment]\ndispatch = shared\n[output]\nbaselines = host-split\n\
+         [[kernel]]\nworkload = NN\n[host]\nworkload = KM\nmlp = 16\n",
+    )
+    .unwrap();
+    let from_file = session::run_spec(&cfg, &spec).unwrap().remove(0);
+    let mut host_cfg = cfg.clone();
+    host_cfg.host_mlp = 16;
+    let mix = MultiMix {
+        launches: vec![KernelLaunch {
+            app: &a,
+            arrival: 0.0,
+        }],
+    };
+    let direct = run_hostmix(
+        &host_cfg,
+        &mix,
+        Some(&b),
+        MixPlacement::CgpLocal,
+        Policy::Affinity,
+        FairnessPolicy::Fcfs,
+    )
+    .unwrap();
+    assert_reports_identical(&from_file.run, &direct, "spec-file hostmix");
+}

@@ -1,0 +1,594 @@
+//! **Frozen** pre-redesign implementations of every legacy entry point,
+//! copied verbatim from `coordinator.rs` / `multiprog.rs` / `host.rs` as
+//! they stood before the `ExperimentSpec` → `Session` API redesign.
+//!
+//! Differential-testing convention (docs/ARCHITECTURE.md): these oracles
+//! must never be modernized or deduplicated against the code under test —
+//! their whole value is that they cannot drift with it. `main.rs` asserts
+//! the spec-based wrappers are cycle-identical (bit-exact f64) to these
+//! copies for mechanisms × workloads × both DRAM backends.
+
+use coda::analysis::{analyze_kernel, profile_trace, ObjectPattern};
+use coda::config::SystemConfig;
+use coda::coordinator::Mechanism;
+use coda::engine::{
+    AppCtx, BlockRef, BlockSource, Engine, EngineOptions, EngineRaw, HostStream,
+};
+use coda::gpu::{Sm, Topology};
+use coda::multiprog::MixPlacement;
+use coda::placement::{self, PlacementPlan};
+use coda::sched::{affinity_stack, FairnessPolicy, Policy};
+use coda::sim::{map_objects, KernelRun};
+use coda::stats::{self, RunReport};
+use coda::trace::KernelTrace;
+use coda::vm::VirtualMemory;
+use coda::workloads::BuiltWorkload;
+use std::collections::{HashMap, VecDeque};
+
+// ---------------------------------------------------------------------------
+// Coordinator::run (single kernel).
+// ---------------------------------------------------------------------------
+
+fn plan_for(cfg: &SystemConfig, wl: &BuiltWorkload, mech: Mechanism) -> PlacementPlan {
+    let n = wl.trace.objects.len();
+    match mech {
+        Mechanism::FgpOnly | Mechanism::FgpAffinity => PlacementPlan::all_fgp(n),
+        Mechanism::CgpOnly => placement::cgp_only_plan(n, cfg),
+        Mechanism::CgpFta => placement::fta_plan(&wl.trace, cfg),
+        Mechanism::MigrationFta => placement::migration_fta_plan(n),
+        Mechanism::Coda | Mechanism::CodaStealing => {
+            let compile: HashMap<u16, ObjectPattern> = wl
+                .ir
+                .as_ref()
+                .map(|ir| analyze_kernel(ir, &wl.env))
+                .unwrap_or_default();
+            let profile =
+                profile_trace(&wl.trace, cfg.page_size, |b| affinity_stack(b, cfg));
+            placement::coda_plan(n, &compile, &profile, cfg)
+        }
+    }
+}
+
+fn localizable_traffic(wl: &BuiltWorkload, plan: &PlacementPlan) -> f64 {
+    let mut per_obj = vec![0u64; wl.trace.objects.len()];
+    for b in &wl.trace.blocks {
+        for a in &b.accesses {
+            per_obj[a.obj as usize] += 1;
+        }
+    }
+    let total: u64 = per_obj.iter().sum();
+    let localized: u64 = per_obj
+        .iter()
+        .enumerate()
+        .filter(|(o, _)| !matches!(plan.per_object[*o], placement::Placement::Fgp))
+        .map(|(_, n)| *n)
+        .sum();
+    if total == 0 {
+        0.0
+    } else {
+        localized as f64 / total as f64
+    }
+}
+
+/// Frozen copy of the pre-spec `Coordinator::run`.
+pub fn coordinator_run(
+    cfg: &SystemConfig,
+    wl: &BuiltWorkload,
+    mech: Mechanism,
+) -> RunReport {
+    let mut plan = plan_for(cfg, wl, mech);
+    let mut policy = mech.policy();
+    if matches!(mech, Mechanism::Coda | Mechanism::CodaStealing)
+        && localizable_traffic(wl, &plan) < 0.05
+    {
+        plan = PlacementPlan::all_fgp(wl.trace.objects.len());
+        policy = Policy::Baseline;
+    }
+    let (mut vm, bases, cgp_pages, fgp_pages) =
+        map_objects(cfg, &wl.trace, &plan).unwrap();
+    let mut report = KernelRun {
+        cfg,
+        trace: &wl.trace,
+        vm: &mut vm,
+        obj_base: &bases,
+        policy,
+        migrate_on_first_touch: plan.migrate_on_first_touch,
+    }
+    .run();
+    report.mechanism = mech.name().into();
+    report.cgp_pages = cgp_pages;
+    report.fgp_pages = fgp_pages;
+    report
+}
+
+// ---------------------------------------------------------------------------
+// multiprog (pinned mix, multi-kernel, hostmix).
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn home_of(app_idx: usize, cfg: &SystemConfig) -> usize {
+    app_idx % cfg.num_stacks
+}
+
+fn map_mix(
+    cfg: &SystemConfig,
+    apps: &[&BuiltWorkload],
+    placement: MixPlacement,
+) -> coda::Result<(VirtualMemory, Vec<Vec<u64>>)> {
+    let mut vm = VirtualMemory::new(cfg);
+    let mut app_bases: Vec<Vec<u64>> = Vec::new();
+    for (i, app) in apps.iter().enumerate() {
+        let home = home_of(i, cfg);
+        let mut bases = Vec::new();
+        for obj in &app.trace.objects {
+            let pages = obj.bytes.div_ceil(cfg.page_size).max(1);
+            let base = match placement {
+                MixPlacement::FgpOnly => vm.map_fgp(pages)?,
+                MixPlacement::CgpLocal => vm.map_cgp(pages, |_| home)?,
+            };
+            bases.push(base);
+        }
+        app_bases.push(bases);
+    }
+    Ok((vm, app_bases))
+}
+
+struct MixSource {
+    next_block: Vec<usize>,
+    num_blocks: Vec<usize>,
+}
+
+impl BlockSource for MixSource {
+    fn seed(&mut self, topo: &Topology, place: &mut dyn FnMut(usize, usize, BlockRef)) {
+        for app in 0..self.num_blocks.len() {
+            let sms: Vec<usize> = topo.sms_of_stack(app).map(|s| s.id).collect();
+            let capacity = sms.len() * topo.blocks_per_sm;
+            for slot in 0..capacity {
+                if self.next_block[app] >= self.num_blocks[app] {
+                    break;
+                }
+                let b = self.next_block[app];
+                self.next_block[app] += 1;
+                place(
+                    sms[slot % sms.len()],
+                    slot / sms.len(),
+                    BlockRef {
+                        app: app as u32,
+                        block: b as u32,
+                    },
+                );
+            }
+        }
+    }
+
+    fn refill(&mut self, _sm: Sm, retired: Option<BlockRef>, _now: f64) -> Option<BlockRef> {
+        let app = retired?.app as usize;
+        if self.next_block[app] < self.num_blocks[app] {
+            let b = self.next_block[app];
+            self.next_block[app] += 1;
+            Some(BlockRef {
+                app: app as u32,
+                block: b as u32,
+            })
+        } else {
+            None
+        }
+    }
+}
+
+/// Frozen copy of the pre-spec `multiprog::run_mix`.
+pub fn run_mix(
+    cfg: &SystemConfig,
+    apps: &[&BuiltWorkload],
+    placement: MixPlacement,
+) -> coda::Result<(Vec<f64>, RunReport)> {
+    anyhow::ensure!(apps.len() <= cfg.num_stacks, "too many apps");
+    let (mut vm, app_bases) = map_mix(cfg, apps, placement)?;
+    let app_ctxs: Vec<AppCtx<'_>> = apps
+        .iter()
+        .zip(&app_bases)
+        .map(|(a, b)| AppCtx {
+            trace: &a.trace,
+            obj_base: b.as_slice(),
+        })
+        .collect();
+    let mut source = MixSource {
+        next_block: vec![0; apps.len()],
+        num_blocks: apps.iter().map(|a| a.trace.blocks.len()).collect(),
+    };
+    let raw = Engine {
+        cfg,
+        apps: app_ctxs,
+        vm: &mut vm,
+        opts: EngineOptions {
+            l2_filter: false,
+            migrate_on_first_touch: false,
+        },
+        host: None,
+    }
+    .run(&mut source);
+    let mut report = raw.to_report(
+        cfg,
+        apps.iter().map(|a| a.name).collect::<Vec<_>>().join("+"),
+    );
+    report.mechanism = format!("{placement:?}");
+    report.app_cycles = raw.app_end.clone();
+    Ok((raw.app_end, report))
+}
+
+struct MultiKernelSource {
+    queues: Vec<VecDeque<u32>>,
+    arrival: Vec<f64>,
+    home: Vec<usize>,
+    policy: Policy,
+    fairness: FairnessPolicy,
+    issued: Vec<u64>,
+    rr_cursor: usize,
+}
+
+impl MultiKernelSource {
+    fn new(
+        launches: &[(usize, f64)],
+        cfg: &SystemConfig,
+        policy: Policy,
+        fairness: FairnessPolicy,
+        only_app: Option<usize>,
+    ) -> Self {
+        let queues = launches
+            .iter()
+            .enumerate()
+            .map(|(i, &(n, _))| {
+                if only_app.is_some_and(|o| o != i) {
+                    VecDeque::new()
+                } else {
+                    (0..n as u32).collect()
+                }
+            })
+            .collect();
+        Self {
+            queues,
+            arrival: launches.iter().map(|&(_, t)| t).collect(),
+            home: (0..launches.len()).map(|i| home_of(i, cfg)).collect(),
+            policy,
+            fairness,
+            issued: vec![0; launches.len()],
+            rr_cursor: 0,
+        }
+    }
+
+    fn eligible(&self, stack: usize, now: f64) -> Vec<usize> {
+        let arrived: Vec<usize> = (0..self.queues.len())
+            .filter(|&i| !self.queues[i].is_empty() && self.arrival[i] <= now)
+            .collect();
+        match self.policy {
+            Policy::Baseline => arrived,
+            Policy::Affinity => arrived
+                .into_iter()
+                .filter(|&i| self.home[i] == stack)
+                .collect(),
+            Policy::AffinityStealing => {
+                let homed: Vec<usize> = arrived
+                    .iter()
+                    .copied()
+                    .filter(|&i| self.home[i] == stack)
+                    .collect();
+                if homed.is_empty() {
+                    arrived
+                } else {
+                    homed
+                }
+            }
+        }
+    }
+
+    fn pick(&mut self, stack: usize, now: f64) -> Option<BlockRef> {
+        let elig = self.eligible(stack, now);
+        if elig.is_empty() {
+            return None;
+        }
+        let app = match self.fairness {
+            FairnessPolicy::Fcfs => elig.into_iter().min_by(|&a, &b| {
+                self.arrival[a]
+                    .partial_cmp(&self.arrival[b])
+                    .expect("arrival times are finite")
+                    .then(a.cmp(&b))
+            })?,
+            FairnessPolicy::RoundRobin => {
+                let n = self.queues.len();
+                (1..=n)
+                    .map(|k| (self.rr_cursor + k) % n)
+                    .find(|i| elig.contains(i))?
+            }
+            FairnessPolicy::LeastIssued => {
+                elig.into_iter().min_by_key(|&i| (self.issued[i], i))?
+            }
+        };
+        self.rr_cursor = app;
+        self.issued[app] += 1;
+        let block = self.queues[app].pop_front()?;
+        Some(BlockRef {
+            app: app as u32,
+            block,
+        })
+    }
+}
+
+impl BlockSource for MultiKernelSource {
+    fn seed(&mut self, topo: &Topology, place: &mut dyn FnMut(usize, usize, BlockRef)) {
+        for slot in 0..topo.blocks_per_sm {
+            for sm in &topo.sms {
+                if let Some(br) = self.pick(sm.stack, 0.0) {
+                    place(sm.id, slot, br);
+                }
+            }
+        }
+    }
+
+    fn refill(&mut self, sm: Sm, _retired: Option<BlockRef>, now: f64) -> Option<BlockRef> {
+        self.pick(sm.stack, now)
+    }
+
+    fn next_arrival_after(&self, now: f64) -> Option<f64> {
+        self.queues
+            .iter()
+            .zip(&self.arrival)
+            .filter(|(q, &t)| !q.is_empty() && t > now)
+            .map(|(_, &t)| t)
+            .fold(None, |m, t| {
+                Some(match m {
+                    None => t,
+                    Some(m) => m.min(t),
+                })
+            })
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_multi_inner(
+    cfg: &SystemConfig,
+    apps: &[&BuiltWorkload],
+    arrivals: &[f64],
+    only_app: Option<usize>,
+    placement: MixPlacement,
+    policy: Policy,
+    fairness: FairnessPolicy,
+) -> coda::Result<EngineRaw> {
+    let (mut vm, app_bases) = map_mix(cfg, apps, placement)?;
+    let app_ctxs: Vec<AppCtx<'_>> = apps
+        .iter()
+        .zip(&app_bases)
+        .map(|(a, b)| AppCtx {
+            trace: &a.trace,
+            obj_base: b.as_slice(),
+        })
+        .collect();
+    let launches: Vec<(usize, f64)> = apps
+        .iter()
+        .zip(arrivals)
+        .map(|(a, &t)| (a.trace.blocks.len(), t))
+        .collect();
+    let mut source = MultiKernelSource::new(&launches, cfg, policy, fairness, only_app);
+    Ok(Engine {
+        cfg,
+        apps: app_ctxs,
+        vm: &mut vm,
+        opts: EngineOptions {
+            l2_filter: false,
+            migrate_on_first_touch: false,
+        },
+        host: None,
+    }
+    .run(&mut source))
+}
+
+/// Frozen copy of the pre-spec `multiprog::run_multi`.
+pub fn run_multi(
+    cfg: &SystemConfig,
+    launches_in: &[(&BuiltWorkload, f64)],
+    placement: MixPlacement,
+    policy: Policy,
+    fairness: FairnessPolicy,
+) -> coda::Result<RunReport> {
+    let apps: Vec<&BuiltWorkload> = launches_in.iter().map(|&(a, _)| a).collect();
+    let arrivals: Vec<f64> = launches_in.iter().map(|&(_, t)| t).collect();
+    for (i, &t) in arrivals.iter().enumerate() {
+        anyhow::ensure!(
+            t >= 0.0 && t.is_finite(),
+            "arrival time of app {i} must be a non-negative real, got {t}"
+        );
+    }
+    let shared = run_multi_inner(cfg, &apps, &arrivals, None, placement, policy, fairness)?;
+    let zero = vec![0.0; apps.len()];
+    let mut solo = Vec::with_capacity(apps.len());
+    for i in 0..apps.len() {
+        let raw =
+            run_multi_inner(cfg, &apps, &zero, Some(i), placement, policy, fairness)?;
+        solo.push(raw.app_end[i]);
+    }
+    let resp: Vec<f64> = (0..apps.len())
+        .map(|i| (shared.app_end[i] - arrivals[i]).max(0.0))
+        .collect();
+    let mut report = shared.to_report(
+        cfg,
+        apps.iter().map(|a| a.name).collect::<Vec<_>>().join("+"),
+    );
+    report.mechanism = format!("{placement:?}+{policy:?}+{fairness}");
+    report.app_slowdown = stats::per_app_slowdown(&solo, &resp);
+    report.weighted_speedup = stats::weighted_speedup(&solo, &resp);
+    report.app_cycles = resp;
+    Ok(report)
+}
+
+/// Frozen copy of the pre-spec `multiprog::run_hostmix`.
+pub fn run_hostmix(
+    cfg: &SystemConfig,
+    launches_in: &[(&BuiltWorkload, f64)],
+    host: Option<&BuiltWorkload>,
+    placement: MixPlacement,
+    policy: Policy,
+    fairness: FairnessPolicy,
+) -> coda::Result<RunReport> {
+    let apps: Vec<&BuiltWorkload> = launches_in.iter().map(|&(a, _)| a).collect();
+    let arrivals: Vec<f64> = launches_in.iter().map(|&(_, t)| t).collect();
+    for (i, &t) in arrivals.iter().enumerate() {
+        anyhow::ensure!(
+            t >= 0.0 && t.is_finite(),
+            "arrival time of app {i} must be a non-negative real, got {t}"
+        );
+    }
+    anyhow::ensure!(
+        host.is_some() || !apps.is_empty(),
+        "hostmix needs a host stream, at least one NDP kernel, or both"
+    );
+    let host_active = host.is_some() && cfg.host_mlp > 0 && cfg.host_passes > 0;
+
+    let (mut vm, app_bases) = map_mix(cfg, &apps, placement)?;
+    let host_bases: Vec<u64> = match host {
+        Some(h) => {
+            let mut bases = Vec::with_capacity(h.trace.objects.len());
+            for obj in &h.trace.objects {
+                let pages = obj.bytes.div_ceil(cfg.page_size).max(1);
+                bases.push(vm.map_fgp(pages)?);
+            }
+            bases
+        }
+        None => Vec::new(),
+    };
+    let launches: Vec<(usize, f64)> = apps
+        .iter()
+        .zip(&arrivals)
+        .map(|(a, &t)| (a.trace.blocks.len(), t))
+        .collect();
+
+    let exec = |with_ndp: bool, with_host: bool, vm: &mut VirtualMemory| -> EngineRaw {
+        let app_ctxs: Vec<AppCtx<'_>> = if with_ndp {
+            apps.iter()
+                .zip(&app_bases)
+                .map(|(a, b)| AppCtx {
+                    trace: &a.trace,
+                    obj_base: b.as_slice(),
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let mut source = MultiKernelSource::new(
+            if with_ndp { launches.as_slice() } else { &[] },
+            cfg,
+            policy,
+            fairness,
+            None,
+        );
+        let host_stream = if with_host {
+            host.map(|h| HostStream {
+                trace: &h.trace,
+                obj_base: &host_bases,
+            })
+        } else {
+            None
+        };
+        Engine {
+            cfg,
+            apps: app_ctxs,
+            vm,
+            opts: EngineOptions {
+                l2_filter: false,
+                migrate_on_first_touch: false,
+            },
+            host: host_stream,
+        }
+        .run(&mut source)
+    };
+
+    let shared = exec(!apps.is_empty(), host_active, &mut vm);
+    let both = host_active && !apps.is_empty();
+    let ndp_alone = both.then(|| exec(true, false, &mut vm));
+    let host_alone = both.then(|| exec(false, true, &mut vm));
+
+    let resp: Vec<f64> = (0..apps.len())
+        .map(|i| (shared.app_end[i] - arrivals[i]).max(0.0))
+        .collect();
+    let n = apps.len();
+    let (ndp_slowdown, host_slowdown, app_slowdown, weighted) =
+        match (&ndp_alone, &host_alone) {
+            (Some(na), Some(ha)) => {
+                let resp_alone: Vec<f64> = (0..n)
+                    .map(|i| (na.app_end[i] - arrivals[i]).max(0.0))
+                    .collect();
+                let ndp_sd = if na.end_time > 0.0 {
+                    shared.end_time / na.end_time
+                } else {
+                    1.0
+                };
+                let host_sd = if ha.host_end > 0.0 {
+                    shared.host_end / ha.host_end
+                } else {
+                    1.0
+                };
+                (
+                    ndp_sd,
+                    host_sd,
+                    stats::per_app_slowdown(&resp_alone, &resp),
+                    stats::weighted_speedup(&resp_alone, &resp),
+                )
+            }
+            _ => (
+                if n > 0 { 1.0 } else { 0.0 },
+                if host_active { 1.0 } else { 0.0 },
+                vec![1.0; n],
+                n as f64,
+            ),
+        };
+
+    let ndp_names = apps.iter().map(|a| a.name).collect::<Vec<_>>().join("+");
+    let workload = match (if host_active { host } else { None }, ndp_names.is_empty()) {
+        (Some(h), true) => format!("host:{}", h.name),
+        (Some(h), false) => format!("{ndp_names}|host:{}", h.name),
+        (None, _) => ndp_names,
+    };
+    let mut report = shared.to_report(cfg, workload);
+    report.mechanism = format!("hostmix:{placement:?}+{policy:?}+{fairness}");
+    report.app_cycles = resp;
+    report.app_slowdown = app_slowdown;
+    report.weighted_speedup = weighted;
+    report.ndp_slowdown = ndp_slowdown;
+    report.host_slowdown = host_slowdown;
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------------
+// host::run_host_sweep.
+// ---------------------------------------------------------------------------
+
+struct NoBlocks;
+
+impl BlockSource for NoBlocks {
+    fn seed(&mut self, _topo: &Topology, _place: &mut dyn FnMut(usize, usize, BlockRef)) {}
+
+    fn refill(&mut self, _sm: Sm, _retired: Option<BlockRef>, _now: f64) -> Option<BlockRef> {
+        None
+    }
+}
+
+/// Frozen copy of the pre-spec `host::run_host_sweep`.
+pub fn host_sweep(
+    cfg: &SystemConfig,
+    trace: &KernelTrace,
+    vm: &mut VirtualMemory,
+    obj_base: &[u64],
+) -> RunReport {
+    let raw = Engine {
+        cfg,
+        apps: Vec::new(),
+        vm,
+        opts: EngineOptions {
+            l2_filter: false,
+            migrate_on_first_touch: false,
+        },
+        host: Some(HostStream { trace, obj_base }),
+    }
+    .run(&mut NoBlocks);
+    let mut report = raw.to_report(cfg, trace.name.clone());
+    report.mechanism = "host".into();
+    report
+}

@@ -1,0 +1,219 @@
+//! Property tests for the declarative experiment API: randomized
+//! parse/serialize round-trips over the whole spec surface, plus the
+//! committed `examples/*.toml` specs — each must parse, round-trip, run,
+//! and emit JSON that actually parses.
+
+use coda::config::SystemConfig;
+use coda::coordinator::Mechanism;
+use coda::multiprog::MixPlacement;
+use coda::proptest_lite::{run_prop, PropConfig};
+use coda::report::validate_json;
+use coda::rng::Rng;
+use coda::sched::{FairnessPolicy, Policy};
+use coda::session;
+use coda::spec::{
+    Baselines, Dispatch, ExperimentSpec, HostSpec, KernelSpec, OutputFormat, OutputSpec,
+    SweepSpec, WorkloadSel,
+};
+use std::path::PathBuf;
+
+const NAMES: [&str; 6] = ["NN", "KM", "DC", "HS", "PR", "BFS"];
+
+fn pick<T: Copy>(rng: &mut Rng, xs: &[T]) -> T {
+    xs[rng.below(xs.len() as u64) as usize]
+}
+
+/// Draw a random (syntactically arbitrary, not necessarily runnable)
+/// spec over suite-named workloads. Serialization must round-trip every
+/// combination, including ones `Session::new` would reject.
+fn arbitrary_spec(rng: &mut Rng) -> ExperimentSpec<'static> {
+    let mut spec = ExperimentSpec {
+        name: rng
+            .chance(0.5)
+            .then(|| format!("spec-{}", rng.below(1000))),
+        dispatch: pick(
+            rng,
+            &[
+                Dispatch::Auto,
+                Dispatch::Kernel,
+                Dispatch::Pinned,
+                Dispatch::Shared,
+            ],
+        ),
+        placement: pick(rng, &[MixPlacement::FgpOnly, MixPlacement::CgpLocal]),
+        policy: pick(
+            rng,
+            &[Policy::Baseline, Policy::Affinity, Policy::AffinityStealing],
+        ),
+        fairness: rng.chance(0.5).then(|| {
+            pick(
+                rng,
+                &[
+                    FairnessPolicy::Fcfs,
+                    FairnessPolicy::RoundRobin,
+                    FairnessPolicy::LeastIssued,
+                ],
+            )
+        }),
+        output: OutputSpec {
+            format: pick(rng, &[OutputFormat::Table, OutputFormat::Json]),
+            baselines: pick(
+                rng,
+                &[
+                    Baselines::Auto,
+                    Baselines::None,
+                    Baselines::Solo,
+                    Baselines::HostSplit,
+                ],
+            ),
+        },
+        ..ExperimentSpec::default()
+    };
+    for _ in 0..rng.below(4) {
+        spec.overrides.push((
+            pick(rng, &["seed", "host_mlp", "remote_bw_gbs"]).to_string(),
+            rng.below(1000).to_string(),
+        ));
+    }
+    if rng.chance(0.3) {
+        spec.sweep = Some(SweepSpec {
+            key: "remote_bw_gbs".into(),
+            values: (0..1 + rng.below(3))
+                .map(|_| (1 + rng.below(256)).to_string())
+                .collect(),
+        });
+    }
+    for i in 0..rng.below(4) {
+        let mut k = KernelSpec::new(WorkloadSel::Named(pick(rng, &NAMES)));
+        // Fractional arrivals exercise exact f64 Display/parse round-trips.
+        k.arrival = rng.below(1_000_000) as f64 + if rng.chance(0.5) { 0.25 } else { 0.0 };
+        if rng.chance(0.3) {
+            k.placement = Some(pick(rng, &[MixPlacement::FgpOnly, MixPlacement::CgpLocal]));
+        }
+        if rng.chance(0.3) {
+            k.mechanism = Some(pick(rng, &Mechanism::ALL));
+        }
+        if rng.chance(0.3) {
+            k.home = Some(i as usize);
+        }
+        spec.kernels.push(k);
+    }
+    if rng.chance(0.4) {
+        let mut h = HostSpec::new(WorkloadSel::Named(pick(rng, &NAMES)));
+        if rng.chance(0.5) {
+            h.mlp = Some(1 + rng.below(128) as usize);
+        }
+        if rng.chance(0.5) {
+            h.passes = Some(1 + rng.below(4));
+        }
+        if rng.chance(0.5) {
+            h.ddr_fraction = Some((rng.below(100) as f64) / 100.0);
+        }
+        spec.host = Some(h);
+    }
+    spec
+}
+
+#[test]
+fn spec_toml_round_trip_is_lossless() {
+    run_prop(
+        PropConfig {
+            cases: 128,
+            ..PropConfig::default()
+        },
+        arbitrary_spec,
+        |spec| {
+            let text = spec.to_toml_string();
+            let reparsed = ExperimentSpec::from_toml_str(&text)
+                .map_err(|e| format!("serialized spec failed to parse: {e:#}\n{text}"))?;
+            if &reparsed != spec {
+                return Err(format!(
+                    "round trip changed the spec:\n  in: {spec:?}\n out: {reparsed:?}\ntoml:\n{text}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn double_round_trip_is_fixed_point() {
+    // serialize(parse(serialize(s))) == serialize(s): the TOML form is
+    // canonical, so committed example specs never churn.
+    run_prop(
+        PropConfig {
+            cases: 32,
+            ..PropConfig::default()
+        },
+        |rng| arbitrary_spec(rng).to_toml_string(),
+        |text| {
+            let once = ExperimentSpec::from_toml_str(text)
+                .map_err(|e| format!("parse: {e:#}"))?
+                .to_toml_string();
+            if &once != text {
+                return Err(format!("not canonical:\n--- first\n{text}\n--- second\n{once}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+fn examples_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("workspace root")
+        .join("examples")
+}
+
+fn example_specs() -> Vec<(String, String)> {
+    let mut out: Vec<(String, String)> = std::fs::read_dir(examples_dir())
+        .expect("examples/ directory")
+        .filter_map(|e| {
+            let p = e.unwrap().path();
+            (p.extension().and_then(|x| x.to_str()) == Some("toml")).then(|| {
+                (
+                    p.file_name().unwrap().to_string_lossy().into_owned(),
+                    std::fs::read_to_string(&p).unwrap(),
+                )
+            })
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+#[test]
+fn committed_example_specs_parse_and_round_trip() {
+    let examples = example_specs();
+    assert!(
+        examples.len() >= 6,
+        "expected one example spec per legacy command, found {}",
+        examples.len()
+    );
+    for (name, text) in &examples {
+        let spec = ExperimentSpec::from_toml_str(text)
+            .unwrap_or_else(|e| panic!("{name} failed to parse: {e:#}"));
+        let reparsed = ExperimentSpec::from_toml_str(&spec.to_toml_string())
+            .unwrap_or_else(|e| panic!("{name} round trip failed: {e:#}"));
+        assert_eq!(reparsed, spec, "{name} round trip changed the spec");
+    }
+}
+
+#[test]
+fn committed_example_specs_run_and_emit_valid_json() {
+    // The in-repo version of the CI spec-smoke job: every committed
+    // example runs end to end and its JSON report parses.
+    let base = SystemConfig::default();
+    for (name, text) in &example_specs() {
+        let spec = ExperimentSpec::from_toml_str(text).unwrap();
+        let reports = session::run_spec(&base, &spec)
+            .unwrap_or_else(|e| panic!("{name} failed to run: {e:#}"));
+        assert!(!reports.is_empty(), "{name} produced no reports");
+        for r in &reports {
+            assert!(r.run.cycles >= 0.0);
+            let json = r.to_json().render();
+            validate_json(&json)
+                .unwrap_or_else(|e| panic!("{name} emitted invalid JSON ({e}): {json}"));
+        }
+    }
+}
