@@ -1,6 +1,12 @@
-//! Hot-path micro-benchmarks (the §Perf targets in EXPERIMENTS.md):
+//! Hot-path micro-benchmarks (§Performance in docs/ARCHITECTURE.md):
 //! address mapping, TLB lookup, scheduler pick, event-driven simulation
 //! throughput, and PJRT sweep latency.
+//!
+//! Besides the console table, the run emits `BENCH_hotpath.json` (path
+//! overridable via `CODA_BENCH_JSON`) — the machine-readable perf
+//! trajectory every hot-path PR records its before/after numbers from.
+//! The headline series are the two full-run simulator benches, whose
+//! `ops_per_sec` is simulated accesses per second.
 
 mod common;
 
@@ -20,7 +26,7 @@ fn main() -> coda::Result<()> {
     // Address mapping: THE per-access operation.
     let mapper = AddressMapper::new(&cfg);
     let n_ops = 1_000_000u64;
-    let r = b.bench("addr::stack_of x1M (fgp+cgp mix)", || {
+    let r = b.bench_n("addr::stack_of x1M (fgp+cgp mix)", n_ops as f64, || {
         let mut acc = 0usize;
         for i in 0..n_ops {
             let a = i.wrapping_mul(0x9E3779B97F4A7C15) & 0xFFFF_FFFF;
@@ -41,7 +47,7 @@ fn main() -> coda::Result<()> {
 
     // TLB lookup/fill mix.
     let mut tlb = Tlb::new(cfg.tlb_entries);
-    let r = b.bench("tlb::lookup+fill x100K", || {
+    let r = b.bench_n("tlb::lookup+fill x100K", 100_000.0, || {
         let mut acc = 0u64;
         for i in 0..100_000u64 {
             let vpn = (i * 7) & 0x3FF;
@@ -61,7 +67,7 @@ fn main() -> coda::Result<()> {
     println!("  -> {:.2} ns/op\n", r.mean_ns / 100_000.0);
 
     // Scheduler pick throughput.
-    let r = b.bench("sched::next_for full drain (96K blocks)", || {
+    let r = b.bench_n("sched::next_for full drain (96K blocks)", 96_000.0, || {
         let mut s = Scheduler::new(Policy::Affinity, 96_000, &cfg);
         let mut n = 0u32;
         'outer: loop {
@@ -84,7 +90,7 @@ fn main() -> coda::Result<()> {
     let wl = suite::build("KM", &cfg)?;
     let accesses = wl.total_accesses();
     let coord = Coordinator::new(cfg.clone());
-    let r = b.bench("sim: KM full run (CODA)", || {
+    let r = b.bench_n("sim: KM full run (CODA)", accesses as f64, || {
         coord.run(&wl, Mechanism::Coda).unwrap().cycles
     });
     println!(
@@ -95,7 +101,7 @@ fn main() -> coda::Result<()> {
 
     let wl = suite::build("PR", &cfg)?;
     let accesses = wl.total_accesses();
-    let r = b.bench("sim: PR full run (FGP-Only)", || {
+    let r = b.bench_n("sim: PR full run (FGP-Only)", accesses as f64, || {
         coord.run(&wl, Mechanism::FgpOnly).unwrap().cycles
     });
     println!(
@@ -114,15 +120,19 @@ fn main() -> coda::Result<()> {
         let nbr: Vec<i32> = (0..V * K).map(|i| ((i / K + i % K + 1) % V) as i32).collect();
         let mask = vec![1.0f32; V * K];
         let exe = rt.load("pagerank_update")?;
-        let r = b.bench("pjrt: pagerank_update sweep (8192x16)", || {
+        let flops = (V * K * 3) as f64; // mul+mul+add per edge slot
+        let r = b.bench_n("pjrt: pagerank_update sweep (8192x16)", flops, || {
             coda::runtime::run_pagerank(exe, &ranks, &inv_deg, &nbr, &mask, V, K).unwrap()
         });
-        let flops = (V * K * 3) as f64; // mul+mul+add per edge slot
         println!(
             "  -> {:.2} ms/sweep, {:.2} GFLOP/s effective\n",
             r.mean_ns / 1e6,
             flops / r.mean_ns
         );
     }
+
+    // Record the perf trajectory for this machine/commit.
+    let path = b.write_json("BENCH_hotpath.json")?;
+    println!("perf trajectory -> {path}");
     Ok(())
 }

@@ -26,6 +26,7 @@ pub const VALUE_OPTS: &[&str] = &[
     "key",
     "values",
     "baselines",
+    "threads",
 ];
 
 /// Parsed command line.

@@ -292,6 +292,15 @@ pub struct SystemConfig {
     /// selected by `mem_backend`, scaled to these parameters).
     pub host_ddr_channels: usize,
 
+    // --- orchestration -------------------------------------------------------
+    /// Worker threads for the orchestration layer (run-alone baselines,
+    /// `[sweep]` expansion — see [`crate::par`]): `0` = one per available
+    /// core, `1` = the plain sequential path (no threads spawned), `N` =
+    /// cap at N. Simulated results are independent of this value —
+    /// parallelism shapes wall-clock time only
+    /// (`tests/parallel_equiv.rs` locks that in). CLI: `--threads N`.
+    pub sim_threads: usize,
+
     // --- misc ----------------------------------------------------------------
     /// Global PRNG seed for workload synthesis.
     pub seed: u64,
@@ -341,6 +350,7 @@ impl Default for SystemConfig {
             host_ddr_fraction: 0.0,
             host_ddr_bw_gbs: 64.0,
             host_ddr_channels: 2,
+            sim_threads: 0,
             seed: 0xC0DA,
         }
     }
@@ -510,6 +520,7 @@ impl SystemConfig {
             "host_ddr_fraction" => parse!(host_ddr_fraction, f64),
             "host_ddr_bw_gbs" => parse!(host_ddr_bw_gbs, f64),
             "host_ddr_channels" => parse!(host_ddr_channels, usize),
+            "sim_threads" => parse!(sim_threads, usize),
             "seed" => parse!(seed, u64),
             _ => bail!("unknown config key: {key}"),
         }
@@ -587,6 +598,7 @@ impl SystemConfig {
             ("host_ddr_fraction", self.host_ddr_fraction.to_string()),
             ("host_ddr_bw_gbs", self.host_ddr_bw_gbs.to_string()),
             ("host_ddr_channels", self.host_ddr_channels.to_string()),
+            ("sim_threads", self.sim_threads.to_string()),
             ("seed", self.seed.to_string()),
         ]
         .into_iter()
@@ -776,6 +788,18 @@ mod tests {
         c.host_ddr_bw_gbs = 64.0;
         c.host_ddr_channels = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sim_threads_parses_and_defaults_to_auto() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.sim_threads, 0); // 0 = one thread per core
+        c.set("sim_threads", "4").unwrap();
+        assert_eq!(c.sim_threads, 4);
+        assert!(c.validate().is_ok());
+        assert!(c.set("sim_threads", "many").is_err());
+        let c2 = SystemConfig::from_toml_str("sim_threads = 1\n").unwrap();
+        assert_eq!(c2.sim_threads, 1);
     }
 
     #[test]

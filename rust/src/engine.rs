@@ -29,11 +29,22 @@
 //! stream attached (or `host_mlp = 0`) the engine executes exactly as
 //! before — not one extra f64 operation — so NDP-only results stay
 //! bit-identical; `tests/host_contention.rs` locks that in.
+//!
+//! The loop is written to be fast as well as single-sourced: per-access
+//! DRAM dispatch goes through the statically-dispatched
+//! [`crate::mem::MemBackendImpl`] (no vtable on the hot path), heap
+//! entries are packed to 32 bytes and the heap is pre-sized to its
+//! outstanding-event bound, window-invariant loads are hoisted out of
+//! the access loop, and the host stream's object lookup is an O(1)
+//! incremental cursor. Every one of these shapes wall-clock time only —
+//! the differential, spec-equivalence and golden suites pin the
+//! simulated results bit-exactly (see `docs/ARCHITECTURE.md`,
+//! §Performance).
 
 use crate::addr::{AddressMapper, Granularity};
 use crate::config::SystemConfig;
 use crate::gpu::{Sm, Topology};
-use crate::mem::{self, MemBackend, MemStats};
+use crate::mem::{self, MemBackend, MemBackendImpl, MemStats};
 use crate::net::Interconnect;
 use crate::stats::{AccessStats, RunReport};
 use crate::trace::KernelTrace;
@@ -240,10 +251,25 @@ impl EngineRaw {
     }
 }
 
-/// Heap events. Ordering beyond the `TimeKey` is never consulted (the
-/// sequence number is unique) but the derive keeps the heap total-ordered.
+/// A heap event, packed into two words so one heap entry — `(TimeKey,
+/// Ev)` — is exactly 32 bytes (two entries per cache line; the naive
+/// five-field enum cost 40). The heap is the engine's hottest data
+/// structure: every sift touches several entries, so entry size is paid
+/// on every simulated window. Ordering beyond the `TimeKey` is never
+/// consulted (the sequence number is unique) but the derive keeps the
+/// heap total-ordered.
+///
+/// Encoding: word 0 is `app << 32 | block` for a block window, or one of
+/// two tag values (`u64::MAX` = arrival, `u64::MAX - 1` = host window)
+/// that a real `app` index — bounded by the apps vector — can never
+/// produce. Word 1 carries `next << 32 | sm << 16 | slot` for windows
+/// and the global line index for host windows. [`Engine::run`] asserts
+/// the sm/slot fields fit their 16 bits up front.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
-enum Ev {
+struct Ev(u64, u64);
+
+/// Unpacked view of an [`Ev`] (what the old enum spelled directly).
+enum EvKind {
     /// A resident block issues its next window of accesses.
     Window {
         app: u32,
@@ -259,6 +285,43 @@ enum Ev {
     /// The host stream issues its next window of `host_mlp` requests
     /// (`next` = global line index of the window's first request).
     HostWindow { next: u64 },
+}
+
+impl Ev {
+    const ARRIVAL_TAG: u64 = u64::MAX;
+    const HOST_TAG: u64 = u64::MAX - 1;
+
+    const ARRIVAL: Ev = Ev(Self::ARRIVAL_TAG, 0);
+
+    #[inline]
+    fn window(app: u32, block: u32, next: u32, sm: u32, slot: u32) -> Ev {
+        debug_assert!(sm < 1 << 16 && slot < 1 << 16, "sm/slot exceed 16 bits");
+        debug_assert!(app < u32::MAX, "app index collides with the tag space");
+        Ev(
+            ((app as u64) << 32) | block as u64,
+            ((next as u64) << 32) | ((sm as u64) << 16) | slot as u64,
+        )
+    }
+
+    #[inline]
+    fn host(next: u64) -> Ev {
+        Ev(Self::HOST_TAG, next)
+    }
+
+    #[inline]
+    fn kind(self) -> EvKind {
+        match self.0 {
+            Self::ARRIVAL_TAG => EvKind::Arrival,
+            Self::HOST_TAG => EvKind::HostWindow { next: self.1 },
+            w0 => EvKind::Window {
+                app: (w0 >> 32) as u32,
+                block: w0 as u32,
+                next: (self.1 >> 32) as u32,
+                sm: ((self.1 >> 16) & 0xFFFF) as u32,
+                slot: (self.1 & 0xFFFF) as u32,
+            },
+        }
+    }
 }
 
 /// The shared simulation core: one event heap over all SM residency
@@ -279,7 +342,11 @@ const HOST_DDR_SALT: u64 = 0x5A17_C0DA_DD2A_2026;
 
 impl<'a> Engine<'a> {
     /// Run to completion, pulling blocks from `source`.
-    pub fn run(self, source: &mut dyn BlockSource) -> EngineRaw {
+    ///
+    /// Generic over the source so concrete callers monomorphize the
+    /// refill/arrival calls away; `&mut dyn BlockSource` still works
+    /// (`?Sized`) for callers that only have a trait object.
+    pub fn run<S: BlockSource + ?Sized>(self, source: &mut S) -> EngineRaw {
         let Engine {
             cfg,
             apps,
@@ -291,8 +358,11 @@ impl<'a> Engine<'a> {
         let mapper = AddressMapper::new(cfg);
         let mut net = Interconnect::new(cfg);
         // DRAM timing is pluggable (fixed-latency vs bank-level); the
-        // backend may only shape time, never which accesses occur.
-        let mut stacks: Vec<Box<dyn MemBackend>> = mem::make_backends(cfg);
+        // backend may only shape time, never which accesses occur. The
+        // hot path holds the statically-dispatched form: per-access enum
+        // dispatch instead of a vtable call (bit-identical timing — see
+        // `mem::MemBackendImpl`).
+        let mut stacks: Vec<MemBackendImpl> = mem::make_backends_impl(cfg);
         let mut tlbs: Vec<Tlb> = (0..topo.sms.len())
             .map(|_| Tlb::new(cfg.tlb_entries))
             .collect();
@@ -331,13 +401,19 @@ impl<'a> Engine<'a> {
         // Scaled by 2^32 (not u32::MAX) so a fraction of exactly 1.0
         // admits every masked hash value.
         let host_ddr_threshold = (cfg.host_ddr_fraction * (1u64 << 32) as f64) as u64;
-        let mut host_ddr: Option<Box<dyn MemBackend>> = if host.is_some() && host_ddr_threshold > 0
-        {
-            Some(mem::make_host_ddr(cfg))
+        let mut host_ddr: Option<MemBackendImpl> = if host.is_some() && host_ddr_threshold > 0 {
+            Some(mem::make_host_ddr_impl(cfg))
         } else {
             None
         };
         let mut host_end = 0.0f64;
+        // Incremental object cursor for the host stream: global line
+        // indices arrive strictly sequentially (windows chain
+        // contiguously and the within-pass index wraps to 0 at each pass
+        // boundary), so the owning object only ever advances — an O(1)
+        // cursor replaces the per-request binary search and lands on the
+        // same object `partition_point` did.
+        let mut host_obj: usize = 0;
 
         let mut stats = AccessStats::default();
         let mut migrated: u64 = 0;
@@ -352,8 +428,18 @@ impl<'a> Engine<'a> {
         let mut app_end = vec![0.0f64; apps.len()];
         let mut seq: u64 = 0;
 
-        let mut heap: BinaryHeap<Reverse<(TimeKey, Ev)>> = BinaryHeap::new();
         let slots_per_sm = cfg.blocks_per_sm;
+        // The packed `Ev` carries sm/slot in 16 bits each; reject (once,
+        // up front) the configurations that could silently truncate.
+        assert!(
+            topo.sms.len() < 1 << 16 && slots_per_sm < 1 << 16,
+            "topology exceeds the packed event encoding (sm/slot must fit 16 bits)"
+        );
+        // At most one event is outstanding per residency slot, plus one
+        // arrival and one host window — pre-sizing to that bound means
+        // the heap never reallocates mid-run.
+        let mut heap: BinaryHeap<Reverse<(TimeKey, Ev)>> =
+            BinaryHeap::with_capacity(topo.sms.len() * slots_per_sm + 2);
         let mut occupied = vec![false; topo.sms.len() * slots_per_sm];
         // Per-SM issue-bandwidth server: resident blocks share the SM's
         // execution resources, so their compute phases serialize.
@@ -366,13 +452,7 @@ impl<'a> Engine<'a> {
             occupied[sm * slots_per_sm + slot] = true;
             heap.push(Reverse((
                 key(0.0, seq),
-                Ev::Window {
-                    app: br.app,
-                    block: br.block,
-                    next: 0,
-                    sm: sm as u32,
-                    slot: slot as u32,
-                },
+                Ev::window(br.app, br.block, 0, sm as u32, slot as u32),
             )));
             seq += 1;
         });
@@ -380,7 +460,7 @@ impl<'a> Engine<'a> {
         let mut armed: Option<f64> = None;
         if let Some(ta) = source.next_arrival_after(0.0) {
             if ta > 0.0 {
-                heap.push(Reverse((key(ta, seq), Ev::Arrival)));
+                heap.push(Reverse((key(ta, seq), Ev::ARRIVAL)));
                 seq += 1;
                 armed = Some(ta);
             }
@@ -388,14 +468,14 @@ impl<'a> Engine<'a> {
         // The host stream starts streaming at t=0, after the NDP seeds
         // (host windows are self-perpetuating: each schedules the next).
         if host.is_some() {
-            heap.push(Reverse((key(0.0, seq), Ev::HostWindow { next: 0 })));
+            heap.push(Reverse((key(0.0, seq), Ev::host(0))));
             seq += 1;
         }
 
         while let Some(Reverse((tk, ev))) = heap.pop() {
             let now = f64::from_bits(tk.0);
-            let (app, block, next, sm, slot) = match ev {
-                Ev::Arrival => {
+            let (app, block, next, sm, slot) = match ev.kind() {
+                EvKind::Arrival => {
                     armed = None;
                     // Fill idle slots in the seeding order (slot-major).
                     for slot in 0..slots_per_sm {
@@ -407,13 +487,7 @@ impl<'a> Engine<'a> {
                                 occupied[smo.id * slots_per_sm + slot] = true;
                                 heap.push(Reverse((
                                     key(now, seq),
-                                    Ev::Window {
-                                        app: br.app,
-                                        block: br.block,
-                                        next: 0,
-                                        sm: smo.id as u32,
-                                        slot: slot as u32,
-                                    },
+                                    Ev::window(br.app, br.block, 0, smo.id as u32, slot as u32),
                                 )));
                                 seq += 1;
                             }
@@ -421,14 +495,14 @@ impl<'a> Engine<'a> {
                     }
                     if let Some(ta) = source.next_arrival_after(now) {
                         if ta > now {
-                            heap.push(Reverse((key(ta, seq), Ev::Arrival)));
+                            heap.push(Reverse((key(ta, seq), Ev::ARRIVAL)));
                             seq += 1;
                             armed = Some(ta);
                         }
                     }
                     continue;
                 }
-                Ev::HostWindow { next } => {
+                EvKind::HostWindow { next } => {
                     let (hs, starts, per_pass, total) =
                         host.as_ref().expect("host event without a host stream");
                     // One window: up to `host_mlp` requests all issued at
@@ -438,8 +512,17 @@ impl<'a> Engine<'a> {
                     let mut window_done = 0.0f64;
                     for i in next..end_i {
                         let j = i % per_pass;
-                        let k = starts.partition_point(|&s| s <= j) - 1;
-                        let vaddr = hs.obj_base[k] + (j - starts[k]) * line;
+                        // Advance the cursor to the last object whose
+                        // start line is <= j (what `partition_point` on
+                        // `starts` computed, without the binary search);
+                        // a new pass rewinds it to object 0.
+                        if j == 0 {
+                            host_obj = 0;
+                        }
+                        while host_obj + 1 < starts.len() && starts[host_obj + 1] <= j {
+                            host_obj += 1;
+                        }
+                        let vaddr = hs.obj_base[host_obj] + (j - starts[host_obj]) * line;
                         let done = if host_ddr_threshold > 0
                             && line_hash((vaddr / line) ^ HOST_DDR_SALT) & 0xFFFF_FFFF
                                 < host_ddr_threshold
@@ -465,15 +548,12 @@ impl<'a> Engine<'a> {
                         host_end = host_end.max(done);
                     }
                     if end_i < *total {
-                        heap.push(Reverse((
-                            key(window_done.max(now), seq),
-                            Ev::HostWindow { next: end_i },
-                        )));
+                        heap.push(Reverse((key(window_done.max(now), seq), Ev::host(end_i))));
                         seq += 1;
                     }
                     continue;
                 }
-                Ev::Window {
+                EvKind::Window {
                     app,
                     block,
                     next,
@@ -487,12 +567,17 @@ impl<'a> Engine<'a> {
             let blk = &actx.trace.blocks[block as usize];
             let begin = next as usize;
             let end = (begin + mlp).min(blk.accesses.len());
+            // Loads invariant across the window, hoisted out of the
+            // per-access loop (the optimizer cannot always prove the
+            // indexed re-loads loop-invariant on its own).
+            let obj_base = actx.obj_base;
+            let tlb = &mut tlbs[smo.id];
 
             // Issue one window of accesses; the block stalls until the
             // slowest completes, then pays its compute debt.
             let mut window_done = now;
             for a in &blk.accesses[begin..end] {
-                let vaddr = actx.obj_base[a.obj as usize] + a.offset;
+                let vaddr = obj_base[a.obj as usize] + a.offset;
                 // Stack-level L2 filter (deterministic per line).
                 if opts.l2_filter {
                     let vline = vaddr / line;
@@ -505,14 +590,14 @@ impl<'a> Engine<'a> {
                 // TLB + translation.
                 let vpn = vaddr >> page_shift;
                 let mut t = now;
-                let pte = match tlbs[smo.id].lookup(vpn) {
+                let pte = match tlb.lookup(vpn) {
                     Some(pte) => pte,
                     None => {
                         t += tlb_miss_cycles;
                         let pte = vm
                             .pte_of(vaddr)
                             .expect("workload access beyond mapped object");
-                        tlbs[smo.id].fill(vpn, pte);
+                        tlb.fill(vpn, pte);
                         pte
                     }
                 };
@@ -538,7 +623,7 @@ impl<'a> Engine<'a> {
                             copy_bytes,
                         );
                         let pte = vm.pte_of(vaddr).unwrap();
-                        tlbs[smo.id].fill(vpn, pte);
+                        tlb.fill(vpn, pte);
                         paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
                         gran = pte.granularity;
                     }
@@ -570,13 +655,7 @@ impl<'a> Engine<'a> {
             if end < blk.accesses.len() {
                 heap.push(Reverse((
                     key(t_next, seq),
-                    Ev::Window {
-                        app,
-                        block,
-                        next: end as u32,
-                        sm,
-                        slot,
-                    },
+                    Ev::window(app, block, end as u32, sm, slot),
                 )));
                 seq += 1;
             } else {
@@ -585,13 +664,7 @@ impl<'a> Engine<'a> {
                     Some(br) => {
                         heap.push(Reverse((
                             key(t_next, seq),
-                            Ev::Window {
-                                app: br.app,
-                                block: br.block,
-                                next: 0,
-                                sm,
-                                slot,
-                            },
+                            Ev::window(br.app, br.block, 0, sm, slot),
                         )));
                         seq += 1;
                     }
@@ -602,7 +675,7 @@ impl<'a> Engine<'a> {
                         if armed.is_none() {
                             if let Some(ta) = source.next_arrival_after(t_next) {
                                 if ta > t_next {
-                                    heap.push(Reverse((key(ta, seq), Ev::Arrival)));
+                                    heap.push(Reverse((key(ta, seq), Ev::ARRIVAL)));
                                     seq += 1;
                                     armed = Some(ta);
                                 }
@@ -685,5 +758,35 @@ mod tests {
         assert_eq!(line_hash(42), line_hash(42));
         // Crude avalanche check: neighbours land far apart.
         assert_ne!(line_hash(1) >> 32, line_hash(2) >> 32);
+    }
+
+    #[test]
+    fn packed_event_round_trips_and_stays_small() {
+        // The whole point of the packing: a heap entry is 32 bytes.
+        assert_eq!(std::mem::size_of::<Ev>(), 16);
+        assert_eq!(std::mem::size_of::<(TimeKey, Ev)>(), 32);
+        for (app, block, next, sm, slot) in [
+            (0u32, 0u32, 0u32, 0u32, 0u32),
+            (3, 12345, 67890, 15, 5),
+            (41, u32::MAX, u32::MAX, (1 << 16) - 1, (1 << 16) - 1),
+        ] {
+            match Ev::window(app, block, next, sm, slot).kind() {
+                EvKind::Window {
+                    app: a,
+                    block: b,
+                    next: n,
+                    sm: s,
+                    slot: l,
+                } => {
+                    assert_eq!((a, b, n, s, l), (app, block, next, sm, slot));
+                }
+                _ => panic!("window decoded as a tag event"),
+            }
+        }
+        assert!(matches!(Ev::ARRIVAL.kind(), EvKind::Arrival));
+        match Ev::host(u64::MAX / 3).kind() {
+            EvKind::HostWindow { next } => assert_eq!(next, u64::MAX / 3),
+            _ => panic!("host window decoded wrong"),
+        }
     }
 }

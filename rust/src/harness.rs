@@ -2,7 +2,16 @@
 //! this module reproduces its core methodology: warmup, repeated timed
 //! iterations, mean/stddev/throughput reporting, and a `black_box` to
 //! defeat dead-code elimination).
+//!
+//! Besides the human-readable table, a [`Bencher`] renders every recorded
+//! result as machine-readable JSON (`BENCH_*.json`, the repo's perf
+//! trajectory): per-bench mean/min/max ns plus ops/s for benches that
+//! declared a work-item count via [`Bencher::bench_n`]. Each PR that
+//! touches a hot path records the before/after numbers this emits, so
+//! simulator throughput (simulated accesses per second) is tracked over
+//! time instead of anecdotally.
 
+use crate::report::Json;
 use std::hint::black_box as std_black_box;
 use std::time::Instant;
 
@@ -20,11 +29,25 @@ pub struct BenchResult {
     pub stddev_ns: f64,
     pub min_ns: f64,
     pub max_ns: f64,
+    /// Work items (simulated accesses, ops, …) one iteration performs;
+    /// `0.0` when the bench declared none. Set by [`Bencher::bench_n`]
+    /// so the JSON trajectory can report throughput.
+    pub items_per_iter: f64,
 }
 
 impl BenchResult {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.mean_ns * 1e-9)
+    }
+
+    /// Items per second from the recorded `items_per_iter` (0.0 when the
+    /// bench declared no item count).
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.items_per_iter > 0.0 {
+            self.throughput(self.items_per_iter)
+        } else {
+            0.0
+        }
     }
 
     pub fn report(&self) -> String {
@@ -73,7 +96,19 @@ impl Bencher {
     }
 
     /// Time `f` and record the result under `name`.
-    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+    pub fn bench<T>(&mut self, name: &str, f: impl FnMut() -> T) -> &BenchResult {
+        self.bench_n(name, 0.0, f)
+    }
+
+    /// Time `f`, recording that each iteration performs `items` work
+    /// items (simulated accesses, scheduler picks, …) so the JSON
+    /// trajectory carries an ops/s figure alongside the raw timings.
+    pub fn bench_n<T>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
         for _ in 0..self.warmup_iters {
             black_box(f());
         }
@@ -94,10 +129,55 @@ impl Bencher {
             stddev_ns: sd,
             min_ns: min,
             max_ns: max,
+            items_per_iter: items,
         };
         println!("{}", r.report());
         self.results.push(r);
         self.results.last().unwrap()
+    }
+
+    /// Render every recorded result as the `BENCH_*.json` trajectory
+    /// schema: `{schema, warmup_iters, measure_iters, results: [{name,
+    /// iters, mean_ns, stddev_ns, min_ns, max_ns, items_per_iter?,
+    /// ops_per_sec?}]}` (the two throughput fields appear only for
+    /// benches recorded through [`Self::bench_n`]).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("schema", Json::Str("coda-bench-v1".into()))
+            .push("warmup_iters", Json::Num(self.warmup_iters as f64))
+            .push("measure_iters", Json::Num(self.measure_iters as f64))
+            .push(
+                "results",
+                Json::Arr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            let mut ro = Json::obj();
+                            ro.push("name", Json::Str(r.name.clone()))
+                                .push("iters", Json::Num(r.iters as f64))
+                                .push("mean_ns", Json::Num(r.mean_ns))
+                                .push("stddev_ns", Json::Num(r.stddev_ns))
+                                .push("min_ns", Json::Num(r.min_ns))
+                                .push("max_ns", Json::Num(r.max_ns));
+                            if r.items_per_iter > 0.0 {
+                                ro.push("items_per_iter", Json::Num(r.items_per_iter))
+                                    .push("ops_per_sec", Json::Num(r.ops_per_sec()));
+                            }
+                            ro
+                        })
+                        .collect(),
+                ),
+            );
+        o
+    }
+
+    /// Write the JSON trajectory to `default_path` (a `CODA_BENCH_JSON`
+    /// env var overrides the destination); returns the path written.
+    pub fn write_json(&self, default_path: &str) -> std::io::Result<String> {
+        let path =
+            std::env::var("CODA_BENCH_JSON").unwrap_or_else(|_| default_path.to_string());
+        std::fs::write(&path, self.to_json().render() + "\n")?;
+        Ok(path)
     }
 }
 
@@ -117,6 +197,7 @@ mod tests {
         });
         assert!(r.mean_ns > 0.0);
         assert!(r.min_ns <= r.mean_ns && r.mean_ns <= r.max_ns);
+        assert_eq!(r.items_per_iter, 0.0);
         assert_eq!(b.results.len(), 1);
     }
 
@@ -129,7 +210,45 @@ mod tests {
             stddev_ns: 0.0,
             min_ns: 1e9,
             max_ns: 1e9,
+            items_per_iter: 50.0,
         };
         assert!((r.throughput(100.0) - 100.0).abs() < 1e-9);
+        assert!((r.ops_per_sec() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_trajectory_is_valid_and_carries_throughput() {
+        let mut b = Bencher::new().with_iters(0, 2);
+        b.bench("plain", || black_box(1 + 1));
+        b.bench_n("with-items", 1000.0, || black_box(2 + 2));
+        let s = b.to_json().render();
+        crate::report::validate_json(&s).unwrap();
+        assert!(s.contains("\"schema\":\"coda-bench-v1\""));
+        assert!(s.contains("\"name\":\"plain\""));
+        assert!(s.contains("\"name\":\"with-items\""));
+        assert!(s.contains("\"items_per_iter\":1000"));
+        assert!(s.contains("\"ops_per_sec\":"));
+        // The plain bench declared no items, so no throughput fields.
+        let plain_obj = s.split("\"name\":\"plain\"").nth(1).unwrap();
+        let plain_obj = &plain_obj[..plain_obj.find('}').unwrap()];
+        assert!(!plain_obj.contains("ops_per_sec"));
+    }
+
+    #[test]
+    fn write_json_emits_a_parseable_file() {
+        let mut b = Bencher::new().with_iters(0, 1);
+        b.bench_n("w", 10.0, || black_box(0));
+        if std::env::var("CODA_BENCH_JSON").is_ok() {
+            // An ambient override would redirect the write onto the
+            // user's real trajectory file (which we would then delete);
+            // validate the rendering only.
+            crate::report::validate_json(&b.to_json().render()).unwrap();
+            return;
+        }
+        let path = std::env::temp_dir().join("coda_bench_harness_test.json");
+        let written = b.write_json(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&written).unwrap();
+        crate::report::validate_json(text.trim()).unwrap();
+        std::fs::remove_file(&written).ok();
     }
 }

@@ -134,6 +134,7 @@ pub mod host;
 pub mod mem;
 pub mod multiprog;
 pub mod net;
+pub mod par;
 pub mod placement;
 pub mod proptest_lite;
 pub mod report;

@@ -60,6 +60,11 @@ fn load_config(args: &Args) -> coda::Result<SystemConfig> {
     if let Some(backend) = args.opt("mem-backend") {
         cfg.set("mem_backend", backend)?;
     }
+    // --threads is sugar for --set sim_threads=... and wins over it
+    // (orchestration fan-out: 0 = one per core, 1 = sequential).
+    if let Some(threads) = args.opt("threads") {
+        cfg.set("sim_threads", threads)?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -593,6 +598,9 @@ fn print_help() {
          \x20 --json                          machine-readable report\n\
          \x20 --baselines auto|none|solo|host-split   run-alone baseline policy\n\
          \x20                                 (none skips the extra runs — fast sweeps)\n\
+         \x20 --threads N                     baseline/sweep fan-out threads\n\
+         \x20                                 (0 = one per core, 1 = sequential;\n\
+         \x20                                 results are thread-count independent)\n\
          \x20 hostmix: --host BENCH --host-mlp N --host-passes N (host intensity)\n\
          \n\
          JSON REPORTS (--json) always carry: workload, mechanism, cycles\n\

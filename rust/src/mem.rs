@@ -123,6 +123,69 @@ pub trait MemBackend {
     }
 }
 
+/// Statically-dispatched backend for the engine's per-access hot path.
+///
+/// The [`MemBackend`] trait stays the extension seam (new backends — a
+/// DRAMsim3 FFI bridge, say — still implement it, and the frozen
+/// differential oracles keep consuming `Box<dyn MemBackend>`), but the
+/// engine itself routes every access through this enum: a two-way branch
+/// the optimizer can inline both arms of, instead of a vtable load +
+/// indirect call per simulated access. Wrapping a backend in the enum
+/// changes dispatch only — the arms run the exact same code as the boxed
+/// form, so every completion time stays bit-identical (the differential
+/// and golden suites pin this).
+#[derive(Clone, Debug)]
+pub enum MemBackendImpl {
+    Fixed(FixedLatency),
+    Bank(BankLevel),
+}
+
+impl MemBackendImpl {
+    /// Build the backend [`SystemConfig::mem_backend`] selects.
+    pub fn new(cfg: &SystemConfig) -> Self {
+        match cfg.mem_backend {
+            MemBackendKind::FixedLatency => Self::Fixed(FixedLatency::new(cfg)),
+            MemBackendKind::BankLevel => Self::Bank(BankLevel::new(cfg)),
+        }
+    }
+
+    /// Service one access (see [`MemBackend::access`]); enum dispatch.
+    #[inline]
+    pub fn access(&mut self, now: f64, addr: u64, bytes: u64) -> DramResult {
+        match self {
+            Self::Fixed(b) => b.access(now, addr, bytes),
+            Self::Bank(b) => b.access(now, addr, bytes),
+        }
+    }
+}
+
+impl MemBackend for MemBackendImpl {
+    fn access(&mut self, now: f64, addr: u64, bytes: u64) -> DramResult {
+        MemBackendImpl::access(self, now, addr, bytes)
+    }
+
+    fn earliest_free(&self) -> f64 {
+        match self {
+            Self::Fixed(b) => b.earliest_free(),
+            Self::Bank(b) => b.earliest_free(),
+        }
+    }
+
+    fn stats(&self) -> MemStats {
+        match self {
+            Self::Fixed(b) => b.stats(),
+            Self::Bank(b) => b.stats(),
+        }
+    }
+
+    fn kind(&self) -> MemBackendKind {
+        match self {
+            Self::Fixed(b) => b.kind(),
+            Self::Bank(b) => b.kind(),
+        }
+    }
+}
+
 /// Build the backend [`SystemConfig::mem_backend`] selects, for one stack.
 pub fn make_backend(cfg: &SystemConfig) -> Box<dyn MemBackend> {
     match cfg.mem_backend {
@@ -131,9 +194,23 @@ pub fn make_backend(cfg: &SystemConfig) -> Box<dyn MemBackend> {
     }
 }
 
-/// Build one backend per stack (the shape the simulators consume).
+/// Build one backend per stack (the shape the frozen oracles consume).
 pub fn make_backends(cfg: &SystemConfig) -> Vec<Box<dyn MemBackend>> {
     (0..cfg.num_stacks).map(|_| make_backend(cfg)).collect()
+}
+
+/// Build one statically-dispatched backend per stack (the shape the
+/// engine's hot path consumes).
+pub fn make_backends_impl(cfg: &SystemConfig) -> Vec<MemBackendImpl> {
+    (0..cfg.num_stacks).map(|_| MemBackendImpl::new(cfg)).collect()
+}
+
+/// The stack config rescaled to the host-local DDR's parameters.
+fn host_ddr_cfg(cfg: &SystemConfig) -> SystemConfig {
+    let mut ddr_cfg = cfg.clone();
+    ddr_cfg.local_bw_gbs = cfg.host_ddr_bw_gbs;
+    ddr_cfg.channels_per_stack = cfg.host_ddr_channels;
+    ddr_cfg
 }
 
 /// Build the host-local DDR timing model (CHoNDA-style host memory).
@@ -145,10 +222,12 @@ pub fn make_backends(cfg: &SystemConfig) -> Vec<Box<dyn MemBackend>> {
 /// line addresses (the DDR owns its own address space; only timing and
 /// byte accounting matter).
 pub fn make_host_ddr(cfg: &SystemConfig) -> Box<dyn MemBackend> {
-    let mut ddr_cfg = cfg.clone();
-    ddr_cfg.local_bw_gbs = cfg.host_ddr_bw_gbs;
-    ddr_cfg.channels_per_stack = cfg.host_ddr_channels;
-    make_backend(&ddr_cfg)
+    make_backend(&host_ddr_cfg(cfg))
+}
+
+/// [`make_host_ddr`], statically dispatched (the engine's form).
+pub fn make_host_ddr_impl(cfg: &SystemConfig) -> MemBackendImpl {
+    MemBackendImpl::new(&host_ddr_cfg(cfg))
 }
 
 // ---------------------------------------------------------------------------
@@ -541,6 +620,40 @@ mod tests {
         assert_eq!(make_backend(&c).kind(), MemBackendKind::FixedLatency);
         assert_eq!(make_backend(&bank_cfg()).kind(), MemBackendKind::BankLevel);
         assert_eq!(make_backends(&c).len(), c.num_stacks);
+        assert_eq!(MemBackendImpl::new(&c).kind(), MemBackendKind::FixedLatency);
+        assert_eq!(
+            MemBackendImpl::new(&bank_cfg()).kind(),
+            MemBackendKind::BankLevel
+        );
+        assert_eq!(make_backends_impl(&c).len(), c.num_stacks);
+        assert_eq!(
+            make_host_ddr_impl(&bank_cfg()).kind(),
+            MemBackendKind::BankLevel
+        );
+    }
+
+    /// Enum dispatch is a calling convention, not a model: driving the
+    /// boxed and enum forms with the same request stream must produce
+    /// bit-identical completion times and counters, for both kinds.
+    #[test]
+    fn enum_dispatch_matches_boxed_dispatch_bit_exactly() {
+        for c in [cfg(), bank_cfg()] {
+            let mut boxed = make_backend(&c);
+            let mut inline = MemBackendImpl::new(&c);
+            for i in 0..4096u64 {
+                let addr = i.wrapping_mul(0x9E3779B97F4A7C15) & 0xFF_FFFF;
+                let now = (i / 8) as f64;
+                let a = boxed.access(now, addr, 128);
+                let b = inline.access(now, addr, 128);
+                assert_eq!(a.done.to_bits(), b.done.to_bits());
+                assert_eq!(a.row_hit, b.row_hit);
+            }
+            assert_eq!(boxed.stats(), inline.stats());
+            assert_eq!(
+                boxed.earliest_free().to_bits(),
+                inline.earliest_free().to_bits()
+            );
+        }
     }
 
     #[test]

@@ -41,7 +41,12 @@ impl Link {
     }
 
     /// Send `bytes` at time `now`; returns delivery completion time.
-    #[inline]
+    ///
+    /// This is the per-access interconnect step of the engine's hot path
+    /// (one call for local accesses, three for remote round-trips):
+    /// always inlined into the `*_hop` wrappers so the busy-until update
+    /// never becomes an out-of-line call.
+    #[inline(always)]
     pub fn transfer(&mut self, now: f64, bytes: u64) -> f64 {
         let start = now.max(self.next_free);
         if start > now {

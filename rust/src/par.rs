@@ -1,0 +1,157 @@
+//! Deterministic fork-join for the orchestration layer.
+//!
+//! Run-alone baselines and `[sweep]` points are independent deterministic
+//! simulations: each job builds its own `VirtualMemory`, engine and
+//! backends from scratch, shares nothing mutable, and produces the same
+//! result no matter which thread runs it or when. [`parallel_map`] fans
+//! such jobs out over `std::thread::scope` and hands the results back **in
+//! job-index order**, so the caller's output — and therefore every report
+//! byte — is identical to the sequential path (`tests/parallel_equiv.rs`
+//! locks this in across thread counts and DRAM backends).
+//!
+//! The thread count comes from
+//! [`SystemConfig::sim_threads`](crate::config::SystemConfig::sim_threads)
+//! (CLI `--threads`): `0` means one thread per available core, `1` forces
+//! the plain sequential loop (no threads are spawned at all), and any
+//! other value caps the worker pool. Fan-outs may nest (a parallel sweep
+//! whose points run parallel baselines); each level is bounded by its own
+//! job count, so the worst case is points × baselines threads — fine for
+//! the compute-bound, short-lived workers these jobs are.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a configured thread count against a job count: `0` = one per
+/// available core, otherwise the value itself; never more threads than
+/// jobs, never fewer than one.
+pub fn effective_threads(configured: usize, jobs: usize) -> usize {
+    let t = if configured == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    } else {
+        configured
+    };
+    // `t` is always >= 1 here, so capping by `jobs.max(1)` both bounds
+    // the pool by the job count and keeps the floor of one worker.
+    t.min(jobs.max(1))
+}
+
+/// Run `n` independent jobs `f(0) .. f(n-1)` across up to `threads`
+/// workers (see [`effective_threads`]); returns the results in job-index
+/// order, or the lowest-index error if any job failed.
+///
+/// # Contract
+///
+/// Jobs must be **independent** (no job reads state another writes) and
+/// **deterministic in their index alone** — under those two rules the
+/// output is bit-identical to the sequential loop, which `threads <= 1`
+/// literally runs (no worker threads, no atomics). A panicking job
+/// propagates its panic, exactly as the sequential loop would. After a
+/// job fails, workers stop claiming new jobs (already-claimed ones
+/// finish) — and because the atomic counter claims indices in order,
+/// every job below the lowest failing index still completes, so the
+/// returned error is deterministically the lowest-index one.
+pub fn parallel_map<T, F>(threads: usize, n: usize, f: F) -> crate::Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> crate::Result<T> + Sync,
+{
+    let threads = effective_threads(threads, n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    // Work-stealing by atomic counter: whichever worker is free claims
+    // the next index. The claim order is racy; the *output* order is not,
+    // because every result lands in its own index's slot.
+    let next = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    let slots: Vec<Mutex<Option<crate::Result<T>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                if r.is_err() {
+                    stop.store(true, Ordering::Relaxed);
+                }
+                *slots[i].lock().expect("result slot poisoned") = Some(r);
+            });
+        }
+    });
+    // First error by job index, not by completion time. Slots above the
+    // lowest failing index may be unfilled (workers stopped claiming);
+    // everything below it is guaranteed complete, so the scan either
+    // returns that error or a full result set.
+    let mut out = Vec::with_capacity(n);
+    for m in slots {
+        match m.into_inner().expect("result slot poisoned") {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(e),
+            None => unreachable!("an unfilled slot implies an earlier error slot"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_threads_resolution() {
+        assert_eq!(effective_threads(1, 100), 1);
+        assert_eq!(effective_threads(4, 100), 4);
+        assert_eq!(effective_threads(4, 2), 2); // capped by jobs
+        assert_eq!(effective_threads(7, 0), 1); // never zero
+        assert!(effective_threads(0, 100) >= 1); // auto resolves to >= 1
+    }
+
+    #[test]
+    fn results_come_back_in_index_order() {
+        for threads in [1, 2, 8] {
+            let out = parallel_map(threads, 64, |i| Ok(i * 10)).unwrap();
+            assert_eq!(out, (0..64).map(|i| i * 10).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn zero_jobs_is_fine() {
+        let out: Vec<usize> = parallel_map(8, 0, |i| Ok(i + 1)).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn lowest_index_error_wins() {
+        for threads in [1, 4] {
+            let err = parallel_map(threads, 16, |i| {
+                if i % 5 == 2 {
+                    Err(anyhow::anyhow!("job {i} failed"))
+                } else {
+                    Ok(i)
+                }
+            })
+            .unwrap_err();
+            assert_eq!(err.to_string(), "job 2 failed");
+        }
+    }
+
+    #[test]
+    fn sequential_path_spawns_no_threads() {
+        // threads = 1 must run inline on the caller's thread.
+        let caller = std::thread::current().id();
+        let out = parallel_map(1, 4, |i| {
+            assert_eq!(std::thread::current().id(), caller);
+            Ok(i)
+        })
+        .unwrap();
+        assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+}

@@ -17,6 +17,13 @@
 //! historical pipeline exactly — same mapping order, same block dispatch
 //! order, same report labels — because the equivalence guarantee is what
 //! lets every caller migrate to specs without re-validating results.
+//!
+//! Run-alone baselines and `[sweep]` points are independent deterministic
+//! simulations, so the session fans them out over [`crate::par`] worker
+//! threads (config `sim_threads`, CLI `--threads`; `1` forces the
+//! sequential loop) and collects results in deterministic order.
+//! Parallelism shapes wall-clock time only: `tests/parallel_equiv.rs`
+//! proves every report bit-identical across thread counts and backends.
 
 use crate::analysis::{analyze_kernel, profile_trace, ObjectPattern};
 use crate::config::SystemConfig;
@@ -26,6 +33,7 @@ use crate::engine::{
 };
 use crate::gpu::{Sm, Topology};
 use crate::multiprog::{home_of, MixPlacement};
+use crate::par;
 use crate::placement::{self, PlacementPlan};
 use crate::report::Json;
 use crate::sched::{affinity_stack, FairnessPolicy, Policy};
@@ -711,6 +719,28 @@ impl<'a> Session<'a> {
         Ok((vm, app_bases))
     }
 
+    /// Map the host stream's objects fine-grain *after* every kernel's
+    /// (FGP is the host's preferred granularity, Fig 13). The joint run
+    /// and the host-split baselines both call this right after
+    /// [`Self::map_kernels`], so host physical pages land identically in
+    /// every layout.
+    fn map_host(
+        &self,
+        vm: &mut VirtualMemory,
+        host_wl: Option<&Wl<'_>>,
+    ) -> crate::Result<Vec<u64>> {
+        let mut bases = Vec::new();
+        if let Some(h) = host_wl {
+            let t = h.trace();
+            bases.reserve(t.objects.len());
+            for obj in &t.objects {
+                let pages = obj.bytes.div_ceil(self.cfg.page_size).max(1);
+                bases.push(vm.map_fgp(pages)?);
+            }
+        }
+        Ok(bases)
+    }
+
     /// The single-kernel coordinator pipeline: analysis-driven placement
     /// plan, §6.4 no-degradation fallback, mapped run with the L2 filter
     /// and (for migration baselines) first-touch page migration.
@@ -849,18 +879,7 @@ impl<'a> Session<'a> {
         // NDP-only layout), host objects after, fine-grain interleaved
         // (FGP is the host's preferred granularity, Fig 13).
         let (mut vm, app_bases) = self.map_kernels(&apps)?;
-        let host_bases: Vec<u64> = match &host_wl {
-            Some(h) => {
-                let t = h.trace();
-                let mut bases = Vec::with_capacity(t.objects.len());
-                for obj in &t.objects {
-                    let pages = obj.bytes.div_ceil(cfg.page_size).max(1);
-                    bases.push(vm.map_fgp(pages)?);
-                }
-                bases
-            }
-            None => Vec::new(),
-        };
+        let host_bases: Vec<u64> = self.map_host(&mut vm, host_wl.as_ref())?;
         let launches: Vec<(usize, f64)> = apps
             .iter()
             .zip(&arrivals)
@@ -918,11 +937,15 @@ impl<'a> Session<'a> {
             Baselines::Solo => {
                 // Run-alone baselines: identical mapping (all apps'
                 // objects placed), only app i's blocks execute, so the
-                // only delta is app-vs-app contention.
+                // only delta is app-vs-app contention. Each baseline is
+                // an independent deterministic simulation over its own
+                // fresh (identical) layout, so the set fans out across
+                // threads; collecting in app order keeps every derived
+                // number bit-identical to the sequential path
+                // (`tests/parallel_equiv.rs`).
                 let launches_zero: Vec<(usize, f64)> =
                     launches.iter().map(|&(b, _)| (b, 0.0)).collect();
-                let mut solo = Vec::with_capacity(n);
-                for i in 0..n {
+                let solo: Vec<f64> = par::parallel_map(self.cfg.sim_threads, n, |i| {
                     let (mut vm_i, bases_i) = self.map_kernels(&apps)?;
                     let raw = exec_shared(
                         cfg,
@@ -936,8 +959,8 @@ impl<'a> Session<'a> {
                         None,
                         &mut vm_i,
                     );
-                    solo.push(raw.app_end[i]);
-                }
+                    Ok(raw.app_end[i])
+                })?;
                 report.app_slowdown = stats::per_app_slowdown(&solo, &resp);
                 report.weighted_speedup = stats::weighted_speedup(&solo, &resp);
                 app_slowdown = Some(report.app_slowdown.clone());
@@ -945,28 +968,49 @@ impl<'a> Session<'a> {
             Baselines::HostSplit => {
                 // Each side vs itself running alone on the identical
                 // layout, only when both sources actually ran (otherwise
-                // the shared run *is* the run-alone case).
+                // the shared run *is* the run-alone case). The two sides
+                // are independent simulations: each job re-maps the
+                // identical layout into its own fresh `VirtualMemory`
+                // (the allocator is deterministic and shared dispatch
+                // never mutates the VM, so the fresh layout reproduces
+                // the joint run's physical pages bit-for-bit) and the
+                // pair fans out across threads.
                 let both = host_active && !apps.is_empty();
-                let ndp_alone = both.then(|| {
-                    exec_shared(
-                        cfg, &apps, &app_bases, &launches, &homes, policy, fairness,
-                        None, None, &mut vm,
-                    )
-                });
-                let host_alone = both.then(|| {
-                    exec_shared(
-                        cfg,
-                        &[],
-                        &[],
-                        &[],
-                        &[],
-                        policy,
-                        fairness,
-                        None,
-                        host_stream,
-                        &mut vm,
-                    )
-                });
+                let (ndp_alone, host_alone) = if both {
+                    let mut pair = par::parallel_map(self.cfg.sim_threads, 2, |i| {
+                        let (mut vm_b, bases_b) = self.map_kernels(&apps)?;
+                        Ok(if i == 0 {
+                            exec_shared(
+                                cfg, &apps, &bases_b, &launches, &homes, policy,
+                                fairness, None, None, &mut vm_b,
+                            )
+                        } else {
+                            // Host pages map after every kernel's,
+                            // exactly as in the joint layout.
+                            let host_bases_b =
+                                self.map_host(&mut vm_b, host_wl.as_ref())?;
+                            exec_shared(
+                                cfg,
+                                &[],
+                                &[],
+                                &[],
+                                &[],
+                                policy,
+                                fairness,
+                                None,
+                                host_wl.as_ref().map(|h| HostStream {
+                                    trace: h.trace(),
+                                    obj_base: &host_bases_b,
+                                }),
+                                &mut vm_b,
+                            )
+                        })
+                    })?;
+                    let host_side = pair.pop();
+                    (pair.pop(), host_side)
+                } else {
+                    (None, None)
+                };
                 let (ndp_sd, host_sd, app_sd, weighted) = match (&ndp_alone, &host_alone)
                 {
                     (Some(na), Some(ha)) => {
@@ -1094,6 +1138,11 @@ impl<'a> Session<'a> {
 /// the whole spec with `key = value` appended to its `[system]` overrides
 /// and the point recorded in the report's `spec` label — this is what
 /// makes parameter sweeps batchable from one file.
+///
+/// Sweep points are independent deterministic simulations, so they fan
+/// out across threads (the base config's `sim_threads`; `1` forces the
+/// sequential loop) and are collected in value order — the report list is
+/// bit-identical to the sequential path regardless of thread count.
 pub fn run_spec<'a>(
     base: &SystemConfig,
     spec: &ExperimentSpec<'a>,
@@ -1101,8 +1150,22 @@ pub fn run_spec<'a>(
     match &spec.sweep {
         None => Ok(vec![Session::new(base.clone(), spec.clone())?.run()?]),
         Some(sw) => {
-            let mut out = Vec::with_capacity(sw.values.len());
-            for v in &sw.values {
+            // A spec-level `[system] sim_threads` override governs the
+            // sweep expansion too, not just each point's inner baseline
+            // fan-out (last occurrence wins, like `cfg.set`). A value
+            // that does not parse falls back to the base config here and
+            // surfaces as a hard error from each point's Session::new.
+            let threads = spec
+                .overrides
+                .iter()
+                .rev()
+                .find(|(k, _)| k == "sim_threads")
+                .and_then(|(_, v)| v.trim().parse().ok())
+                .unwrap_or(base.sim_threads);
+            par::parallel_map(threads, sw.values.len(), |i| {
+                // Each job builds its own point spec from the value
+                // index — deterministic in `i`, so one clone per job.
+                let v = &sw.values[i];
                 let mut point = spec.clone();
                 point.sweep = None;
                 point.overrides.push((sw.key.clone(), v.clone()));
@@ -1110,9 +1173,8 @@ pub fn run_spec<'a>(
                     Some(n) => format!("{n}[{}={v}]", sw.key),
                     None => format!("{}={v}", sw.key),
                 });
-                out.push(Session::new(base.clone(), point)?.run()?);
-            }
-            Ok(out)
+                Session::new(base.clone(), point)?.run()
+            })
         }
     }
 }

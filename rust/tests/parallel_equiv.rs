@@ -1,0 +1,282 @@
+//! Parallel orchestration is a wall-clock optimization only.
+//!
+//! `session.rs` fans run-alone baselines (solo and host-split) and
+//! `[sweep]` expansion out over `par::parallel_map` worker threads. This
+//! suite proves the parallel paths **bit-exact** (every `Report` f64
+//! field compared by `to_bits`, every counter by equality) and
+//! **byte-identical** (rendered JSON) to the sequential path
+//! (`sim_threads = 1`), across thread counts — including `0` = auto —
+//! and both DRAM backends. If a fan-out ever let scheduling order leak
+//! into a simulated number, these tests are the tripwire.
+
+use coda::config::{MemBackendKind, SystemConfig};
+use coda::coordinator::Mechanism;
+use coda::multiprog::MixPlacement;
+use coda::sched::{FairnessPolicy, Policy};
+use coda::session::{run_spec, Report, Session};
+use coda::spec::{ExperimentSpec, SweepSpec, WorkloadSel};
+
+const BACKENDS: [MemBackendKind; 2] = [MemBackendKind::FixedLatency, MemBackendKind::BankLevel];
+/// Thread counts compared against the sequential baseline (0 = one per
+/// available core, whatever this machine has).
+const THREADS: [usize; 3] = [2, 4, 0];
+
+fn cfg(backend: MemBackendKind, threads: usize) -> SystemConfig {
+    let mut c = SystemConfig::test_small();
+    c.mem_backend = backend;
+    c.sim_threads = threads;
+    c
+}
+
+/// Every f64 field bit-exact, every counter equal, JSON byte-identical.
+fn assert_report_identical(a: &Report, b: &Report, ctx: &str) {
+    assert_eq!(a.run.cycles.to_bits(), b.run.cycles.to_bits(), "{ctx}: cycles");
+    assert_eq!(
+        a.run.mean_mem_latency.to_bits(),
+        b.run.mean_mem_latency.to_bits(),
+        "{ctx}: mean_mem_latency"
+    );
+    assert_eq!(
+        a.run.tlb_hit_rate.to_bits(),
+        b.run.tlb_hit_rate.to_bits(),
+        "{ctx}: tlb_hit_rate"
+    );
+    assert_eq!(
+        a.run.row_hit_rate.to_bits(),
+        b.run.row_hit_rate.to_bits(),
+        "{ctx}: row_hit_rate"
+    );
+    assert_eq!(
+        a.run.weighted_speedup.to_bits(),
+        b.run.weighted_speedup.to_bits(),
+        "{ctx}: weighted_speedup"
+    );
+    assert_eq!(
+        a.run.host_cycles.to_bits(),
+        b.run.host_cycles.to_bits(),
+        "{ctx}: host_cycles"
+    );
+    assert_eq!(
+        a.run.host_slowdown.to_bits(),
+        b.run.host_slowdown.to_bits(),
+        "{ctx}: host_slowdown"
+    );
+    assert_eq!(
+        a.run.ndp_slowdown.to_bits(),
+        b.run.ndp_slowdown.to_bits(),
+        "{ctx}: ndp_slowdown"
+    );
+    assert_eq!(
+        a.run.host_bw_share.to_bits(),
+        b.run.host_bw_share.to_bits(),
+        "{ctx}: host_bw_share"
+    );
+    let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(
+        bits(&a.run.app_cycles),
+        bits(&b.run.app_cycles),
+        "{ctx}: app_cycles"
+    );
+    assert_eq!(
+        bits(&a.run.app_slowdown),
+        bits(&b.run.app_slowdown),
+        "{ctx}: app_slowdown"
+    );
+    assert_eq!(a.run.accesses, b.run.accesses, "{ctx}: access counts");
+    assert_eq!(a.run.stack_bytes, b.run.stack_bytes, "{ctx}: stack_bytes");
+    assert_eq!(a.run.remote_bytes, b.run.remote_bytes, "{ctx}: remote_bytes");
+    assert_eq!(a.run.host_bytes, b.run.host_bytes, "{ctx}: host_bytes");
+    assert_eq!(
+        a.run.host_port_stalls, b.run.host_port_stalls,
+        "{ctx}: host_port_stalls"
+    );
+    assert_eq!(a.run.workload, b.run.workload, "{ctx}: workload label");
+    assert_eq!(a.run.mechanism, b.run.mechanism, "{ctx}: mechanism label");
+    assert_eq!(a.spec_name, b.spec_name, "{ctx}: spec label");
+    assert_eq!(a.sources.len(), b.sources.len(), "{ctx}: source rows");
+    for (sa, sb) in a.sources.iter().zip(&b.sources) {
+        assert_eq!(sa.cycles.to_bits(), sb.cycles.to_bits(), "{ctx}: source cycles");
+        assert_eq!(
+            sa.slowdown.map(f64::to_bits),
+            sb.slowdown.map(f64::to_bits),
+            "{ctx}: source slowdown"
+        );
+    }
+    // The byte-level catch-all: anything the field list above misses.
+    assert_eq!(
+        a.to_json().render(),
+        b.to_json().render(),
+        "{ctx}: JSON rendering"
+    );
+}
+
+/// A staggered three-app mix with solo baselines: the fan-out covers one
+/// run-alone simulation per app, collected in app order.
+fn mix_spec() -> ExperimentSpec<'static> {
+    ExperimentSpec::shared(
+        vec![
+            (WorkloadSel::Named("NN"), 0.0),
+            (WorkloadSel::Named("KM"), 2_000.0),
+            (WorkloadSel::Named("DC"), 4_000.0),
+        ],
+        MixPlacement::CgpLocal,
+        Policy::Affinity,
+        FairnessPolicy::Fcfs,
+    )
+}
+
+#[test]
+fn solo_baselines_parallel_is_bit_exact() {
+    for backend in BACKENDS {
+        let seq = Session::new(cfg(backend, 1), mix_spec())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(!seq.run.app_slowdown.is_empty(), "solo baselines must run");
+        for threads in THREADS {
+            let par = Session::new(cfg(backend, threads), mix_spec())
+                .unwrap()
+                .run()
+                .unwrap();
+            assert_report_identical(&seq, &par, &format!("solo {backend:?} t={threads}"));
+        }
+    }
+}
+
+/// NDP kernels + host co-run with host-split baselines: the fan-out
+/// covers the NDP-alone and host-alone runs, each over a re-mapped
+/// (identical) layout.
+fn hostmix_spec() -> ExperimentSpec<'static> {
+    ExperimentSpec::hostmix(
+        vec![
+            (WorkloadSel::Named("NN"), 0.0),
+            (WorkloadSel::Named("KM"), 0.0),
+        ],
+        Some(WorkloadSel::Named("DC")),
+        MixPlacement::CgpLocal,
+        Policy::Affinity,
+        FairnessPolicy::Fcfs,
+    )
+}
+
+#[test]
+fn host_split_baselines_parallel_is_bit_exact() {
+    for backend in BACKENDS {
+        let seq = Session::new(cfg(backend, 1), hostmix_spec())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(seq.run.host_cycles > 0.0, "the host stream must run");
+        assert!(
+            seq.run.ndp_slowdown > 0.0,
+            "host-split baselines must produce slowdowns"
+        );
+        for threads in THREADS {
+            let par = Session::new(cfg(backend, threads), hostmix_spec())
+                .unwrap()
+                .run()
+                .unwrap();
+            assert_report_identical(&seq, &par, &format!("host-split {backend:?} t={threads}"));
+        }
+    }
+}
+
+/// A kernel-dispatch sweep: the fan-out covers one full session per
+/// sweep value, collected in value order with the point labels intact.
+fn sweep_spec() -> ExperimentSpec<'static> {
+    let mut spec = ExperimentSpec::kernel(WorkloadSel::Named("PR"), Mechanism::FgpOnly);
+    spec.name = Some("par-sweep".into());
+    spec.sweep = Some(SweepSpec {
+        key: "remote_bw_gbs".into(),
+        values: vec!["8".into(), "32".into(), "128".into()],
+    });
+    spec
+}
+
+#[test]
+fn sweep_parallel_is_bit_exact() {
+    for backend in BACKENDS {
+        let seq = run_spec(&cfg(backend, 1), &sweep_spec()).unwrap();
+        assert_eq!(seq.len(), 3);
+        assert_eq!(
+            seq[0].spec_name.as_deref(),
+            Some("par-sweep[remote_bw_gbs=8]")
+        );
+        for threads in THREADS {
+            let par = run_spec(&cfg(backend, threads), &sweep_spec()).unwrap();
+            assert_eq!(par.len(), seq.len(), "sweep point count");
+            for (i, (s, p)) in seq.iter().zip(&par).enumerate() {
+                assert_report_identical(
+                    s,
+                    p,
+                    &format!("sweep[{i}] {backend:?} t={threads}"),
+                );
+            }
+        }
+    }
+}
+
+/// A sweeping spec whose points themselves run parallel solo baselines:
+/// nested fan-out (points × baselines) must still be bit-exact.
+#[test]
+fn nested_sweep_over_baselines_is_bit_exact() {
+    let mut spec = mix_spec();
+    spec.sweep = Some(SweepSpec {
+        key: "remote_bw_gbs".into(),
+        values: vec!["8".into(), "64".into()],
+    });
+    let seq = run_spec(&cfg(MemBackendKind::FixedLatency, 1), &spec).unwrap();
+    let par = run_spec(&cfg(MemBackendKind::FixedLatency, 4), &spec).unwrap();
+    assert_eq!(seq.len(), 2);
+    for (i, (s, p)) in seq.iter().zip(&par).enumerate() {
+        assert!(!s.run.app_slowdown.is_empty(), "baselines must run");
+        assert_report_identical(s, p, &format!("nested[{i}]"));
+    }
+}
+
+/// Repeated threaded runs agree with themselves: no run-to-run jitter
+/// from the worker pool.
+#[test]
+fn parallel_runs_are_deterministic() {
+    let a = Session::new(cfg(MemBackendKind::FixedLatency, 4), mix_spec())
+        .unwrap()
+        .run()
+        .unwrap();
+    let b = Session::new(cfg(MemBackendKind::FixedLatency, 4), mix_spec())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_report_identical(&a, &b, "repeat");
+}
+
+/// The CLI knob reaches the config: `--threads`-equivalent `--set`
+/// spelling parses, and a spec's `[system]` override may set it too.
+#[test]
+fn sim_threads_is_settable_through_spec_overrides() {
+    let mut spec = mix_spec();
+    spec.overrides.push(("sim_threads".into(), "3".into()));
+    let s = Session::new(cfg(MemBackendKind::FixedLatency, 1), spec).unwrap();
+    assert_eq!(s.config().sim_threads, 3);
+    let seq = Session::new(cfg(MemBackendKind::FixedLatency, 1), mix_spec())
+        .unwrap()
+        .run()
+        .unwrap();
+    let mut spec = mix_spec();
+    spec.overrides.push(("sim_threads".into(), "3".into()));
+    let over = Session::new(cfg(MemBackendKind::FixedLatency, 1), spec)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_report_identical(&seq, &over, "override-threads");
+    // The spec-level override also governs the [sweep] expansion itself
+    // (run_spec peeks at it before fanning out) — and, like every other
+    // thread-count choice, leaves the reports bit-identical.
+    let plain = run_spec(&cfg(MemBackendKind::FixedLatency, 1), &sweep_spec()).unwrap();
+    let mut swept = sweep_spec();
+    swept.overrides.push(("sim_threads".into(), "2".into()));
+    let threaded = run_spec(&cfg(MemBackendKind::FixedLatency, 1), &swept).unwrap();
+    assert_eq!(plain.len(), threaded.len());
+    for (i, (s, p)) in plain.iter().zip(&threaded).enumerate() {
+        assert_report_identical(s, p, &format!("sweep-override[{i}]"));
+    }
+}
