@@ -27,6 +27,7 @@ pub const VALUE_OPTS: &[&str] = &[
     "values",
     "baselines",
     "threads",
+    "topology",
 ];
 
 /// Parsed command line.

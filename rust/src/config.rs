@@ -211,6 +211,23 @@ pub struct SystemConfig {
     pub host_latency_ns: f64,
     /// Remote link latency per hop (SerDes + routing).
     pub remote_latency_ns: f64,
+
+    // --- stack-to-stack fabric (see [`crate::net`]) -----------------------
+    /// Fabric shape: `full` (degenerate single-hop switch, the frozen
+    /// default), `line`, `ring`, or `mesh`.
+    pub topology: crate::net::TopologyKind,
+    /// Mesh column count; `0` picks the near-square factorisation of
+    /// `num_stacks`. Must divide `num_stacks` when set.
+    pub mesh_cols: usize,
+    /// Per-hop latency of line/ring/mesh channels (ns). The degenerate
+    /// fabric keeps using `remote_latency_ns`.
+    pub hop_latency_ns: f64,
+    /// Per-directed-link bandwidth of line/ring/mesh channels (GB/s);
+    /// `0` = the frozen per-port share `remote_bw_gbs / num_stacks`.
+    pub link_bw_gbs: f64,
+    /// Window length (SM cycles) for per-link peak-throughput tracking
+    /// on multi-hop fabrics.
+    pub net_window_cycles: f64,
     /// DRAM service latency (row hit).
     pub dram_hit_ns: f64,
     /// DRAM service latency (row miss: precharge + activate + CAS).
@@ -322,6 +339,11 @@ impl Default for SystemConfig {
             local_latency_ns: 20.0,
             host_latency_ns: 60.0,
             remote_latency_ns: 120.0,
+            topology: crate::net::TopologyKind::FullyConnected,
+            mesh_cols: 0,
+            hop_latency_ns: 30.0,
+            link_bw_gbs: 0.0,
+            net_window_cycles: 8192.0,
             dram_hit_ns: 15.0,
             dram_miss_ns: 45.0,
             channels_per_stack: 8,
@@ -455,6 +477,33 @@ impl SystemConfig {
         if self.host_ddr_channels == 0 {
             bail!("host_ddr_channels must be positive");
         }
+        if self.mesh_cols > 0
+            && (self.mesh_cols > self.num_stacks || self.num_stacks % self.mesh_cols != 0)
+        {
+            bail!(
+                "mesh_cols must divide num_stacks ({} does not tile {})",
+                self.mesh_cols,
+                self.num_stacks
+            );
+        }
+        if !self.hop_latency_ns.is_finite() || self.hop_latency_ns < 0.0 {
+            bail!(
+                "hop_latency_ns must be a non-negative real, got {}",
+                self.hop_latency_ns
+            );
+        }
+        if !self.link_bw_gbs.is_finite() || self.link_bw_gbs < 0.0 {
+            bail!(
+                "link_bw_gbs must be non-negative (0 = auto), got {}",
+                self.link_bw_gbs
+            );
+        }
+        if !self.net_window_cycles.is_finite() || self.net_window_cycles <= 0.0 {
+            bail!(
+                "net_window_cycles must be positive, got {}",
+                self.net_window_cycles
+            );
+        }
         Ok(())
     }
 
@@ -483,6 +532,15 @@ impl SystemConfig {
             "local_latency_ns" => parse!(local_latency_ns, f64),
             "host_latency_ns" => parse!(host_latency_ns, f64),
             "remote_latency_ns" => parse!(remote_latency_ns, f64),
+            "topology" => {
+                self.topology = crate::net::TopologyKind::parse(v).ok_or_else(|| {
+                    anyhow::anyhow!("bad value for {key}: {v} (expected full|line|ring|mesh)")
+                })?
+            }
+            "mesh_cols" => parse!(mesh_cols, usize),
+            "hop_latency_ns" => parse!(hop_latency_ns, f64),
+            "link_bw_gbs" => parse!(link_bw_gbs, f64),
+            "net_window_cycles" => parse!(net_window_cycles, f64),
             "dram_hit_ns" => parse!(dram_hit_ns, f64),
             "dram_miss_ns" => parse!(dram_miss_ns, f64),
             "channels_per_stack" => parse!(channels_per_stack, usize),
@@ -564,6 +622,11 @@ impl SystemConfig {
             ("local_latency_ns", self.local_latency_ns.to_string()),
             ("host_latency_ns", self.host_latency_ns.to_string()),
             ("remote_latency_ns", self.remote_latency_ns.to_string()),
+            ("topology", self.topology.to_string()),
+            ("mesh_cols", self.mesh_cols.to_string()),
+            ("hop_latency_ns", self.hop_latency_ns.to_string()),
+            ("link_bw_gbs", self.link_bw_gbs.to_string()),
+            ("net_window_cycles", self.net_window_cycles.to_string()),
             ("dram_hit_ns", self.dram_hit_ns.to_string()),
             ("dram_miss_ns", self.dram_miss_ns.to_string()),
             ("channels_per_stack", self.channels_per_stack.to_string()),
@@ -800,6 +863,42 @@ mod tests {
         assert!(c.set("sim_threads", "many").is_err());
         let c2 = SystemConfig::from_toml_str("sim_threads = 1\n").unwrap();
         assert_eq!(c2.sim_threads, 1);
+    }
+
+    #[test]
+    fn topology_knobs_parse_and_validate() {
+        use crate::net::TopologyKind;
+        let mut c = SystemConfig::default();
+        assert_eq!(c.topology, TopologyKind::FullyConnected);
+        c.set("topology", "line").unwrap();
+        assert_eq!(c.topology, TopologyKind::Line);
+        c.set("topology", "ring").unwrap();
+        assert_eq!(c.topology, TopologyKind::Ring);
+        c.set("topology", "mesh").unwrap();
+        assert_eq!(c.topology, TopologyKind::Mesh2d);
+        c.set("topology", "full").unwrap();
+        assert_eq!(c.topology, TopologyKind::FullyConnected);
+        assert!(c.set("topology", "torus").is_err());
+        c.set("mesh_cols", "2").unwrap();
+        c.set("hop_latency_ns", "25").unwrap();
+        c.set("link_bw_gbs", "8").unwrap();
+        c.set("net_window_cycles", "4096").unwrap();
+        assert!(c.validate().is_ok());
+        // mesh_cols must tile num_stacks (4).
+        c.mesh_cols = 3;
+        assert!(c.validate().is_err());
+        c.mesh_cols = 8;
+        assert!(c.validate().is_err());
+        c.mesh_cols = 0;
+        assert!(c.validate().is_ok());
+        c.hop_latency_ns = -1.0;
+        assert!(c.validate().is_err());
+        c.hop_latency_ns = 30.0;
+        c.link_bw_gbs = f64::NAN;
+        assert!(c.validate().is_err());
+        c.link_bw_gbs = 0.0;
+        c.net_window_cycles = 0.0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -46,7 +46,7 @@ use crate::config::SystemConfig;
 use crate::gpu::{Sm, Topology};
 use crate::mem::{self, MemBackend, MemBackendImpl, MemStats};
 use crate::net::Interconnect;
-use crate::stats::{AccessStats, RunReport};
+use crate::stats::{AccessStats, LinkStat, RunReport};
 use crate::trace::KernelTrace;
 use crate::vm::{Tlb, VirtualMemory};
 use std::cmp::Reverse;
@@ -205,6 +205,9 @@ pub struct EngineRaw {
     pub host_ddr_bytes: u64,
     /// Host-port transfers that queued behind a busy port.
     pub host_port_stalls: u64,
+    /// Per-directed-link fabric counters (empty under the degenerate
+    /// fully-connected fabric, whose reports are frozen).
+    pub link_stats: Vec<LinkStat>,
 }
 
 impl EngineRaw {
@@ -247,6 +250,20 @@ impl EngineRaw {
                     self.host_bytes as f64 / total as f64
                 }
             },
+            // Only multi-hop fabrics report link stats; their presence
+            // is what keys the topology metadata (and the conditional
+            // JSON emission) so degenerate reports stay byte-identical.
+            topology: if self.link_stats.is_empty() {
+                String::new()
+            } else {
+                cfg.topology.to_string()
+            },
+            net_window_cycles: if self.link_stats.is_empty() {
+                0.0
+            } else {
+                cfg.net_window_cycles
+            },
+            link_stats: self.link_stats.clone(),
         }
     }
 }
@@ -719,6 +736,7 @@ impl<'a> Engine<'a> {
             host_bytes: net.host_bytes(),
             host_ddr_bytes: host_ddr.as_ref().map(|d| d.bytes_served()).unwrap_or(0),
             host_port_stalls: net.host_port_stalls(),
+            link_stats: net.link_stats(),
         }
     }
 }

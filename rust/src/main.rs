@@ -65,6 +65,10 @@ fn load_config(args: &Args) -> coda::Result<SystemConfig> {
     if let Some(threads) = args.opt("threads") {
         cfg.set("sim_threads", threads)?;
     }
+    // --topology is sugar for --set topology=... and wins over it.
+    if let Some(topo) = args.opt("topology") {
+        cfg.set("topology", topo)?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -601,6 +605,10 @@ fn print_help() {
          \x20 --threads N                     baseline/sweep fan-out threads\n\
          \x20                                 (0 = one per core, 1 = sequential;\n\
          \x20                                 results are thread-count independent)\n\
+         \x20 --topology full|line|ring|mesh  stack-to-stack fabric (sugar for\n\
+         \x20                                 --set topology=...; knobs: mesh_cols,\n\
+         \x20                                 hop_latency_ns, link_bw_gbs,\n\
+         \x20                                 net_window_cycles)\n\
          \x20 hostmix: --host BENCH --host-mlp N --host-passes N (host intensity)\n\
          \n\
          JSON REPORTS (--json) always carry: workload, mechanism, cycles\n\
@@ -612,7 +620,10 @@ fn print_help() {
          app_slowdown, weighted_speedup; hostmix runs add host, host_ddr\n\
          (host accesses by destination), host_cycles, host_slowdown,\n\
          ndp_slowdown, host_bytes, host_ddr_bytes, host_port_stalls and\n\
-         host_bw_share. Spec-driven runs add spec (the label) and sources\n\
+         host_bw_share. Multi-hop fabrics (--topology line|ring|mesh) add\n\
+         topology, net_window_cycles and links (per directed link:\n\
+         from/to/bytes/stalls/peak_window_bytes/peak_bytes_per_cycle).\n\
+         Spec-driven runs add spec (the label) and sources\n\
          (per-source kind/workload/home/arrival/cycles/slowdown). Full\n\
          field descriptions: README.md; spec schema: examples/*.toml.\n\
          \n\

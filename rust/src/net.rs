@@ -7,12 +7,83 @@
 //! * **Remote** — stack to stack, for NDP accesses to data resident
 //!   elsewhere. Lowest bandwidth; the resource CODA exists to avoid.
 //!
-//! Each directional port is a busy-until server: a transfer occupies the
-//! port for `bytes / bw` cycles and then experiences the propagation
-//! latency. Queuing delay therefore emerges when traffic concentrates on a
-//! port — exactly the congestion behaviour §6.2 discusses.
+//! The remote side is a route-aware **fabric**: a [`Topology`] enumerates
+//! the directed links that physically exist and the route (link sequence)
+//! a message from stack `s` to stack `d` crosses. Four topologies are
+//! modelled — the degenerate fully-connected switch (the default, and
+//! bit-exact to the original point-to-point model), a line, a ring with
+//! shortest-direction routing, and a 2D mesh with XY dimension-order
+//! routing.
+//!
+//! Each directional link/port is a busy-until server: a transfer occupies
+//! the link for `bytes / bw` cycles and then experiences the propagation
+//! latency. Queuing delay therefore emerges when traffic concentrates on
+//! a link — exactly the congestion behaviour §6.2 discusses. A multi-hop
+//! message advances hop by hop: each link on the route is reserved at the
+//! time the previous hop delivered, so an in-flight message pays queuing
+//! at every congested link it crosses, at the (future) instant it arrives
+//! there.
+//!
+//! **Sender-stalls-locally invariant.** Only the *first* link on a route
+//! is a sender-side resource (the local egress handoff). Once the message
+//! has left the egress port, the fabric forwards it autonomously: queuing
+//! on downstream links delays *this message*, never the sender's
+//! subsequent injections, which contend only for the egress port again.
+//! This mirrors event-heap forwarding — each hop is an event scheduled at
+//! the previous hop's completion time — without materialising per-hop
+//! heap entries on the engine's hot path.
+//!
+//! **Counter semantics.** Every fabric link counts bytes and stall events
+//! (transfers that found the link busy). Multi-hop fabrics additionally
+//! track *peak per-window throughput*: wall-clock time is cut into
+//! windows of `net_window_cycles` cycles, each transfer's bytes are
+//! attributed to the window containing its service *start* time, and the
+//! busiest window is reported. Averages understate bursty-link pressure;
+//! the peak is what exposes an all-to-one hotspot. Counters never feed
+//! back into timing, so enabling them cannot perturb simulated cycles.
 
 use crate::config::SystemConfig;
+use crate::stats::LinkStat;
+
+/// Which stack-to-stack fabric shape to simulate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Single-hop switch: per-stack egress + ingress ports, any-to-any.
+    /// Bit-exact to the original point-to-point `Interconnect`.
+    #[default]
+    FullyConnected,
+    /// Stacks in a row; messages traverse every intermediate stack.
+    Line,
+    /// Stacks in a cycle; routes take the shorter direction.
+    Ring,
+    /// 2D mesh with XY (column-first) dimension-order routing.
+    Mesh2d,
+}
+
+impl TopologyKind {
+    /// Parse the spelling used by `[topology] kind = ...`, `--topology`
+    /// and the `topology` config key.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "full" | "fully-connected" | "fully_connected" => Some(Self::FullyConnected),
+            "line" => Some(Self::Line),
+            "ring" => Some(Self::Ring),
+            "mesh" | "mesh2d" => Some(Self::Mesh2d),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for TopologyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::FullyConnected => "full",
+            Self::Line => "line",
+            Self::Ring => "ring",
+            Self::Mesh2d => "mesh",
+        })
+    }
+}
 
 /// A single directional link/port with finite bandwidth.
 #[derive(Clone, Debug)]
@@ -24,10 +95,22 @@ pub struct Link {
     transfers: u64,
     queued_cycles: f64,
     stalled: u64,
+    /// Peak-throughput window length in cycles; 0.0 disables tracking
+    /// (local/host/degenerate links pay nothing for the feature).
+    window_cycles: f64,
+    window_start: f64,
+    window_bytes: u64,
+    peak_window_bytes: u64,
 }
 
 impl Link {
     pub fn new(bytes_per_cycle: f64, latency_cycles: f64) -> Self {
+        Self::with_window(bytes_per_cycle, latency_cycles, 0.0)
+    }
+
+    /// A link that additionally tracks its busiest `window_cycles`-cycle
+    /// window (pass 0.0 to disable, identical to [`Link::new`]).
+    pub fn with_window(bytes_per_cycle: f64, latency_cycles: f64, window_cycles: f64) -> Self {
         assert!(bytes_per_cycle > 0.0);
         Self {
             bytes_per_cycle,
@@ -37,15 +120,21 @@ impl Link {
             transfers: 0,
             queued_cycles: 0.0,
             stalled: 0,
+            window_cycles,
+            window_start: 0.0,
+            window_bytes: 0,
+            peak_window_bytes: 0,
         }
     }
 
     /// Send `bytes` at time `now`; returns delivery completion time.
     ///
     /// This is the per-access interconnect step of the engine's hot path
-    /// (one call for local accesses, three for remote round-trips):
-    /// always inlined into the `*_hop` wrappers so the busy-until update
-    /// never becomes an out-of-line call.
+    /// (one call for local accesses, one per route hop for remote
+    /// round-trips): always inlined into the `*_hop` wrappers so the
+    /// busy-until update never becomes an out-of-line call. The timing
+    /// arithmetic is frozen — window tracking below is counters-only and
+    /// must never feed back into the returned time.
     #[inline(always)]
     pub fn transfer(&mut self, now: f64, bytes: u64) -> f64 {
         let start = now.max(self.next_free);
@@ -57,6 +146,23 @@ impl Link {
         self.next_free = start + occupancy;
         self.bytes_sent += bytes;
         self.transfers += 1;
+        if self.window_cycles > 0.0 {
+            // Attribute the whole transfer to the window containing its
+            // service start. Route chaining hands links future
+            // timestamps, so starts are not globally monotonic; a start
+            // before the current window (possible when a now-time
+            // transfer interleaves with a chained future one) is folded
+            // into the current window — a deliberate approximation that
+            // can only *under*state a past window's peak, never invent
+            // load.
+            if start >= self.window_start + self.window_cycles {
+                let k = ((start - self.window_start) / self.window_cycles).floor();
+                self.window_start += k * self.window_cycles;
+                self.peak_window_bytes = self.peak_window_bytes.max(self.window_bytes);
+                self.window_bytes = 0;
+            }
+            self.window_bytes += bytes;
+        }
         start + occupancy + self.latency_cycles
     }
 
@@ -87,20 +193,381 @@ impl Link {
             (self.bytes_sent as f64 / self.bytes_per_cycle) / now
         }
     }
+
+    /// Bytes of the busiest observed window (includes the still-open
+    /// window); 0 when window tracking is disabled.
+    pub fn peak_window_bytes(&self) -> u64 {
+        self.peak_window_bytes.max(self.window_bytes)
+    }
 }
 
-/// The full interconnect: per-stack local crossbars, per-stack host ports,
-/// and per-stack remote ports (ingress + egress).
+/// A directed link a [`Topology`] declares: endpoints plus physical
+/// parameters. `from`/`to` are stack ids; the fully-connected switch uses
+/// the pseudo-node id `num_stacks` for its central crossbar.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DirectedLink {
+    pub from: usize,
+    pub to: usize,
+    pub bytes_per_cycle: f64,
+    pub latency_cycles: f64,
+}
+
+/// A stack-to-stack fabric shape: which directed links exist, and which
+/// sequence of them a message crosses. Routes are precomputed at
+/// construction; lookups are allocation-free slices of link indices into
+/// [`Topology::links`].
+pub trait Topology {
+    fn kind(&self) -> TopologyKind;
+    /// Every directed link in the fabric; a link's id is its index here.
+    fn links(&self) -> &[DirectedLink];
+    /// The route from `from` to `to` as directed-link ids, in crossing
+    /// order. Empty iff `from == to`.
+    fn get_route(&self, from: usize, to: usize) -> &[u32];
+}
+
+/// Flattened `n*n` route table shared by every topology implementation.
+#[derive(Clone, Debug)]
+struct RouteTable {
+    n: usize,
+    offsets: Vec<u32>,
+    hops: Vec<u32>,
+}
+
+impl RouteTable {
+    /// Build from a per-pair route generator (called once per ordered
+    /// pair; `from == to` pairs get empty routes).
+    fn build(n: usize, mut route_of: impl FnMut(usize, usize) -> Vec<u32>) -> Self {
+        let mut offsets = Vec::with_capacity(n * n + 1);
+        let mut hops = Vec::new();
+        for s in 0..n {
+            for d in 0..n {
+                offsets.push(hops.len() as u32);
+                if s != d {
+                    hops.extend(route_of(s, d));
+                }
+            }
+        }
+        offsets.push(hops.len() as u32);
+        Self { n, offsets, hops }
+    }
+
+    #[inline]
+    fn get(&self, from: usize, to: usize) -> &[u32] {
+        let i = from * self.n + to;
+        &self.hops[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+}
+
+/// Per-link parameters for the multi-hop fabrics: `link_bw_gbs` when set,
+/// otherwise the frozen aggregate-divided-by-`n` per-port share; per-hop
+/// latency from `hop_latency_ns`.
+fn hop_params(cfg: &SystemConfig) -> (f64, f64) {
+    let bw = if cfg.link_bw_gbs > 0.0 {
+        cfg.gbs_to_bytes_per_cycle(cfg.link_bw_gbs)
+    } else {
+        cfg.gbs_to_bytes_per_cycle(cfg.remote_bw_gbs) / cfg.num_stacks as f64
+    };
+    (bw, cfg.hop_latency_ns * cfg.cycles_per_ns())
+}
+
+/// The degenerate single-hop switch: per-stack egress ports into a
+/// central crossbar (pseudo-node `n`) and per-stack ingress ports out of
+/// it. Link parameters and route order reproduce the original
+/// point-to-point `Interconnect` exactly: egress carries the remote
+/// latency, ingress is latency-free, both get the aggregate remote
+/// bandwidth divided by `num_stacks`.
+pub struct FullyConnected {
+    links: Vec<DirectedLink>,
+    routes: RouteTable,
+}
+
+impl FullyConnected {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let n = cfg.num_stacks;
+        let cyc = cfg.cycles_per_ns();
+        let remote_bw = cfg.gbs_to_bytes_per_cycle(cfg.remote_bw_gbs) / n as f64;
+        let mut links = Vec::with_capacity(2 * n);
+        for i in 0..n {
+            // Egress of stack i (link id i).
+            links.push(DirectedLink {
+                from: i,
+                to: n,
+                bytes_per_cycle: remote_bw,
+                latency_cycles: cfg.remote_latency_ns * cyc,
+            });
+        }
+        for i in 0..n {
+            // Ingress of stack i (link id n + i).
+            links.push(DirectedLink {
+                from: n,
+                to: i,
+                bytes_per_cycle: remote_bw,
+                latency_cycles: 0.0,
+            });
+        }
+        let routes = RouteTable::build(n, |s, d| vec![s as u32, (n + d) as u32]);
+        Self { links, routes }
+    }
+}
+
+impl Topology for FullyConnected {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::FullyConnected
+    }
+    fn links(&self) -> &[DirectedLink] {
+        &self.links
+    }
+    fn get_route(&self, from: usize, to: usize) -> &[u32] {
+        self.routes.get(from, to)
+    }
+}
+
+/// Stacks in a row: bidirectional channels between neighbours, messages
+/// traverse every intermediate stack.
+pub struct Line {
+    links: Vec<DirectedLink>,
+    routes: RouteTable,
+}
+
+impl Line {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let n = cfg.num_stacks;
+        let (bw, lat) = hop_params(cfg);
+        let mut links = Vec::new();
+        for i in 0..n.saturating_sub(1) {
+            // Link id 2i: i -> i+1 (rightward); 2i+1: i+1 -> i (leftward).
+            links.push(DirectedLink {
+                from: i,
+                to: i + 1,
+                bytes_per_cycle: bw,
+                latency_cycles: lat,
+            });
+            links.push(DirectedLink {
+                from: i + 1,
+                to: i,
+                bytes_per_cycle: bw,
+                latency_cycles: lat,
+            });
+        }
+        let routes = RouteTable::build(n, |s, d| {
+            let mut route = Vec::new();
+            let mut u = s;
+            while u != d {
+                if d > u {
+                    route.push(2 * u as u32);
+                    u += 1;
+                } else {
+                    route.push(2 * (u - 1) as u32 + 1);
+                    u -= 1;
+                }
+            }
+            route
+        });
+        Self { links, routes }
+    }
+}
+
+impl Topology for Line {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Line
+    }
+    fn links(&self) -> &[DirectedLink] {
+        &self.links
+    }
+    fn get_route(&self, from: usize, to: usize) -> &[u32] {
+        self.routes.get(from, to)
+    }
+}
+
+/// Stacks in a cycle: clockwise link id `i` is `i -> (i+1) % n`,
+/// counter-clockwise id `n + i` is `i -> (i+n-1) % n`. Routes take the
+/// shorter direction; ties go clockwise.
+pub struct Ring {
+    links: Vec<DirectedLink>,
+    routes: RouteTable,
+}
+
+impl Ring {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let n = cfg.num_stacks;
+        let (bw, lat) = hop_params(cfg);
+        let mut links = Vec::new();
+        if n > 1 {
+            for i in 0..n {
+                links.push(DirectedLink {
+                    from: i,
+                    to: (i + 1) % n,
+                    bytes_per_cycle: bw,
+                    latency_cycles: lat,
+                });
+            }
+            for i in 0..n {
+                links.push(DirectedLink {
+                    from: i,
+                    to: (i + n - 1) % n,
+                    bytes_per_cycle: bw,
+                    latency_cycles: lat,
+                });
+            }
+        }
+        let routes = RouteTable::build(n, |s, d| {
+            let cw = (d + n - s) % n;
+            let ccw = (s + n - d) % n;
+            let mut route = Vec::new();
+            let mut u = s;
+            if cw <= ccw {
+                for _ in 0..cw {
+                    route.push(u as u32);
+                    u = (u + 1) % n;
+                }
+            } else {
+                for _ in 0..ccw {
+                    route.push((n + u) as u32);
+                    u = (u + n - 1) % n;
+                }
+            }
+            route
+        });
+        Self { links, routes }
+    }
+}
+
+impl Topology for Ring {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Ring
+    }
+    fn links(&self) -> &[DirectedLink] {
+        &self.links
+    }
+    fn get_route(&self, from: usize, to: usize) -> &[u32] {
+        self.routes.get(from, to)
+    }
+}
+
+/// 2D mesh, stack id = `row * cols + col`, with XY dimension-order
+/// routing (column-first, then row) — deadlock-free and deterministic.
+/// `mesh_cols = 0` picks the near-square factorisation.
+pub struct Mesh2d {
+    links: Vec<DirectedLink>,
+    routes: RouteTable,
+}
+
+/// The widest column count `<= sqrt(n)` that divides `n` evenly.
+pub fn mesh_auto_cols(n: usize) -> usize {
+    let mut c = (n as f64).sqrt().floor() as usize;
+    c = c.clamp(1, n);
+    while n % c != 0 {
+        c -= 1;
+    }
+    c
+}
+
+impl Mesh2d {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let n = cfg.num_stacks;
+        let cols = if cfg.mesh_cols == 0 {
+            mesh_auto_cols(n)
+        } else {
+            cfg.mesh_cols
+        };
+        assert!(
+            cols >= 1 && cols <= n && n % cols == 0,
+            "mesh_cols {cols} does not tile num_stacks {n}"
+        );
+        let rows = n / cols;
+        let (bw, lat) = hop_params(cfg);
+        let mut links = Vec::new();
+        // Deterministic enumeration: row-major, east/west pair then
+        // south/north pair.
+        let mut adj = vec![u32::MAX; n * n];
+        let mut push = |links: &mut Vec<DirectedLink>, adj: &mut Vec<u32>, a: usize, b: usize| {
+            adj[a * n + b] = links.len() as u32;
+            links.push(DirectedLink {
+                from: a,
+                to: b,
+                bytes_per_cycle: bw,
+                latency_cycles: lat,
+            });
+        };
+        for r in 0..rows {
+            for c in 0..cols {
+                let u = r * cols + c;
+                if c + 1 < cols {
+                    push(&mut links, &mut adj, u, u + 1);
+                    push(&mut links, &mut adj, u + 1, u);
+                }
+                if r + 1 < rows {
+                    push(&mut links, &mut adj, u, u + cols);
+                    push(&mut links, &mut adj, u + cols, u);
+                }
+            }
+        }
+        let routes = RouteTable::build(n, |s, d| {
+            let (mut r0, mut c0) = (s / cols, s % cols);
+            let (r1, c1) = (d / cols, d % cols);
+            let mut route = Vec::new();
+            while c0 != c1 {
+                let next = if c1 > c0 { c0 + 1 } else { c0 - 1 };
+                route.push(adj[(r0 * cols + c0) * n + (r0 * cols + next)]);
+                c0 = next;
+            }
+            while r0 != r1 {
+                let next = if r1 > r0 { r0 + 1 } else { r0 - 1 };
+                route.push(adj[(r0 * cols + c0) * n + (next * cols + c0)]);
+                r0 = next;
+            }
+            debug_assert!(route.iter().all(|&l| l != u32::MAX));
+            route
+        });
+        Self { links, routes }
+    }
+}
+
+impl Topology for Mesh2d {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Mesh2d
+    }
+    fn links(&self) -> &[DirectedLink] {
+        &self.links
+    }
+    fn get_route(&self, from: usize, to: usize) -> &[u32] {
+        self.routes.get(from, to)
+    }
+}
+
+/// Construct the topology selected by `cfg.topology`.
+pub fn make_topology(cfg: &SystemConfig) -> Box<dyn Topology> {
+    match cfg.topology {
+        TopologyKind::FullyConnected => Box::new(FullyConnected::new(cfg)),
+        TopologyKind::Line => Box::new(Line::new(cfg)),
+        TopologyKind::Ring => Box::new(Ring::new(cfg)),
+        TopologyKind::Mesh2d => Box::new(Mesh2d::new(cfg)),
+    }
+}
+
+/// The full interconnect: per-stack local crossbars, per-stack host
+/// ports, and the stack-to-stack fabric. The topology is consulted once
+/// at construction and flattened into plain arrays (link servers + route
+/// table), so the engine's hot path folds `Link::transfer` along a route
+/// slice with no dynamic dispatch.
 #[derive(Clone, Debug)]
 pub struct Interconnect {
     /// Per-stack local crossbar (SM <-> local HBM), full local bandwidth.
     pub local: Vec<Link>,
     /// Per-stack host port; the aggregate host bandwidth divides evenly.
     pub host: Vec<Link>,
-    /// Per-stack remote egress ports.
-    pub remote_out: Vec<Link>,
-    /// Per-stack remote ingress ports.
-    pub remote_in: Vec<Link>,
+    kind: TopologyKind,
+    num_stacks: usize,
+    /// Static descriptors of the fabric's directed links (from topology).
+    link_meta: Vec<DirectedLink>,
+    /// Busy-until server per directed link, same indexing as `link_meta`.
+    fabric: Vec<Link>,
+    /// Flattened `n*n` routes: `route_hops[offsets[s*n+d]..offsets[s*n+d+1]]`.
+    route_offsets: Vec<u32>,
+    route_hops: Vec<u32>,
+    /// Bytes injected into the fabric (one count per `remote_hop`, not
+    /// per crossed link — the frozen `remote_bytes` definition).
+    injected_bytes: u64,
 }
 
 impl Interconnect {
@@ -109,7 +576,29 @@ impl Interconnect {
         let cyc = cfg.cycles_per_ns();
         let local_bw = cfg.gbs_to_bytes_per_cycle(cfg.local_bw_gbs);
         let host_bw = cfg.gbs_to_bytes_per_cycle(cfg.host_bw_gbs) / n as f64;
-        let remote_bw = cfg.gbs_to_bytes_per_cycle(cfg.remote_bw_gbs) / n as f64;
+        let topo = make_topology(cfg);
+        // Peak-window tracking is free to enable (counters only), but the
+        // degenerate fabric skips it so the frozen hot path stays
+        // branch-identical too.
+        let window = if topo.kind() == TopologyKind::FullyConnected {
+            0.0
+        } else {
+            cfg.net_window_cycles
+        };
+        let fabric = topo
+            .links()
+            .iter()
+            .map(|d| Link::with_window(d.bytes_per_cycle, d.latency_cycles, window))
+            .collect();
+        let mut route_offsets = Vec::with_capacity(n * n + 1);
+        let mut route_hops = Vec::new();
+        for s in 0..n {
+            for d in 0..n {
+                route_offsets.push(route_hops.len() as u32);
+                route_hops.extend_from_slice(topo.get_route(s, d));
+            }
+        }
+        route_offsets.push(route_hops.len() as u32);
         Self {
             local: (0..n)
                 .map(|_| Link::new(local_bw, cfg.local_latency_ns * cyc))
@@ -117,12 +606,13 @@ impl Interconnect {
             host: (0..n)
                 .map(|_| Link::new(host_bw, cfg.host_latency_ns * cyc))
                 .collect(),
-            remote_out: (0..n)
-                .map(|_| Link::new(remote_bw, cfg.remote_latency_ns * cyc))
-                .collect(),
-            remote_in: (0..n)
-                .map(|_| Link::new(remote_bw, 0.0))
-                .collect(),
+            kind: topo.kind(),
+            num_stacks: n,
+            link_meta: topo.links().to_vec(),
+            fabric,
+            route_offsets,
+            route_hops,
+            injected_bytes: 0,
         }
     }
 
@@ -133,13 +623,24 @@ impl Interconnect {
         self.local[stack].transfer(now, bytes)
     }
 
-    /// Deliver a remote access from `src` stack to `dst` stack: egress at
-    /// the source, ingress at the destination (two SerDes crossings).
+    /// Deliver a remote message from `src` stack to `dst` stack: fold the
+    /// busy-until transfer along the precomputed route, each hop starting
+    /// when the previous one delivered. Under the degenerate
+    /// fully-connected fabric this is exactly the frozen two-transfer
+    /// chain (source egress, then destination ingress).
     #[inline]
     pub fn remote_hop(&mut self, now: f64, src: usize, dst: usize, bytes: u64) -> f64 {
         debug_assert_ne!(src, dst);
-        let t = self.remote_out[src].transfer(now, bytes);
-        self.remote_in[dst].transfer(t, bytes)
+        self.injected_bytes += bytes;
+        let i = src * self.num_stacks + dst;
+        let lo = self.route_offsets[i] as usize;
+        let hi = self.route_offsets[i + 1] as usize;
+        let mut t = now;
+        for h in lo..hi {
+            let link = self.route_hops[h] as usize;
+            t = self.fabric[link].transfer(t, bytes);
+        }
+        t
     }
 
     /// Deliver a host access to `stack`.
@@ -148,9 +649,11 @@ impl Interconnect {
         self.host[stack].transfer(now, bytes)
     }
 
-    /// Total bytes that crossed remote egress ports.
+    /// Total bytes injected into the stack-to-stack fabric (counted once
+    /// per message, independent of route length — identical to the
+    /// original per-egress accounting under the degenerate fabric).
     pub fn remote_bytes(&self) -> u64 {
-        self.remote_out.iter().map(|l| l.bytes_sent()).sum()
+        self.injected_bytes
     }
 
     /// Total bytes delivered over the per-stack host ports.
@@ -163,6 +666,31 @@ impl Interconnect {
     pub fn host_port_stalls(&self) -> u64 {
         self.host.iter().map(|l| l.stalls()).sum()
     }
+
+    /// The fabric shape this interconnect was built with.
+    pub fn topology_kind(&self) -> TopologyKind {
+        self.kind
+    }
+
+    /// Per-directed-link fabric counters. Empty under the degenerate
+    /// fully-connected fabric, whose reports must stay byte-identical to
+    /// the pre-fabric model; multi-hop fabrics report every link.
+    pub fn link_stats(&self) -> Vec<LinkStat> {
+        if self.kind == TopologyKind::FullyConnected {
+            return Vec::new();
+        }
+        self.link_meta
+            .iter()
+            .zip(&self.fabric)
+            .map(|(m, l)| LinkStat {
+                from: m.from,
+                to: m.to,
+                bytes: l.bytes_sent(),
+                stalls: l.stalls(),
+                peak_window_bytes: l.peak_window_bytes(),
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -171,6 +699,12 @@ mod tests {
 
     fn cfg() -> SystemConfig {
         SystemConfig::default()
+    }
+
+    fn cfg_with(kind: TopologyKind) -> SystemConfig {
+        let mut c = cfg();
+        c.topology = kind;
+        c
     }
 
     #[test]
@@ -216,7 +750,9 @@ mod tests {
         // local : host-per-stack : remote-per-stack = 256 : 32 : 4 GB/s.
         let u = |l: &Link| l.bytes_per_cycle;
         assert!((u(&net.local[0]) / u(&net.host[0]) - 8.0).abs() < 1e-9);
-        assert!((u(&net.host[0]) / u(&net.remote_out[0]) - 8.0).abs() < 1e-9);
+        // Fabric link 0 is stack 0's egress port under the degenerate
+        // fully-connected topology.
+        assert!((u(&net.host[0]) / u(&net.fabric[0]) - 8.0).abs() < 1e-9);
     }
 
     #[test]
@@ -249,5 +785,209 @@ mod tests {
         net.host_hop(0.0, 0, 128); // queues behind the first stack-0 hop
         assert_eq!(net.host_bytes(), 3 * 128);
         assert_eq!(net.host_port_stalls(), 1);
+    }
+
+    #[test]
+    fn peak_window_tracking() {
+        let mut l = Link::with_window(1.0, 0.0, 100.0);
+        // Window [0, 100): two transfers, 150 bytes total.
+        l.transfer(0.0, 100);
+        l.transfer(10.0, 50);
+        // Window [200, 300): one transfer.
+        l.transfer(250.0, 40);
+        assert_eq!(l.peak_window_bytes(), 150);
+        // A bigger window later becomes the new peak.
+        l.transfer(300.0, 160);
+        assert_eq!(l.peak_window_bytes(), 160);
+        // Disabled tracking reports zero.
+        let mut off = Link::new(1.0, 0.0);
+        off.transfer(0.0, 1000);
+        assert_eq!(off.peak_window_bytes(), 0);
+    }
+
+    #[test]
+    fn window_tracking_never_changes_timing() {
+        let mut a = Link::new(2.0, 7.0);
+        let mut b = Link::with_window(2.0, 7.0, 64.0);
+        let mut x = 0x1234_5678_u64;
+        for _ in 0..200 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let now = (x >> 40) as f64;
+            let bytes = 1 + (x & 0x3FF);
+            assert_eq!(
+                a.transfer(now, bytes).to_bits(),
+                b.transfer(now, bytes).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn fully_connected_routes_are_egress_then_ingress() {
+        let c = cfg();
+        let topo = FullyConnected::new(&c);
+        let n = c.num_stacks;
+        for s in 0..n {
+            for d in 0..n {
+                if s == d {
+                    assert!(topo.get_route(s, d).is_empty());
+                } else {
+                    assert_eq!(topo.get_route(s, d), &[s as u32, (n + d) as u32]);
+                }
+            }
+        }
+        assert_eq!(topo.links().len(), 2 * n);
+    }
+
+    #[test]
+    fn line_routes_walk_every_intermediate_stack() {
+        let c = cfg_with(TopologyKind::Line);
+        let topo = Line::new(&c);
+        let n = c.num_stacks;
+        assert_eq!(topo.links().len(), 2 * (n - 1));
+        // 0 -> n-1 crosses every rightward link in order.
+        let right: Vec<u32> = (0..n - 1).map(|i| 2 * i as u32).collect();
+        assert_eq!(topo.get_route(0, n - 1), &right[..]);
+        // n-1 -> 0 crosses every leftward link.
+        let left: Vec<u32> = (0..n - 1).rev().map(|i| 2 * i as u32 + 1).collect();
+        assert_eq!(topo.get_route(n - 1, 0), &left[..]);
+        // Endpoints match up along every route.
+        for s in 0..n {
+            for d in 0..n {
+                let route = topo.get_route(s, d);
+                assert_eq!(route.len(), s.abs_diff(d));
+                let mut at = s;
+                for &l in route {
+                    let link = topo.links()[l as usize];
+                    assert_eq!(link.from, at);
+                    at = link.to;
+                }
+                assert_eq!(at, d);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_routes_take_shorter_direction() {
+        let c = cfg_with(TopologyKind::Ring); // num_stacks = 4
+        let topo = Ring::new(&c);
+        let n = c.num_stacks;
+        assert_eq!(topo.links().len(), 2 * n);
+        // Adjacent: one clockwise hop.
+        assert_eq!(topo.get_route(0, 1), &[0]);
+        // Opposite side (tie): clockwise by convention.
+        assert_eq!(topo.get_route(0, 2).len(), n / 2);
+        assert_eq!(topo.get_route(0, 2), &[0, 1]);
+        // Counter-clockwise is shorter for 0 -> 3.
+        assert_eq!(topo.get_route(0, 3), &[n as u32]);
+        // Every route is at most n/2 hops and endpoint-consistent.
+        for s in 0..n {
+            for d in 0..n {
+                let route = topo.get_route(s, d);
+                assert!(route.len() <= n / 2);
+                let mut at = s;
+                for &l in route {
+                    let link = topo.links()[l as usize];
+                    assert_eq!(link.from, at);
+                    at = link.to;
+                }
+                assert_eq!(at, d);
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_routes_are_xy_order() {
+        let mut c = cfg_with(TopologyKind::Mesh2d);
+        c.num_stacks = 4; // auto 2x2
+        let topo = Mesh2d::new(&c);
+        // 2x2 mesh: 4 bidirectional channels = 8 directed links.
+        assert_eq!(topo.links().len(), 8);
+        for s in 0..4 {
+            for d in 0..4 {
+                let route = topo.get_route(s, d);
+                let (r0, c0) = (s / 2, s % 2);
+                let (r1, c1) = (d / 2, d % 2);
+                assert_eq!(route.len(), r0.abs_diff(r1) + c0.abs_diff(c1));
+                let mut at = s;
+                for (i, &l) in route.iter().enumerate() {
+                    let link = topo.links()[l as usize];
+                    assert_eq!(link.from, at);
+                    // XY: column moves strictly precede row moves.
+                    let col_move = link.to.abs_diff(link.from) == 1;
+                    if i > 0 && !col_move {
+                        // Once a row move happens, no further column moves.
+                        let rest = &route[i..];
+                        assert!(rest.iter().all(|&m| {
+                            let lm = topo.links()[m as usize];
+                            lm.to.abs_diff(lm.from) != 1
+                        }));
+                    }
+                    at = link.to;
+                }
+                assert_eq!(at, d);
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_auto_cols_is_near_square_divisor() {
+        assert_eq!(mesh_auto_cols(1), 1);
+        assert_eq!(mesh_auto_cols(2), 1);
+        assert_eq!(mesh_auto_cols(4), 2);
+        assert_eq!(mesh_auto_cols(6), 2);
+        assert_eq!(mesh_auto_cols(8), 2);
+        assert_eq!(mesh_auto_cols(9), 3);
+        assert_eq!(mesh_auto_cols(12), 3);
+        assert_eq!(mesh_auto_cols(16), 4);
+    }
+
+    #[test]
+    fn multi_hop_pays_per_hop_latency() {
+        let c = cfg_with(TopologyKind::Line);
+        let mut net = Interconnect::new(&c);
+        let n = c.num_stacks;
+        let (bw, lat) = hop_params(&c);
+        let t = net.remote_hop(0.0, 0, n - 1, 128);
+        let expect = (n - 1) as f64 * (128.0 / bw + lat);
+        assert!((t - expect).abs() < 1e-9, "{t} vs {expect}");
+    }
+
+    #[test]
+    fn all_to_one_line_traffic_shows_hotspot_on_last_link() {
+        let mut c = cfg_with(TopologyKind::Line);
+        c.net_window_cycles = 1e9; // one window: peak == total
+        let mut net = Interconnect::new(&c);
+        let n = c.num_stacks;
+        for src in 1..n {
+            for _ in 0..32 {
+                net.remote_hop(0.0, src, 0, 128);
+            }
+        }
+        let stats = net.link_stats();
+        // The 1 -> 0 link carries every message; the far links only their
+        // own stack's share.
+        let into0 = stats.iter().find(|l| l.from == 1 && l.to == 0).unwrap();
+        assert_eq!(into0.bytes, 32 * 128 * (n as u64 - 1));
+        let far = stats
+            .iter()
+            .find(|l| l.from == n - 1 && l.to == n - 2)
+            .unwrap();
+        assert_eq!(far.bytes, 32 * 128);
+        assert!(into0.stalls > 0);
+        assert_eq!(into0.peak_window_bytes, into0.bytes);
+    }
+
+    #[test]
+    fn degenerate_fabric_reports_no_link_stats() {
+        let c = cfg();
+        let mut net = Interconnect::new(&c);
+        net.remote_hop(0.0, 0, 1, 128);
+        assert!(net.link_stats().is_empty());
+        assert_eq!(net.remote_bytes(), 128);
+        let c2 = cfg_with(TopologyKind::Ring);
+        let mut net2 = Interconnect::new(&c2);
+        net2.remote_hop(0.0, 0, 1, 128);
+        assert_eq!(net2.link_stats().len(), 2 * c2.num_stacks);
+        assert_eq!(net2.remote_bytes(), 128);
     }
 }

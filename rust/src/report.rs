@@ -145,6 +145,41 @@ impl From<&RunReport> for Json {
                 .push("host_port_stalls", Json::Num(r.host_port_stalls as f64))
                 .push("host_bw_share", Json::Num(r.host_bw_share));
         }
+        // Fabric extras, only for multi-hop topologies: the degenerate
+        // fully-connected fabric reports no link stats, so its JSON stays
+        // byte-identical to the frozen pre-fabric output.
+        if !r.link_stats.is_empty() {
+            o.push("topology", Json::Str(r.topology.clone()))
+                .push("net_window_cycles", Json::Num(r.net_window_cycles))
+                .push(
+                    "links",
+                    Json::Arr(
+                        r.link_stats
+                            .iter()
+                            .map(|l| {
+                                let mut lo = Json::obj();
+                                lo.push("from", Json::Num(l.from as f64))
+                                    .push("to", Json::Num(l.to as f64))
+                                    .push("bytes", Json::Num(l.bytes as f64))
+                                    .push("stalls", Json::Num(l.stalls as f64))
+                                    .push(
+                                        "peak_window_bytes",
+                                        Json::Num(l.peak_window_bytes as f64),
+                                    )
+                                    .push(
+                                        "peak_bytes_per_cycle",
+                                        Json::Num(if r.net_window_cycles > 0.0 {
+                                            l.peak_window_bytes as f64 / r.net_window_cycles
+                                        } else {
+                                            0.0
+                                        }),
+                                    );
+                                lo
+                            })
+                            .collect(),
+                    ),
+                );
+        }
         o
     }
 }
@@ -440,6 +475,40 @@ mod tests {
         assert!(s.contains(r#""ndp_slowdown":1.5"#));
         assert!(s.contains(r#""host_port_stalls":7"#));
         assert!(s.contains(r#""host_bw_share":0.4"#));
+    }
+
+    #[test]
+    fn link_fields_render_only_for_multi_hop_fabrics() {
+        let plain = Json::from(&RunReport::default()).render();
+        assert!(!plain.contains("topology"));
+        assert!(!plain.contains("links"));
+        let r = RunReport {
+            topology: "line".into(),
+            net_window_cycles: 1000.0,
+            link_stats: vec![
+                crate::stats::LinkStat {
+                    from: 0,
+                    to: 1,
+                    bytes: 4096,
+                    stalls: 3,
+                    peak_window_bytes: 2000,
+                },
+                crate::stats::LinkStat {
+                    from: 1,
+                    to: 0,
+                    bytes: 128,
+                    stalls: 0,
+                    peak_window_bytes: 128,
+                },
+            ],
+            ..Default::default()
+        };
+        let s = Json::from(&r).render();
+        assert!(s.contains(r#""topology":"line""#));
+        assert!(s.contains(r#""net_window_cycles":1000"#));
+        assert!(s.contains(r#""from":0,"to":1,"bytes":4096,"stalls":3"#));
+        assert!(s.contains(r#""peak_window_bytes":2000,"peak_bytes_per_cycle":2"#));
+        validate_json(&s).unwrap();
     }
 
     #[test]

@@ -513,6 +513,22 @@ impl<'a> Session<'a> {
             }
             modified |= h.mlp.is_some() || h.passes.is_some() || h.ddr_fraction.is_some();
         }
+        if let Some(t) = &spec.topology {
+            cfg.topology = t.kind;
+            if let Some(c) = t.mesh_cols {
+                cfg.mesh_cols = c;
+            }
+            if let Some(l) = t.hop_latency_ns {
+                cfg.hop_latency_ns = l;
+            }
+            if let Some(b) = t.link_bw_gbs {
+                cfg.link_bw_gbs = b;
+            }
+            if let Some(w) = t.window_cycles {
+                cfg.net_window_cycles = w;
+            }
+            modified = true;
+        }
         if modified {
             cfg.validate()?;
         }
@@ -1251,6 +1267,34 @@ mod tests {
         assert_eq!(s.config().host_mlp, 8);
         assert_eq!(s.config().host_passes, 3);
         assert_eq!(s.config().host_ddr_fraction, 0.25);
+    }
+
+    #[test]
+    fn topology_section_lowers_onto_config() {
+        let mut spec = ExperimentSpec::kernel(WorkloadSel::Named("NN"), Mechanism::Coda);
+        spec.topology = Some(crate::spec::TopologySpec {
+            kind: crate::net::TopologyKind::Ring,
+            mesh_cols: None,
+            hop_latency_ns: Some(12.0),
+            link_bw_gbs: Some(64.0),
+            window_cycles: Some(4096.0),
+        });
+        let s = Session::new(cfg(), spec).unwrap();
+        assert_eq!(s.config().topology, crate::net::TopologyKind::Ring);
+        assert_eq!(s.config().hop_latency_ns, 12.0);
+        assert_eq!(s.config().link_bw_gbs, 64.0);
+        assert_eq!(s.config().net_window_cycles, 4096.0);
+        // Lowered knobs go through config validation: a mesh whose column
+        // count does not tile the stacks is rejected here, not at run time.
+        let mut bad = ExperimentSpec::kernel(WorkloadSel::Named("NN"), Mechanism::Coda);
+        bad.topology = Some(crate::spec::TopologySpec {
+            kind: crate::net::TopologyKind::Mesh2d,
+            mesh_cols: Some(3),
+            hop_latency_ns: None,
+            link_bw_gbs: None,
+            window_cycles: None,
+        });
+        assert!(Session::new(cfg(), bad).is_err());
     }
 
     #[test]

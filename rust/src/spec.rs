@@ -172,6 +172,36 @@ impl<'a> HostSpec<'a> {
     }
 }
 
+/// The optional `[topology]` section: which stack-to-stack fabric the
+/// run simulates, plus its physical knobs. Lowered onto the
+/// `SystemConfig` by [`crate::session::Session`] like `[host]`
+/// overrides; omitting the section (or `kind = full`) keeps the frozen
+/// degenerate fabric.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TopologySpec {
+    pub kind: crate::net::TopologyKind,
+    /// Override of `SystemConfig::mesh_cols`.
+    pub mesh_cols: Option<usize>,
+    /// Override of `SystemConfig::hop_latency_ns`.
+    pub hop_latency_ns: Option<f64>,
+    /// Override of `SystemConfig::link_bw_gbs`.
+    pub link_bw_gbs: Option<f64>,
+    /// Override of `SystemConfig::net_window_cycles`.
+    pub window_cycles: Option<f64>,
+}
+
+impl TopologySpec {
+    pub fn new(kind: crate::net::TopologyKind) -> Self {
+        Self {
+            kind,
+            mesh_cols: None,
+            hop_latency_ns: None,
+            link_bw_gbs: None,
+            window_cycles: None,
+        }
+    }
+}
+
 /// How the session turns kernels into engine block dispatch (see the
 /// module docs for the three concrete modes).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -310,6 +340,8 @@ pub struct ExperimentSpec<'a> {
     pub overrides: Vec<(String, String)>,
     pub kernels: Vec<KernelSpec<'a>>,
     pub host: Option<HostSpec<'a>>,
+    /// Optional stack-to-stack fabric selection (`[topology]`).
+    pub topology: Option<TopologySpec>,
     pub sweep: Option<SweepSpec>,
     pub output: OutputSpec,
 }
@@ -325,6 +357,7 @@ impl Default for ExperimentSpec<'_> {
             overrides: Vec::new(),
             kernels: Vec::new(),
             host: None,
+            topology: None,
             sweep: None,
             output: OutputSpec::default(),
         }
@@ -437,6 +470,8 @@ impl<'a> ExperimentSpec<'a> {
         let kernel_headers = doc.section_count("kernel");
         let host_headers = doc.section_count("host");
         anyhow::ensure!(host_headers <= 1, "at most one [host] section");
+        let topology_headers = doc.section_count("topology");
+        anyhow::ensure!(topology_headers <= 1, "at most one [topology] section");
         let items = doc.items;
         let mut spec = ExperimentSpec::default();
         // Kernels accumulate per [[kernel]] instance; the workload key is
@@ -444,6 +479,8 @@ impl<'a> ExperimentSpec<'a> {
         let mut kernels: Vec<(Option<&'static str>, KernelSpec<'static>)> = Vec::new();
         let mut host: Option<HostSpec<'static>> = None;
         let mut host_name: Option<&'static str> = None;
+        let mut topology: Option<TopologySpec> = None;
+        let mut topology_kind: Option<crate::net::TopologyKind> = None;
         let mut sweep_key: Option<String> = None;
         let mut sweep_values: Option<Vec<String>> = None;
         for item in &items {
@@ -585,9 +622,55 @@ impl<'a> ExperimentSpec<'a> {
                         _ => bail!("{}: unknown [host] key", ctx()),
                     }
                 }
+                "topology" => {
+                    anyhow::ensure!(
+                        *instance == 0,
+                        "line {lineno}: at most one [topology] section"
+                    );
+                    let t = topology.get_or_insert_with(|| {
+                        TopologySpec::new(crate::net::TopologyKind::FullyConnected)
+                    });
+                    match key.as_str() {
+                        "kind" => {
+                            topology_kind = Some(
+                                crate::net::TopologyKind::parse(value).ok_or_else(
+                                    || {
+                                        anyhow::anyhow!(
+                                            "{}: expected full|line|ring|mesh, got \
+                                             {value}",
+                                            ctx()
+                                        )
+                                    },
+                                )?,
+                            )
+                        }
+                        "mesh_cols" => {
+                            t.mesh_cols = Some(value.parse().with_context(|| {
+                                format!("{}: bad count {value}", ctx())
+                            })?)
+                        }
+                        "hop_latency_ns" => {
+                            t.hop_latency_ns = Some(value.parse().with_context(|| {
+                                format!("{}: bad number {value}", ctx())
+                            })?)
+                        }
+                        "link_bw_gbs" => {
+                            t.link_bw_gbs = Some(value.parse().with_context(|| {
+                                format!("{}: bad number {value}", ctx())
+                            })?)
+                        }
+                        "window_cycles" => {
+                            t.window_cycles = Some(value.parse().with_context(|| {
+                                format!("{}: bad number {value}", ctx())
+                            })?)
+                        }
+                        _ => bail!("{}: unknown [topology] key", ctx()),
+                    }
+                }
                 "" => bail!(
                     "line {lineno}: key {key} outside a section (expected \
-                     [experiment], [output], [system], [sweep], [[kernel]] or [host])"
+                     [experiment], [output], [system], [sweep], [topology], \
+                     [[kernel]] or [host])"
                 ),
                 other => bail!("line {lineno}: unknown section [{other}]"),
             }
@@ -614,6 +697,15 @@ impl<'a> ExperimentSpec<'a> {
                 .ok_or_else(|| anyhow::anyhow!("[host] section missing workload"))?;
             h.workload = WorkloadSel::Named(name);
             spec.host = Some(h);
+        }
+        if topology_headers > 0 && topology.is_none() {
+            // Key-less [topology] table: surface the missing-kind error.
+            topology = Some(TopologySpec::new(crate::net::TopologyKind::FullyConnected));
+        }
+        if let Some(mut t) = topology {
+            t.kind = topology_kind
+                .ok_or_else(|| anyhow::anyhow!("[topology] section missing kind"))?;
+            spec.topology = Some(t);
         }
         spec.sweep = match (sweep_key, sweep_values) {
             (None, None) => None,
@@ -663,6 +755,22 @@ impl<'a> ExperimentSpec<'a> {
             out.push_str("\n[sweep]\n");
             let _ = writeln!(out, "key = {}", sw.key);
             let _ = writeln!(out, "values = \"{}\"", sw.values.join(","));
+        }
+        if let Some(t) = &self.topology {
+            out.push_str("\n[topology]\n");
+            let _ = writeln!(out, "kind = {}", t.kind);
+            if let Some(c) = t.mesh_cols {
+                let _ = writeln!(out, "mesh_cols = {c}");
+            }
+            if let Some(l) = t.hop_latency_ns {
+                let _ = writeln!(out, "hop_latency_ns = {l}");
+            }
+            if let Some(b) = t.link_bw_gbs {
+                let _ = writeln!(out, "link_bw_gbs = {b}");
+            }
+            if let Some(w) = t.window_cycles {
+                let _ = writeln!(out, "window_cycles = {w}");
+            }
         }
         for k in &self.kernels {
             out.push_str("\n[[kernel]]\n");
@@ -721,6 +829,11 @@ num_stacks = 8
 key = remote_bw_gbs
 values = 8, 32
 
+[topology]
+kind = ring
+hop_latency_ns = 20
+window_cycles = 4096
+
 [[kernel]]
 workload = NN
 arrival = 1000
@@ -770,6 +883,12 @@ ddr_fraction = 0.5
         assert_eq!(h.mlp, Some(16));
         assert_eq!(h.passes, Some(2));
         assert_eq!(h.ddr_fraction, Some(0.5));
+        let t = s.topology.as_ref().unwrap();
+        assert_eq!(t.kind, crate::net::TopologyKind::Ring);
+        assert_eq!(t.mesh_cols, None);
+        assert_eq!(t.hop_latency_ns, Some(20.0));
+        assert_eq!(t.link_bw_gbs, None);
+        assert_eq!(t.window_cycles, Some(4096.0));
     }
 
     #[test]
@@ -787,6 +906,14 @@ ddr_fraction = 0.5
             ExperimentSpec::from_toml_str("[host]\nworkload = NN\n[host]\nworkload = KM\n")
                 .is_err()
         );
+        // [topology] needs a valid kind and known keys, at most once.
+        assert!(ExperimentSpec::from_toml_str("[topology]\nkind = torus\n").is_err());
+        assert!(ExperimentSpec::from_toml_str("[topology]\nmesh_cols = 2\n").is_err());
+        assert!(ExperimentSpec::from_toml_str("[topology]\nkind = ring\nnope = 1\n").is_err());
+        assert!(
+            ExperimentSpec::from_toml_str("[topology]\nkind = ring\n[topology]\nkind = line\n")
+                .is_err()
+        );
     }
 
     #[test]
@@ -799,6 +926,7 @@ ddr_fraction = 0.5
         );
         assert!(ExperimentSpec::from_toml_str("[host]\n").is_err());
         assert!(ExperimentSpec::from_toml_str("[host]\n[host]\n").is_err());
+        assert!(ExperimentSpec::from_toml_str("[topology]\n").is_err());
     }
 
     #[test]
@@ -858,6 +986,13 @@ ddr_fraction = 0.5
         spec.kernels[0].home = Some(1);
         spec.kernels[1].placement = Some(MixPlacement::CgpLocal);
         spec.host.as_mut().unwrap().passes = Some(3);
+        spec.topology = Some(TopologySpec {
+            kind: crate::net::TopologyKind::Mesh2d,
+            mesh_cols: Some(2),
+            hop_latency_ns: Some(15.0),
+            link_bw_gbs: Some(48.0),
+            window_cycles: Some(2048.0),
+        });
         let reparsed = ExperimentSpec::from_toml_str(&spec.to_toml_string()).unwrap();
         assert_eq!(reparsed, spec);
     }

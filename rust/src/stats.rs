@@ -56,6 +56,23 @@ impl AccessStats {
     }
 }
 
+/// Counters of one directed fabric link (multi-hop topologies only; the
+/// degenerate fully-connected fabric reports none so its output stays
+/// frozen). `from`/`to` are stack ids.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LinkStat {
+    pub from: usize,
+    pub to: usize,
+    /// Bytes that crossed the link.
+    pub bytes: u64,
+    /// Transfers that found the link busy and queued.
+    pub stalls: u64,
+    /// Bytes of the link's busiest observation window (peak throughput
+    /// = `peak_window_bytes / net_window_cycles`; averages understate
+    /// bursty hotspots).
+    pub peak_window_bytes: u64,
+}
+
 /// The result of simulating one workload under one mechanism.
 #[derive(Clone, Debug, Default)]
 pub struct RunReport {
@@ -114,6 +131,14 @@ pub struct RunReport {
     /// Host share of all bytes the stack DRAMs served (per-source
     /// bandwidth split; the NDP side's share is `1.0 - host_bw_share`).
     pub host_bw_share: f64,
+    /// Fabric topology of the run ("line" / "ring" / "mesh"); empty for
+    /// the degenerate fully-connected fabric, whose reports are frozen.
+    pub topology: String,
+    /// Peak-throughput window length in cycles (0.0 unless `link_stats`
+    /// is populated).
+    pub net_window_cycles: f64,
+    /// Per-directed-link fabric counters (empty under fully-connected).
+    pub link_stats: Vec<LinkStat>,
 }
 
 impl RunReport {

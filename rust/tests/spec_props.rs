@@ -6,6 +6,7 @@
 use coda::config::SystemConfig;
 use coda::coordinator::Mechanism;
 use coda::multiprog::MixPlacement;
+use coda::net::TopologyKind;
 use coda::proptest_lite::{run_prop, PropConfig};
 use coda::report::validate_json;
 use coda::rng::Rng;
@@ -13,7 +14,7 @@ use coda::sched::{FairnessPolicy, Policy};
 use coda::session;
 use coda::spec::{
     Baselines, Dispatch, ExperimentSpec, HostSpec, KernelSpec, OutputFormat, OutputSpec,
-    SweepSpec, WorkloadSel,
+    SweepSpec, TopologySpec, WorkloadSel,
 };
 use std::path::PathBuf;
 
@@ -97,6 +98,32 @@ fn arbitrary_spec(rng: &mut Rng) -> ExperimentSpec<'static> {
             k.home = Some(i as usize);
         }
         spec.kernels.push(k);
+    }
+    if rng.chance(0.4) {
+        let mut t = TopologySpec::new(pick(
+            rng,
+            &[
+                TopologyKind::FullyConnected,
+                TopologyKind::Line,
+                TopologyKind::Ring,
+                TopologyKind::Mesh2d,
+            ],
+        ));
+        if rng.chance(0.5) {
+            t.mesh_cols = Some(rng.below(5) as usize);
+        }
+        if rng.chance(0.5) {
+            // Fractional knobs exercise exact f64 Display/parse round-trips.
+            t.hop_latency_ns =
+                Some(rng.below(100) as f64 + if rng.chance(0.5) { 0.5 } else { 0.0 });
+        }
+        if rng.chance(0.5) {
+            t.link_bw_gbs = Some((1 + rng.below(256)) as f64);
+        }
+        if rng.chance(0.5) {
+            t.window_cycles = Some((1 + rng.below(65536)) as f64);
+        }
+        spec.topology = Some(t);
     }
     if rng.chance(0.4) {
         let mut h = HostSpec::new(WorkloadSel::Named(pick(rng, &NAMES)));
