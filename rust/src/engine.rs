@@ -108,8 +108,12 @@ pub struct BlockRef {
 /// [`next_arrival_after`](Self::next_arrival_after) whenever a slot
 /// would otherwise idle forever — and a source must uphold:
 ///
-/// * **Exactly-once dispatch.** Every block is handed out at most once
-///   across `seed` + `refill`; the engine never returns blocks.
+/// * **Exactly-once dispatch.** Every unit of work is handed out at most
+///   once across `seed` + `refill`; the engine never returns blocks. (A
+///   source may dispatch the same *template* `BlockRef` once per logical
+///   request — the service-mode stream does — because the engine keeps no
+///   per-block state; "exactly once" is about never double-issuing the
+///   same pending unit, not about `BlockRef` values being unique.)
 /// * **Determinism.** Decisions may depend only on the call sequence and
 ///   `now` values, never on ambient state (clocks, randomness), or the
 ///   differential/golden suites break.
@@ -132,11 +136,21 @@ pub trait BlockSource {
     fn refill(&mut self, sm: Sm, retired: Option<BlockRef>, now: f64) -> Option<BlockRef>;
 
     /// Earliest time strictly after `now` at which new work may arrive
-    /// (staggered kernel launches). Idle slots re-arm on this; `None`
-    /// (the default) means work never appears except at refill time.
+    /// (staggered kernel launches, open-loop request streams). Idle slots
+    /// re-arm on this; `None` (the default) means work never appears
+    /// except at refill time.
     fn next_arrival_after(&self, _now: f64) -> Option<f64> {
         None
     }
+
+    /// An arrival event the source announced (via
+    /// [`next_arrival_after`](Self::next_arrival_after)) is firing at
+    /// `now`, before any slot is refilled. Sources that *generate* work
+    /// over time (the service-mode request stream) admit everything due
+    /// by `now` here, so `next_arrival_after` can keep its strictly-future
+    /// contract even when every slot was busy at the promised time.
+    /// Default: no-op (fixed mixes know their arrivals up front).
+    fn on_arrival(&mut self, _now: f64) {}
 }
 
 /// A host-processor request stream co-running with the NDP kernels
@@ -264,6 +278,7 @@ impl EngineRaw {
                 cfg.net_window_cycles
             },
             link_stats: self.link_stats.clone(),
+            service: None,
         }
     }
 }
@@ -494,6 +509,7 @@ impl<'a> Engine<'a> {
             let (app, block, next, sm, slot) = match ev.kind() {
                 EvKind::Arrival => {
                     armed = None;
+                    source.on_arrival(now);
                     // Fill idle slots in the seeding order (slot-major).
                     for slot in 0..slots_per_sm {
                         for smo in &topo.sms {

@@ -149,6 +149,21 @@ fn print_spec_report(r: &Report, json: bool) {
         ));
     }
     println!("{line}");
+    if let Some(s) = &r.run.service {
+        println!(
+            "service: {}/{} requests completed ({} incomplete) \
+             offered_rate={:.6} achieved_rate={:.6}",
+            s.requests_completed,
+            s.requests_offered,
+            s.requests_incomplete,
+            s.offered_rate,
+            s.achieved_rate,
+        );
+        println!(
+            "response cycles: mean={:.0} p50={:.0} p99={:.0} p999={:.0} max={:.0}",
+            s.mean_response, s.p50_response, s.p99_response, s.p999_response, s.max_response,
+        );
+    }
 }
 
 /// `coda run <SPEC.toml>`: load, lower and run a declarative experiment
@@ -282,8 +297,15 @@ fn cmd_plan(args: &Args) -> coda::Result<()> {
 
 fn cmd_debug_pages(args: &Args) -> coda::Result<()> {
     let cfg = load_config(args)?;
-    let bench = args.positional.first().expect("bench");
-    let obj: u16 = args.positional.get(1).expect("obj").parse()?;
+    let bench = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: coda debug-pages <BENCH> <OBJ>"))?;
+    let obj: u16 = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: coda debug-pages <BENCH> <OBJ>"))?
+        .parse()?;
     let wl = suite::build(bench, &cfg)?;
     // Recompute per-page per-stack counts exactly.
     use std::collections::HashMap;
@@ -620,7 +642,12 @@ fn print_help() {
          app_slowdown, weighted_speedup; hostmix runs add host, host_ddr\n\
          (host accesses by destination), host_cycles, host_slowdown,\n\
          ndp_slowdown, host_bytes, host_ddr_bytes, host_port_stalls and\n\
-         host_bw_share. Multi-hop fabrics (--topology line|ring|mesh) add\n\
+         host_bw_share. Service specs (an [arrivals] section: open-loop\n\
+         poisson/bursty/trace request streams, optional per-kernel after\n\
+         edges) add requests_offered/completed/incomplete, offered_rate,\n\
+         achieved_rate and mean/max/p50/p99/p999_response (streaming\n\
+         percentiles over completed requests, fixed memory). Multi-hop\n\
+         fabrics (--topology line|ring|mesh) add\n\
          topology, net_window_cycles and links (per directed link:\n\
          from/to/bytes/stalls/peak_window_bytes/peak_bytes_per_cycle).\n\
          Spec-driven runs add spec (the label) and sources\n\

@@ -145,6 +145,27 @@ impl From<&RunReport> for Json {
                 .push("host_port_stalls", Json::Num(r.host_port_stalls as f64))
                 .push("host_bw_share", Json::Num(r.host_bw_share));
         }
+        // Service-mode extras, only for open-loop [arrivals] runs: fixed
+        // mixes carry no service block, so their JSON stays byte-identical
+        // to the frozen pre-service output.
+        if let Some(s) = &r.service {
+            o.push("requests_offered", Json::Num(s.requests_offered as f64))
+                .push(
+                    "requests_completed",
+                    Json::Num(s.requests_completed as f64),
+                )
+                .push(
+                    "requests_incomplete",
+                    Json::Num(s.requests_incomplete as f64),
+                )
+                .push("offered_rate", Json::Num(s.offered_rate))
+                .push("achieved_rate", Json::Num(s.achieved_rate))
+                .push("mean_response", Json::Num(s.mean_response))
+                .push("max_response", Json::Num(s.max_response))
+                .push("p50_response", Json::Num(s.p50_response))
+                .push("p99_response", Json::Num(s.p99_response))
+                .push("p999_response", Json::Num(s.p999_response));
+        }
         // Fabric extras, only for multi-hop topologies: the degenerate
         // fully-connected fabric reports no link stats, so its JSON stays
         // byte-identical to the frozen pre-fabric output.
@@ -475,6 +496,40 @@ mod tests {
         assert!(s.contains(r#""ndp_slowdown":1.5"#));
         assert!(s.contains(r#""host_port_stalls":7"#));
         assert!(s.contains(r#""host_bw_share":0.4"#));
+    }
+
+    #[test]
+    fn service_fields_render_only_for_open_loop_runs() {
+        let plain = Json::from(&RunReport::default()).render();
+        assert!(!plain.contains("requests_offered"));
+        assert!(!plain.contains("p99_response"));
+        let r = RunReport {
+            service: Some(crate::stats::ServiceStats {
+                requests_offered: 1000,
+                requests_completed: 990,
+                requests_incomplete: 10,
+                offered_rate: 0.5,
+                achieved_rate: 0.495,
+                mean_response: 80.0,
+                max_response: 400.0,
+                p50_response: 64.0,
+                p99_response: 256.0,
+                p999_response: 384.0,
+            }),
+            ..Default::default()
+        };
+        let s = Json::from(&r).render();
+        assert!(s.contains(r#""requests_offered":1000"#));
+        assert!(s.contains(r#""requests_completed":990"#));
+        assert!(s.contains(r#""requests_incomplete":10"#));
+        assert!(s.contains(r#""offered_rate":0.5"#));
+        assert!(s.contains(r#""achieved_rate":0.495"#));
+        assert!(s.contains(r#""mean_response":80"#));
+        assert!(s.contains(r#""max_response":400"#));
+        assert!(s.contains(r#""p50_response":64"#));
+        assert!(s.contains(r#""p99_response":256"#));
+        assert!(s.contains(r#""p999_response":384"#));
+        validate_json(&s).unwrap();
     }
 
     #[test]

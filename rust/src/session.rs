@@ -36,10 +36,11 @@ use crate::multiprog::{home_of, MixPlacement};
 use crate::par;
 use crate::placement::{self, PlacementPlan};
 use crate::report::Json;
+use crate::rng::Rng;
 use crate::sched::{affinity_stack, FairnessPolicy, Policy};
 use crate::sim::{map_objects, KernelRun};
-use crate::spec::{Baselines, Dispatch, ExperimentSpec, WorkloadSel};
-use crate::stats::{self, RunReport};
+use crate::spec::{ArrivalKind, ArrivalSpec, Baselines, Dispatch, ExperimentSpec, WorkloadSel};
+use crate::stats::{self, QuantileSketch, RunReport, ServiceStats};
 use crate::trace::KernelTrace;
 use crate::vm::VirtualMemory;
 use crate::workloads::{suite, BuiltWorkload};
@@ -435,6 +436,348 @@ impl BlockSource for SharedSource {
     }
 }
 
+/// The deterministic interarrival generator behind an `[arrivals]`
+/// stream. All randomness comes from [`crate::rng`], seeded from the
+/// spec, so service runs replay bit-identically.
+enum ArrivalGen {
+    Poisson {
+        rng: Rng,
+        rate: f64,
+    },
+    /// `burst` back-to-back requests per arrival event; exponential gaps
+    /// between events scaled so the long-run rate stays `rate`.
+    Bursty {
+        rng: Rng,
+        rate: f64,
+        burst: u64,
+        left_in_burst: u64,
+    },
+    Trace {
+        gaps: Vec<f64>,
+        i: usize,
+    },
+}
+
+impl ArrivalGen {
+    fn new(a: &ArrivalSpec, default_seed: u64) -> Self {
+        let rng = Rng::new(a.seed.unwrap_or(default_seed));
+        match a.kind {
+            ArrivalKind::Poisson => ArrivalGen::Poisson {
+                rng,
+                rate: a.rate.unwrap_or(0.0),
+            },
+            ArrivalKind::Bursty => ArrivalGen::Bursty {
+                rng,
+                rate: a.rate.unwrap_or(0.0),
+                burst: a.burst.unwrap_or(4),
+                left_in_burst: 0,
+            },
+            ArrivalKind::Trace => ArrivalGen::Trace {
+                gaps: a.interarrivals.clone(),
+                i: 0,
+            },
+        }
+    }
+
+    /// Gap to the next request. `1 - f64()` lies in (0, 1], so the log is
+    /// finite and the gap non-negative.
+    fn next_gap(&mut self) -> f64 {
+        match self {
+            ArrivalGen::Poisson { rng, rate } => -(1.0 - rng.f64()).ln() / *rate,
+            ArrivalGen::Bursty {
+                rng,
+                rate,
+                burst,
+                left_in_burst,
+            } => {
+                if *left_in_burst > 0 {
+                    *left_in_burst -= 1;
+                    0.0
+                } else {
+                    *left_in_burst = *burst - 1;
+                    -(1.0 - rng.f64()).ln() * *burst as f64 / *rate
+                }
+            }
+            ArrivalGen::Trace { gaps, i } => {
+                let g = gaps[*i];
+                *i = (*i + 1) % gaps.len();
+                g
+            }
+        }
+    }
+}
+
+/// Per-stage progress of one in-flight request. Counters run *down*:
+/// `to_dispatch` blocks still to hand to the engine, `to_retire`
+/// retirements still to attribute, `waiting` unmet `after` edges.
+struct StageState {
+    to_dispatch: u32,
+    to_retire: u32,
+    waiting: u32,
+}
+
+/// One in-flight request: arrival stamp plus its stage DAG state.
+struct ReqState {
+    arrival: f64,
+    stages: Vec<StageState>,
+    /// Stages not yet complete; 0 = the request is done.
+    live: u32,
+}
+
+/// [`BlockSource`] for service mode: an open-loop request stream lowered
+/// onto the engine's arrival seam. Each admitted request instantiates
+/// every kernel once as a *stage*; stages wired by `after` edges start
+/// when their dependencies complete (arrival-on-completion), roots start
+/// at the request's arrival. Blocks re-dispatch the kernel's template
+/// trace per request (the engine keeps no per-block state, so the
+/// exactly-once contract holds per pending unit).
+///
+/// Deliberate approximations, chosen to keep the source deterministic and
+/// fixed-memory:
+///
+/// * **Global FCFS.** `policy`/`fairness` do not apply: any SM runs the
+///   oldest ready stage's next block (homes still steer object
+///   placement). Honoring affinity could strand completion-created work
+///   on stacks with no armed arrival to wake them.
+/// * **Oldest-first retirement attribution.** The engine does not say
+///   which request's block retired, so retirements credit the oldest
+///   outstanding dispatch of that kernel. Totals are exact; per-request
+///   latency is approximate only when one kernel's blocks from different
+///   requests overlap in flight.
+/// * **Completion wake-up.** A stage readied by a completion is picked up
+///   by the retiring slot immediately; *other* idle slots join at the
+///   next generator arrival.
+///
+/// Memory is bounded by the max in-flight request count (slab slots are
+/// recycled) plus the fixed-size [`QuantileSketch`] — an arbitrarily long
+/// stream never accumulates per-request state.
+struct ServiceSource {
+    blocks_per_kernel: Vec<u32>,
+    /// `dependents[k]` = stages with an `after` edge from `k`.
+    dependents: Vec<Vec<u32>>,
+    /// Number of `after` edges into each stage.
+    dep_count: Vec<u32>,
+    gen: ArrivalGen,
+    /// The generator's pending arrival time (`None` = stream exhausted).
+    next_arrival: Option<f64>,
+    /// Hard dispatch stop: past this cycle nothing new is admitted or
+    /// handed out; in-flight windows drain and the rest counts
+    /// incomplete.
+    duration: Option<f64>,
+    max_requests: Option<u64>,
+    offered: u64,
+    completed: u64,
+    /// Request slab + free list: slots recycle, so memory tracks the max
+    /// in-flight count, not the stream length.
+    reqs: Vec<ReqState>,
+    free: Vec<usize>,
+    /// Global FCFS queue of (request, stage) with blocks left to
+    /// dispatch; the front entry stays until its blocks are exhausted.
+    ready: VecDeque<(u32, u32)>,
+    /// Per-kernel FIFO of request ids with outstanding dispatches, for
+    /// retirement attribution.
+    dispatched: Vec<VecDeque<u32>>,
+    /// Streaming response-time percentiles (fixed memory).
+    sketch: QuantileSketch,
+    /// Worklist scratch for completion cascades (kept to avoid a per-
+    /// completion allocation).
+    scratch: Vec<u32>,
+}
+
+impl ServiceSource {
+    fn new(
+        blocks_per_kernel: Vec<u32>,
+        after: &[Vec<usize>],
+        a: &ArrivalSpec,
+        default_seed: u64,
+    ) -> Self {
+        let n = blocks_per_kernel.len();
+        let mut dependents = vec![Vec::new(); n];
+        let mut dep_count = vec![0u32; n];
+        for (i, deps) in after.iter().enumerate() {
+            for &d in deps {
+                dependents[d].push(i as u32);
+                dep_count[i] += 1;
+            }
+        }
+        let mut gen = ArrivalGen::new(a, default_seed);
+        let first = gen.next_gap();
+        Self {
+            blocks_per_kernel,
+            dependents,
+            dep_count,
+            gen,
+            next_arrival: Some(first),
+            duration: a.duration,
+            max_requests: a.requests,
+            offered: 0,
+            completed: 0,
+            reqs: Vec::new(),
+            free: Vec::new(),
+            ready: VecDeque::new(),
+            dispatched: vec![VecDeque::new(); n],
+            sketch: QuantileSketch::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Admit every generated arrival due by `now`, so
+    /// [`BlockSource::next_arrival_after`] only ever reports strictly-
+    /// future generator times.
+    fn advance(&mut self, now: f64) {
+        while let Some(t) = self.next_arrival {
+            if t > now {
+                break;
+            }
+            if self.duration.is_some_and(|d| t > d) {
+                self.next_arrival = None;
+                break;
+            }
+            self.admit(t);
+            if self.max_requests.is_some_and(|m| self.offered >= m) {
+                self.next_arrival = None;
+            } else {
+                self.next_arrival = Some(t + self.gen.next_gap());
+            }
+        }
+    }
+
+    fn admit(&mut self, t: f64) {
+        self.offered += 1;
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                self.reqs.push(ReqState {
+                    arrival: 0.0,
+                    stages: Vec::new(),
+                    live: 0,
+                });
+                self.reqs.len() - 1
+            }
+        };
+        let n = self.blocks_per_kernel.len();
+        let req = &mut self.reqs[id];
+        req.arrival = t;
+        req.live = n as u32;
+        req.stages.clear();
+        for k in 0..n {
+            req.stages.push(StageState {
+                to_dispatch: self.blocks_per_kernel[k],
+                to_retire: self.blocks_per_kernel[k],
+                waiting: self.dep_count[k],
+            });
+        }
+        for k in 0..n {
+            if self.dep_count[k] == 0 {
+                self.stage_ready(id, k, t);
+            }
+        }
+    }
+
+    /// A stage's dependencies are met: queue its blocks (or, for an
+    /// empty-trace stage, complete it on the spot and cascade).
+    fn stage_ready(&mut self, req: usize, k: usize, now: f64) {
+        if self.reqs[req].stages[k].to_retire == 0 {
+            self.stage_complete(req, k, now);
+        } else {
+            self.ready.push_back((req as u32, k as u32));
+        }
+    }
+
+    /// Stage `first` of `req` completed at `now`: release dependents, and
+    /// when the last stage finishes, record the response time and recycle
+    /// the slab slot. Iterative worklist — a chain of empty stages must
+    /// not recurse.
+    fn stage_complete(&mut self, req: usize, first: usize, now: f64) {
+        debug_assert!(self.scratch.is_empty());
+        self.scratch.push(first as u32);
+        while let Some(k) = self.scratch.pop() {
+            let k = k as usize;
+            self.reqs[req].live -= 1;
+            // Take/restore the edge list so the loop can mutate the
+            // disjoint request/queue state without aliasing it.
+            let deps = std::mem::take(&mut self.dependents[k]);
+            for &d in &deps {
+                let st = &mut self.reqs[req].stages[d as usize];
+                st.waiting -= 1;
+                if st.waiting == 0 {
+                    if st.to_retire == 0 {
+                        self.scratch.push(d);
+                    } else {
+                        self.ready.push_back((req as u32, d));
+                    }
+                }
+            }
+            self.dependents[k] = deps;
+        }
+        if self.reqs[req].live == 0 {
+            self.completed += 1;
+            self.sketch.record(now - self.reqs[req].arrival);
+            self.free.push(req);
+        }
+    }
+
+    /// Next block of the oldest ready stage (global FCFS).
+    fn pop_ready(&mut self) -> Option<BlockRef> {
+        let &(req, k) = self.ready.front()?;
+        let total = self.blocks_per_kernel[k as usize];
+        let st = &mut self.reqs[req as usize].stages[k as usize];
+        let block = total - st.to_dispatch;
+        st.to_dispatch -= 1;
+        if st.to_dispatch == 0 {
+            self.ready.pop_front();
+        }
+        self.dispatched[k as usize].push_back(req);
+        Some(BlockRef { app: k, block })
+    }
+}
+
+impl BlockSource for ServiceSource {
+    fn seed(&mut self, topo: &Topology, place: &mut dyn FnMut(usize, usize, BlockRef)) {
+        // Admit anything due at t=0 (a trace gap of 0, a burst head),
+        // then fill slot-major like the shared mix.
+        self.advance(0.0);
+        'fill: for slot in 0..topo.blocks_per_sm {
+            for sm in &topo.sms {
+                match self.pop_ready() {
+                    Some(br) => place(sm.id, slot, br),
+                    None => break 'fill,
+                }
+            }
+        }
+    }
+
+    fn refill(&mut self, _sm: Sm, retired: Option<BlockRef>, now: f64) -> Option<BlockRef> {
+        if let Some(br) = retired {
+            let k = br.app as usize;
+            let req = self.dispatched[k]
+                .pop_front()
+                .expect("retirement without a matching dispatch")
+                as usize;
+            let st = &mut self.reqs[req].stages[k];
+            st.to_retire -= 1;
+            // All blocks dispatched before any retires within a request,
+            // so to_retire reaching 0 implies to_dispatch already did.
+            if st.to_retire == 0 {
+                self.stage_complete(req, k, now);
+            }
+        }
+        self.advance(now);
+        if self.duration.is_some_and(|d| now > d) {
+            return None;
+        }
+        self.pop_ready()
+    }
+
+    fn next_arrival_after(&self, now: f64) -> Option<f64> {
+        self.next_arrival.filter(|&t| t > now)
+    }
+
+    fn on_arrival(&mut self, now: f64) {
+        self.advance(now);
+    }
+}
+
 /// One engine execution of a shared-dispatch layout: the NDP kernels in
 /// `launches` (optionally restricted to `only_app`) co-running with an
 /// optional host stream. Every shared/pinned baseline and co-run goes
@@ -535,7 +878,8 @@ impl<'a> Session<'a> {
 
         let dispatch = match spec.dispatch {
             Dispatch::Auto => {
-                if spec.host.is_none()
+                if spec.arrivals.is_none()
+                    && spec.host.is_none()
                     && spec.kernels.len() == 1
                     && spec.kernels[0].mechanism.is_some()
                 {
@@ -552,6 +896,9 @@ impl<'a> Session<'a> {
         // silently dropped.
         let baselines = match (spec.output.baselines, dispatch) {
             (Baselines::Auto, Dispatch::Kernel | Dispatch::Pinned) => Baselines::None,
+            // Run-alone comparisons are meaningless against an open-loop
+            // stream, so service mode never runs them.
+            (Baselines::Auto, _) if spec.arrivals.is_some() => Baselines::None,
             (Baselines::Auto, _) => {
                 if spec.host.is_some() {
                     Baselines::HostSplit
@@ -579,6 +926,13 @@ impl<'a> Session<'a> {
                     h < cfg.num_stacks,
                     "kernel {i}: home stack {h} out of range (num_stacks = {})",
                     cfg.num_stacks
+                );
+            }
+            if spec.arrivals.is_none() {
+                ensure!(
+                    k.after.is_empty(),
+                    "kernel {i}: after edges only apply under an [arrivals] \
+                     service stream"
                 );
             }
         }
@@ -664,6 +1018,92 @@ impl<'a> Session<'a> {
             }
             Dispatch::Auto => unreachable!("dispatch was resolved above"),
         }
+        if let Some(a) = &spec.arrivals {
+            ensure!(
+                dispatch == Dispatch::Shared,
+                "[arrivals] service mode requires shared dispatch, not {dispatch}"
+            );
+            ensure!(
+                !spec.kernels.is_empty(),
+                "[arrivals] needs at least one [[kernel]] stage to instantiate \
+                 per request"
+            );
+            ensure!(
+                baselines == Baselines::None,
+                "service mode runs no run-alone baselines; remove the explicit \
+                 baselines = {baselines}"
+            );
+            for (i, k) in spec.kernels.iter().enumerate() {
+                ensure!(
+                    k.arrival == 0.0,
+                    "kernel {i}: launch offsets (arrival = {}) do not mix with \
+                     an open-loop stream; use after edges for staging",
+                    k.arrival
+                );
+                for &d in &k.after {
+                    ensure!(
+                        d < i,
+                        "kernel {i}: after edge {d} must point at an earlier \
+                         kernel (stage DAGs are ordered)"
+                    );
+                }
+            }
+            match a.kind {
+                ArrivalKind::Poisson | ArrivalKind::Bursty => {
+                    let rate = a.rate.ok_or_else(|| {
+                        anyhow::anyhow!("[arrivals] kind = {} needs a rate", a.kind)
+                    })?;
+                    ensure!(
+                        rate.is_finite() && rate > 0.0,
+                        "[arrivals] rate must be a positive real, got {rate}"
+                    );
+                    ensure!(
+                        a.interarrivals.is_empty(),
+                        "[arrivals] interarrivals only apply to kind = trace"
+                    );
+                }
+                ArrivalKind::Trace => {
+                    ensure!(
+                        !a.interarrivals.is_empty(),
+                        "[arrivals] kind = trace needs a non-empty interarrivals \
+                         list"
+                    );
+                    for g in &a.interarrivals {
+                        ensure!(
+                            g.is_finite() && *g >= 0.0,
+                            "[arrivals] interarrival gaps must be non-negative \
+                             reals, got {g}"
+                        );
+                    }
+                    ensure!(
+                        a.rate.is_none(),
+                        "[arrivals] rate does not apply to kind = trace"
+                    );
+                }
+            }
+            if a.kind != ArrivalKind::Bursty {
+                ensure!(
+                    a.burst.is_none(),
+                    "[arrivals] burst only applies to kind = bursty"
+                );
+            }
+            if let Some(b) = a.burst {
+                ensure!(b >= 1, "[arrivals] burst must be at least 1");
+            }
+            ensure!(
+                a.requests.is_some() || a.duration.is_some(),
+                "[arrivals] needs a stop condition: requests and/or duration"
+            );
+            if let Some(d) = a.duration {
+                ensure!(
+                    d.is_finite() && d > 0.0,
+                    "[arrivals] duration must be a positive real, got {d}"
+                );
+            }
+            if let Some(n) = a.requests {
+                ensure!(n >= 1, "[arrivals] requests must be at least 1");
+            }
+        }
         Ok(Session {
             spec,
             cfg,
@@ -687,6 +1127,7 @@ impl<'a> Session<'a> {
         match self.dispatch {
             Dispatch::Kernel => self.run_kernel(),
             Dispatch::Pinned => self.run_pinned(),
+            Dispatch::Shared if self.spec.arrivals.is_some() => self.run_service(),
             Dispatch::Shared => self.run_shared(),
             Dispatch::Auto => unreachable!("dispatch was resolved in Session::new"),
         }
@@ -923,7 +1364,12 @@ impl<'a> Session<'a> {
             &mut vm,
         );
         let n = apps.len();
-        let resp = stats::response_times(&shared.app_end, &arrivals);
+        // The dense zero-filled form is deliberate here: report rows have
+        // a frozen shape (one entry per app, never-ran = 0.0) and the
+        // slowdown helpers pin degenerate zeros to 1.0. Statistics over a
+        // *stream* must use `ResponseTimes::completed()` instead — that
+        // is what service mode's percentile sketch consumes.
+        let resp = stats::response_times(&shared.app_end, &arrivals).zero_filled();
 
         // Labels. The host co-runner is only named when it actually
         // streamed (zero intensity must not claim a co-run it never
@@ -1030,7 +1476,8 @@ impl<'a> Session<'a> {
                 let (ndp_sd, host_sd, app_sd, weighted) = match (&ndp_alone, &host_alone)
                 {
                     (Some(na), Some(ha)) => {
-                        let resp_alone = stats::response_times(&na.app_end, &arrivals);
+                        let resp_alone =
+                            stats::response_times(&na.app_end, &arrivals).zero_filled();
                         let ndp_sd = if na.end_time > 0.0 {
                             shared.end_time / na.end_time
                         } else {
@@ -1092,6 +1539,138 @@ impl<'a> Session<'a> {
                 cycles: report.host_cycles,
                 slowdown: (host_active && self.baselines != Baselines::None)
                     .then_some(report.host_slowdown),
+            });
+        }
+        Ok(Report {
+            spec_name: self.spec.name.clone(),
+            sources,
+            run: report,
+        })
+    }
+
+    /// Service mode: the spec's kernels as an open-loop request stream
+    /// ([`ServiceSource`]) instead of a fixed mix, optionally co-running
+    /// the host stream. No run-alone baselines (an open-loop stream has
+    /// no meaningful "alone" comparison); the report instead carries
+    /// [`ServiceStats`] — throughput, offered vs achieved rate,
+    /// incomplete-request count, and streaming response percentiles.
+    fn run_service(&self) -> crate::Result<Report> {
+        let cfg = &self.cfg;
+        let a = self
+            .spec
+            .arrivals
+            .as_ref()
+            .expect("run_service requires [arrivals]");
+        let wls: Vec<Wl<'_>> = self
+            .spec
+            .kernels
+            .iter()
+            .map(|k| Wl::resolve(&k.workload, cfg))
+            .collect::<crate::Result<_>>()?;
+        let apps: Vec<&BuiltWorkload> =
+            wls.iter().map(|w| w.built()).collect::<crate::Result<_>>()?;
+        let homes: Vec<usize> = (0..apps.len()).map(|i| self.home_stack(i)).collect();
+        let host_wl = match &self.spec.host {
+            Some(h) => Some(Wl::resolve(&h.workload, cfg)?),
+            None => None,
+        };
+        let host_active = host_wl.is_some() && cfg.host_mlp > 0 && cfg.host_passes > 0;
+
+        // Identical layout discipline to run_shared: kernel objects first
+        // (per-kernel placement/home), host objects after, fine-grain.
+        let (mut vm, app_bases) = self.map_kernels(&apps)?;
+        let host_bases: Vec<u64> = self.map_host(&mut vm, host_wl.as_ref())?;
+        let host_stream = if host_active {
+            host_wl.as_ref().map(|h| HostStream {
+                trace: h.trace(),
+                obj_base: &host_bases,
+            })
+        } else {
+            None
+        };
+        let app_ctxs: Vec<AppCtx<'_>> = apps
+            .iter()
+            .zip(&app_bases)
+            .map(|(w, b)| AppCtx {
+                trace: &w.trace,
+                obj_base: b.as_slice(),
+            })
+            .collect();
+        let after: Vec<Vec<usize>> =
+            self.spec.kernels.iter().map(|k| k.after.clone()).collect();
+        let mut source = ServiceSource::new(
+            apps.iter().map(|w| w.trace.blocks.len() as u32).collect(),
+            &after,
+            a,
+            cfg.seed,
+        );
+        let raw = Engine {
+            cfg,
+            apps: app_ctxs,
+            vm: &mut vm,
+            opts: EngineOptions {
+                l2_filter: false,
+                migrate_on_first_touch: false,
+            },
+            host: host_stream,
+        }
+        .run(&mut source);
+
+        let ndp_names = apps.iter().map(|w| w.name).collect::<Vec<_>>().join("+");
+        let workload = match if host_active { host_wl.as_ref() } else { None } {
+            Some(h) => format!("{ndp_names}|host:{}", h.name()),
+            None => ndp_names,
+        };
+        let mut report = raw.to_report(cfg, workload);
+        report.mechanism = format!("service:{}+{:?}", a.kind, self.spec.placement);
+        let incomplete = source.offered - source.completed;
+        // Offered rate over the declared horizon (the duration cutoff
+        // when one was set, else the simulated makespan); achieved rate
+        // over the time the run actually took.
+        let horizon = a.duration.unwrap_or(report.cycles);
+        report.service = Some(ServiceStats {
+            requests_offered: source.offered,
+            requests_completed: source.completed,
+            requests_incomplete: incomplete,
+            offered_rate: if horizon > 0.0 {
+                source.offered as f64 / horizon
+            } else {
+                0.0
+            },
+            achieved_rate: if report.cycles > 0.0 {
+                source.completed as f64 / report.cycles
+            } else {
+                0.0
+            },
+            mean_response: source.sketch.mean(),
+            max_response: source.sketch.max(),
+            p50_response: source.sketch.quantile(0.50),
+            p99_response: source.sketch.quantile(0.99),
+            p999_response: source.sketch.quantile(0.999),
+        });
+
+        // One row per kernel *template* (not per request): its cycles are
+        // the completion time of its last window across all requests.
+        let mut sources: Vec<SourceReport> = apps
+            .iter()
+            .enumerate()
+            .map(|(i, w)| SourceReport {
+                kind: SourceKind::Ndp,
+                workload: w.name.to_string(),
+                home: Some(homes[i]),
+                arrival: 0.0,
+                cycles: raw.app_end[i],
+                slowdown: None,
+            })
+            .collect();
+        if let Some(h) = &host_wl {
+            sources.push(SourceReport {
+                kind: SourceKind::Host,
+                workload: h.name().to_string(),
+                home: None,
+                arrival: 0.0,
+                cycles: report.host_cycles,
+                slowdown: None,
             });
         }
         Ok(Report {
@@ -1501,5 +2080,167 @@ mod tests {
             values: vec!["fast".into()],
         });
         assert!(run_spec(&cfg(), &bad).is_err());
+    }
+
+    /// A one-kernel KM service spec with the given arrivals section.
+    fn service_spec(a: ArrivalSpec) -> ExperimentSpec<'static> {
+        let mut spec = ExperimentSpec::shared(
+            vec![(WorkloadSel::Named("KM"), 0.0)],
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        spec.arrivals = Some(a);
+        spec
+    }
+
+    fn poisson(rate: f64, requests: u64) -> ArrivalSpec {
+        ArrivalSpec {
+            kind: ArrivalKind::Poisson,
+            rate: Some(rate),
+            requests: Some(requests),
+            ..ArrivalSpec::default()
+        }
+    }
+
+    #[test]
+    fn service_spec_validation_rejects_nonsense() {
+        // [arrivals] only lowers onto shared dispatch.
+        let mut pinned =
+            ExperimentSpec::pinned(vec![WorkloadSel::Named("KM")], MixPlacement::CgpLocal);
+        pinned.arrivals = Some(poisson(0.001, 2));
+        assert!(Session::new(cfg(), pinned).is_err());
+        // A stream needs at least one kernel stage.
+        let mut hostless = ExperimentSpec::hostmix(
+            vec![],
+            Some(WorkloadSel::Named("KM")),
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        hostless.arrivals = Some(poisson(0.001, 2));
+        assert!(Session::new(cfg(), hostless).is_err());
+        // Explicit run-alone baselines are meaningless against a stream.
+        let mut solo = service_spec(poisson(0.001, 2));
+        solo.output.baselines = Baselines::Solo;
+        assert!(Session::new(cfg(), solo).is_err());
+        // Launch offsets do not mix with generated arrivals.
+        let mut late = service_spec(poisson(0.001, 2));
+        late.kernels[0].arrival = 5.0;
+        assert!(Session::new(cfg(), late).is_err());
+        // After edges must point at an earlier kernel...
+        let mut cyc = service_spec(poisson(0.001, 2));
+        cyc.kernels[0].after = vec![0];
+        assert!(Session::new(cfg(), cyc).is_err());
+        // ...and only exist under a service stream.
+        let mut stray = ExperimentSpec::shared(
+            vec![
+                (WorkloadSel::Named("KM"), 0.0),
+                (WorkloadSel::Named("NN"), 0.0),
+            ],
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        stray.kernels[1].after = vec![0];
+        assert!(Session::new(cfg(), stray).is_err());
+        // Poisson/bursty parameter errors.
+        let mut no_rate = service_spec(poisson(0.001, 2));
+        no_rate.arrivals.as_mut().unwrap().rate = None;
+        assert!(Session::new(cfg(), no_rate).is_err());
+        assert!(Session::new(cfg(), service_spec(poisson(0.0, 2))).is_err());
+        let mut burst_on_poisson = service_spec(poisson(0.001, 2));
+        burst_on_poisson.arrivals.as_mut().unwrap().burst = Some(4);
+        assert!(Session::new(cfg(), burst_on_poisson).is_err());
+        // Trace parameter errors.
+        let empty_trace = service_spec(ArrivalSpec {
+            kind: ArrivalKind::Trace,
+            requests: Some(2),
+            ..ArrivalSpec::default()
+        });
+        assert!(Session::new(cfg(), empty_trace).is_err());
+        // Some stop condition is mandatory (else the stream never ends).
+        let mut endless = service_spec(poisson(0.001, 2));
+        endless.arrivals.as_mut().unwrap().requests = None;
+        assert!(Session::new(cfg(), endless).is_err());
+    }
+
+    #[test]
+    fn service_run_reports_stream_stats_deterministically() {
+        let run = || {
+            Session::new(cfg(), service_spec(poisson(1e-5, 3)))
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let r = run();
+        let svc = r.run.service.as_ref().expect("service stats");
+        assert_eq!(svc.requests_offered, 3);
+        assert_eq!(
+            svc.requests_offered,
+            svc.requests_completed + svc.requests_incomplete
+        );
+        // No duration cutoff: every admitted request drains to completion.
+        assert_eq!(svc.requests_incomplete, 0);
+        assert!(svc.achieved_rate > 0.0);
+        assert!(svc.mean_response > 0.0);
+        assert!(svc.p50_response <= svc.p99_response);
+        assert!(svc.p99_response <= svc.p999_response);
+        assert!(svc.p999_response <= svc.max_response);
+        assert!(r.run.mechanism.starts_with("service:poisson"));
+        // Stream runs carry no per-app baseline columns.
+        assert!(r.run.app_slowdown.is_empty());
+        assert!(r.sources.iter().all(|s| s.slowdown.is_none()));
+        // Bit-identical replay: same spec, same seed, same report.
+        let r2 = run();
+        assert_eq!(r.run.cycles.to_bits(), r2.run.cycles.to_bits());
+        assert_eq!(r.run.service, r2.run.service);
+    }
+
+    #[test]
+    fn service_duration_cutoff_counts_incomplete_requests() {
+        // Three back-to-back arrivals at t=0, a cutoff far before any
+        // KM block can retire: nothing completes, everything counts.
+        let spec = service_spec(ArrivalSpec {
+            kind: ArrivalKind::Trace,
+            interarrivals: vec![0.0],
+            requests: Some(3),
+            duration: Some(1.0),
+            ..ArrivalSpec::default()
+        });
+        let r = Session::new(cfg(), spec).unwrap().run().unwrap();
+        let svc = r.run.service.as_ref().expect("service stats");
+        assert_eq!(svc.requests_offered, 3);
+        assert_eq!(svc.requests_completed, 0);
+        assert_eq!(svc.requests_incomplete, 3);
+        // Offered rate is measured over the declared horizon.
+        assert_eq!(svc.offered_rate, 3.0);
+    }
+
+    #[test]
+    fn service_after_edges_stage_requests_as_dags() {
+        let mut spec = ExperimentSpec::shared(
+            vec![
+                (WorkloadSel::Named("KM"), 0.0),
+                (WorkloadSel::Named("KM"), 0.0),
+            ],
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        spec.kernels[1].after = vec![0];
+        spec.arrivals = Some(poisson(1e-5, 2));
+        let r = Session::new(cfg(), spec).unwrap().run().unwrap();
+        let svc = r.run.service.as_ref().expect("service stats");
+        assert_eq!(svc.requests_completed, 2);
+        // The chained spec serializes its two stages, so each response
+        // is strictly longer than the single-stage request's.
+        let flat = Session::new(cfg(), service_spec(poisson(1e-5, 2)))
+            .unwrap()
+            .run()
+            .unwrap();
+        let flat_svc = flat.run.service.as_ref().unwrap();
+        assert!(svc.mean_response > flat_svc.mean_response);
+        assert_eq!(r.sources.len(), 2);
     }
 }

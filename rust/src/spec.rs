@@ -39,12 +39,23 @@
 //! key = remote_bw_gbs
 //! values = 8,32,128
 //!
+//! [arrivals]               # optional: open-loop service mode (shared dispatch)
+//! kind = poisson           # poisson | bursty | trace
+//! rate = 0.001             # requests per cycle (poisson/bursty)
+//! requests = 10000         # stop offering after this many requests, and/or:
+//! duration = 5000000       # hard stop: nothing dispatches past this cycle
+//! # seed = 7               # arrival RNG seed (default: system seed)
+//! # burst = 4              # bursty: requests per burst
+//! # interarrivals = "100,250.5"   # trace: explicit gaps in cycles, cycled
+//!
 //! [[kernel]]               # one table per NDP kernel
 //! workload = NN            # benchmark name (see `coda help`)
 //! arrival = 0              # launch time in SM cycles
 //! # placement = fgp        # per-kernel override of experiment.placement
 //! # mechanism = coda       # kernel dispatch only: analysis-driven placement
 //! # home = 2               # home-stack override (default: index % num_stacks)
+//! # after = "0"            # service mode: stage DAG edges — this kernel
+//! #                        # starts when the listed kernels complete
 //!
 //! [host]                   # optional concurrent host stream
 //! workload = KM
@@ -135,6 +146,11 @@ pub struct KernelSpec<'a> {
     pub mechanism: Option<Mechanism>,
     /// Home-stack override (default: kernel index % num_stacks).
     pub home: Option<usize>,
+    /// Service mode only: indices of kernels this stage waits on within
+    /// each request (a per-request DAG; edges must point at earlier
+    /// kernels, so the list is acyclic by construction). Empty = a root
+    /// stage that starts when the request arrives.
+    pub after: Vec<usize>,
 }
 
 impl<'a> KernelSpec<'a> {
@@ -145,6 +161,7 @@ impl<'a> KernelSpec<'a> {
             placement: None,
             mechanism: None,
             home: None,
+            after: Vec::new(),
         }
     }
 }
@@ -200,6 +217,63 @@ impl TopologySpec {
             window_cycles: None,
         }
     }
+}
+
+/// The interarrival process of an `[arrivals]` request stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Exponential gaps at `rate` requests per cycle.
+    #[default]
+    Poisson,
+    /// `burst` back-to-back requests per arrival event; events spaced so
+    /// the long-run rate is still `rate`.
+    Bursty,
+    /// Explicit gap list (`interarrivals`), cycled when exhausted.
+    Trace,
+}
+
+impl ArrivalKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim() {
+            "poisson" => Some(Self::Poisson),
+            "bursty" => Some(Self::Bursty),
+            "trace" => Some(Self::Trace),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ArrivalKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Poisson => "poisson",
+            Self::Bursty => "bursty",
+            Self::Trace => "trace",
+        })
+    }
+}
+
+/// The optional `[arrivals]` section: run the spec's kernels as an
+/// open-loop request stream (service mode) instead of a fixed mix. Each
+/// request instantiates every kernel once, wired by the kernels' `after`
+/// edges into a per-request DAG. [`crate::session::Session`] lowers this
+/// onto the engine's arrival seam; see the module docs for the schema.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ArrivalSpec {
+    pub kind: ArrivalKind,
+    /// Target offered rate in requests per cycle (poisson/bursty).
+    pub rate: Option<f64>,
+    /// Stop offering after this many requests.
+    pub requests: Option<u64>,
+    /// Hard stop in cycles: past it nothing new dispatches and whatever
+    /// is still in flight counts as incomplete.
+    pub duration: Option<f64>,
+    /// Arrival RNG seed (default: the system config's `seed`).
+    pub seed: Option<u64>,
+    /// Bursty: requests per burst (default 4).
+    pub burst: Option<u64>,
+    /// Trace: explicit interarrival gaps in cycles, cycled when exhausted.
+    pub interarrivals: Vec<f64>,
 }
 
 /// How the session turns kernels into engine block dispatch (see the
@@ -342,6 +416,8 @@ pub struct ExperimentSpec<'a> {
     pub host: Option<HostSpec<'a>>,
     /// Optional stack-to-stack fabric selection (`[topology]`).
     pub topology: Option<TopologySpec>,
+    /// Optional open-loop request stream (`[arrivals]`): service mode.
+    pub arrivals: Option<ArrivalSpec>,
     pub sweep: Option<SweepSpec>,
     pub output: OutputSpec,
 }
@@ -358,6 +434,7 @@ impl Default for ExperimentSpec<'_> {
             kernels: Vec::new(),
             host: None,
             topology: None,
+            arrivals: None,
             sweep: None,
             output: OutputSpec::default(),
         }
@@ -472,6 +549,8 @@ impl<'a> ExperimentSpec<'a> {
         anyhow::ensure!(host_headers <= 1, "at most one [host] section");
         let topology_headers = doc.section_count("topology");
         anyhow::ensure!(topology_headers <= 1, "at most one [topology] section");
+        let arrivals_headers = doc.section_count("arrivals");
+        anyhow::ensure!(arrivals_headers <= 1, "at most one [arrivals] section");
         let items = doc.items;
         let mut spec = ExperimentSpec::default();
         // Kernels accumulate per [[kernel]] instance; the workload key is
@@ -481,6 +560,8 @@ impl<'a> ExperimentSpec<'a> {
         let mut host_name: Option<&'static str> = None;
         let mut topology: Option<TopologySpec> = None;
         let mut topology_kind: Option<crate::net::TopologyKind> = None;
+        let mut arrivals: Option<ArrivalSpec> = None;
+        let mut arrivals_kind: Option<ArrivalKind> = None;
         let mut sweep_key: Option<String> = None;
         let mut sweep_values: Option<Vec<String>> = None;
         for item in &items {
@@ -592,6 +673,18 @@ impl<'a> ExperimentSpec<'a> {
                                 format!("{}: bad stack index {value}", ctx())
                             })?)
                         }
+                        "after" => {
+                            k.after = value
+                                .split(',')
+                                .map(|v| v.trim())
+                                .filter(|v| !v.is_empty())
+                                .map(|v| {
+                                    v.parse().with_context(|| {
+                                        format!("{}: bad kernel index {v}", ctx())
+                                    })
+                                })
+                                .collect::<crate::Result<_>>()?
+                        }
                         _ => bail!("{}: unknown [[kernel]] key", ctx()),
                     }
                 }
@@ -667,10 +760,66 @@ impl<'a> ExperimentSpec<'a> {
                         _ => bail!("{}: unknown [topology] key", ctx()),
                     }
                 }
+                "arrivals" => {
+                    anyhow::ensure!(
+                        *instance == 0,
+                        "line {lineno}: at most one [arrivals] section"
+                    );
+                    let a = arrivals.get_or_insert_with(ArrivalSpec::default);
+                    match key.as_str() {
+                        "kind" => {
+                            arrivals_kind =
+                                Some(ArrivalKind::parse(value).ok_or_else(|| {
+                                    anyhow::anyhow!(
+                                        "{}: expected poisson|bursty|trace, got {value}",
+                                        ctx()
+                                    )
+                                })?)
+                        }
+                        "rate" => {
+                            a.rate = Some(value.parse().with_context(|| {
+                                format!("{}: bad number {value}", ctx())
+                            })?)
+                        }
+                        "requests" => {
+                            a.requests = Some(value.parse().with_context(|| {
+                                format!("{}: bad count {value}", ctx())
+                            })?)
+                        }
+                        "duration" => {
+                            a.duration = Some(value.parse().with_context(|| {
+                                format!("{}: bad number {value}", ctx())
+                            })?)
+                        }
+                        "seed" => {
+                            a.seed = Some(value.parse().with_context(|| {
+                                format!("{}: bad seed {value}", ctx())
+                            })?)
+                        }
+                        "burst" => {
+                            a.burst = Some(value.parse().with_context(|| {
+                                format!("{}: bad count {value}", ctx())
+                            })?)
+                        }
+                        "interarrivals" => {
+                            a.interarrivals = value
+                                .split(',')
+                                .map(|v| v.trim())
+                                .filter(|v| !v.is_empty())
+                                .map(|v| {
+                                    v.parse().with_context(|| {
+                                        format!("{}: bad number {v}", ctx())
+                                    })
+                                })
+                                .collect::<crate::Result<_>>()?
+                        }
+                        _ => bail!("{}: unknown [arrivals] key", ctx()),
+                    }
+                }
                 "" => bail!(
                     "line {lineno}: key {key} outside a section (expected \
                      [experiment], [output], [system], [sweep], [topology], \
-                     [[kernel]] or [host])"
+                     [arrivals], [[kernel]] or [host])"
                 ),
                 other => bail!("line {lineno}: unknown section [{other}]"),
             }
@@ -706,6 +855,15 @@ impl<'a> ExperimentSpec<'a> {
             t.kind = topology_kind
                 .ok_or_else(|| anyhow::anyhow!("[topology] section missing kind"))?;
             spec.topology = Some(t);
+        }
+        if arrivals_headers > 0 && arrivals.is_none() {
+            // Key-less [arrivals] table: surface the missing-kind error.
+            arrivals = Some(ArrivalSpec::default());
+        }
+        if let Some(mut a) = arrivals {
+            a.kind = arrivals_kind
+                .ok_or_else(|| anyhow::anyhow!("[arrivals] section missing kind"))?;
+            spec.arrivals = Some(a);
         }
         spec.sweep = match (sweep_key, sweep_values) {
             (None, None) => None,
@@ -772,6 +930,30 @@ impl<'a> ExperimentSpec<'a> {
                 let _ = writeln!(out, "window_cycles = {w}");
             }
         }
+        if let Some(a) = &self.arrivals {
+            out.push_str("\n[arrivals]\n");
+            let _ = writeln!(out, "kind = {}", a.kind);
+            if let Some(r) = a.rate {
+                let _ = writeln!(out, "rate = {r}");
+            }
+            if let Some(n) = a.requests {
+                let _ = writeln!(out, "requests = {n}");
+            }
+            if let Some(d) = a.duration {
+                let _ = writeln!(out, "duration = {d}");
+            }
+            if let Some(s) = a.seed {
+                let _ = writeln!(out, "seed = {s}");
+            }
+            if let Some(b) = a.burst {
+                let _ = writeln!(out, "burst = {b}");
+            }
+            if !a.interarrivals.is_empty() {
+                let gaps: Vec<String> =
+                    a.interarrivals.iter().map(|g| g.to_string()).collect();
+                let _ = writeln!(out, "interarrivals = \"{}\"", gaps.join(","));
+            }
+        }
         for k in &self.kernels {
             out.push_str("\n[[kernel]]\n");
             let _ = writeln!(out, "workload = {}", k.workload.name());
@@ -784,6 +966,10 @@ impl<'a> ExperimentSpec<'a> {
             }
             if let Some(h) = k.home {
                 let _ = writeln!(out, "home = {h}");
+            }
+            if !k.after.is_empty() {
+                let deps: Vec<String> = k.after.iter().map(|d| d.to_string()).collect();
+                let _ = writeln!(out, "after = \"{}\"", deps.join(","));
             }
         }
         if let Some(h) = &self.host {
@@ -914,6 +1100,24 @@ ddr_fraction = 0.5
             ExperimentSpec::from_toml_str("[topology]\nkind = ring\n[topology]\nkind = line\n")
                 .is_err()
         );
+        // [arrivals] needs a valid kind and known keys, at most once.
+        assert!(ExperimentSpec::from_toml_str("[arrivals]\nkind = uniform\n").is_err());
+        assert!(ExperimentSpec::from_toml_str("[arrivals]\nrate = 0.1\n").is_err());
+        assert!(
+            ExperimentSpec::from_toml_str("[arrivals]\nkind = poisson\nnope = 1\n").is_err()
+        );
+        assert!(ExperimentSpec::from_toml_str(
+            "[arrivals]\nkind = poisson\n[arrivals]\nkind = trace\n"
+        )
+        .is_err());
+        assert!(ExperimentSpec::from_toml_str(
+            "[arrivals]\nkind = trace\ninterarrivals = \"10,x\"\n"
+        )
+        .is_err());
+        assert!(
+            ExperimentSpec::from_toml_str("[[kernel]]\nworkload = NN\nafter = \"z\"\n")
+                .is_err()
+        );
     }
 
     #[test]
@@ -927,6 +1131,46 @@ ddr_fraction = 0.5
         assert!(ExperimentSpec::from_toml_str("[host]\n").is_err());
         assert!(ExperimentSpec::from_toml_str("[host]\n[host]\n").is_err());
         assert!(ExperimentSpec::from_toml_str("[topology]\n").is_err());
+        assert!(ExperimentSpec::from_toml_str("[arrivals]\n").is_err());
+    }
+
+    #[test]
+    fn parses_and_round_trips_arrivals() {
+        let text = "\
+[arrivals]
+kind = bursty
+rate = 0.05
+requests = 1000
+duration = 250000.5
+seed = 9
+burst = 4
+
+[[kernel]]
+workload = NN
+
+[[kernel]]
+workload = KM
+after = \"0\"
+";
+        let s = ExperimentSpec::from_toml_str(text).unwrap();
+        let a = s.arrivals.as_ref().unwrap();
+        assert_eq!(a.kind, ArrivalKind::Bursty);
+        assert_eq!(a.rate, Some(0.05));
+        assert_eq!(a.requests, Some(1000));
+        assert_eq!(a.duration, Some(250000.5));
+        assert_eq!(a.seed, Some(9));
+        assert_eq!(a.burst, Some(4));
+        assert!(a.interarrivals.is_empty());
+        assert_eq!(s.kernels[0].after, Vec::<usize>::new());
+        assert_eq!(s.kernels[1].after, vec![0]);
+        let reparsed = ExperimentSpec::from_toml_str(&s.to_toml_string()).unwrap();
+        assert_eq!(reparsed, s);
+        // Trace kind carries fractional gaps through the quoted list.
+        let text = "[arrivals]\nkind = trace\ninterarrivals = \"100, 2.5, 30\"\n";
+        let s = ExperimentSpec::from_toml_str(text).unwrap();
+        assert_eq!(s.arrivals.as_ref().unwrap().interarrivals, vec![100.0, 2.5, 30.0]);
+        let reparsed = ExperimentSpec::from_toml_str(&s.to_toml_string()).unwrap();
+        assert_eq!(reparsed, s);
     }
 
     #[test]

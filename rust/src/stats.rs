@@ -139,12 +139,21 @@ pub struct RunReport {
     pub net_window_cycles: f64,
     /// Per-directed-link fabric counters (empty under fully-connected).
     pub link_stats: Vec<LinkStat>,
+    /// Open-loop service-mode results (`[arrivals]` specs only; `None`
+    /// for fixed mixes, whose reports stay frozen).
+    pub service: Option<ServiceStats>,
 }
 
 impl RunReport {
     /// Speedup of this run relative to a baseline run of the same workload.
+    /// Degenerate zero-work runs (either side reporting 0 cycles) pin to
+    /// 1.0 instead of inf/NaN, matching `per_app_slowdown`'s convention.
     pub fn speedup_over(&self, baseline: &RunReport) -> f64 {
-        baseline.cycles / self.cycles
+        if self.cycles > 0.0 && baseline.cycles > 0.0 {
+            baseline.cycles / self.cycles
+        } else {
+            1.0
+        }
     }
 
     /// Remote-access reduction vs a baseline (positive = fewer remote).
@@ -171,16 +180,193 @@ impl RunReport {
     }
 }
 
-/// Per-app response times: completion − arrival, clamped at zero (an app
-/// that never ran completes at 0.0, before its arrival). The single
-/// definition every mix/host path shares.
-pub fn response_times(app_end: &[f64], arrivals: &[f64]) -> Vec<f64> {
+/// Per-app response times with never-ran apps made explicit. An app whose
+/// recorded completion precedes its arrival never ran; the old behavior
+/// clamped it to a 0.0 response time, which silently corrupts any mean or
+/// percentile computed over the set.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ResponseTimes {
+    /// One entry per app: `Some(completion − arrival)` when the app ran
+    /// (completion at exactly the arrival is a legitimate 0.0), `None`
+    /// when it never completed.
+    pub per_app: Vec<Option<f64>>,
+}
+
+impl ResponseTimes {
+    /// Response times of the apps that completed, in app order.
+    pub fn completed(&self) -> Vec<f64> {
+        self.per_app.iter().filter_map(|r| *r).collect()
+    }
+
+    /// Number of apps that never completed.
+    pub fn incomplete(&self) -> usize {
+        self.per_app.iter().filter(|r| r.is_none()).count()
+    }
+
+    /// The historical dense form: never-ran apps as 0.0. Kept for report
+    /// rows whose shape is frozen (a 0.0 feeds the degenerate→1.0 branch
+    /// of `per_app_slowdown` exactly as before); statistics must use
+    /// `completed()` instead.
+    pub fn zero_filled(&self) -> Vec<f64> {
+        self.per_app.iter().map(|r| r.unwrap_or(0.0)).collect()
+    }
+}
+
+/// Per-app response times: completion − arrival, with never-ran apps
+/// (completion strictly before arrival) reported as incomplete rather
+/// than clamped to 0.0. The single definition every mix/host path shares.
+pub fn response_times(app_end: &[f64], arrivals: &[f64]) -> ResponseTimes {
     assert_eq!(app_end.len(), arrivals.len(), "per-app length mismatch");
-    app_end
-        .iter()
-        .zip(arrivals)
-        .map(|(&end, &t)| (end - t).max(0.0))
-        .collect()
+    ResponseTimes {
+        per_app: app_end
+            .iter()
+            .zip(arrivals)
+            .map(|(&end, &t)| (end >= t).then_some(end - t))
+            .collect(),
+    }
+}
+
+/// Results of one open-loop service-mode run: request accounting, rates,
+/// and streaming response-time percentiles from a [`QuantileSketch`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServiceStats {
+    /// Requests the arrival process offered before its cutoff.
+    pub requests_offered: u64,
+    /// Requests whose every kernel stage completed.
+    pub requests_completed: u64,
+    /// Requests still in flight (or never admitted to an SM) when the
+    /// run ended — saturation shows up here, not as phantom 0.0 latencies.
+    pub requests_incomplete: u64,
+    /// Requests offered per cycle over the run horizon.
+    pub offered_rate: f64,
+    /// Requests completed per cycle of simulated time (sustained
+    /// throughput; compare against `offered_rate` for saturation).
+    pub achieved_rate: f64,
+    /// Mean response time (arrival → last stage completion) in cycles,
+    /// over completed requests only.
+    pub mean_response: f64,
+    /// Largest completed-request response time in cycles.
+    pub max_response: f64,
+    /// Streaming median response time in cycles (sketch, <1% rel. error).
+    pub p50_response: f64,
+    /// Streaming 99th-percentile response time in cycles.
+    pub p99_response: f64,
+    /// Streaming 99.9th-percentile response time in cycles.
+    pub p999_response: f64,
+}
+
+/// Base-2 exponent buckets in the sketch: covers magnitudes up to 2^63.
+const SKETCH_EXPS: usize = 64;
+/// Sub-buckets per octave: 128 mantissa slices ⇒ relative bucket width
+/// 1/128, so a nearest-rank answer from bucket midpoints is within
+/// ~1/256 (< 1%) of the exact value for inputs ≥ 1.0.
+const SKETCH_SUBS: usize = 128;
+
+/// Fixed-memory streaming quantile sketch over non-negative values
+/// (cycle counts): log-spaced histogram of `SKETCH_EXPS × SKETCH_SUBS`
+/// buckets — base-2 exponent × 128 mantissa slices, i.e. the top bits of
+/// the f64 representation. State is ~64 KB regardless of stream length,
+/// so millions of per-request response times never materialize as a
+/// `Vec`. Values in `[0, 1)` collapse into bucket 0 (sub-cycle response
+/// times are noise at simulator resolution); quantiles are clamped to
+/// the observed min/max so degenerate streams stay exact.
+#[derive(Clone, Debug)]
+pub struct QuantileSketch {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QuantileSketch {
+    pub fn new() -> Self {
+        QuantileSketch {
+            counts: vec![0; SKETCH_EXPS * SKETCH_SUBS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v < 1.0 {
+            return 0;
+        }
+        let bits = v.to_bits();
+        let exp = ((((bits >> 52) & 0x7ff) as i64) - 1023).min(SKETCH_EXPS as i64 - 1) as usize;
+        let sub = ((bits >> 45) & 0x7f) as usize;
+        exp * SKETCH_SUBS + sub
+    }
+
+    /// Midpoint of a bucket's value range (the representative a quantile
+    /// query reports).
+    fn bucket_value(idx: usize) -> f64 {
+        let (exp, sub) = (idx / SKETCH_SUBS, idx % SKETCH_SUBS);
+        (1u64 << exp) as f64 * (1.0 + (sub as f64 + 0.5) / SKETCH_SUBS as f64)
+    }
+
+    /// Record one observation. Negative or non-finite values clamp to 0.0.
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Nearest-rank quantile estimate for `q` in `[0, 1]` (0.0 on an
+    /// empty sketch), clamped to the observed `[min, max]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_value(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
 }
 
 /// Per-app slowdown of a shared run vs run-alone baselines: shared/alone
@@ -304,11 +490,87 @@ mod tests {
     }
 
     #[test]
-    fn response_times_clamp_at_zero() {
-        assert_eq!(
-            response_times(&[100.0, 50.0, 0.0], &[10.0, 0.0, 5.0]),
-            vec![90.0, 50.0, 0.0]
-        );
+    fn response_times_make_never_ran_explicit() {
+        // Third app: completion 0.0 precedes its arrival at 5.0 — it never
+        // ran. The old behavior clamped it to a phantom 0.0 response time.
+        let r = response_times(&[100.0, 50.0, 0.0], &[10.0, 0.0, 5.0]);
+        assert_eq!(r.per_app, vec![Some(90.0), Some(50.0), None]);
+        assert_eq!(r.completed(), vec![90.0, 50.0]);
+        assert_eq!(r.incomplete(), 1);
+        // The legacy dense form is unchanged for frozen report rows.
+        assert_eq!(r.zero_filled(), vec![90.0, 50.0, 0.0]);
+        // Completion exactly at arrival is a legitimate 0.0, not never-ran.
+        let r = response_times(&[5.0], &[5.0]);
+        assert_eq!(r.per_app, vec![Some(0.0)]);
+        assert_eq!(r.incomplete(), 0);
+    }
+
+    #[test]
+    fn degenerate_speedup_pins_to_one() {
+        let zero = RunReport::default();
+        let run = RunReport {
+            cycles: 100.0,
+            ..Default::default()
+        };
+        // Zero cycles on either side would divide to inf/NaN; pin to 1.0.
+        assert_eq!(zero.speedup_over(&run), 1.0);
+        assert_eq!(run.speedup_over(&zero), 1.0);
+        assert_eq!(zero.speedup_over(&zero), 1.0);
+    }
+
+    #[test]
+    fn degenerate_imbalance_and_bw_share_pin() {
+        // Audit companions of the speedup guard: all-zero traffic and an
+        // empty stack list both pin to the no-imbalance value.
+        let r = RunReport {
+            stack_bytes: vec![0, 0, 0, 0],
+            ..Default::default()
+        };
+        assert_eq!(r.stack_imbalance(), 1.0);
+        let r = RunReport::default();
+        assert_eq!(r.stack_imbalance(), 1.0);
+        // host_bw_share is a plain stored field; its zero-work default is
+        // 0.0 by construction.
+        assert_eq!(r.host_bw_share, 0.0);
+    }
+
+    #[test]
+    fn sketch_basics() {
+        let mut s = QuantileSketch::new();
+        assert!(s.is_empty());
+        assert_eq!(s.quantile(0.5), 0.0);
+        assert_eq!(s.mean(), 0.0);
+        for v in [10.0, 20.0, 30.0, 40.0] {
+            s.record(v);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 25.0).abs() < 1e-12);
+        assert_eq!(s.min(), 10.0);
+        assert_eq!(s.max(), 40.0);
+        // Quantiles land within a bucket width of the exact answer and
+        // never escape the observed range.
+        let p50 = s.quantile(0.5);
+        assert!((10.0..=40.0).contains(&p50));
+        assert!((p50 - 20.0).abs() / 20.0 < 1.0 / 64.0);
+        assert_eq!(s.quantile(1.0), 40.0);
+    }
+
+    #[test]
+    fn sketch_clamps_junk_and_degenerate_streams_stay_exact() {
+        let mut s = QuantileSketch::new();
+        s.record(-5.0);
+        s.record(f64::NAN);
+        s.record(f64::INFINITY);
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.quantile(0.99), 0.0);
+        // A constant stream reports the constant exactly (min/max clamp).
+        let mut s = QuantileSketch::new();
+        for _ in 0..100 {
+            s.record(7.5);
+        }
+        assert_eq!(s.quantile(0.5), 7.5);
+        assert_eq!(s.quantile(0.999), 7.5);
     }
 
     #[test]

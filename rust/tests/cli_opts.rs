@@ -77,6 +77,31 @@ fn flags_never_collide_with_value_options() {
     }
 }
 
+/// Missing positional arguments must surface as the usage error every
+/// subcommand prints, never as a panic: scan each `.positional` access
+/// and reject `.expect(`/`.unwrap(` in the same statement (the
+/// historical `coda debug-pages` crash — `expect("bench")` on a missing
+/// benchmark name).
+#[test]
+fn positional_access_never_panics_on_missing_args() {
+    let mut rest = MAIN_SRC;
+    let mut offset = 0usize;
+    while let Some(pos) = rest.find(".positional") {
+        let at = offset + pos;
+        rest = &rest[pos + ".positional".len()..];
+        offset = at + ".positional".len();
+        let stmt_end = rest.find(';').unwrap_or(rest.len());
+        let stmt = &rest[..stmt_end];
+        let line = MAIN_SRC[..at].lines().count();
+        assert!(
+            !stmt.contains(".expect(") && !stmt.contains(".unwrap("),
+            "main.rs line {line}: positional access panics on missing \
+             arguments; return the subcommand's usage error instead:\n\
+             .positional{stmt}"
+        );
+    }
+}
+
 /// End-to-end demonstration of the bug class: parsing `--opt value` with
 /// the option unregistered turns it into flag + positional; with it
 /// registered the value is captured. The registration test above is what

@@ -1,0 +1,192 @@
+//! Service-mode integration coverage: the open-loop `[arrivals]` stream
+//! end to end, the fixed-memory quantile sketch against exact order
+//! statistics, and the frozen-oracle guarantee that specs *without* an
+//! `[arrivals]` section still emit byte-identical JSON.
+
+use coda::config::SystemConfig;
+use coda::multiprog::MixPlacement;
+use coda::proptest_lite::{run_prop, PropConfig};
+use coda::sched::{FairnessPolicy, Policy};
+use coda::session::Session;
+use coda::spec::{ArrivalKind, ArrivalSpec, ExperimentSpec, WorkloadSel};
+use coda::stats::QuantileSketch;
+use coda::trace::{Access, BlockTrace, Category, KernelTrace, ObjectDesc};
+use coda::workloads::BuiltWorkload;
+use std::path::PathBuf;
+
+/// Exact nearest-rank quantile over a sorted sample (the definition the
+/// sketch's documentation promises to approximate).
+fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+    let rank = ((q * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// The sketch's documented accuracy: p50/p99 within 1% relative error of
+/// the exact sort on randomized streams (bucket width is 1/128, so a
+/// midpoint answer is within ~1/256 of any member of its bucket).
+#[test]
+fn sketch_percentiles_track_exact_order_statistics() {
+    run_prop(
+        PropConfig {
+            cases: 64,
+            ..PropConfig::default()
+        },
+        |rng| {
+            let n = 100 + rng.below(2000) as usize;
+            // Magnitudes from ~1 to ~1e6 cycles, fractional values
+            // included — the realistic response-time range.
+            (0..n)
+                .map(|_| 1.0 + (rng.below(1_000_000_000) as f64) / 1000.0)
+                .collect::<Vec<f64>>()
+        },
+        |xs| {
+            let mut sk = QuantileSketch::new();
+            for &x in xs {
+                sk.record(x);
+            }
+            let mut sorted = xs.clone();
+            sorted.sort_by(f64::total_cmp);
+            for q in [0.50, 0.99] {
+                let exact = exact_quantile(&sorted, q);
+                let got = sk.quantile(q);
+                let rel = (got - exact).abs() / exact;
+                if rel > 0.01 {
+                    return Err(format!(
+                        "q={q}: sketch {got} vs exact {exact} ({:.3}% off)",
+                        rel * 100.0
+                    ));
+                }
+            }
+            if sk.count() != xs.len() as u64 {
+                return Err(format!("count {} != {}", sk.count(), xs.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A minimal one-block, one-access kernel: the cheapest possible request,
+/// so a million of them stay fast enough for the test suite.
+fn one_block_workload() -> BuiltWorkload {
+    BuiltWorkload {
+        name: "unit",
+        category: Category::BlockExclusive,
+        trace: KernelTrace {
+            name: "unit".into(),
+            threads_per_block: 1,
+            objects: vec![ObjectDesc {
+                name: "buf".into(),
+                bytes: 4096,
+            }],
+            blocks: vec![BlockTrace {
+                block_id: 0,
+                accesses: vec![Access {
+                    obj: 0,
+                    offset: 0,
+                    write: false,
+                }],
+            }],
+        },
+        ir: None,
+        env: coda::analysis::ParamEnv::new(1),
+    }
+}
+
+/// The ISSUE acceptance bar: an open-loop run of >= 1M requests completes,
+/// and the percentile state is the fixed-memory sketch (the source keeps a
+/// recycled request slab — no per-request `Vec` survives the stream).
+#[test]
+fn million_request_stream_completes_with_streaming_percentiles() {
+    let wl = one_block_workload();
+    let mut spec = ExperimentSpec::shared(
+        vec![(WorkloadSel::Prebuilt(&wl), 0.0)],
+        MixPlacement::CgpLocal,
+        Policy::Affinity,
+        FairnessPolicy::Fcfs,
+    );
+    // One request every 25 cycles: far below the 96-slot capacity, so the
+    // stream drains as it arrives and every request completes.
+    spec.arrivals = Some(ArrivalSpec {
+        kind: ArrivalKind::Trace,
+        interarrivals: vec![25.0],
+        requests: Some(1_000_000),
+        ..ArrivalSpec::default()
+    });
+    let r = Session::new(SystemConfig::test_small(), spec)
+        .unwrap()
+        .run()
+        .unwrap();
+    let svc = r.run.service.as_ref().expect("service stats");
+    assert_eq!(svc.requests_offered, 1_000_000);
+    assert_eq!(svc.requests_completed, 1_000_000);
+    assert_eq!(svc.requests_incomplete, 0);
+    // The stream spans >= 25M cycles of simulated time.
+    assert!(r.run.cycles >= 25.0 * 1_000_000.0);
+    assert!(svc.mean_response > 0.0);
+    assert!(svc.p50_response > 0.0);
+    assert!(svc.p50_response <= svc.p99_response);
+    assert!(svc.p99_response <= svc.p999_response);
+    assert!(svc.p999_response <= svc.max_response);
+    // Sub-saturation: achieved throughput tracks the offered rate.
+    assert!(svc.achieved_rate > 0.9 * svc.offered_rate);
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("session_no_arrivals.txt")
+}
+
+/// JSON of a fixed-mix session run without an `[arrivals]` section — the
+/// byte-identity oracle for the service-mode PR (conditional emission
+/// keeps pre-service reports unchanged).
+fn render_no_arrivals_json() -> String {
+    let spec = ExperimentSpec::shared(
+        vec![
+            (WorkloadSel::Named("NN"), 0.0),
+            (WorkloadSel::Named("KM"), 0.0),
+        ],
+        MixPlacement::CgpLocal,
+        Policy::Affinity,
+        FairnessPolicy::Fcfs,
+    );
+    let r = Session::new(SystemConfig::test_small(), spec)
+        .unwrap()
+        .run()
+        .unwrap();
+    let mut out = String::from("# golden: shared NN+KM session JSON (test_small), no [arrivals]\n");
+    out.push_str(&r.to_json().render());
+    out.push('\n');
+    out
+}
+
+/// Specs without `[arrivals]` produce byte-identical JSON to the
+/// pre-service output (frozen-oracle convention: the snapshot is recorded
+/// on the first toolchain run and any later drift fails loudly).
+#[test]
+fn no_arrivals_spec_json_matches_golden_snapshot() {
+    let path = golden_path();
+    let got = render_no_arrivals_json();
+    assert_eq!(got, render_no_arrivals_json(), "snapshot is not deterministic");
+    assert!(
+        !got.contains("requests_offered") && !got.contains("p99_response"),
+        "a no-[arrivals] run must not emit service fields"
+    );
+
+    let update = std::env::var("CODA_UPDATE_GOLDEN").is_ok();
+    match std::fs::read_to_string(&path) {
+        Ok(want) if !update && !want.starts_with("# PENDING-RECORD") => {
+            assert_eq!(
+                got, want,
+                "no-[arrivals] session JSON drifted; if the change is \
+                 intentional rerun with CODA_UPDATE_GOLDEN=1 and commit {path:?}"
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &got).unwrap();
+            eprintln!("recorded golden snapshot at {path:?}");
+        }
+    }
+}

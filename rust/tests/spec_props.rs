@@ -13,8 +13,8 @@ use coda::rng::Rng;
 use coda::sched::{FairnessPolicy, Policy};
 use coda::session;
 use coda::spec::{
-    Baselines, Dispatch, ExperimentSpec, HostSpec, KernelSpec, OutputFormat, OutputSpec,
-    SweepSpec, TopologySpec, WorkloadSel,
+    ArrivalKind, ArrivalSpec, Baselines, Dispatch, ExperimentSpec, HostSpec, KernelSpec,
+    OutputFormat, OutputSpec, SweepSpec, TopologySpec, WorkloadSel,
 };
 use std::path::PathBuf;
 
@@ -97,7 +97,34 @@ fn arbitrary_spec(rng: &mut Rng) -> ExperimentSpec<'static> {
         if rng.chance(0.3) {
             k.home = Some(i as usize);
         }
+        if i > 0 && rng.chance(0.3) {
+            // Service-mode DAG edges (syntactic only here — round-trips
+            // must hold even without an [arrivals] section).
+            k.after = (0..i).filter(|_| rng.chance(0.5)).map(|d| d as usize).collect();
+        }
         spec.kernels.push(k);
+    }
+    if rng.chance(0.3) {
+        let kind = pick(
+            rng,
+            &[ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Trace],
+        );
+        spec.arrivals = Some(ArrivalSpec {
+            kind,
+            rate: rng
+                .chance(0.7)
+                .then(|| (1 + rng.below(100)) as f64 / 1024.0),
+            requests: rng.chance(0.7).then(|| 1 + rng.below(1000)),
+            duration: rng
+                .chance(0.5)
+                .then(|| (1 + rng.below(1_000_000)) as f64 + 0.5),
+            seed: rng.chance(0.5).then(|| rng.below(u64::MAX)),
+            burst: rng.chance(0.5).then(|| 1 + rng.below(16)),
+            interarrivals: (0..rng.below(4))
+                // Fractional gaps exercise exact f64 Display/parse.
+                .map(|_| rng.below(1000) as f64 + 0.25)
+                .collect(),
+        });
     }
     if rng.chance(0.4) {
         let mut t = TopologySpec::new(pick(
