@@ -138,7 +138,11 @@ pub trait BlockSource {
     /// Earliest time strictly after `now` at which new work may arrive
     /// (staggered kernel launches, open-loop request streams). Idle slots
     /// re-arm on this; `None` (the default) means work never appears
-    /// except at refill time.
+    /// except at refill time. The engine re-polls after every retirement
+    /// and supersedes a pending arrival event with an earlier-announced
+    /// one, so a source may also report a synthetic just-after-now *wake*
+    /// here when a completion readied work that idle slots should sweep
+    /// (the service-mode stream does).
     fn next_arrival_after(&self, _now: f64) -> Option<f64> {
         None
     }
@@ -468,8 +472,10 @@ impl<'a> Engine<'a> {
             "topology exceeds the packed event encoding (sm/slot must fit 16 bits)"
         );
         // At most one event is outstanding per residency slot, plus one
-        // arrival and one host window — pre-sizing to that bound means
-        // the heap never reallocates mid-run.
+        // live arrival and one host window — pre-sizing to that bound
+        // means the heap almost never reallocates mid-run (service-mode
+        // completion wakes can transiently strand a few superseded
+        // arrival events on top; see the retirement re-arm below).
         let mut heap: BinaryHeap<Reverse<(TimeKey, Ev)>> =
             BinaryHeap::with_capacity(topo.sms.len() * slots_per_sm + 2);
         let mut occupied = vec![false; topo.sms.len() * slots_per_sm];
@@ -508,6 +514,14 @@ impl<'a> Engine<'a> {
             let now = f64::from_bits(tk.0);
             let (app, block, next, sm, slot) = match ev.kind() {
                 EvKind::Arrival => {
+                    // An event superseded by an earlier re-arm (a service-
+                    // mode completion wake) is inert: the authoritative
+                    // chain re-armed past it, so firing it again would
+                    // duplicate sweeps. `armed` always holds the exact
+                    // bits of the live event's time, so equality is safe.
+                    if armed != Some(now) {
+                        continue;
+                    }
                     armed = None;
                     source.on_arrival(now);
                     // Fill idle slots in the seeding order (slot-major).
@@ -703,17 +717,22 @@ impl<'a> Engine<'a> {
                     }
                     None => {
                         occupied[sm as usize * slots_per_sm + slot as usize] = false;
-                        // Re-arm only if no arrival event is pending; a
-                        // pending one sweeps this freed slot when it fires.
-                        if armed.is_none() {
-                            if let Some(ta) = source.next_arrival_after(t_next) {
-                                if ta > t_next {
-                                    heap.push(Reverse((key(ta, seq), Ev::ARRIVAL)));
-                                    seq += 1;
-                                    armed = Some(ta);
-                                }
-                            }
-                        }
+                    }
+                }
+                // (Re-)arm the arrival event when none is pending, or when
+                // the source now announces an *earlier* time than the armed
+                // one — that is how a completion wake (service mode readying
+                // a multi-block stage) sweeps idle slots instead of sleeping
+                // behind a far-future generator arrival. Fixed mixes announce
+                // static times that never move earlier, so for them the
+                // supersede branch never fires and the event sequence is
+                // unchanged. A superseded event stays in the heap; the
+                // arrival handler drops it by its stale timestamp.
+                if let Some(ta) = source.next_arrival_after(t_next) {
+                    if ta > t_next && armed.map_or(true, |t| ta < t) {
+                        heap.push(Reverse((key(ta, seq), Ev::ARRIVAL)));
+                        seq += 1;
+                        armed = Some(ta);
                     }
                 }
             }

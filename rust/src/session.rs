@@ -545,8 +545,11 @@ struct ReqState {
 ///   latency is approximate only when one kernel's blocks from different
 ///   requests overlap in flight.
 /// * **Completion wake-up.** A stage readied by a completion is picked up
-///   by the retiring slot immediately; *other* idle slots join at the
-///   next generator arrival.
+///   by the retiring slot immediately, and the source announces a
+///   just-after-now wake through [`BlockSource::next_arrival_after`] so
+///   the engine sweeps *other* idle slots too — a multi-block tail stage
+///   fans out across the machine instead of serializing on the retiring
+///   slot after the generator runs dry.
 ///
 /// Memory is bounded by the max in-flight request count (slab slots are
 /// recycled) plus the fixed-size [`QuantileSketch`] — an arbitrarily long
@@ -567,6 +570,15 @@ struct ServiceSource {
     max_requests: Option<u64>,
     offered: u64,
     completed: u64,
+    /// Arrival time of the most recently admitted request: the stream's
+    /// real span when the requests cap ends it before `duration`.
+    last_arrival: f64,
+    /// True when the requests cap (not the duration) ended the stream.
+    capped: bool,
+    /// Pending completion wake (a just-after-now time): announced via
+    /// `next_arrival_after` so idle slots sweep for stages a completion
+    /// readied (see the completion wake-up note above).
+    wake: Option<f64>,
     /// Request slab + free list: slots recycle, so memory tracks the max
     /// in-flight count, not the stream length.
     reqs: Vec<ReqState>,
@@ -612,6 +624,9 @@ impl ServiceSource {
             max_requests: a.requests,
             offered: 0,
             completed: 0,
+            last_arrival: 0.0,
+            capped: false,
+            wake: None,
             reqs: Vec::new(),
             free: Vec::new(),
             ready: VecDeque::new(),
@@ -624,6 +639,14 @@ impl ServiceSource {
     /// Admit every generated arrival due by `now`, so
     /// [`BlockSource::next_arrival_after`] only ever reports strictly-
     /// future generator times.
+    ///
+    /// Termination: every stream has a requests cap (loop iterations are
+    /// bounded by `max_requests`) or a duration with gaps that make
+    /// positive progress — Poisson/bursty rates are validated positive
+    /// (a zero exponential gap needs an exact-zero rng draw, never a
+    /// run of them), and a duration-only trace is validated to have a
+    /// positive gap-cycle sum, so `next_arrival` eventually exceeds
+    /// `min(now, duration)` and the loop exits.
     fn advance(&mut self, now: f64) {
         while let Some(t) = self.next_arrival {
             if t > now {
@@ -636,6 +659,7 @@ impl ServiceSource {
             self.admit(t);
             if self.max_requests.is_some_and(|m| self.offered >= m) {
                 self.next_arrival = None;
+                self.capped = true;
             } else {
                 self.next_arrival = Some(t + self.gen.next_gap());
             }
@@ -644,6 +668,7 @@ impl ServiceSource {
 
     fn admit(&mut self, t: f64) {
         self.offered += 1;
+        self.last_arrival = t;
         let id = match self.free.pop() {
             Some(id) => id,
             None => {
@@ -705,6 +730,10 @@ impl ServiceSource {
                         self.scratch.push(d);
                     } else {
                         self.ready.push_back((req as u32, d));
+                        // Announce a completion wake: idle slots must
+                        // sweep for this stage's blocks rather than wait
+                        // for a generator arrival that may never come.
+                        self.wake = Some(just_after(now));
                     }
                 }
             }
@@ -770,12 +799,27 @@ impl BlockSource for ServiceSource {
     }
 
     fn next_arrival_after(&self, now: f64) -> Option<f64> {
-        self.next_arrival.filter(|&t| t > now)
+        let generated = self.next_arrival.filter(|&t| t > now);
+        let wake = self.wake.filter(|&t| t > now);
+        match (generated, wake) {
+            (Some(g), Some(w)) => Some(g.min(w)),
+            (g, w) => g.or(w),
+        }
     }
 
     fn on_arrival(&mut self, now: f64) {
+        if self.wake.is_some_and(|w| w <= now) {
+            self.wake = None;
+        }
         self.advance(now);
     }
+}
+
+/// The smallest representable time strictly after `t` (finite, `>= 0`):
+/// completion wakes must honor the [`BlockSource`] strictly-future
+/// arrival contract without displacing any real simulated event.
+fn just_after(t: f64) -> f64 {
+    f64::from_bits(t.to_bits() + 1)
 }
 
 /// One engine execution of a shared-dispatch layout: the NDP kernels in
@@ -1075,6 +1119,17 @@ impl<'a> Session<'a> {
                              reals, got {g}"
                         );
                     }
+                    // An all-zero gap list never advances the generator
+                    // clock, so a duration-only stop condition would admit
+                    // requests forever at t=0. A requests cap bounds that
+                    // burst; without one the cycle sum must be positive.
+                    ensure!(
+                        a.requests.is_some()
+                            || a.interarrivals.iter().sum::<f64>() > 0.0,
+                        "[arrivals] a duration-bounded trace needs a positive \
+                         interarrival sum (all-zero gaps would admit requests \
+                         forever); add a requests cap or a positive gap"
+                    );
                     ensure!(
                         a.rate.is_none(),
                         "[arrivals] rate does not apply to kind = trace"
@@ -1624,10 +1679,17 @@ impl<'a> Session<'a> {
         let mut report = raw.to_report(cfg, workload);
         report.mechanism = format!("service:{}+{:?}", a.kind, self.spec.placement);
         let incomplete = source.offered - source.completed;
-        // Offered rate over the declared horizon (the duration cutoff
-        // when one was set, else the simulated makespan); achieved rate
-        // over the time the run actually took.
-        let horizon = a.duration.unwrap_or(report.cycles);
+        // Offered rate over the span the stream was actually open: the
+        // last admitted arrival when the requests cap ended the stream
+        // (a duration far past the cap must not understate the rate),
+        // else the declared duration, else the simulated makespan. A
+        // point burst (cap hit with every arrival at t=0) spans no time
+        // and pins to 0.0. Achieved rate is over the time the run took.
+        let horizon = if source.capped {
+            source.last_arrival
+        } else {
+            a.duration.unwrap_or(report.cycles)
+        };
         report.service = Some(ServiceStats {
             requests_offered: source.offered,
             requests_completed: source.completed,
@@ -2159,6 +2221,32 @@ mod tests {
             ..ArrivalSpec::default()
         });
         assert!(Session::new(cfg(), empty_trace).is_err());
+        // A duration-only all-zero trace would admit requests forever at
+        // t=0 (the generator clock never advances) — rejected up front.
+        let zero_sum = service_spec(ArrivalSpec {
+            kind: ArrivalKind::Trace,
+            interarrivals: vec![0.0, 0.0],
+            duration: Some(100.0),
+            ..ArrivalSpec::default()
+        });
+        assert!(Session::new(cfg(), zero_sum).is_err());
+        // ...but the same gap list is fine once a requests cap bounds it,
+        // and a positive-sum list is fine with duration alone.
+        let capped_zero_sum = service_spec(ArrivalSpec {
+            kind: ArrivalKind::Trace,
+            interarrivals: vec![0.0, 0.0],
+            duration: Some(100.0),
+            requests: Some(4),
+            ..ArrivalSpec::default()
+        });
+        assert!(Session::new(cfg(), capped_zero_sum).is_ok());
+        let positive_sum = service_spec(ArrivalSpec {
+            kind: ArrivalKind::Trace,
+            interarrivals: vec![0.0, 50.0],
+            duration: Some(100.0),
+            ..ArrivalSpec::default()
+        });
+        assert!(Session::new(cfg(), positive_sum).is_ok());
         // Some stop condition is mandatory (else the stream never ends).
         let mut endless = service_spec(poisson(0.001, 2));
         endless.arrivals.as_mut().unwrap().requests = None;
@@ -2213,8 +2301,84 @@ mod tests {
         assert_eq!(svc.requests_offered, 3);
         assert_eq!(svc.requests_completed, 0);
         assert_eq!(svc.requests_incomplete, 3);
-        // Offered rate is measured over the declared horizon.
-        assert_eq!(svc.offered_rate, 3.0);
+        // The requests cap ended the stream at t=0: a point burst spans
+        // no time, so the rate pins to 0.0 rather than dividing by the
+        // duration the stream never used.
+        assert_eq!(svc.offered_rate, 0.0);
+    }
+
+    #[test]
+    fn service_offered_rate_spans_the_capped_stream_not_the_duration() {
+        // Arrivals at t=1,2,3,4; the cap ends the stream at t=4 while the
+        // declared duration runs to 1000 — the offered rate must be
+        // measured over the 4 cycles the stream was actually open
+        // (4 requests / 4 cycles), not understated 250x by the duration.
+        let spec = service_spec(ArrivalSpec {
+            kind: ArrivalKind::Trace,
+            interarrivals: vec![1.0],
+            requests: Some(4),
+            duration: Some(1000.0),
+            ..ArrivalSpec::default()
+        });
+        let r = Session::new(cfg(), spec).unwrap().run().unwrap();
+        let svc = r.run.service.as_ref().expect("service stats");
+        assert_eq!(svc.requests_offered, 4);
+        assert_eq!(svc.offered_rate, 1.0);
+        // Duration-bounded end keeps the declared-horizon semantics: the
+        // same trace runs out at t > 3 with only 3 requests admitted.
+        let spec = service_spec(ArrivalSpec {
+            kind: ArrivalKind::Trace,
+            interarrivals: vec![1.0],
+            duration: Some(3.5),
+            ..ArrivalSpec::default()
+        });
+        let r = Session::new(cfg(), spec).unwrap().run().unwrap();
+        let svc = r.run.service.as_ref().expect("service stats");
+        assert_eq!(svc.requests_offered, 3);
+        assert_eq!(svc.offered_rate, 3.0 / 3.5);
+    }
+
+    #[test]
+    fn service_completion_readying_a_stage_announces_a_wake() {
+        // Drive the source through the BlockSource seam directly: one
+        // request, stage 0 (1 block) -> stage 1 (2 blocks, after = [0]).
+        // When stage 0's retirement readies stage 1, the retiring slot
+        // takes one block AND the source must announce a strictly-future
+        // wake so the engine sweeps other idle slots for the second
+        // block — otherwise a multi-block tail stage serializes.
+        let a = ArrivalSpec {
+            kind: ArrivalKind::Trace,
+            interarrivals: vec![1.0],
+            requests: Some(1),
+            ..ArrivalSpec::default()
+        };
+        let mut s = ServiceSource::new(vec![1, 2], &[vec![], vec![0]], &a, 7);
+        let sm = Sm { id: 0, stack: 0 };
+        assert_eq!(s.next_arrival_after(0.0), Some(1.0));
+        s.on_arrival(1.0);
+        let b0 = s.refill(sm, None, 1.0).expect("stage 0 block");
+        assert_eq!(b0.app, 0);
+        // Stream is capped after the one request and stage 1 still waits
+        // on its edge: nothing more to hand out, no arrival to report.
+        assert!(s.refill(sm, None, 1.0).is_none());
+        assert!(s.next_arrival_after(1.0).is_none());
+        // Stage 0 retires at t=5: the retiring slot picks up stage 1's
+        // first block and a just-after-now wake appears for the second.
+        let b1 = s.refill(sm, Some(b0), 5.0).expect("stage 1 first block");
+        assert_eq!(b1.app, 1);
+        let wake = s.next_arrival_after(5.0).expect("completion wake");
+        assert!(wake > 5.0 && wake < 5.0 + 1e-9);
+        // The wake fires: an idle slot sweeps up the second block, and
+        // the consumed wake is not re-announced.
+        s.on_arrival(wake);
+        let b2 = s.refill(sm, None, wake).expect("stage 1 second block");
+        assert_eq!((b2.app, b2.block), (1, 1));
+        assert!(s.next_arrival_after(wake).is_none());
+        // Both stage-1 blocks retire: the request completes exactly once.
+        assert!(s.refill(sm, Some(b1), 9.0).is_none());
+        assert!(s.refill(sm, Some(b2), 10.0).is_none());
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.sketch.count(), 1);
     }
 
     #[test]

@@ -237,7 +237,10 @@ pub struct ServiceStats {
     /// Requests still in flight (or never admitted to an SM) when the
     /// run ended — saturation shows up here, not as phantom 0.0 latencies.
     pub requests_incomplete: u64,
-    /// Requests offered per cycle over the run horizon.
+    /// Requests offered per cycle over the span the stream was open: the
+    /// last admitted arrival when the requests cap ended the stream, else
+    /// the declared duration, else the simulated makespan. A point burst
+    /// (cap hit with every arrival at t=0) pins to 0.0.
     pub offered_rate: f64,
     /// Requests completed per cycle of simulated time (sustained
     /// throughput; compare against `offered_rate` for saturation).
