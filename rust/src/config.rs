@@ -143,6 +143,11 @@ pub fn parse_toml_subset(text: &str) -> crate::Result<TomlDoc> {
 ///   gaps, and periodic refresh windows. DRAMsim-class fidelity at model
 ///   cost; changes absolute cycle counts but must never change access
 ///   *counts* (enforced by `tests/backends.rs`).
+/// * [`MemBackendKind::CycleAccurate`] — explicit ACT/PRE/RD/WR command
+///   scheduling per channel: FR-FCFS write drain, tRAS/tRRD/tFAW rank
+///   constraints, per-rank staggered refresh, and an open/closed row
+///   policy. Every emitted command is replayed through the
+///   [`crate::mem::protocol`] legality checker in debug/test builds.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum MemBackendKind {
     /// Open-row channel model with fixed hit/miss service latency.
@@ -150,6 +155,8 @@ pub enum MemBackendKind {
     FixedLatency,
     /// Bank-level model: per-bank row state, conflicts, refresh.
     BankLevel,
+    /// Command-level model: FR-FCFS, full JEDEC-style timing, checker.
+    CycleAccurate,
 }
 
 impl MemBackendKind {
@@ -158,6 +165,7 @@ impl MemBackendKind {
         match s.trim() {
             "fixed" | "fixed-latency" | "fixed_latency" => Some(Self::FixedLatency),
             "bank" | "bank-level" | "bank_level" => Some(Self::BankLevel),
+            "cycle" | "cycle-accurate" | "cycle_accurate" => Some(Self::CycleAccurate),
             _ => None,
         }
     }
@@ -168,6 +176,42 @@ impl std::fmt::Display for MemBackendKind {
         f.write_str(match self {
             Self::FixedLatency => "fixed",
             Self::BankLevel => "bank",
+            Self::CycleAccurate => "cycle",
+        })
+    }
+}
+
+/// Row-buffer management policy for the cycle-accurate backend.
+///
+/// * `Open` — rows stay activated after a column command; a later access
+///   to the same row is a row hit, a different row pays PRE + ACT.
+/// * `Closed` — every column command carries auto-precharge, so every
+///   access re-activates (no row hits, but no conflicts either).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum DramRowPolicy {
+    /// Leave rows open after access (row-buffer locality pays off).
+    #[default]
+    Open,
+    /// Auto-precharge after every column command.
+    Closed,
+}
+
+impl DramRowPolicy {
+    /// Parse a CLI/config spelling; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim() {
+            "open" => Some(Self::Open),
+            "closed" | "close" => Some(Self::Closed),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for DramRowPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Open => "open",
+            Self::Closed => "closed",
         })
     }
 }
@@ -260,6 +304,25 @@ pub struct SystemConfig {
     pub dram_trefi_ns: f64,
     /// Refresh cycle time tRFC (ns): the bank-unavailable window.
     pub dram_trfc_ns: f64,
+
+    // --- cycle-accurate backend only --------------------------------------
+    /// Row active time tRAS (ns): minimum ACT-to-PRE gap on one bank.
+    pub dram_tras_ns: f64,
+    /// ACT-to-ACT gap between banks of one rank, tRRD (ns).
+    pub dram_trrd_ns: f64,
+    /// Four-activate window tFAW (ns): at most 4 ACTs per rank per window.
+    pub dram_tfaw_ns: f64,
+    /// Ranks per channel (power of two dividing `banks_per_channel`).
+    pub dram_ranks_per_channel: usize,
+    /// Row-buffer management policy: `open` or `closed`.
+    pub dram_row_policy: DramRowPolicy,
+    /// Write-queue high watermark: reaching it forces a drain.
+    pub dram_wq_high: usize,
+    /// Write-queue low watermark: a forced drain stops here.
+    pub dram_wq_low: usize,
+    /// FR-FCFS aging cap (ns): a request older than this is served
+    /// before any younger row hit (starvation freedom).
+    pub dram_age_cap_ns: f64,
 
     // --- caches / TLB ------------------------------------------------------
     /// Cache line size in bytes (memory request granularity).
@@ -358,6 +421,14 @@ impl Default for SystemConfig {
             dram_tccd_s_ns: 1.0,
             dram_trefi_ns: 3900.0,
             dram_trfc_ns: 260.0,
+            dram_tras_ns: 33.0,
+            dram_trrd_ns: 4.0,
+            dram_tfaw_ns: 15.0,
+            dram_ranks_per_channel: 1,
+            dram_row_policy: DramRowPolicy::Open,
+            dram_wq_high: 32,
+            dram_wq_low: 16,
+            dram_age_cap_ns: 2000.0,
             line_size: 128,
             tlb_entries: 64,
             tlb_miss_ns: 200.0,
@@ -448,6 +519,10 @@ impl SystemConfig {
             ("dram_tccd_s_ns", self.dram_tccd_s_ns),
             ("dram_trefi_ns", self.dram_trefi_ns),
             ("dram_trfc_ns", self.dram_trfc_ns),
+            ("dram_tras_ns", self.dram_tras_ns),
+            ("dram_trrd_ns", self.dram_trrd_ns),
+            ("dram_tfaw_ns", self.dram_tfaw_ns),
+            ("dram_age_cap_ns", self.dram_age_cap_ns),
         ] {
             if v.is_nan() || v <= 0.0 {
                 bail!("{name} must be positive, got {v}");
@@ -455,6 +530,24 @@ impl SystemConfig {
         }
         if self.dram_trfc_ns >= self.dram_trefi_ns {
             bail!("dram_trfc_ns must be smaller than dram_trefi_ns");
+        }
+        if self.dram_ranks_per_channel == 0
+            || !self.dram_ranks_per_channel.is_power_of_two()
+            || self.dram_ranks_per_channel > self.banks_per_channel
+            || self.banks_per_channel % self.dram_ranks_per_channel != 0
+        {
+            bail!(
+                "dram_ranks_per_channel must be a power of two dividing \
+                 banks_per_channel, got {}",
+                self.dram_ranks_per_channel
+            );
+        }
+        if self.dram_wq_high == 0 || self.dram_wq_low >= self.dram_wq_high {
+            bail!(
+                "dram write-queue watermarks need 0 <= low < high, got low={} high={}",
+                self.dram_wq_low,
+                self.dram_wq_high
+            );
         }
         if !self.mix_stagger_cycles.is_finite() || self.mix_stagger_cycles < 0.0 {
             bail!(
@@ -548,7 +641,7 @@ impl SystemConfig {
             "row_size" => parse!(row_size, u64),
             "mem_backend" => {
                 self.mem_backend = MemBackendKind::parse(v).ok_or_else(|| {
-                    anyhow::anyhow!("bad value for {key}: {v} (expected fixed|bank)")
+                    anyhow::anyhow!("bad value for {key}: {v} (expected fixed|bank|cycle)")
                 })?
             }
             "bank_groups_per_channel" => parse!(bank_groups_per_channel, usize),
@@ -559,6 +652,18 @@ impl SystemConfig {
             "dram_tccd_s_ns" => parse!(dram_tccd_s_ns, f64),
             "dram_trefi_ns" => parse!(dram_trefi_ns, f64),
             "dram_trfc_ns" => parse!(dram_trfc_ns, f64),
+            "dram_tras_ns" => parse!(dram_tras_ns, f64),
+            "dram_trrd_ns" => parse!(dram_trrd_ns, f64),
+            "dram_tfaw_ns" => parse!(dram_tfaw_ns, f64),
+            "dram_ranks_per_channel" => parse!(dram_ranks_per_channel, usize),
+            "dram_row_policy" => {
+                self.dram_row_policy = DramRowPolicy::parse(v).ok_or_else(|| {
+                    anyhow::anyhow!("bad value for {key}: {v} (expected open|closed)")
+                })?
+            }
+            "dram_wq_high" => parse!(dram_wq_high, usize),
+            "dram_wq_low" => parse!(dram_wq_low, usize),
+            "dram_age_cap_ns" => parse!(dram_age_cap_ns, f64),
             "line_size" => parse!(line_size, u64),
             "tlb_entries" => parse!(tlb_entries, usize),
             "tlb_miss_ns" => parse!(tlb_miss_ns, f64),
@@ -644,6 +749,17 @@ impl SystemConfig {
             ("dram_tccd_s_ns", self.dram_tccd_s_ns.to_string()),
             ("dram_trefi_ns", self.dram_trefi_ns.to_string()),
             ("dram_trfc_ns", self.dram_trfc_ns.to_string()),
+            ("dram_tras_ns", self.dram_tras_ns.to_string()),
+            ("dram_trrd_ns", self.dram_trrd_ns.to_string()),
+            ("dram_tfaw_ns", self.dram_tfaw_ns.to_string()),
+            (
+                "dram_ranks_per_channel",
+                self.dram_ranks_per_channel.to_string(),
+            ),
+            ("dram_row_policy", self.dram_row_policy.to_string()),
+            ("dram_wq_high", self.dram_wq_high.to_string()),
+            ("dram_wq_low", self.dram_wq_low.to_string()),
+            ("dram_age_cap_ns", self.dram_age_cap_ns.to_string()),
             ("line_size", self.line_size.to_string()),
             ("tlb_entries", self.tlb_entries.to_string()),
             ("tlb_miss_ns", self.tlb_miss_ns.to_string()),
@@ -799,11 +915,54 @@ mod tests {
         assert_eq!(c.mem_backend, MemBackendKind::BankLevel);
         c.set("mem_backend", "fixed-latency").unwrap();
         assert_eq!(c.mem_backend, MemBackendKind::FixedLatency);
+        c.set("mem_backend", "cycle").unwrap();
+        assert_eq!(c.mem_backend, MemBackendKind::CycleAccurate);
+        c.set("mem_backend", "cycle-accurate").unwrap();
+        assert_eq!(c.mem_backend, MemBackendKind::CycleAccurate);
+        assert_eq!(c.mem_backend.to_string(), "cycle");
         assert!(c.set("mem_backend", "dramsim9000").is_err());
         let text = "mem_backend = bank\ndram_trfc_ns = 130.0\n";
         let c2 = SystemConfig::from_toml_str(text).unwrap();
         assert_eq!(c2.mem_backend, MemBackendKind::BankLevel);
         assert_eq!(c2.dram_trfc_ns, 130.0);
+        let c3 = SystemConfig::from_toml_str("mem_backend = cycle\n").unwrap();
+        assert_eq!(c3.mem_backend, MemBackendKind::CycleAccurate);
+    }
+
+    #[test]
+    fn cycle_knobs_parse_and_validate() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.dram_ranks_per_channel, 1);
+        assert_eq!(c.dram_row_policy, DramRowPolicy::Open);
+        c.set("dram_tras_ns", "30").unwrap();
+        c.set("dram_trrd_ns", "5").unwrap();
+        c.set("dram_tfaw_ns", "20").unwrap();
+        c.set("dram_ranks_per_channel", "2").unwrap();
+        c.set("dram_row_policy", "closed").unwrap();
+        c.set("dram_wq_high", "64").unwrap();
+        c.set("dram_wq_low", "8").unwrap();
+        c.set("dram_age_cap_ns", "1000").unwrap();
+        assert!(c.validate().is_ok());
+        assert_eq!(c.dram_row_policy, DramRowPolicy::Closed);
+        assert_eq!(c.dram_row_policy.to_string(), "closed");
+        assert!(c.set("dram_row_policy", "ajar").is_err());
+        // Ranks must be a power of two dividing banks_per_channel (16).
+        c.dram_ranks_per_channel = 3;
+        assert!(c.validate().is_err());
+        c.dram_ranks_per_channel = 32;
+        assert!(c.validate().is_err());
+        c.dram_ranks_per_channel = 4;
+        assert!(c.validate().is_ok());
+        // Watermarks: low strictly below high, high positive.
+        c.dram_wq_low = 64;
+        assert!(c.validate().is_err());
+        c.dram_wq_low = 0;
+        assert!(c.validate().is_ok());
+        c.dram_wq_high = 0;
+        assert!(c.validate().is_err());
+        c.dram_wq_high = 32;
+        c.dram_age_cap_ns = 0.0;
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -911,6 +1070,12 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = SystemConfig::default();
         c.dram_trfc_ns = c.dram_trefi_ns;
+        assert!(c.validate().is_err());
+        let mut c = SystemConfig::default();
+        c.dram_tras_ns = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = SystemConfig::default();
+        c.dram_tfaw_ns = f64::NAN;
         assert!(c.validate().is_err());
     }
 }

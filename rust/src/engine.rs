@@ -248,6 +248,12 @@ impl EngineRaw {
             mem_backend: cfg.mem_backend.to_string(),
             bank_conflicts: self.mem.row_conflicts,
             refresh_stalls: self.mem.refresh_stalls,
+            dram_row_hits: self.mem.row_hits,
+            dram_row_misses: self.mem.row_misses,
+            dram_acts: self.mem.acts,
+            dram_precharges: self.mem.precharges,
+            dram_wq_stalls: self.mem.wq_stalls,
+            dram_faw_stalls: self.mem.faw_stalls,
             cgp_pages: 0,
             fgp_pages: 0,
             migrated_pages: self.migrated_pages,
@@ -676,15 +682,18 @@ impl<'a> Engine<'a> {
                     }
                 }
                 let dst = mapper.stack_of(paddr, gran);
+                // The direction flag only matters to the cycle-accurate
+                // backend's posted-write path; the other backends ignore
+                // it, keeping their completion times bit-identical.
                 let done = if dst == smo.stack {
                     stats.local += 1;
                     let t1 = net.local_hop(t, dst, line);
-                    stacks[dst].access(t1, paddr, line).done
+                    stacks[dst].access_rw(t1, paddr, line, a.write).done
                 } else {
                     stats.remote += 1;
                     // Request out, serve at the owner, response back.
                     let t1 = net.remote_hop(t, smo.stack, dst, line);
-                    let t2 = stacks[dst].access(t1, paddr, line).done;
+                    let t2 = stacks[dst].access_rw(t1, paddr, line, a.write).done;
                     net.remote_hop(t2, dst, smo.stack, line)
                 };
                 latency_sum += done - now;

@@ -31,7 +31,8 @@
 //!
 //! Memory timing is a pluggable subsystem: every stack's DRAM is served by
 //! a [`mem::MemBackend`], selected through
-//! [`config::SystemConfig::mem_backend`] (CLI `--mem-backend fixed|bank`):
+//! [`config::SystemConfig::mem_backend`] (CLI `--mem-backend
+//! fixed|bank|cycle`):
 //!
 //! * `fixed` ([`mem::FixedLatency`]) — the original open-row channel model
 //!   with fixed hit/miss service latency; cheap, and the default all
@@ -39,6 +40,11 @@
 //! * `bank` ([`mem::BankLevel`]) — per-bank row-buffer state
 //!   (hit/miss/conflict), bank-group column-command gaps, and periodic
 //!   refresh windows; DRAMsim-class fidelity for sensitivity studies.
+//! * `cycle` ([`mem::CycleAccurate`]) — explicit ACT/PRE/RD/WR command
+//!   scheduling (tRCD/tRP/tRAS/tCCD/tRRD/tFAW), FR-FCFS posted-write
+//!   draining, per-rank staggered refresh and an open/closed row policy,
+//!   verified on every debug/test run by the [`mem::protocol`] legality
+//!   checker.
 //!
 //! Backends may only shape time: placement, translation and scheduling
 //! never observe them, so local/remote access *counts* are byte-identical

@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! coda run <BENCH>        [--mechanism coda|fgp|cgp|fta|migrate|fgp-affinity|steal]
-//!                         [--mem-backend fixed|bank]
+//!                         [--mem-backend fixed|bank|cycle]
 //!                         [--config file.toml] [--set key=value]... [--json]
 //! coda run <SPEC.toml>    # declarative experiment spec (see examples/)
 //! coda compare <BENCH>            # all mechanisms side by side
@@ -619,7 +619,7 @@ fn print_help() {
          \n\
          COMMON OPTIONS\n\
          \x20 --mechanism coda|fgp|cgp|fta|migrate|fgp-affinity|steal\n\
-         \x20 --mem-backend fixed|bank        DRAM timing backend\n\
+         \x20 --mem-backend fixed|bank|cycle  DRAM timing backend\n\
          \x20 --config FILE  --set k=v,...    config file / inline overrides\n\
          \x20 --json                          machine-readable report\n\
          \x20 --baselines auto|none|solo|host-split   run-alone baseline policy\n\
@@ -638,7 +638,10 @@ fn print_help() {
          stack), l2_hits, remote_fraction, remote_bytes, mean_mem_latency,\n\
          tlb_hit_rate, row_hit_rate, mem_backend, bank_conflicts,\n\
          refresh_stalls, cgp_pages/fgp_pages/migrated_pages (placement),\n\
-         stack_bytes (per-stack DRAM bytes). Mix runs add app_cycles,\n\
+         stack_bytes (per-stack DRAM bytes). Cycle-backend runs\n\
+         (--mem-backend cycle) add dram_row_hits, dram_row_misses,\n\
+         dram_acts, dram_precharges, dram_wq_stalls and dram_faw_stalls\n\
+         (per-command counters). Mix runs add app_cycles,\n\
          app_slowdown, weighted_speedup; hostmix runs add host, host_ddr\n\
          (host accesses by destination), host_cycles, host_slowdown,\n\
          ndp_slowdown, host_bytes, host_ddr_bytes, host_port_stalls and\n\

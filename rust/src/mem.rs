@@ -3,7 +3,7 @@
 //! Memory timing is a pluggable subsystem behind the [`MemBackend`] trait;
 //! the backend is selected per run from
 //! [`SystemConfig::mem_backend`](crate::config::SystemConfig) (CLI:
-//! `--mem-backend fixed|bank`). Two backends ship:
+//! `--mem-backend fixed|bank|cycle`). Three backends ship:
 //!
 //! * [`FixedLatency`] — the original model. Each stack contains
 //!   `channels_per_stack` channels; each channel owns `banks_per_channel`
@@ -24,10 +24,24 @@
 //!   periodic all-bank refresh windows (every tREFI the channel is blocked
 //!   for tRFC and all rows close).
 //!
-//! Both backends must agree on *which* accesses happen — placement and
+//! * [`CycleAccurate`] — explicit command scheduling: every access is an
+//!   ACT/PRE/RD/WR sequence subject to the full JEDEC-style constraint set
+//!   (tRCD, tRP, tRAS, tCAS, tCCD_S/L, tRRD, tFAW), writes are posted into
+//!   a per-channel FR-FCFS queue drained by high/low watermarks and an
+//!   aging cap, refresh is staggered per rank, and the row policy is
+//!   configurable (open/closed). In debug/test builds every emitted
+//!   command is replayed through the [`protocol`] legality checker, which
+//!   panics on any timing or state-machine violation — the model cannot
+//!   silently drift from the protocol it claims to implement.
+//!
+//! All backends must agree on *which* accesses happen — placement and
 //! translation never consult the timing model — so switching backends may
 //! only move cycle counts, never local/remote access splits
-//! (`tests/backends.rs` locks this in).
+//! (`tests/backends.rs` locks this in). Backends expose only an
+//! execute-once-and-stall interface ([`MemBackend::access`] mutates state
+//! and returns the completion time); there is deliberately no
+//! side-effect-free "query the latency" entry point, which a stateful
+//! command-level model could not answer honestly.
 
 use crate::config::{MemBackendKind, SystemConfig};
 
@@ -54,6 +68,15 @@ pub struct MemStats {
     pub row_conflicts: u64,
     /// Accesses delayed by an in-progress refresh window (bank-level only).
     pub refresh_stalls: u64,
+    /// ACT commands issued (cycle-accurate backend only).
+    pub acts: u64,
+    /// Precharges, explicit PRE plus auto-precharge (cycle-accurate only).
+    pub precharges: u64,
+    /// Writes that stalled their requester on a forced write-queue drain
+    /// (cycle-accurate only).
+    pub wq_stalls: u64,
+    /// ACTs delayed by the four-activate window tFAW (cycle-accurate only).
+    pub faw_stalls: u64,
 }
 
 impl MemStats {
@@ -74,6 +97,10 @@ impl MemStats {
         self.row_misses += other.row_misses;
         self.row_conflicts += other.row_conflicts;
         self.refresh_stalls += other.refresh_stalls;
+        self.acts += other.acts;
+        self.precharges += other.precharges;
+        self.wq_stalls += other.wq_stalls;
+        self.faw_stalls += other.faw_stalls;
     }
 }
 
@@ -128,8 +155,8 @@ pub trait MemBackend {
 /// The [`MemBackend`] trait stays the extension seam (new backends — a
 /// DRAMsim3 FFI bridge, say — still implement it, and the frozen
 /// differential oracles keep consuming `Box<dyn MemBackend>`), but the
-/// engine itself routes every access through this enum: a two-way branch
-/// the optimizer can inline both arms of, instead of a vtable load +
+/// engine itself routes every access through this enum: a small branch
+/// the optimizer can inline every arm of, instead of a vtable load +
 /// indirect call per simulated access. Wrapping a backend in the enum
 /// changes dispatch only — the arms run the exact same code as the boxed
 /// form, so every completion time stays bit-identical (the differential
@@ -138,6 +165,7 @@ pub trait MemBackend {
 pub enum MemBackendImpl {
     Fixed(FixedLatency),
     Bank(BankLevel),
+    Cycle(CycleAccurate),
 }
 
 impl MemBackendImpl {
@@ -146,6 +174,7 @@ impl MemBackendImpl {
         match cfg.mem_backend {
             MemBackendKind::FixedLatency => Self::Fixed(FixedLatency::new(cfg)),
             MemBackendKind::BankLevel => Self::Bank(BankLevel::new(cfg)),
+            MemBackendKind::CycleAccurate => Self::Cycle(CycleAccurate::new(cfg)),
         }
     }
 
@@ -155,6 +184,20 @@ impl MemBackendImpl {
         match self {
             Self::Fixed(b) => b.access(now, addr, bytes),
             Self::Bank(b) => b.access(now, addr, bytes),
+            Self::Cycle(b) => b.do_access(now, addr, bytes, false),
+        }
+    }
+
+    /// Service one access with its read/write direction. `Fixed` and
+    /// `Bank` time reads and writes identically, so those arms stay
+    /// bit-identical to [`Self::access`]; only the cycle-accurate
+    /// backend's posted-write path consumes the flag.
+    #[inline]
+    pub fn access_rw(&mut self, now: f64, addr: u64, bytes: u64, write: bool) -> DramResult {
+        match self {
+            Self::Fixed(b) => b.access(now, addr, bytes),
+            Self::Bank(b) => b.access(now, addr, bytes),
+            Self::Cycle(b) => b.do_access(now, addr, bytes, write),
         }
     }
 }
@@ -168,6 +211,7 @@ impl MemBackend for MemBackendImpl {
         match self {
             Self::Fixed(b) => b.earliest_free(),
             Self::Bank(b) => b.earliest_free(),
+            Self::Cycle(b) => b.earliest_free(),
         }
     }
 
@@ -175,6 +219,7 @@ impl MemBackend for MemBackendImpl {
         match self {
             Self::Fixed(b) => b.stats(),
             Self::Bank(b) => b.stats(),
+            Self::Cycle(b) => b.stats(),
         }
     }
 
@@ -182,6 +227,7 @@ impl MemBackend for MemBackendImpl {
         match self {
             Self::Fixed(b) => b.kind(),
             Self::Bank(b) => b.kind(),
+            Self::Cycle(b) => b.kind(),
         }
     }
 }
@@ -191,6 +237,7 @@ pub fn make_backend(cfg: &SystemConfig) -> Box<dyn MemBackend> {
     match cfg.mem_backend {
         MemBackendKind::FixedLatency => Box::new(FixedLatency::new(cfg)),
         MemBackendKind::BankLevel => Box::new(BankLevel::new(cfg)),
+        MemBackendKind::CycleAccurate => Box::new(CycleAccurate::new(cfg)),
     }
 }
 
@@ -537,6 +584,945 @@ impl MemBackend for BankLevel {
     }
 }
 
+// ---------------------------------------------------------------------------
+// protocol: JEDEC-style command-legality checking for CycleAccurate.
+// ---------------------------------------------------------------------------
+
+pub mod protocol {
+    //! Streaming legality checker for the command sequences
+    //! [`super::CycleAccurate`] emits.
+    //!
+    //! The checker replays every ACT/PRE/RD/WR against the JEDEC-style
+    //! timing constraints and the per-bank row state machine, fully
+    //! independently of the backend's scheduler: it shares only the pure
+    //! helpers in this module ([`refresh_epoch`], [`blackout_end`],
+    //! [`auto_pre_ready`]) that *define* the protocol, never the code that
+    //! schedules against it. In debug/test builds the backend feeds it
+    //! every command it issues and panics on the first violation, so a
+    //! scheduling bug fails loudly instead of skewing results.
+
+    use crate::config::SystemConfig;
+
+    /// Comparison slack for timing inequalities. The backend and checker
+    /// compute bounds from the same f64 command times, so exact
+    /// comparisons would work; the epsilon guards against reassociated
+    /// arithmetic under future refactors.
+    const EPS: f64 = 1e-9;
+
+    /// Geometry and timing parameters, all times in SM cycles.
+    #[derive(Clone, Copy, Debug, PartialEq)]
+    pub struct Params {
+        /// Channels per stack (power of two).
+        pub channels: usize,
+        /// Ranks per channel.
+        pub ranks: usize,
+        /// Banks per channel (power of two).
+        pub banks: usize,
+        /// Bank groups per channel (group = bank % groups).
+        pub bank_groups: usize,
+        /// Row-to-column delay (ACT -> RD/WR).
+        pub trcd: f64,
+        /// Precharge time (PRE -> ACT).
+        pub trp: f64,
+        /// Minimum row-active time (ACT -> PRE).
+        pub tras: f64,
+        /// ACT-to-ACT gap between banks of one rank.
+        pub trrd: f64,
+        /// Four-activate window per rank.
+        pub tfaw: f64,
+        /// Column-command gap within one bank group.
+        pub tccd_l: f64,
+        /// Column-command gap across bank groups.
+        pub tccd_s: f64,
+        /// Refresh interval.
+        pub trefi: f64,
+        /// Refresh blackout length.
+        pub trfc: f64,
+        /// Command-bus gap between consecutive commands on one channel.
+        pub cmd_gap: f64,
+    }
+
+    impl Params {
+        /// Derive parameters from a system config, matching
+        /// [`super::CycleAccurate::new`]'s geometry bit-for-bit (same
+        /// `next_power_of_two` rounding, same cycle conversion).
+        pub fn from_config(cfg: &SystemConfig) -> Self {
+            let n_chan = cfg.channels_per_stack.next_power_of_two();
+            let n_banks = cfg.banks_per_channel.next_power_of_two();
+            let cyc = cfg.cycles_per_ns();
+            Self {
+                channels: n_chan,
+                ranks: cfg.dram_ranks_per_channel.min(n_banks),
+                banks: n_banks,
+                bank_groups: cfg.bank_groups_per_channel.min(n_banks),
+                trcd: cfg.dram_trcd_ns * cyc,
+                trp: cfg.dram_trp_ns * cyc,
+                tras: cfg.dram_tras_ns * cyc,
+                trrd: cfg.dram_trrd_ns * cyc,
+                tfaw: cfg.dram_tfaw_ns * cyc,
+                tccd_l: cfg.dram_tccd_l_ns * cyc,
+                tccd_s: cfg.dram_tccd_s_ns * cyc,
+                trefi: cfg.dram_trefi_ns * cyc,
+                trfc: cfg.dram_trfc_ns * cyc,
+                cmd_gap: 1.0,
+            }
+        }
+
+        /// Refresh stagger offset of rank `r`: rank windows are spread
+        /// evenly across one tREFI.
+        pub fn rank_offset(&self, rank: usize) -> f64 {
+            rank as f64 * self.trefi / self.ranks as f64
+        }
+    }
+
+    /// Refresh window index at time `t` for a rank whose windows start at
+    /// `offset + k * trefi`. Window 0 is exempt from the blackout (the
+    /// simulation starts right after the initialization refresh).
+    pub fn refresh_epoch(trefi: f64, offset: f64, t: f64) -> u64 {
+        if t <= offset {
+            0
+        } else {
+            ((t - offset) / trefi) as u64
+        }
+    }
+
+    /// End of window `epoch`'s tRFC blackout.
+    pub fn blackout_end(trefi: f64, trfc: f64, offset: f64, epoch: u64) -> f64 {
+        offset + epoch as f64 * trefi + trfc
+    }
+
+    /// Earliest next ACT after an auto-precharging column command at
+    /// `t_col` on a row activated at `act_at`: the internal precharge may
+    /// not start before tRAS is satisfied.
+    pub fn auto_pre_ready(t_col: f64, act_at: f64, tras: f64, trp: f64) -> f64 {
+        t_col.max(act_at + tras) + trp
+    }
+
+    /// One DRAM command as the backend emitted it.
+    #[derive(Clone, Copy, Debug, PartialEq)]
+    pub struct Command {
+        /// Issue time (SM cycles).
+        pub time: f64,
+        pub channel: usize,
+        pub bank: usize,
+        pub kind: CmdKind,
+    }
+
+    #[derive(Clone, Copy, Debug, PartialEq)]
+    pub enum CmdKind {
+        /// Activate `row` on the bank.
+        Act { row: u64 },
+        /// Explicit precharge.
+        Pre,
+        /// Column read; `auto` = auto-precharge (RDA).
+        Rd { row: u64, auto: bool },
+        /// Column write; `auto` = auto-precharge (WRA).
+        Wr { row: u64, auto: bool },
+    }
+
+    /// Why a command sequence is illegal.
+    #[derive(Clone, Debug, PartialEq)]
+    pub enum Violation {
+        BadIndex { channel: usize, bank: usize },
+        NonMonotone { at: f64, prev: f64 },
+        RefreshBlackout { at: f64, until: f64 },
+        ActOnOpenBank { at: f64 },
+        ActBeforePrecharge { at: f64, ready: f64 },
+        ActBeforeTrrd { at: f64, need: f64 },
+        ActBeforeTfaw { at: f64, need: f64 },
+        PreOnClosedBank { at: f64 },
+        PreBeforeTras { at: f64, need: f64 },
+        ColOnClosedBank { at: f64 },
+        ColRowMismatch { at: f64, open: u64, want: u64 },
+        ColBeforeTrcd { at: f64, need: f64 },
+        ColBeforeCcd { at: f64, need: f64 },
+    }
+
+    impl std::fmt::Display for Violation {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            match self {
+                Self::BadIndex { channel, bank } => {
+                    write!(f, "command addresses channel {channel} bank {bank} out of range")
+                }
+                Self::NonMonotone { at, prev } => {
+                    write!(f, "command at {at} violates the channel command bus (prev {prev})")
+                }
+                Self::RefreshBlackout { at, until } => {
+                    write!(f, "command at {at} inside a refresh blackout ending {until}")
+                }
+                Self::ActOnOpenBank { at } => write!(f, "ACT at {at} on an open bank"),
+                Self::ActBeforePrecharge { at, ready } => {
+                    write!(f, "ACT at {at} before precharge completes at {ready}")
+                }
+                Self::ActBeforeTrrd { at, need } => {
+                    write!(f, "ACT at {at} violates tRRD (earliest {need})")
+                }
+                Self::ActBeforeTfaw { at, need } => {
+                    write!(f, "ACT at {at} violates tFAW (earliest {need})")
+                }
+                Self::PreOnClosedBank { at } => write!(f, "PRE at {at} on a closed bank"),
+                Self::PreBeforeTras { at, need } => {
+                    write!(f, "PRE at {at} violates tRAS (earliest {need})")
+                }
+                Self::ColOnClosedBank { at } => {
+                    write!(f, "column command at {at} on a closed bank")
+                }
+                Self::ColRowMismatch { at, open, want } => {
+                    write!(f, "column command at {at} to row {want} but row {open} is open")
+                }
+                Self::ColBeforeTrcd { at, need } => {
+                    write!(f, "column command at {at} violates tRCD (earliest {need})")
+                }
+                Self::ColBeforeCcd { at, need } => {
+                    write!(f, "column command at {at} violates tCCD (earliest {need})")
+                }
+            }
+        }
+    }
+
+    #[derive(Clone, Debug)]
+    struct CkBank {
+        open_row: u64,
+        act_at: f64,
+        pre_ready: f64,
+        epoch: u64,
+    }
+
+    #[derive(Clone, Debug)]
+    struct CkRank {
+        last_act: f64,
+        /// Ring of the last four ACT times (tFAW window).
+        faw: [f64; 4],
+        faw_idx: usize,
+    }
+
+    #[derive(Clone, Debug)]
+    struct CkChannel {
+        last_time: Option<f64>,
+        last_col: Option<(usize, f64)>,
+        banks: Vec<CkBank>,
+        ranks: Vec<CkRank>,
+    }
+
+    /// Streaming checker: feed it every command, in per-channel issue
+    /// order, via [`Checker::check`].
+    #[derive(Clone, Debug)]
+    pub struct Checker {
+        p: Params,
+        channels: Vec<CkChannel>,
+        /// Commands vetted so far (diagnostics; proves the checker ran).
+        pub checked: u64,
+    }
+
+    impl Checker {
+        pub fn new(p: Params) -> Self {
+            let banks_per_rank = p.banks / p.ranks;
+            debug_assert!(banks_per_rank * p.ranks == p.banks);
+            Self {
+                p,
+                channels: vec![
+                    CkChannel {
+                        last_time: None,
+                        last_col: None,
+                        banks: vec![
+                            CkBank {
+                                open_row: u64::MAX,
+                                act_at: f64::NEG_INFINITY,
+                                pre_ready: 0.0,
+                                epoch: 0,
+                            };
+                            p.banks
+                        ],
+                        ranks: vec![
+                            CkRank {
+                                last_act: f64::NEG_INFINITY,
+                                faw: [f64::NEG_INFINITY; 4],
+                                faw_idx: 0,
+                            };
+                            p.ranks
+                        ],
+                    };
+                    p.channels
+                ],
+                checked: 0,
+            }
+        }
+
+        /// Validate one command and advance the reference state machine.
+        pub fn check(&mut self, cmd: Command) -> Result<(), Violation> {
+            let p = self.p;
+            if cmd.channel >= self.channels.len() || cmd.bank >= p.banks {
+                return Err(Violation::BadIndex {
+                    channel: cmd.channel,
+                    bank: cmd.bank,
+                });
+            }
+            let rank_idx = cmd.bank / (p.banks / p.ranks);
+            let group = cmd.bank % p.bank_groups;
+            let offset = p.rank_offset(rank_idx);
+            let t = cmd.time;
+            let ch = &mut self.channels[cmd.channel];
+            if let Some(prev) = ch.last_time {
+                if t < prev + p.cmd_gap - EPS {
+                    return Err(Violation::NonMonotone { at: t, prev });
+                }
+            }
+            // Refresh: crossing a window boundary closes the bank's row
+            // (all-bank refresh precharges), and no command may issue
+            // inside the window-opening tRFC blackout.
+            let e = refresh_epoch(p.trefi, offset, t);
+            if e > ch.banks[cmd.bank].epoch {
+                ch.banks[cmd.bank].epoch = e;
+                ch.banks[cmd.bank].open_row = u64::MAX;
+            }
+            if e > 0 {
+                let until = blackout_end(p.trefi, p.trfc, offset, e);
+                if t < until - EPS {
+                    return Err(Violation::RefreshBlackout { at: t, until });
+                }
+            }
+            match cmd.kind {
+                CmdKind::Act { row } => {
+                    let bank = &ch.banks[cmd.bank];
+                    if bank.open_row != u64::MAX {
+                        return Err(Violation::ActOnOpenBank { at: t });
+                    }
+                    if t < bank.pre_ready - EPS {
+                        return Err(Violation::ActBeforePrecharge {
+                            at: t,
+                            ready: bank.pre_ready,
+                        });
+                    }
+                    let rank = &ch.ranks[rank_idx];
+                    let trrd_gate = rank.last_act + p.trrd;
+                    if t < trrd_gate - EPS {
+                        return Err(Violation::ActBeforeTrrd { at: t, need: trrd_gate });
+                    }
+                    // The oldest entry in the 4-slot ring is the ACT four
+                    // activates ago: a fifth ACT within tFAW of it is illegal.
+                    let faw_gate = rank.faw[rank.faw_idx] + p.tfaw;
+                    if t < faw_gate - EPS {
+                        return Err(Violation::ActBeforeTfaw { at: t, need: faw_gate });
+                    }
+                    let bank = &mut ch.banks[cmd.bank];
+                    bank.open_row = row;
+                    bank.act_at = t;
+                    let rank = &mut ch.ranks[rank_idx];
+                    rank.last_act = t;
+                    rank.faw[rank.faw_idx] = t;
+                    rank.faw_idx = (rank.faw_idx + 1) % 4;
+                }
+                CmdKind::Pre => {
+                    let bank = &ch.banks[cmd.bank];
+                    if bank.open_row == u64::MAX {
+                        return Err(Violation::PreOnClosedBank { at: t });
+                    }
+                    let tras_gate = bank.act_at + p.tras;
+                    if t < tras_gate - EPS {
+                        return Err(Violation::PreBeforeTras { at: t, need: tras_gate });
+                    }
+                    let bank = &mut ch.banks[cmd.bank];
+                    bank.open_row = u64::MAX;
+                    bank.pre_ready = t + p.trp;
+                }
+                CmdKind::Rd { row, auto } | CmdKind::Wr { row, auto } => {
+                    let bank = &ch.banks[cmd.bank];
+                    if bank.open_row == u64::MAX {
+                        return Err(Violation::ColOnClosedBank { at: t });
+                    }
+                    if bank.open_row != row {
+                        return Err(Violation::ColRowMismatch {
+                            at: t,
+                            open: bank.open_row,
+                            want: row,
+                        });
+                    }
+                    let trcd_gate = bank.act_at + p.trcd;
+                    if t < trcd_gate - EPS {
+                        return Err(Violation::ColBeforeTrcd { at: t, need: trcd_gate });
+                    }
+                    if let Some((g, lt)) = ch.last_col {
+                        let gap = if g == group { p.tccd_l } else { p.tccd_s };
+                        if t < lt + gap - EPS {
+                            return Err(Violation::ColBeforeCcd { at: t, need: lt + gap });
+                        }
+                    }
+                    ch.last_col = Some((group, t));
+                    if auto {
+                        let act_at = ch.banks[cmd.bank].act_at;
+                        let bank = &mut ch.banks[cmd.bank];
+                        bank.open_row = u64::MAX;
+                        bank.pre_ready = auto_pre_ready(t, act_at, p.tras, p.trp);
+                    }
+                }
+            }
+            ch.last_time = Some(t);
+            self.checked += 1;
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CycleAccurate: explicit command scheduling, FR-FCFS write drain, checker.
+// ---------------------------------------------------------------------------
+
+/// Command-bus gap between consecutive commands on one channel (cycles).
+const CMD_GAP: f64 = 1.0;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RowOutcome {
+    Hit,
+    Miss,
+    Conflict,
+}
+
+#[derive(Clone, Debug)]
+struct CycBank {
+    /// Currently open row; u64::MAX = precharged (closed).
+    open_row: u64,
+    /// Issue time of the ACT that opened the current/last row.
+    act_at: f64,
+    /// Earliest time the next ACT may issue (precharge completion).
+    pre_ready: f64,
+    /// Last refresh window this bank observed.
+    refresh_epoch: u64,
+}
+
+#[derive(Clone, Debug)]
+struct CycRank {
+    last_act: f64,
+    /// Ring of the last four ACT times (tFAW window).
+    faw: [f64; 4],
+    faw_idx: usize,
+}
+
+#[derive(Clone, Debug)]
+struct PendingWrite {
+    arrival: f64,
+    bank: usize,
+    row: u64,
+    bytes: u64,
+}
+
+#[derive(Clone, Debug)]
+struct CycChannel {
+    banks: Vec<CycBank>,
+    ranks: Vec<CycRank>,
+    /// Command-bus time: the next command issues at or after this.
+    clock: f64,
+    /// Data-bus busy-until time.
+    bus_free: f64,
+    /// Last column command: (bank group, issue time).
+    last_col: Option<(usize, f64)>,
+    /// Posted writes awaiting an FR-FCFS drain.
+    wq: Vec<PendingWrite>,
+    bytes_served: u64,
+    row_hits: u64,
+    row_misses: u64,
+    row_conflicts: u64,
+    refresh_stalls: u64,
+    acts: u64,
+    precharges: u64,
+    wq_stalls: u64,
+    faw_stalls: u64,
+}
+
+/// Timing/geometry bundle shared by the scheduler's free functions (kept
+/// separate from the channel array so the borrow checker can split them).
+#[derive(Clone, Debug)]
+struct CycTiming {
+    p: protocol::Params,
+    tcl: f64,
+    age_cap: f64,
+    closed: bool,
+    wq_high: usize,
+    wq_low: usize,
+    banks_per_rank: usize,
+    bytes_per_cycle: f64,
+}
+
+/// Cycle-accurate DRAM timing: every access becomes an explicit
+/// ACT/PRE/RD/WR command sequence scheduled against the full JEDEC-style
+/// constraint set, with FR-FCFS posted-write draining, per-rank staggered
+/// refresh and a configurable row policy.
+///
+/// Reads execute immediately (execute-once-and-stall: the call mutates
+/// state and returns the completion time); writes are posted into a
+/// per-channel queue and drained in FR-FCFS order — overdue writes
+/// (older than `dram_age_cap_ns`) first, then row hits oldest-first,
+/// then the oldest — when the high watermark forces a drain to the low
+/// watermark or the aging cap fires. A forced drain stalls the requester
+/// (`wq_stalls`). Write bytes are counted when posted, so byte totals
+/// close even if the run ends with writes still queued (those never get
+/// row-state classification).
+///
+/// In debug/test builds every emitted command is replayed through
+/// [`protocol::Checker`]; a violation panics with the offending command.
+#[derive(Clone, Debug)]
+pub struct CycleAccurate {
+    channels: Vec<CycChannel>,
+    chan_shift: u32,
+    chan_mask: u64,
+    bank_shift: u32,
+    bank_mask: u64,
+    row_shift: u32,
+    tim: CycTiming,
+    checker: Option<protocol::Checker>,
+    trace: Option<Vec<protocol::Command>>,
+}
+
+/// Schedule and commit the command sequence for one line transfer.
+/// `count_bytes` is false when draining a posted write whose bytes were
+/// already counted at accept time.
+#[allow(clippy::too_many_arguments)]
+fn cyc_serve(
+    tim: &CycTiming,
+    chan: &mut CycChannel,
+    checker: &mut Option<protocol::Checker>,
+    trace: &mut Option<Vec<protocol::Command>>,
+    chan_idx: usize,
+    now: f64,
+    bank_idx: usize,
+    row: u64,
+    bytes: u64,
+    write: bool,
+    count_bytes: bool,
+) -> DramResult {
+    use protocol::{blackout_end, refresh_epoch};
+    let p = &tim.p;
+    let group = bank_idx % p.bank_groups;
+    let rank_idx = bank_idx / tim.banks_per_rank;
+    let offset = p.rank_offset(rank_idx);
+    // Push a candidate command time out of its window's tRFC blackout
+    // (tRFC < tREFI keeps the result inside the same window).
+    let clear = |t: f64| -> f64 {
+        let e = refresh_epoch(p.trefi, offset, t);
+        if e == 0 {
+            return t;
+        }
+        let end = blackout_end(p.trefi, p.trfc, offset, e);
+        if t < end {
+            end
+        } else {
+            t
+        }
+    };
+
+    let mut floor = now.max(chan.clock);
+    let mut refresh_stall = false;
+    // The whole sequence is scheduled as pure arithmetic and committed
+    // only once every command lands in the epoch the access was
+    // classified under — a refresh boundary mid-sequence would have
+    // closed the row underneath a PRE or column command.
+    let (epoch, t_pre, t_act, t_col, outcome, faw_stall) = loop {
+        let start = clear(floor);
+        if start > floor {
+            refresh_stall = true;
+        }
+        let e = refresh_epoch(p.trefi, offset, start);
+        let bank = &chan.banks[bank_idx];
+        // Effective bank state at epoch `e`: crossing a window closes the
+        // row, and the bank is unavailable through the blackout.
+        let crossed = e > bank.refresh_epoch;
+        let open_row = if crossed { u64::MAX } else { bank.open_row };
+        let pre_ready = if crossed {
+            bank.pre_ready.max(blackout_end(p.trefi, p.trfc, offset, e))
+        } else {
+            bank.pre_ready
+        };
+        let hit = !tim.closed && open_row == row;
+        let conflict = !tim.closed && !hit && open_row != u64::MAX;
+        let mut cursor = start;
+        // Explicit PRE closes a conflicting row (tRAS-gated).
+        let t_pre = if conflict {
+            let t = clear(cursor.max(bank.act_at + p.tras));
+            cursor = t + CMD_GAP;
+            Some(t)
+        } else {
+            None
+        };
+        // ACT opens the target row; the closed policy re-activates on
+        // every access. Gated by precharge completion, tRRD, and tFAW.
+        let mut faw_stall = false;
+        let t_act = if !hit {
+            let ready = t_pre.map_or(pre_ready, |tp| tp + p.trp);
+            let rank = &chan.ranks[rank_idx];
+            let base = cursor.max(ready).max(rank.last_act + p.trrd);
+            let faw_gate = rank.faw[rank.faw_idx] + p.tfaw;
+            faw_stall = faw_gate > base;
+            let t = clear(base.max(faw_gate));
+            cursor = t + CMD_GAP;
+            Some(t)
+        } else {
+            None
+        };
+        let act_at = t_act.unwrap_or(bank.act_at);
+        // Column command: tRCD after the activate, tCCD_L/S after the
+        // channel's previous column command.
+        let mut col = cursor.max(act_at + p.trcd);
+        if let Some((g, lt)) = chan.last_col {
+            let gap = if g == group { p.tccd_l } else { p.tccd_s };
+            col = col.max(lt + gap);
+        }
+        let t_col = clear(col);
+        if refresh_epoch(p.trefi, offset, t_col) > e {
+            // Reschedule the whole sequence past the boundary it straddled.
+            floor = offset + refresh_epoch(p.trefi, offset, t_col) as f64 * p.trefi;
+            refresh_stall = true;
+            continue;
+        }
+        let outcome = if hit {
+            RowOutcome::Hit
+        } else if conflict {
+            RowOutcome::Conflict
+        } else {
+            RowOutcome::Miss
+        };
+        break (e, t_pre, t_act, t_col, outcome, faw_stall);
+    };
+
+    // Commit: emit the commands (checker + optional trace), then fold the
+    // schedule back into bank/rank/channel state.
+    let auto = tim.closed;
+    let mut emit = |t: f64, kind: protocol::CmdKind| {
+        let cmd = protocol::Command {
+            time: t,
+            channel: chan_idx,
+            bank: bank_idx,
+            kind,
+        };
+        if let Some(ck) = checker.as_mut() {
+            if let Err(v) = ck.check(cmd) {
+                panic!("DRAM protocol violation: {v} (cmd {cmd:?})");
+            }
+        }
+        if let Some(tr) = trace.as_mut() {
+            tr.push(cmd);
+        }
+    };
+    if let Some(tp) = t_pre {
+        emit(tp, protocol::CmdKind::Pre);
+    }
+    if let Some(ta) = t_act {
+        emit(ta, protocol::CmdKind::Act { row });
+    }
+    emit(
+        t_col,
+        if write {
+            protocol::CmdKind::Wr { row, auto }
+        } else {
+            protocol::CmdKind::Rd { row, auto }
+        },
+    );
+
+    let act_at = t_act.unwrap_or(chan.banks[bank_idx].act_at);
+    let bank = &mut chan.banks[bank_idx];
+    bank.refresh_epoch = epoch.max(bank.refresh_epoch);
+    bank.act_at = act_at;
+    if tim.closed {
+        bank.open_row = u64::MAX;
+        bank.pre_ready = protocol::auto_pre_ready(t_col, act_at, p.tras, p.trp);
+    } else {
+        bank.open_row = row;
+        if let Some(tp) = t_pre {
+            bank.pre_ready = tp + p.trp;
+        }
+    }
+    if let Some(ta) = t_act {
+        let rank = &mut chan.ranks[rank_idx];
+        rank.last_act = ta;
+        rank.faw[rank.faw_idx] = ta;
+        rank.faw_idx = (rank.faw_idx + 1) % 4;
+        chan.acts += 1;
+    }
+    if t_pre.is_some() || tim.closed {
+        chan.precharges += 1;
+    }
+    if faw_stall {
+        chan.faw_stalls += 1;
+    }
+    if refresh_stall {
+        chan.refresh_stalls += 1;
+    }
+    match outcome {
+        RowOutcome::Hit => chan.row_hits += 1,
+        RowOutcome::Miss => chan.row_misses += 1,
+        RowOutcome::Conflict => chan.row_conflicts += 1,
+    }
+    chan.last_col = Some((group, t_col));
+    chan.clock = t_col + CMD_GAP;
+    if count_bytes {
+        chan.bytes_served += bytes;
+    }
+    let data_start = (t_col + tim.tcl).max(chan.bus_free);
+    let occupancy = bytes as f64 / tim.bytes_per_cycle;
+    chan.bus_free = data_start + occupancy;
+    DramResult {
+        done: data_start + occupancy,
+        row_hit: outcome == RowOutcome::Hit,
+    }
+}
+
+/// Drain one posted write in FR-FCFS order: overdue (older than the aging
+/// cap) oldest first, then row hits oldest first, then the oldest.
+fn cyc_drain_one(
+    tim: &CycTiming,
+    chan: &mut CycChannel,
+    checker: &mut Option<protocol::Checker>,
+    trace: &mut Option<Vec<protocol::Command>>,
+    chan_idx: usize,
+    now: f64,
+) -> DramResult {
+    let mut best = 0usize;
+    let mut best_key = (u8::MAX, f64::INFINITY);
+    for (i, w) in chan.wq.iter().enumerate() {
+        let overdue = w.arrival <= now - tim.age_cap;
+        let row_hit = chan.banks[w.bank].open_row == w.row;
+        let class = if overdue {
+            0
+        } else if row_hit {
+            1
+        } else {
+            2
+        };
+        if class < best_key.0 || (class == best_key.0 && w.arrival < best_key.1) {
+            best = i;
+            best_key = (class, w.arrival);
+        }
+    }
+    let w = chan.wq.remove(best);
+    // A write can only be serviced once it has arrived; `now` may lag the
+    // arrival because request streams interleave non-monotonically.
+    let t = now.max(w.arrival);
+    cyc_serve(
+        tim, chan, checker, trace, chan_idx, t, w.bank, w.row, w.bytes, true, false,
+    )
+}
+
+impl CycleAccurate {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let p = protocol::Params::from_config(cfg);
+        let per_chan_bw = cfg.gbs_to_bytes_per_cycle(cfg.local_bw_gbs) / p.channels as f64;
+        let cyc = cfg.cycles_per_ns();
+        let tim = CycTiming {
+            p,
+            tcl: cfg.dram_tcl_ns * cyc,
+            age_cap: cfg.dram_age_cap_ns * cyc,
+            closed: cfg.dram_row_policy == crate::config::DramRowPolicy::Closed,
+            wq_high: cfg.dram_wq_high,
+            wq_low: cfg.dram_wq_low,
+            banks_per_rank: p.banks / p.ranks,
+            bytes_per_cycle: per_chan_bw,
+        };
+        Self {
+            channels: vec![
+                CycChannel {
+                    banks: vec![
+                        CycBank {
+                            open_row: u64::MAX,
+                            act_at: f64::NEG_INFINITY,
+                            pre_ready: 0.0,
+                            refresh_epoch: 0,
+                        };
+                        p.banks
+                    ],
+                    ranks: vec![
+                        CycRank {
+                            last_act: f64::NEG_INFINITY,
+                            faw: [f64::NEG_INFINITY; 4],
+                            faw_idx: 0,
+                        };
+                        p.ranks
+                    ],
+                    clock: 0.0,
+                    bus_free: 0.0,
+                    last_col: None,
+                    wq: Vec::new(),
+                    bytes_served: 0,
+                    row_hits: 0,
+                    row_misses: 0,
+                    row_conflicts: 0,
+                    refresh_stalls: 0,
+                    acts: 0,
+                    precharges: 0,
+                    wq_stalls: 0,
+                    faw_stalls: 0,
+                };
+                p.channels
+            ],
+            // Bit-for-bit the BankLevel/FixedLatency decode: channel bits
+            // right above the line bits, bank bits above those, row = the
+            // row_size-aligned frame (tests/dram_props.rs pins this).
+            chan_shift: cfg.line_size.trailing_zeros(),
+            chan_mask: p.channels as u64 - 1,
+            bank_shift: cfg.line_size.trailing_zeros() + (p.channels as u64).trailing_zeros(),
+            bank_mask: p.banks as u64 - 1,
+            row_shift: cfg.row_size.trailing_zeros(),
+            tim,
+            // The legality checker rides along on every debug/test-profile
+            // simulation; release builds drop it for speed.
+            checker: if cfg!(debug_assertions) {
+                Some(protocol::Checker::new(p))
+            } else {
+                None
+            },
+            trace: None,
+        }
+    }
+
+    #[inline]
+    fn decode(&self, addr: u64) -> (usize, usize, u64) {
+        (
+            ((addr >> self.chan_shift) & self.chan_mask) as usize,
+            ((addr >> self.bank_shift) & self.bank_mask) as usize,
+            addr >> self.row_shift,
+        )
+    }
+
+    /// Execute one access. Reads stall until data returns; writes post
+    /// into the channel's queue (and stall only on a forced drain).
+    fn do_access(&mut self, now: f64, addr: u64, bytes: u64, write: bool) -> DramResult {
+        // Aging sweep across every channel: no posted write may starve
+        // past the cap no matter which channel this access targets.
+        let cap = self.tim.age_cap;
+        for ci in 0..self.channels.len() {
+            while self.channels[ci]
+                .wq
+                .iter()
+                .any(|w| w.arrival <= now - cap)
+            {
+                cyc_drain_one(
+                    &self.tim,
+                    &mut self.channels[ci],
+                    &mut self.checker,
+                    &mut self.trace,
+                    ci,
+                    now,
+                );
+            }
+        }
+        let (ci, bank, row) = self.decode(addr);
+        if write {
+            // Posted write: count bytes at accept so totals close even if
+            // the run ends with writes still queued.
+            self.channels[ci].wq.push(PendingWrite {
+                arrival: now,
+                bank,
+                row,
+                bytes,
+            });
+            self.channels[ci].bytes_served += bytes;
+            if self.channels[ci].wq.len() >= self.tim.wq_high {
+                // High watermark: drain to the low watermark, stalling the
+                // requester for the duration.
+                self.channels[ci].wq_stalls += 1;
+                let mut end = now;
+                while self.channels[ci].wq.len() > self.tim.wq_low {
+                    let r = cyc_drain_one(
+                        &self.tim,
+                        &mut self.channels[ci],
+                        &mut self.checker,
+                        &mut self.trace,
+                        ci,
+                        now,
+                    );
+                    end = end.max(r.done);
+                }
+                return DramResult {
+                    done: end,
+                    row_hit: false,
+                };
+            }
+            return DramResult {
+                done: now,
+                row_hit: false,
+            };
+        }
+        cyc_serve(
+            &self.tim,
+            &mut self.channels[ci],
+            &mut self.checker,
+            &mut self.trace,
+            ci,
+            now,
+            bank,
+            row,
+            bytes,
+            false,
+            true,
+        )
+    }
+
+    /// Age of the oldest posted write still queued, measured at `now`
+    /// (0.0 when the queues are empty). Test hook for the FR-FCFS
+    /// starvation bound: after any access at `now`, this never exceeds
+    /// the aging cap.
+    pub fn max_queued_write_age(&self, now: f64) -> f64 {
+        self.channels
+            .iter()
+            .flat_map(|c| c.wq.iter())
+            .map(|w| (now - w.arrival).max(0.0))
+            .fold(0.0, f64::max)
+    }
+
+    /// Record every subsequently emitted command (test hook: replay the
+    /// trace through a fresh [`protocol::Checker`]).
+    pub fn enable_recording(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    /// Commands recorded since [`Self::enable_recording`].
+    pub fn recorded(&self) -> &[protocol::Command] {
+        self.trace.as_deref().unwrap_or(&[])
+    }
+
+    /// Commands vetted by the built-in checker (0 in release builds,
+    /// where the checker is compiled out).
+    pub fn commands_checked(&self) -> u64 {
+        self.checker.as_ref().map_or(0, |c| c.checked)
+    }
+
+    /// The checker/scheduler parameter bundle (test hook: build an
+    /// independent [`protocol::Checker`] with identical geometry).
+    pub fn protocol_params(&self) -> protocol::Params {
+        self.tim.p
+    }
+}
+
+impl MemBackend for CycleAccurate {
+    fn access(&mut self, now: f64, addr: u64, bytes: u64) -> DramResult {
+        self.do_access(now, addr, bytes, false)
+    }
+
+    fn earliest_free(&self) -> f64 {
+        self.channels
+            .iter()
+            .map(|c| c.bus_free)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    fn stats(&self) -> MemStats {
+        let mut s = MemStats::default();
+        for c in &self.channels {
+            s.bytes_served += c.bytes_served;
+            s.row_hits += c.row_hits;
+            s.row_misses += c.row_misses;
+            s.row_conflicts += c.row_conflicts;
+            s.refresh_stalls += c.refresh_stalls;
+            s.acts += c.acts;
+            s.precharges += c.precharges;
+            s.wq_stalls += c.wq_stalls;
+            s.faw_stalls += c.faw_stalls;
+        }
+        s
+    }
+
+    fn kind(&self) -> MemBackendKind {
+        MemBackendKind::CycleAccurate
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -548,6 +1534,12 @@ mod tests {
     fn bank_cfg() -> SystemConfig {
         let mut c = cfg();
         c.mem_backend = MemBackendKind::BankLevel;
+        c
+    }
+
+    fn cycle_cfg() -> SystemConfig {
+        let mut c = cfg();
+        c.mem_backend = MemBackendKind::CycleAccurate;
         c
     }
 
@@ -619,25 +1611,37 @@ mod tests {
         let c = cfg();
         assert_eq!(make_backend(&c).kind(), MemBackendKind::FixedLatency);
         assert_eq!(make_backend(&bank_cfg()).kind(), MemBackendKind::BankLevel);
+        assert_eq!(
+            make_backend(&cycle_cfg()).kind(),
+            MemBackendKind::CycleAccurate
+        );
         assert_eq!(make_backends(&c).len(), c.num_stacks);
         assert_eq!(MemBackendImpl::new(&c).kind(), MemBackendKind::FixedLatency);
         assert_eq!(
             MemBackendImpl::new(&bank_cfg()).kind(),
             MemBackendKind::BankLevel
         );
+        assert_eq!(
+            MemBackendImpl::new(&cycle_cfg()).kind(),
+            MemBackendKind::CycleAccurate
+        );
         assert_eq!(make_backends_impl(&c).len(), c.num_stacks);
         assert_eq!(
             make_host_ddr_impl(&bank_cfg()).kind(),
             MemBackendKind::BankLevel
         );
+        assert_eq!(
+            make_host_ddr_impl(&cycle_cfg()).kind(),
+            MemBackendKind::CycleAccurate
+        );
     }
 
     /// Enum dispatch is a calling convention, not a model: driving the
     /// boxed and enum forms with the same request stream must produce
-    /// bit-identical completion times and counters, for both kinds.
+    /// bit-identical completion times and counters, for every kind.
     #[test]
     fn enum_dispatch_matches_boxed_dispatch_bit_exactly() {
-        for c in [cfg(), bank_cfg()] {
+        for c in [cfg(), bank_cfg(), cycle_cfg()] {
             let mut boxed = make_backend(&c);
             let mut inline = MemBackendImpl::new(&c);
             for i in 0..4096u64 {
@@ -814,5 +1818,184 @@ mod tests {
             m.stats().row_hits + m.stats().row_misses + m.stats().row_conflicts,
             64
         );
+    }
+
+    // -- CycleAccurate ------------------------------------------------------
+
+    /// Same channel + bank, three row states: hit < empty miss < conflict,
+    /// with the per-command counters to match.
+    #[test]
+    fn cycle_orders_hit_miss_conflict() {
+        let c = cycle_cfg();
+        let mut m = CycleAccurate::new(&c);
+        let row_stride = c.row_size;
+        let miss = m.do_access(0.0, 0, 128, false);
+        assert!(!miss.row_hit);
+        let t0 = miss.done;
+        let hit = m.do_access(t0, 0, 128, false);
+        assert!(hit.row_hit);
+        let hit_lat = hit.done - t0;
+        let t1 = hit.done;
+        let conf = m.do_access(t1, row_stride * 64, 128, false);
+        assert!(!conf.row_hit);
+        let conf_lat = conf.done - t1;
+        let miss_lat = t0;
+        assert!(
+            hit_lat < miss_lat && miss_lat < conf_lat,
+            "hit {hit_lat} < miss {miss_lat} < conflict {conf_lat}"
+        );
+        let s = m.stats();
+        assert_eq!(s.row_hits, 1);
+        assert_eq!(s.row_misses, 1);
+        assert_eq!(s.row_conflicts, 1);
+        // Two row openings (miss + conflict), one explicit precharge
+        // (closing the conflicting row).
+        assert_eq!(s.acts, 2);
+        assert_eq!(s.precharges, 1);
+        assert_eq!(s.faw_stalls, 0);
+    }
+
+    /// Write bytes are counted when posted, so byte totals close even
+    /// while writes sit in the queue; row classification only ever covers
+    /// commands that actually issued.
+    #[test]
+    fn cycle_counts_posted_write_bytes_at_accept() {
+        let c = cycle_cfg();
+        let mut m = CycleAccurate::new(&c);
+        for i in 0..32u64 {
+            m.do_access(i as f64 * 100.0, i * 128, 128, false);
+        }
+        for i in 0..8u64 {
+            let r = m.do_access(3200.0, i * 1024, 128, true);
+            assert_eq!(r.done, 3200.0, "posted write must not stall below the mark");
+        }
+        let s = m.stats();
+        assert_eq!(s.bytes_served, 40 * 128);
+        assert_eq!(s.row_hits + s.row_misses + s.row_conflicts, 32);
+        assert_eq!(s.wq_stalls, 0);
+    }
+
+    /// Writes post freely until the high watermark, then one forced drain
+    /// stalls the requester and empties the queue down to the low mark.
+    #[test]
+    fn cycle_write_drain_honors_watermarks() {
+        let c = cycle_cfg();
+        let mut m = CycleAccurate::new(&c);
+        // All writes target channel 0 (addr>>7 & 7 == 0 for 1 KiB strides).
+        for i in 0..(c.dram_wq_high as u64 - 1) {
+            let r = m.do_access(0.0, i * 1024, 128, true);
+            assert_eq!(r.done, 0.0);
+        }
+        assert_eq!(m.stats().wq_stalls, 0);
+        let r = m.do_access(0.0, (c.dram_wq_high as u64 - 1) * 1024, 128, true);
+        assert!(r.done > 0.0, "the drain must stall the write that tripped it");
+        let s = m.stats();
+        assert_eq!(s.wq_stalls, 1);
+        assert_eq!(
+            m.channels.iter().map(|ch| ch.wq.len()).sum::<usize>(),
+            c.dram_wq_low,
+            "forced drain stops at the low watermark"
+        );
+        assert!(s.acts > 0 && s.row_hits + s.row_misses + s.row_conflicts > 0);
+    }
+
+    /// The aging sweep drains overdue writes on the next access to *any*
+    /// channel, so no posted write outlives the cap unobserved.
+    #[test]
+    fn cycle_aging_cap_bounds_posted_write_age() {
+        let c = cycle_cfg();
+        let cap = c.dram_age_cap_ns * c.cycles_per_ns();
+        let mut m = CycleAccurate::new(&c);
+        m.do_access(0.0, 0, 128, true);
+        assert_eq!(m.max_queued_write_age(0.0), 0.0);
+        // Next access lands on a different channel well past the cap: the
+        // sweep still retires the channel-0 write.
+        let later = cap + 1.0;
+        m.do_access(later, 7 * 128, 128, false);
+        assert!(
+            m.max_queued_write_age(later) <= cap,
+            "an overdue write survived the aging sweep"
+        );
+        let s = m.stats();
+        assert_eq!(s.wq_stalls, 0, "aging drains are not watermark stalls");
+        assert_eq!(s.bytes_served, 2 * 128);
+    }
+
+    /// Closed row policy: every access re-activates, every column command
+    /// auto-precharges, and nothing ever row-hits.
+    #[test]
+    fn cycle_closed_policy_reactivates_every_access() {
+        let mut c = cycle_cfg();
+        c.dram_row_policy = crate::config::DramRowPolicy::Closed;
+        let mut m = CycleAccurate::new(&c);
+        let mut t = 0.0;
+        for _ in 0..8 {
+            let r = m.do_access(t, 0, 128, false);
+            assert!(!r.row_hit);
+            t = r.done;
+        }
+        let s = m.stats();
+        assert_eq!(s.row_hits, 0);
+        assert_eq!(s.acts, 8);
+        assert_eq!(s.precharges, 8);
+    }
+
+    /// Accesses that land inside a refresh blackout are pushed past it and
+    /// counted; rows do not survive a refresh window crossing.
+    #[test]
+    fn cycle_refresh_blackout_defers_and_closes_rows() {
+        let c = cycle_cfg();
+        let cyc = c.cycles_per_ns();
+        let trefi = c.dram_trefi_ns * cyc;
+        let trfc = c.dram_trfc_ns * cyc;
+        let mut m = CycleAccurate::new(&c);
+        let first = m.do_access(0.0, 0, 128, false);
+        assert!(!first.row_hit);
+        let r = m.do_access(trefi + 1.0, 0, 128, false);
+        assert!(!r.row_hit, "refresh must close the open row");
+        assert!(
+            r.done >= trefi + trfc,
+            "access inside the blackout must wait it out: {} < {}",
+            r.done,
+            trefi + trfc
+        );
+        assert!(m.stats().refresh_stalls >= 1);
+    }
+
+    #[test]
+    fn cycle_is_deterministic() {
+        let c = cycle_cfg();
+        let run = || {
+            let mut m = CycleAccurate::new(&c);
+            let mut acc = 0.0f64;
+            for i in 0..4096u64 {
+                let addr = i.wrapping_mul(0x9E3779B97F4A7C15) & 0xFF_FFFF;
+                acc += m.do_access((i / 8) as f64, addr, 128, i % 5 == 0).done;
+            }
+            (acc, m.stats())
+        };
+        let (a, sa) = run();
+        let (b, sb) = run();
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+    }
+
+    /// The legality checker rides along on every debug/test-profile
+    /// simulation (the tentpole's acceptance criterion); release builds
+    /// compile it out.
+    #[test]
+    fn cycle_checker_vets_every_command_in_debug_builds() {
+        let mut m = CycleAccurate::new(&cycle_cfg());
+        for i in 0..64u64 {
+            m.do_access(i as f64 * 50.0, i * 128, 128, i % 3 == 0);
+        }
+        if cfg!(debug_assertions) {
+            assert!(
+                m.commands_checked() >= 40,
+                "checker must vet the emitted command stream in test builds"
+            );
+        } else {
+            assert_eq!(m.commands_checked(), 0);
+        }
     }
 }

@@ -119,6 +119,17 @@ impl From<&RunReport> for Json {
                 "stack_bytes",
                 Json::Arr(r.stack_bytes.iter().map(|&b| Json::Num(b as f64)).collect()),
             );
+        // Per-command DRAM counters, only for the cycle-accurate backend:
+        // fixed/bank runs carry none of these keys, so their JSON stays
+        // byte-identical to the frozen pre-cycle output.
+        if r.mem_backend == "cycle" {
+            o.push("dram_row_hits", Json::Num(r.dram_row_hits as f64))
+                .push("dram_row_misses", Json::Num(r.dram_row_misses as f64))
+                .push("dram_acts", Json::Num(r.dram_acts as f64))
+                .push("dram_precharges", Json::Num(r.dram_precharges as f64))
+                .push("dram_wq_stalls", Json::Num(r.dram_wq_stalls as f64))
+                .push("dram_faw_stalls", Json::Num(r.dram_faw_stalls as f64));
+        }
         // Multiprogrammed/multi-kernel extras, only when populated.
         if !r.app_cycles.is_empty() {
             o.push(
@@ -496,6 +507,41 @@ mod tests {
         assert!(s.contains(r#""ndp_slowdown":1.5"#));
         assert!(s.contains(r#""host_port_stalls":7"#));
         assert!(s.contains(r#""host_bw_share":0.4"#));
+    }
+
+    #[test]
+    fn dram_command_fields_render_only_for_cycle_backend() {
+        // Both directions: fixed/bank reports never grow the keys (frozen
+        // JSON), and a cycle report always carries them — even when zero.
+        for backend in ["", "fixed", "bank"] {
+            let r = RunReport {
+                mem_backend: backend.into(),
+                dram_acts: 99, // populated but suppressed: key is gated on backend
+                ..Default::default()
+            };
+            let s = Json::from(&r).render();
+            assert!(!s.contains("dram_acts"), "leaked under {backend:?}");
+            assert!(!s.contains("dram_row_hits"));
+            assert!(!s.contains("dram_wq_stalls"));
+        }
+        let r = RunReport {
+            mem_backend: "cycle".into(),
+            dram_row_hits: 10,
+            dram_row_misses: 4,
+            dram_acts: 5,
+            dram_precharges: 2,
+            dram_wq_stalls: 1,
+            dram_faw_stalls: 3,
+            ..Default::default()
+        };
+        let s = Json::from(&r).render();
+        assert!(s.contains(r#""dram_row_hits":10"#));
+        assert!(s.contains(r#""dram_row_misses":4"#));
+        assert!(s.contains(r#""dram_acts":5"#));
+        assert!(s.contains(r#""dram_precharges":2"#));
+        assert!(s.contains(r#""dram_wq_stalls":1"#));
+        assert!(s.contains(r#""dram_faw_stalls":3"#));
+        validate_json(&s).unwrap();
     }
 
     #[test]

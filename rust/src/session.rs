@@ -1883,6 +1883,19 @@ mod tests {
             s.config().mem_backend,
             crate::config::MemBackendKind::BankLevel
         );
+        let mut cyc = ExperimentSpec::kernel(WorkloadSel::Named("NN"), Mechanism::Coda);
+        cyc.overrides.push(("mem_backend".into(), "cycle".into()));
+        cyc.overrides
+            .push(("dram_row_policy".into(), "closed".into()));
+        let s = Session::new(cfg(), cyc).unwrap();
+        assert_eq!(
+            s.config().mem_backend,
+            crate::config::MemBackendKind::CycleAccurate
+        );
+        assert_eq!(
+            s.config().dram_row_policy,
+            crate::config::DramRowPolicy::Closed
+        );
         let mut bad = ExperimentSpec::kernel(WorkloadSel::Named("NN"), Mechanism::Coda);
         bad.overrides.push(("num_stacks".into(), "3".into()));
         assert!(Session::new(cfg(), bad).is_err());

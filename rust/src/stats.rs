@@ -97,6 +97,21 @@ pub struct RunReport {
     pub bank_conflicts: u64,
     /// Accesses delayed by DRAM refresh windows (bank-level backend).
     pub refresh_stalls: u64,
+    /// Row-buffer hits across stacks (cycle backend; 0 otherwise).
+    pub dram_row_hits: u64,
+    /// Row-buffer misses (ACT into a closed row) across stacks (cycle
+    /// backend; 0 otherwise).
+    pub dram_row_misses: u64,
+    /// ACT commands issued across stacks (cycle backend; 0 otherwise).
+    pub dram_acts: u64,
+    /// PRE commands issued, explicit + auto (cycle backend; 0 otherwise).
+    pub dram_precharges: u64,
+    /// Accesses stalled by a forced write-queue drain at the high
+    /// watermark (cycle backend; 0 otherwise).
+    pub dram_wq_stalls: u64,
+    /// ACT commands delayed by the four-activate window (cycle backend;
+    /// 0 otherwise).
+    pub dram_faw_stalls: u64,
     /// Pages the mechanism placed coarse-grain.
     pub cgp_pages: u64,
     /// Pages the mechanism placed fine-grain.
@@ -164,12 +179,15 @@ impl RunReport {
         1.0 - self.accesses.remote as f64 / baseline.accesses.remote as f64
     }
 
-    /// Imbalance of DRAM traffic across stacks: max/mean bytes.
+    /// Imbalance of DRAM traffic across stacks: max/mean bytes. A
+    /// zero-stack config has no traffic to be imbalanced, so the empty
+    /// case reports 0.0 (no `.max().unwrap()` to trip over); all-zero
+    /// traffic over a populated stack list still pins to 1.0.
     pub fn stack_imbalance(&self) -> f64 {
-        if self.stack_bytes.is_empty() {
-            return 1.0;
-        }
-        let max = *self.stack_bytes.iter().max().unwrap() as f64;
+        let Some(&max) = self.stack_bytes.iter().max() else {
+            return 0.0;
+        };
+        let max = max as f64;
         let mean =
             self.stack_bytes.iter().sum::<u64>() as f64 / self.stack_bytes.len() as f64;
         if mean == 0.0 {
@@ -523,18 +541,27 @@ mod tests {
 
     #[test]
     fn degenerate_imbalance_and_bw_share_pin() {
-        // Audit companions of the speedup guard: all-zero traffic and an
-        // empty stack list both pin to the no-imbalance value.
+        // Audit companion of the speedup guard: all-zero traffic over a
+        // populated stack list pins to the no-imbalance value.
         let r = RunReport {
             stack_bytes: vec![0, 0, 0, 0],
             ..Default::default()
         };
         assert_eq!(r.stack_imbalance(), 1.0);
-        let r = RunReport::default();
-        assert_eq!(r.stack_imbalance(), 1.0);
         // host_bw_share is a plain stored field; its zero-work default is
         // 0.0 by construction.
-        assert_eq!(r.host_bw_share, 0.0);
+        assert_eq!(RunReport::default().host_bw_share, 0.0);
+    }
+
+    #[test]
+    fn zero_stack_imbalance_is_zero_not_panic() {
+        // Regression: an empty stack list used to funnel into
+        // `.max().unwrap()`; a zero-stack config now reports 0.0
+        // (nothing to be imbalanced) instead of the populated-but-idle
+        // pin of 1.0.
+        let r = RunReport::default();
+        assert!(r.stack_bytes.is_empty());
+        assert_eq!(r.stack_imbalance(), 0.0);
     }
 
     #[test]

@@ -18,17 +18,28 @@ fn bank_cfg() -> SystemConfig {
     c
 }
 
-/// FixedLatency vs BankLevel on the small PR workload: identical access
-/// counts (local/remote split, L2 hits, per-stack bytes) under every
-/// non-migrating mechanism, while cycle counts are free to differ.
+fn cycle_cfg() -> SystemConfig {
+    let mut c = SystemConfig::test_small();
+    c.mem_backend = MemBackendKind::CycleAccurate;
+    c
+}
+
+/// FixedLatency vs BankLevel vs CycleAccurate on the small PR workload:
+/// identical access counts (local/remote split, L2 hits, per-stack bytes)
+/// under every non-migrating mechanism, while cycle counts are free to
+/// differ. This is the tentpole's acceptance criterion: the backend may
+/// shape *when*, never *what*.
 #[test]
 fn backends_agree_on_access_counts_for_pr() {
     let cf = fixed_cfg();
     let cb = bank_cfg();
+    let cc = cycle_cfg();
     let wl_f = suite::build("PR", &cf).unwrap();
     let wl_b = suite::build("PR", &cb).unwrap();
+    let wl_c = suite::build("PR", &cc).unwrap();
     let coord_f = Coordinator::new(cf.clone());
     let coord_b = Coordinator::new(cb.clone());
+    let coord_c = Coordinator::new(cc.clone());
     for mech in [
         Mechanism::FgpOnly,
         Mechanism::CgpOnly,
@@ -38,24 +49,28 @@ fn backends_agree_on_access_counts_for_pr() {
     ] {
         let rf = coord_f.run(&wl_f, mech).unwrap();
         let rb = coord_b.run(&wl_b, mech).unwrap();
-        assert_eq!(
-            rf.accesses,
-            rb.accesses,
-            "{}: access counts must not depend on the DRAM backend",
-            mech.name()
-        );
-        assert_eq!(rf.stack_bytes, rb.stack_bytes, "{}", mech.name());
-        assert_eq!(rf.remote_bytes, rb.remote_bytes, "{}", mech.name());
-        assert_eq!(rf.cgp_pages, rb.cgp_pages, "{}", mech.name());
+        let rc = coord_c.run(&wl_c, mech).unwrap();
+        for (r, name) in [(&rb, "bank"), (&rc, "cycle")] {
+            assert_eq!(
+                rf.accesses,
+                r.accesses,
+                "{} vs {name}: access counts must not depend on the DRAM backend",
+                mech.name()
+            );
+            assert_eq!(rf.stack_bytes, r.stack_bytes, "{} vs {name}", mech.name());
+            assert_eq!(rf.remote_bytes, r.remote_bytes, "{} vs {name}", mech.name());
+            assert_eq!(rf.cgp_pages, r.cgp_pages, "{} vs {name}", mech.name());
+            // Timing is allowed — and expected — to differ: if it doesn't,
+            // the backend selection never reached the simulator.
+            assert!(
+                (rf.cycles - r.cycles).abs() > 1e-9,
+                "{}: identical cycles suggest the {name} backend was not dispatched",
+                mech.name()
+            );
+        }
         assert_eq!(rf.mem_backend, "fixed");
         assert_eq!(rb.mem_backend, "bank");
-        // Timing is allowed — and expected — to differ: if it doesn't, the
-        // backend selection never reached the simulator.
-        assert!(
-            (rf.cycles - rb.cycles).abs() > 1e-9,
-            "{}: identical cycles suggest the bank backend was not dispatched",
-            mech.name()
-        );
+        assert_eq!(rc.mem_backend, "cycle");
     }
 }
 
@@ -83,11 +98,36 @@ fn bank_backend_reports_conflicts_and_refresh() {
     assert_eq!(rf.refresh_stalls, 0);
 }
 
-/// Both backends keep the paper's headline ordering: CODA beats FGP-Only
+/// The cycle backend surfaces its per-command counters through the
+/// report; the coarser backends leave them zero.
+#[test]
+fn cycle_backend_reports_command_counters() {
+    let cc = cycle_cfg();
+    let wl = suite::build("PR", &cc).unwrap();
+    let rc = Coordinator::new(cc.clone())
+        .run(&wl, Mechanism::FgpOnly)
+        .unwrap();
+    assert!(rc.dram_acts > 0, "a PageRank run must activate rows");
+    assert!(
+        rc.dram_row_hits + rc.dram_row_misses + rc.bank_conflicts > 0,
+        "every issued column command carries a row classification"
+    );
+    assert!((0.0..=1.0).contains(&rc.row_hit_rate));
+
+    let rf = Coordinator::new(fixed_cfg())
+        .run(&suite::build("PR", &fixed_cfg()).unwrap(), Mechanism::FgpOnly)
+        .unwrap();
+    assert_eq!(rf.dram_acts, 0);
+    assert_eq!(rf.dram_precharges, 0);
+    assert_eq!(rf.dram_wq_stalls, 0);
+    assert_eq!(rf.dram_faw_stalls, 0);
+}
+
+/// All backends keep the paper's headline ordering: CODA beats FGP-Only
 /// on a block-exclusive workload regardless of DRAM fidelity.
 #[test]
 fn coda_beats_fgp_under_both_backends() {
-    for cfg in [fixed_cfg(), bank_cfg()] {
+    for cfg in [fixed_cfg(), bank_cfg(), cycle_cfg()] {
         let wl = suite::build("DC", &cfg).unwrap();
         let coord = Coordinator::new(cfg.clone());
         let fgp = coord.run(&wl, Mechanism::FgpOnly).unwrap();
@@ -105,16 +145,48 @@ fn coda_beats_fgp_under_both_backends() {
     }
 }
 
-/// Determinism holds under the bank-level backend too.
+/// Determinism holds under the bank-level and cycle backends too.
 #[test]
 fn bank_backend_is_deterministic_end_to_end() {
-    let cb = bank_cfg();
-    let coord = Coordinator::new(cb.clone());
-    let wl = suite::build("KM", &cb).unwrap();
-    let a = coord.run(&wl, Mechanism::Coda).unwrap();
-    let b = coord.run(&wl, Mechanism::Coda).unwrap();
-    assert_eq!(a.cycles, b.cycles);
-    assert_eq!(a.accesses, b.accesses);
-    assert_eq!(a.bank_conflicts, b.bank_conflicts);
-    assert_eq!(a.refresh_stalls, b.refresh_stalls);
+    for c in [bank_cfg(), cycle_cfg()] {
+        let coord = Coordinator::new(c.clone());
+        let wl = suite::build("KM", &c).unwrap();
+        let a = coord.run(&wl, Mechanism::Coda).unwrap();
+        let b = coord.run(&wl, Mechanism::Coda).unwrap();
+        assert_eq!(a.cycles, b.cycles, "{}", c.mem_backend);
+        assert_eq!(a.accesses, b.accesses, "{}", c.mem_backend);
+        assert_eq!(a.bank_conflicts, b.bank_conflicts, "{}", c.mem_backend);
+        assert_eq!(a.refresh_stalls, b.refresh_stalls, "{}", c.mem_backend);
+        assert_eq!(a.dram_acts, b.dram_acts, "{}", c.mem_backend);
+    }
+}
+
+/// Degenerate-equivalence pin: with refresh pushed out of reach, an
+/// all-read stream classifies identically under BankLevel and
+/// CycleAccurate — row state is arrival-order + decode driven, and the
+/// two models share both bit-for-bit. Where their semantics overlap, the
+/// models must agree.
+#[test]
+fn degenerate_cycle_matches_bank_row_classification() {
+    let mut cb = bank_cfg();
+    cb.dram_trefi_ns = 1e12; // no refresh window inside the run
+    let mut cc = cycle_cfg();
+    cc.dram_trefi_ns = 1e12;
+    let mut bank = coda::mem::make_backend(&cb);
+    let mut cycle = coda::mem::make_backend(&cc);
+    for i in 0..8192u64 {
+        let addr = i.wrapping_mul(0x9E3779B97F4A7C15) & 0xFF_FFFF;
+        let now = (i / 8) as f64;
+        let rb = bank.access(now, addr, 128);
+        let rc = cycle.access(now, addr, 128);
+        assert_eq!(rb.row_hit, rc.row_hit, "access {i} at {addr:#x}");
+    }
+    let sb = bank.stats();
+    let sc = cycle.stats();
+    assert_eq!(sb.row_hits, sc.row_hits);
+    assert_eq!(sb.row_misses, sc.row_misses);
+    assert_eq!(sb.row_conflicts, sc.row_conflicts);
+    assert_eq!(sb.bytes_served, sc.bytes_served);
+    assert_eq!(sb.refresh_stalls, 0);
+    assert_eq!(sc.refresh_stalls, 0);
 }

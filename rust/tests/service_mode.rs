@@ -3,7 +3,7 @@
 //! statistics, and the frozen-oracle guarantee that specs *without* an
 //! `[arrivals]` section still emit byte-identical JSON.
 
-use coda::config::SystemConfig;
+use coda::config::{MemBackendKind, SystemConfig};
 use coda::multiprog::MixPlacement;
 use coda::proptest_lite::{run_prop, PropConfig};
 use coda::sched::{FairnessPolicy, Policy};
@@ -129,6 +129,74 @@ fn million_request_stream_completes_with_streaming_percentiles() {
     assert!(svc.p999_response <= svc.max_response);
     // Sub-saturation: achieved throughput tracks the offered rate.
     assert!(svc.achieved_rate > 0.9 * svc.offered_rate);
+}
+
+/// One open-loop Poisson run on the cycle-accurate backend with the
+/// given refresh interval.
+fn run_cycle_service(trefi_ns: f64) -> (coda::stats::RunReport, SystemConfig) {
+    let wl = one_block_workload();
+    let mut spec = ExperimentSpec::shared(
+        vec![(WorkloadSel::Prebuilt(&wl), 0.0)],
+        MixPlacement::CgpLocal,
+        Policy::Affinity,
+        FairnessPolicy::Fcfs,
+    );
+    spec.arrivals = Some(ArrivalSpec {
+        kind: ArrivalKind::Poisson,
+        rate: Some(0.02), // one request every ~50 cycles: far below saturation
+        requests: Some(20_000),
+        seed: Some(0xC0DA),
+        ..ArrivalSpec::default()
+    });
+    let mut cfg = SystemConfig::test_small();
+    cfg.mem_backend = MemBackendKind::CycleAccurate;
+    cfg.dram_trefi_ns = trefi_ns;
+    cfg.validate().unwrap();
+    let r = Session::new(cfg.clone(), spec).unwrap().run().unwrap();
+    (r.run, cfg)
+}
+
+/// Service mode × cycle backend: an open-loop Poisson stream completes
+/// with ordered percentiles, byte accounting closes against the access
+/// counts, and aggressive refresh strictly fattens the tail relative to
+/// a refresh-disabled run of the same stream.
+#[test]
+fn cycle_backend_service_percentiles_bytes_and_refresh_tail() {
+    // Refresh pushed out of reach: the tail baseline.
+    let (calm, cfg) = run_cycle_service(1e9);
+    let svc = calm.service.as_ref().expect("service stats");
+    assert_eq!(svc.requests_offered, 20_000);
+    assert_eq!(svc.requests_completed, 20_000);
+    assert_eq!(svc.requests_incomplete, 0);
+    assert!(svc.p50_response > 0.0);
+    assert!(svc.p50_response <= svc.p99_response);
+    assert!(svc.p99_response <= svc.p999_response);
+    assert!(svc.p999_response <= svc.max_response);
+    assert_eq!(calm.mem_backend, "cycle");
+    assert_eq!(calm.refresh_stalls, 0, "tREFI = 1e9 ns must never fire");
+    // Byte accounting closes: every non-L2 NDP access moves one line
+    // through a stack's DRAM (posted writes count at accept, so nothing
+    // leaks even when the run ends with writes queued).
+    let total: u64 = calm.stack_bytes.iter().sum();
+    assert_eq!(
+        total,
+        calm.accesses.ndp_total() * cfg.line_size,
+        "byte accounting must close under the cycle backend"
+    );
+
+    // Aggressive refresh: a 500 ns window with a 260 ns blackout puts
+    // over half of all time inside a blackout, so the slow tail must
+    // visibly fatten while the stream still completes.
+    let (hot, _) = run_cycle_service(500.0);
+    let hsvc = hot.service.as_ref().expect("service stats");
+    assert_eq!(hsvc.requests_completed, 20_000);
+    assert!(hot.refresh_stalls > 0, "refresh windows must actually fire");
+    assert!(
+        hsvc.p999_response > svc.p999_response,
+        "refresh must fatten the tail: hot p999 {} vs calm p999 {}",
+        hsvc.p999_response,
+        svc.p999_response
+    );
 }
 
 fn golden_path() -> PathBuf {
