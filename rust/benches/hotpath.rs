@@ -58,6 +58,7 @@ fn main() -> coda::Result<()> {
                     Pte {
                         ppn: vpn,
                         granularity: Granularity::Fgp,
+                        huge: false,
                     },
                 ),
             }

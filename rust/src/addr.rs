@@ -19,6 +19,67 @@
 
 use crate::config::SystemConfig;
 
+/// A virtual address: what workload traces and the engine's access streams
+/// carry. Crossing to the physical side requires [`crate::vm::VirtualMemory`]
+/// translation — the newtype pair makes that boundary type-checked instead
+/// of a comment. The payload stays `pub` so address arithmetic that is
+/// genuinely bit-level (page masks, VPN shifts) can reach the raw `u64`
+/// explicitly rather than through accessor noise.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct VirtualAddress(pub u64);
+
+/// A physical address: what the mapper, the DRAM backends and the stack
+/// routing consume. Produced only by translation (or by tests/benches that
+/// model physical streams directly — `From<u64>` keeps those ergonomic).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PhysicalAddress(pub u64);
+
+impl From<u64> for VirtualAddress {
+    #[inline]
+    fn from(v: u64) -> Self {
+        Self(v)
+    }
+}
+
+impl From<VirtualAddress> for u64 {
+    #[inline]
+    fn from(v: VirtualAddress) -> u64 {
+        v.0
+    }
+}
+
+impl std::ops::Add<u64> for VirtualAddress {
+    type Output = Self;
+    /// Byte offset within a mapped object (`base + offset`): offsetting a
+    /// virtual address yields a virtual address.
+    #[inline]
+    fn add(self, rhs: u64) -> Self {
+        Self(self.0 + rhs)
+    }
+}
+
+impl From<u64> for PhysicalAddress {
+    #[inline]
+    fn from(p: u64) -> Self {
+        Self(p)
+    }
+}
+
+impl From<PhysicalAddress> for u64 {
+    #[inline]
+    fn from(p: PhysicalAddress) -> u64 {
+        p.0
+    }
+}
+
+impl std::ops::Add<u64> for PhysicalAddress {
+    type Output = Self;
+    #[inline]
+    fn add(self, rhs: u64) -> Self {
+        Self(self.0 + rhs)
+    }
+}
+
 /// Page granularity mode: the PTE/TLB/cache-line granularity bit.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Granularity {
@@ -88,9 +149,12 @@ impl AddressMapper {
 
     /// Which stack a physical address maps to, given the page's granularity
     /// bit. This is THE hot operation: every simulated memory request calls
-    /// it once.
+    /// it once. Accepts anything convertible to [`PhysicalAddress`] (the
+    /// newtype or a raw `u64`), so typed engine code and bit-level tests
+    /// share one entry point.
     #[inline]
-    pub fn stack_of(&self, paddr: u64, g: Granularity) -> usize {
+    pub fn stack_of(&self, paddr: impl Into<PhysicalAddress>, g: Granularity) -> usize {
+        let paddr = paddr.into().0;
         let raw = match g {
             Granularity::Fgp => paddr >> self.stack_shift_fgp,
             Granularity::Cgp => paddr >> self.stack_shift_cgp,
@@ -125,7 +189,8 @@ impl AddressMapper {
     /// exact inverse; together they witness that dual-mode decode is a
     /// bijection (no two physical bytes alias one stack-local byte).
     #[inline]
-    pub fn decompose(&self, paddr: u64, g: Granularity) -> (usize, u64) {
+    pub fn decompose(&self, paddr: impl Into<PhysicalAddress>, g: Granularity) -> (usize, u64) {
+        let paddr = paddr.into().0;
         let shift = self.shift_for(g);
         let stack = self.stack_of(paddr, g);
         let low = paddr & ((1u64 << shift) - 1);

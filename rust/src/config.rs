@@ -216,6 +216,30 @@ impl std::fmt::Display for DramRowPolicy {
     }
 }
 
+/// Parse an `on`/`off` switch value (`true`/`false` accepted as aliases).
+fn parse_on_off(s: &str) -> Option<bool> {
+    match s.trim() {
+        "on" | "true" => Some(true),
+        "off" | "false" => Some(false),
+        _ => None,
+    }
+}
+
+/// Serialize an `on`/`off` switch value (round-trips [`parse_on_off`]).
+fn fmt_on_off(v: bool) -> String {
+    String::from(if v { "on" } else { "off" })
+}
+
+/// Can a set-associative TLB hold *exactly* `entries` translations with at
+/// most `max_ways` ways (sets must be a power of two)? This is the
+/// representability contract of [`crate::vm::Tlb::with_ways`]; config
+/// validation rejects sizes the structure would otherwise have to round.
+pub fn tlb_size_representable(entries: usize, max_ways: usize) -> bool {
+    let entries = entries.max(1);
+    let max_ways = max_ways.clamp(1, entries);
+    (1..=max_ways).any(|w| entries % w == 0 && (entries / w).is_power_of_two())
+}
+
 /// Full system configuration. All bandwidths are aggregate GB/s; the
 /// simulator converts to bytes/cycle at `sm_clock_ghz`.
 #[derive(Clone, Debug, PartialEq)]
@@ -331,6 +355,35 @@ pub struct SystemConfig {
     pub tlb_entries: usize,
     /// TLB miss penalty (page-walk) in ns.
     pub tlb_miss_ns: f64,
+
+    // --- hierarchical address translation (see [`crate::xlate`]) -----------
+    /// Per-SM split L1 TLB entries for each page size. `0` keeps the frozen
+    /// legacy model (one flat TLB per SM + `tlb_miss_ns` per miss); any
+    /// positive value activates the hierarchical L1/L2/PTW pipeline.
+    pub tlb_l1_entries: usize,
+    /// Maximum associativity of the split L1 TLBs.
+    pub tlb_l1_ways: usize,
+    /// Per-SM unified L2 TLB entries (hierarchical model only).
+    pub tlb_l2_entries: usize,
+    /// Maximum associativity of the unified L2 TLB.
+    pub tlb_l2_ways: usize,
+    /// L2 TLB hit latency in ns (hierarchical model only).
+    pub tlb_l2_hit_ns: f64,
+    /// Concurrent page-table-walker slots shared by all SMs. A walk that
+    /// finds every slot busy queues behind the earliest-free one; those
+    /// queue cycles are reported separately from walk service cycles.
+    pub ptw_slots: usize,
+    /// Latency of one page-table level reference in ns. A base-page walk
+    /// touches 4 levels; a huge-page walk terminates one level early (3).
+    pub ptw_level_ns: f64,
+    /// Promote contiguous same-stack CGP regions to 2 MB huge-page frames
+    /// (`on`/`off`). FGP-interleaved ranges always stay at base pages —
+    /// a stripe round spans stacks, which a single frame cannot.
+    pub huge_pages: bool,
+    /// Flush a time-shared SM's TLBs whenever the scheduler hands it to a
+    /// different app (`on` models per-address-space translations; `off`
+    /// keeps the frozen shared-TLB behavior).
+    pub tlb_flush_on_switch: bool,
     /// Per-SM L1 hit rate model knob: fraction of accesses filtered before
     /// the memory system (the paper's 32KB L1 + 1MB L2/stack). Workload
     /// generators emit post-L1 traffic; this filters a further L2 fraction.
@@ -432,6 +485,15 @@ impl Default for SystemConfig {
             line_size: 128,
             tlb_entries: 64,
             tlb_miss_ns: 200.0,
+            tlb_l1_entries: 0,
+            tlb_l1_ways: 4,
+            tlb_l2_entries: 512,
+            tlb_l2_ways: 8,
+            tlb_l2_hit_ns: 8.0,
+            ptw_slots: 8,
+            ptw_level_ns: 50.0,
+            huge_pages: false,
+            tlb_flush_on_switch: false,
             l2_hit_rate: 0.30,
             l2_hit_ns: 5.0,
             mlp_per_block: 32,
@@ -597,6 +659,71 @@ impl SystemConfig {
                 self.net_window_cycles
             );
         }
+        if self.tlb_entries == 0 {
+            bail!("tlb_entries must be positive");
+        }
+        // The legacy TLB is built with up to 4 ways; reject sizes it could
+        // only satisfy by rounding the capacity up (e.g. 48 -> 64).
+        if !tlb_size_representable(self.tlb_entries, 4) {
+            bail!(
+                "tlb_entries = {} is not representable as ways x power-of-two \
+                 sets with <= 4 ways; pick e.g. 32, 48, 64 or 96",
+                self.tlb_entries
+            );
+        }
+        if self.tlb_l1_ways == 0 || self.tlb_l2_ways == 0 {
+            bail!("tlb_l1_ways and tlb_l2_ways must be positive");
+        }
+        if self.tlb_l1_entries > 0 {
+            if !tlb_size_representable(self.tlb_l1_entries, self.tlb_l1_ways) {
+                bail!(
+                    "tlb_l1_entries = {} is not representable as ways x \
+                     power-of-two sets with <= {} ways",
+                    self.tlb_l1_entries,
+                    self.tlb_l1_ways
+                );
+            }
+            if self.tlb_l2_entries == 0
+                || !tlb_size_representable(self.tlb_l2_entries, self.tlb_l2_ways)
+            {
+                bail!(
+                    "tlb_l2_entries = {} is not representable as ways x \
+                     power-of-two sets with <= {} ways",
+                    self.tlb_l2_entries,
+                    self.tlb_l2_ways
+                );
+            }
+            if self.ptw_slots == 0 {
+                bail!("ptw_slots must be positive when the hierarchical TLB is on");
+            }
+            if !self.ptw_level_ns.is_finite() || self.ptw_level_ns <= 0.0 {
+                bail!("ptw_level_ns must be positive, got {}", self.ptw_level_ns);
+            }
+            if !self.tlb_l2_hit_ns.is_finite() || self.tlb_l2_hit_ns < 0.0 {
+                bail!(
+                    "tlb_l2_hit_ns must be a non-negative real, got {}",
+                    self.tlb_l2_hit_ns
+                );
+            }
+        }
+        if self.huge_pages {
+            let huge = crate::vm::HUGE_PAGE_BYTES;
+            if self.page_size > huge || huge % self.page_size != 0 {
+                bail!(
+                    "huge_pages = on requires page_size ({}) to divide the \
+                     2 MB huge-frame size",
+                    self.page_size
+                );
+            }
+            if huge / self.page_size < self.num_stacks as u64 {
+                bail!(
+                    "huge_pages = on requires at least num_stacks base pages \
+                     per 2 MB frame (page_size {} x {} stacks does not fit)",
+                    self.page_size,
+                    self.num_stacks
+                );
+            }
+        }
         Ok(())
     }
 
@@ -667,6 +794,23 @@ impl SystemConfig {
             "line_size" => parse!(line_size, u64),
             "tlb_entries" => parse!(tlb_entries, usize),
             "tlb_miss_ns" => parse!(tlb_miss_ns, f64),
+            "tlb_l1_entries" => parse!(tlb_l1_entries, usize),
+            "tlb_l1_ways" => parse!(tlb_l1_ways, usize),
+            "tlb_l2_entries" => parse!(tlb_l2_entries, usize),
+            "tlb_l2_ways" => parse!(tlb_l2_ways, usize),
+            "tlb_l2_hit_ns" => parse!(tlb_l2_hit_ns, f64),
+            "ptw_slots" => parse!(ptw_slots, usize),
+            "ptw_level_ns" => parse!(ptw_level_ns, f64),
+            "huge_pages" => {
+                self.huge_pages = parse_on_off(v).ok_or_else(|| {
+                    anyhow::anyhow!("bad value for {key}: {v} (expected on|off)")
+                })?
+            }
+            "tlb_flush_on_switch" => {
+                self.tlb_flush_on_switch = parse_on_off(v).ok_or_else(|| {
+                    anyhow::anyhow!("bad value for {key}: {v} (expected on|off)")
+                })?
+            }
             "l2_hit_rate" => parse!(l2_hit_rate, f64),
             "l2_hit_ns" => parse!(l2_hit_ns, f64),
             "mlp_per_block" => parse!(mlp_per_block, usize),
@@ -763,6 +907,15 @@ impl SystemConfig {
             ("line_size", self.line_size.to_string()),
             ("tlb_entries", self.tlb_entries.to_string()),
             ("tlb_miss_ns", self.tlb_miss_ns.to_string()),
+            ("tlb_l1_entries", self.tlb_l1_entries.to_string()),
+            ("tlb_l1_ways", self.tlb_l1_ways.to_string()),
+            ("tlb_l2_entries", self.tlb_l2_entries.to_string()),
+            ("tlb_l2_ways", self.tlb_l2_ways.to_string()),
+            ("tlb_l2_hit_ns", self.tlb_l2_hit_ns.to_string()),
+            ("ptw_slots", self.ptw_slots.to_string()),
+            ("ptw_level_ns", self.ptw_level_ns.to_string()),
+            ("huge_pages", fmt_on_off(self.huge_pages)),
+            ("tlb_flush_on_switch", fmt_on_off(self.tlb_flush_on_switch)),
             ("l2_hit_rate", self.l2_hit_rate.to_string()),
             ("l2_hit_ns", self.l2_hit_ns.to_string()),
             ("mlp_per_block", self.mlp_per_block.to_string()),
@@ -1057,6 +1210,60 @@ mod tests {
         assert!(c.validate().is_err());
         c.link_bw_gbs = 0.0;
         c.net_window_cycles = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn xlate_knobs_parse_and_validate() {
+        let mut c = SystemConfig::default();
+        // Defaults keep the frozen legacy model off the hierarchical path.
+        assert_eq!(c.tlb_l1_entries, 0);
+        assert!(!c.huge_pages);
+        assert!(!c.tlb_flush_on_switch);
+        assert!(c.validate().is_ok());
+        c.set("tlb_l1_entries", "48").unwrap();
+        c.set("tlb_l1_ways", "3").unwrap();
+        c.set("tlb_l2_entries", "1024").unwrap();
+        c.set("tlb_l2_ways", "8").unwrap();
+        c.set("tlb_l2_hit_ns", "6").unwrap();
+        c.set("ptw_slots", "4").unwrap();
+        c.set("ptw_level_ns", "40").unwrap();
+        c.set("huge_pages", "on").unwrap();
+        c.set("tlb_flush_on_switch", "on").unwrap();
+        assert!(c.validate().is_ok());
+        assert!(c.huge_pages);
+        assert!(c.tlb_flush_on_switch);
+        c.set("huge_pages", "off").unwrap();
+        assert!(!c.huge_pages);
+        assert!(c.set("huge_pages", "maybe").is_err());
+        // Non-representable sizes are rejected up front, not rounded.
+        c.tlb_l1_entries = 7;
+        assert!(c.validate().is_err());
+        c.tlb_l1_entries = 48;
+        c.tlb_l2_entries = 7;
+        assert!(c.validate().is_err());
+        c.tlb_l2_entries = 512;
+        c.ptw_slots = 0;
+        assert!(c.validate().is_err());
+        c.ptw_slots = 8;
+        c.ptw_level_ns = 0.0;
+        assert!(c.validate().is_err());
+        c.ptw_level_ns = 50.0;
+        assert!(c.validate().is_ok());
+        // Legacy budget is honored too (satellite: 48 must not become 64).
+        let mut c = SystemConfig::default();
+        c.tlb_entries = 48;
+        assert!(c.validate().is_ok());
+        c.tlb_entries = 7;
+        assert!(c.validate().is_err());
+        c.tlb_entries = 0;
+        assert!(c.validate().is_err());
+        // Huge pages need whole base pages per 2 MB frame.
+        let mut c = SystemConfig::default();
+        c.huge_pages = true;
+        assert!(c.validate().is_ok());
+        c.page_size = 4 << 20;
+        c.fgp_interleave = 128;
         assert!(c.validate().is_err());
     }
 

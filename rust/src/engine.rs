@@ -41,14 +41,15 @@
 //! simulated results bit-exactly (see `docs/ARCHITECTURE.md`,
 //! §Performance).
 
-use crate::addr::{AddressMapper, Granularity};
+use crate::addr::{large_page_mapper, AddressMapper, Granularity, VirtualAddress};
 use crate::config::SystemConfig;
 use crate::gpu::{Sm, Topology};
 use crate::mem::{self, MemBackend, MemBackendImpl, MemStats};
 use crate::net::Interconnect;
-use crate::stats::{AccessStats, LinkStat, RunReport};
+use crate::stats::{AccessStats, LinkStat, RunReport, XlateStats};
 use crate::trace::KernelTrace;
-use crate::vm::{Tlb, VirtualMemory};
+use crate::vm::VirtualMemory;
+use crate::xlate::TranslationUnit;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -85,7 +86,7 @@ pub fn line_hash(x: u64) -> u64 {
 pub struct AppCtx<'a> {
     pub trace: &'a KernelTrace,
     /// Base virtual address of each of the app's objects (by `Access::obj`).
-    pub obj_base: &'a [u64],
+    pub obj_base: &'a [VirtualAddress],
 }
 
 /// A block scheduled by a [`BlockSource`]: which app, and which entry of
@@ -176,7 +177,7 @@ pub struct HostStream<'a> {
     /// block structure is ignored — the host is not a GPU).
     pub trace: &'a KernelTrace,
     /// Base virtual address of each object (by object index).
-    pub obj_base: &'a [u64],
+    pub obj_base: &'a [VirtualAddress],
 }
 
 /// Knobs distinguishing the historical callers. Both default to the
@@ -226,6 +227,9 @@ pub struct EngineRaw {
     /// Per-directed-link fabric counters (empty under the degenerate
     /// fully-connected fabric, whose reports are frozen).
     pub link_stats: Vec<LinkStat>,
+    /// Hierarchical translation results (`None` under the frozen legacy
+    /// flat-walk model, whose reports are byte-identical by construction).
+    pub xlate: Option<XlateStats>,
 }
 
 impl EngineRaw {
@@ -289,6 +293,7 @@ impl EngineRaw {
             },
             link_stats: self.link_stats.clone(),
             service: None,
+            xlate: self.xlate.clone(),
         }
     }
 }
@@ -405,14 +410,20 @@ impl<'a> Engine<'a> {
         // dispatch instead of a vtable call (bit-identical timing — see
         // `mem::MemBackendImpl`).
         let mut stacks: Vec<MemBackendImpl> = mem::make_backends_impl(cfg);
-        let mut tlbs: Vec<Tlb> = (0..topo.sms.len())
-            .map(|_| Tlb::new(cfg.tlb_entries))
-            .collect();
 
         let cyc = cfg.cycles_per_ns();
+        // Address translation lives behind one seam: the frozen legacy
+        // flat-walk model by default, the hierarchical L1/L2/PTW pipeline
+        // when `tlb_l1_entries > 0` (see `xlate.rs`).
+        let mut xl = TranslationUnit::new(cfg, topo.sms.len(), cyc);
+        // Promoted 2 MB frames route through the huge-frame mapper: one
+        // frame lives whole on one stack (the allocator steered it), so
+        // per-base-page CGP folding would misplace its pages.
+        let huge_mapper = large_page_mapper(cfg);
+        let flush_on_switch = cfg.tlb_flush_on_switch;
+        let mut last_app: Vec<u32> = vec![u32::MAX; topo.sms.len()];
         let l2_threshold = (cfg.l2_hit_rate * u32::MAX as f64) as u64;
         let l2_hit_cycles = cfg.l2_hit_ns * cyc;
-        let tlb_miss_cycles = cfg.tlb_miss_ns * cyc;
         let line = cfg.line_size;
         let page_shift = cfg.page_size.trailing_zeros();
         let mlp = cfg.mlp_per_block;
@@ -575,9 +586,9 @@ impl<'a> Engine<'a> {
                         while host_obj + 1 < starts.len() && starts[host_obj + 1] <= j {
                             host_obj += 1;
                         }
-                        let vaddr = hs.obj_base[host_obj] + (j - starts[host_obj]) * line;
+                        let va = hs.obj_base[host_obj] + (j - starts[host_obj]) * line;
                         let done = if host_ddr_threshold > 0
-                            && line_hash((vaddr / line) ^ HOST_DDR_SALT) & 0xFFFF_FFFF
+                            && line_hash((va.0 / line) ^ HOST_DDR_SALT) & 0xFFFF_FFFF
                                 < host_ddr_threshold
                         {
                             // Host-private line: served by host-local DDR,
@@ -586,13 +597,20 @@ impl<'a> Engine<'a> {
                             host_ddr
                                 .as_mut()
                                 .expect("host DDR backend")
-                                .access(now, vaddr, line)
+                                .access(now, va.0, line)
                                 .done
                         } else {
-                            let (paddr, gran) = vm
-                                .translate(vaddr)
+                            // The host's own MMU is not modelled (its
+                            // translations are not the NDP SMs' problem),
+                            // but its physical routing honors promoted
+                            // huge frames like every other access.
+                            let pte = vm
+                                .pte_of(va)
                                 .expect("host access beyond mapped object");
-                            let dst = mapper.stack_of(paddr, gran);
+                            let paddr =
+                                (pte.ppn << page_shift) | (va.0 & (cfg.page_size - 1));
+                            let m = if pte.huge { &huge_mapper } else { &mapper };
+                            let dst = m.stack_of(paddr, pte.granularity);
                             stats.host += 1;
                             let t1 = net.host_hop(now, dst, line);
                             stacks[dst].access(t1, paddr, line).done
@@ -617,6 +635,14 @@ impl<'a> Engine<'a> {
 
             let actx = &apps[app as usize];
             let smo = topo.sms[sm as usize];
+            // A time-shared SM switching address spaces drops its
+            // translations (opt-in; the frozen default shares them).
+            if flush_on_switch && last_app[smo.id] != app {
+                if last_app[smo.id] != u32::MAX {
+                    xl.flush(smo.id);
+                }
+                last_app[smo.id] = app;
+            }
             let blk = &actx.trace.blocks[block as usize];
             let begin = next as usize;
             let end = (begin + mlp).min(blk.accesses.len());
@@ -624,13 +650,13 @@ impl<'a> Engine<'a> {
             // per-access loop (the optimizer cannot always prove the
             // indexed re-loads loop-invariant on its own).
             let obj_base = actx.obj_base;
-            let tlb = &mut tlbs[smo.id];
 
             // Issue one window of accesses; the block stalls until the
             // slowest completes, then pays its compute debt.
             let mut window_done = now;
             for a in &blk.accesses[begin..end] {
-                let vaddr = obj_base[a.obj as usize] + a.offset;
+                let va = obj_base[a.obj as usize] + a.offset;
+                let vaddr = va.0;
                 // Stack-level L2 filter (deterministic per line).
                 if opts.l2_filter {
                     let vline = vaddr / line;
@@ -640,22 +666,13 @@ impl<'a> Engine<'a> {
                         continue;
                     }
                 }
-                // TLB + translation.
+                // TLB + translation (legacy flat walk or the hierarchical
+                // L1/L2/PTW pipeline — see `xlate.rs`).
                 let vpn = vaddr >> page_shift;
-                let mut t = now;
-                let pte = match tlb.lookup(vpn) {
-                    Some(pte) => pte,
-                    None => {
-                        t += tlb_miss_cycles;
-                        let pte = vm
-                            .pte_of(vaddr)
-                            .expect("workload access beyond mapped object");
-                        tlb.fill(vpn, pte);
-                        pte
-                    }
-                };
+                let (mut t, pte) = xl.access(smo.id, now, va, vm);
                 let mut paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
                 let mut gran = pte.granularity;
+                let mut huge = pte.huge;
                 // Migration-based first touch: the first NDP access to an
                 // FGP page pulls the whole page into the toucher's stack.
                 if opts.migrate_on_first_touch
@@ -663,7 +680,7 @@ impl<'a> Engine<'a> {
                     && !migrated_pages[vpn as usize]
                 {
                     migrated_pages[vpn as usize] = true;
-                    if vm.migrate_to_cgp(vaddr, smo.stack).is_ok() {
+                    if vm.migrate_to_cgp(va, smo.stack).is_ok() {
                         migrated += 1;
                         // Page copy: page_size bytes arrive over the remote
                         // ingress port (3/4 of the stripes are remote).
@@ -675,13 +692,17 @@ impl<'a> Engine<'a> {
                             smo.stack,
                             copy_bytes,
                         );
-                        let pte = vm.pte_of(vaddr).unwrap();
-                        tlb.fill(vpn, pte);
+                        let pte = vm.pte_of(va).unwrap();
+                        xl.install(smo.id, va, pte);
                         paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
                         gran = pte.granularity;
+                        huge = pte.huge;
                     }
                 }
-                let dst = mapper.stack_of(paddr, gran);
+                // Promoted frames live whole on one stack: route them by
+                // the huge-frame geometry, everything else as before.
+                let m = if huge { &huge_mapper } else { &mapper };
+                let dst = m.stack_of(paddr, gran);
                 // The direction flag only matters to the cycle-accurate
                 // backend's posted-write path; the other backends ignore
                 // it, keeping their completion times bit-identical.
@@ -747,8 +768,7 @@ impl<'a> Engine<'a> {
             }
         }
 
-        let tlb_hits: u64 = tlbs.iter().map(|t| t.hits).sum();
-        let tlb_total: u64 = tlbs.iter().map(|t| t.hits + t.misses).sum();
+        let (tlb_hits, tlb_total) = xl.hit_totals();
         let row_hit_rate = {
             let rates: Vec<f64> = stacks.iter().map(|s| s.row_hit_rate()).collect();
             crate::stats::mean(&rates)
@@ -781,6 +801,7 @@ impl<'a> Engine<'a> {
             host_ddr_bytes: host_ddr.as_ref().map(|d| d.bytes_served()).unwrap_or(0),
             host_port_stalls: net.host_port_stalls(),
             link_stats: net.link_stats(),
+            xlate: xl.stats(vm, end_time.max(host_end), topo.sms.len()),
         }
     }
 }

@@ -15,6 +15,7 @@
 //! copy of the pre-engine loop and proves this path reproduces it
 //! bit-exactly under both DRAM backends.
 
+use crate::addr::VirtualAddress;
 use crate::config::SystemConfig;
 use crate::session::Session;
 use crate::spec::ExperimentSpec;
@@ -45,7 +46,7 @@ pub fn run_host_sweep(
     cfg: &SystemConfig,
     trace: &KernelTrace,
     vm: &mut VirtualMemory,
-    obj_base: &[u64],
+    obj_base: &[VirtualAddress],
 ) -> RunReport {
     let spec = ExperimentSpec::host_sweep(trace);
     Session::new(cfg.clone(), spec)

@@ -154,6 +154,7 @@ pub mod stats;
 pub mod trace;
 pub mod vm;
 pub mod workloads;
+pub mod xlate;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

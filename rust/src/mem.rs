@@ -43,6 +43,7 @@
 //! side-effect-free "query the latency" entry point, which a stateful
 //! command-level model could not answer honestly.
 
+use crate::addr::PhysicalAddress;
 use crate::config::{MemBackendKind, SystemConfig};
 
 /// Timing outcome of one DRAM access.
@@ -179,8 +180,16 @@ impl MemBackendImpl {
     }
 
     /// Service one access (see [`MemBackend::access`]); enum dispatch.
+    /// Accepts raw `u64` or the typed [`PhysicalAddress`] — the engine
+    /// passes physical addresses by type, older callers pass words.
     #[inline]
-    pub fn access(&mut self, now: f64, addr: u64, bytes: u64) -> DramResult {
+    pub fn access(
+        &mut self,
+        now: f64,
+        addr: impl Into<PhysicalAddress>,
+        bytes: u64,
+    ) -> DramResult {
+        let addr = addr.into().0;
         match self {
             Self::Fixed(b) => b.access(now, addr, bytes),
             Self::Bank(b) => b.access(now, addr, bytes),
@@ -193,7 +202,14 @@ impl MemBackendImpl {
     /// bit-identical to [`Self::access`]; only the cycle-accurate
     /// backend's posted-write path consumes the flag.
     #[inline]
-    pub fn access_rw(&mut self, now: f64, addr: u64, bytes: u64, write: bool) -> DramResult {
+    pub fn access_rw(
+        &mut self,
+        now: f64,
+        addr: impl Into<PhysicalAddress>,
+        bytes: u64,
+        write: bool,
+    ) -> DramResult {
+        let addr = addr.into().0;
         match self {
             Self::Fixed(b) => b.access(now, addr, bytes),
             Self::Bank(b) => b.access(now, addr, bytes),

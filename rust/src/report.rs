@@ -177,6 +177,19 @@ impl From<&RunReport> for Json {
                 .push("p99_response", Json::Num(s.p99_response))
                 .push("p999_response", Json::Num(s.p999_response));
         }
+        // Translation extras, only when the hierarchical model ran
+        // (`tlb_l1_entries > 0`): legacy flat-walk runs carry no xlate
+        // block, so their JSON stays byte-identical to the frozen output.
+        if let Some(x) = &r.xlate {
+            o.push("xlate_l1_hit_rate", Json::Num(x.l1_hit_rate))
+                .push("xlate_l2_hit_rate", Json::Num(x.l2_hit_rate))
+                .push("walks", Json::Num(x.walks as f64))
+                .push("walk_cycles", Json::Num(x.walk_cycles))
+                .push("walk_queue_cycles", Json::Num(x.walk_queue_cycles))
+                .push("walk_stall_share", Json::Num(x.walk_stall_share))
+                .push("huge_pages", Json::Num(x.huge_pages as f64))
+                .push("huge_coverage", Json::Num(x.huge_coverage));
+        }
         // Fabric extras, only for multi-hop topologies: the degenerate
         // fully-connected fabric reports no link stats, so its JSON stays
         // byte-identical to the frozen pre-fabric output.
@@ -575,6 +588,41 @@ mod tests {
         assert!(s.contains(r#""p50_response":64"#));
         assert!(s.contains(r#""p99_response":256"#));
         assert!(s.contains(r#""p999_response":384"#));
+        validate_json(&s).unwrap();
+    }
+
+    #[test]
+    fn xlate_fields_render_only_for_hierarchical_runs() {
+        let plain = Json::from(&RunReport::default()).render();
+        assert!(!plain.contains("xlate_l1_hit_rate"));
+        assert!(!plain.contains("walk_stall_share"));
+        assert!(!plain.contains("huge_coverage"));
+        let r = RunReport {
+            xlate: Some(crate::stats::XlateStats {
+                l1_hits: 900,
+                l1_misses: 100,
+                l2_hits: 60,
+                l2_misses: 40,
+                walks: 40,
+                l1_hit_rate: 0.9,
+                l2_hit_rate: 0.6,
+                walk_cycles: 16000.0,
+                walk_queue_cycles: 2000.0,
+                walk_stall_share: 0.05,
+                huge_pages: 3,
+                huge_coverage: 0.75,
+            }),
+            ..Default::default()
+        };
+        let s = Json::from(&r).render();
+        assert!(s.contains(r#""xlate_l1_hit_rate":0.9"#));
+        assert!(s.contains(r#""xlate_l2_hit_rate":0.6"#));
+        assert!(s.contains(r#""walks":40"#));
+        assert!(s.contains(r#""walk_cycles":16000"#));
+        assert!(s.contains(r#""walk_queue_cycles":2000"#));
+        assert!(s.contains(r#""walk_stall_share":0.05"#));
+        assert!(s.contains(r#""huge_pages":3"#));
+        assert!(s.contains(r#""huge_coverage":0.75"#));
         validate_json(&s).unwrap();
     }
 

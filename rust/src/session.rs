@@ -25,6 +25,7 @@
 //! Parallelism shapes wall-clock time only: `tests/parallel_equiv.rs`
 //! proves every report bit-identical across thread counts and backends.
 
+use crate::addr::VirtualAddress;
 use crate::analysis::{analyze_kernel, profile_trace, ObjectPattern};
 use crate::config::SystemConfig;
 use crate::coordinator::Mechanism;
@@ -830,7 +831,7 @@ fn just_after(t: f64) -> f64 {
 fn exec_shared(
     cfg: &SystemConfig,
     apps: &[&BuiltWorkload],
-    app_bases: &[Vec<u64>],
+    app_bases: &[Vec<VirtualAddress>],
     launches: &[(usize, f64)],
     homes: &[usize],
     policy: Policy,
@@ -1211,10 +1212,10 @@ impl<'a> Session<'a> {
     fn map_kernels(
         &self,
         apps: &[&BuiltWorkload],
-    ) -> crate::Result<(VirtualMemory, Vec<Vec<u64>>)> {
+    ) -> crate::Result<(VirtualMemory, Vec<Vec<VirtualAddress>>)> {
         let cfg = &self.cfg;
         let mut vm = VirtualMemory::new(cfg);
-        let mut app_bases: Vec<Vec<u64>> = Vec::new();
+        let mut app_bases: Vec<Vec<VirtualAddress>> = Vec::new();
         for (i, app) in apps.iter().enumerate() {
             let home = self.home_stack(i);
             let mut bases = Vec::new();
@@ -1240,7 +1241,7 @@ impl<'a> Session<'a> {
         &self,
         vm: &mut VirtualMemory,
         host_wl: Option<&Wl<'_>>,
-    ) -> crate::Result<Vec<u64>> {
+    ) -> crate::Result<Vec<VirtualAddress>> {
         let mut bases = Vec::new();
         if let Some(h) = host_wl {
             let t = h.trace();
@@ -1391,7 +1392,7 @@ impl<'a> Session<'a> {
         // NDP-only layout), host objects after, fine-grain interleaved
         // (FGP is the host's preferred granularity, Fig 13).
         let (mut vm, app_bases) = self.map_kernels(&apps)?;
-        let host_bases: Vec<u64> = self.map_host(&mut vm, host_wl.as_ref())?;
+        let host_bases: Vec<VirtualAddress> = self.map_host(&mut vm, host_wl.as_ref())?;
         let launches: Vec<(usize, f64)> = apps
             .iter()
             .zip(&arrivals)
@@ -1634,7 +1635,7 @@ impl<'a> Session<'a> {
         // Identical layout discipline to run_shared: kernel objects first
         // (per-kernel placement/home), host objects after, fine-grain.
         let (mut vm, app_bases) = self.map_kernels(&apps)?;
-        let host_bases: Vec<u64> = self.map_host(&mut vm, host_wl.as_ref())?;
+        let host_bases: Vec<VirtualAddress> = self.map_host(&mut vm, host_wl.as_ref())?;
         let host_stream = if host_active {
             host_wl.as_ref().map(|h| HostStream {
                 trace: h.trace(),
@@ -1749,7 +1750,7 @@ impl<'a> Session<'a> {
     pub fn run_host_in(
         &self,
         vm: &mut VirtualMemory,
-        obj_base: &[u64],
+        obj_base: &[VirtualAddress],
     ) -> crate::Result<Report> {
         ensure!(
             self.spec.kernels.is_empty() && self.spec.host.is_some(),

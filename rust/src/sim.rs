@@ -21,6 +21,7 @@
 //! experiment-API redesign, [`crate::session`] drives this adapter for
 //! every kernel-dispatch [`crate::spec::ExperimentSpec`].
 
+use crate::addr::VirtualAddress;
 use crate::config::SystemConfig;
 use crate::engine::{AppCtx, BlockRef, BlockSource, Engine, EngineOptions};
 use crate::gpu::{Sm, Topology};
@@ -35,7 +36,7 @@ pub struct KernelRun<'a> {
     pub trace: &'a KernelTrace,
     pub vm: &'a mut VirtualMemory,
     /// Base virtual address of each object (indexed by `Access::obj`).
-    pub obj_base: &'a [u64],
+    pub obj_base: &'a [VirtualAddress],
     pub policy: Policy,
     /// Migrate FGP pages to the first-touching stack (migration-FTA).
     pub migrate_on_first_touch: bool,
@@ -116,7 +117,7 @@ pub fn map_objects(
     cfg: &SystemConfig,
     trace: &KernelTrace,
     plan: &crate::placement::PlacementPlan,
-) -> crate::Result<(VirtualMemory, Vec<u64>, u64, u64)> {
+) -> crate::Result<(VirtualMemory, Vec<VirtualAddress>, u64, u64)> {
     let mut vm = VirtualMemory::new(cfg);
     let mut bases = Vec::with_capacity(trace.objects.len());
     let mut cgp_pages = 0u64;

@@ -157,6 +157,9 @@ pub struct RunReport {
     /// Open-loop service-mode results (`[arrivals]` specs only; `None`
     /// for fixed mixes, whose reports stay frozen).
     pub service: Option<ServiceStats>,
+    /// Hierarchical address-translation results (`tlb_l1_entries > 0`
+    /// only; `None` under the frozen legacy flat-walk model).
+    pub xlate: Option<XlateStats>,
 }
 
 impl RunReport {
@@ -274,6 +277,40 @@ pub struct ServiceStats {
     pub p99_response: f64,
     /// Streaming 99.9th-percentile response time in cycles.
     pub p999_response: f64,
+}
+
+/// Results of one run under the hierarchical translation model (see
+/// [`crate::xlate`]): TLB level hit accounting, page-walk occupancy, and
+/// huge-page coverage of the run's mappings.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct XlateStats {
+    /// Accesses served by a split L1 TLB (either page size).
+    pub l1_hits: u64,
+    /// Accesses that missed both L1 TLBs.
+    pub l1_misses: u64,
+    /// L1 misses served by the unified L2 TLB.
+    pub l2_hits: u64,
+    /// Accesses that missed both levels and took a page walk.
+    pub l2_misses: u64,
+    /// Page walks performed (equals `l2_misses`; kept explicit so the
+    /// JSON reads without cross-referencing).
+    pub walks: u64,
+    /// L1 hit rate: `l1_hits / (l1_hits + l1_misses)`.
+    pub l1_hit_rate: f64,
+    /// L2 hit rate over L1 misses: `l2_hits / (l2_hits + l2_misses)`.
+    pub l2_hit_rate: f64,
+    /// SM cycles spent in page-walk service (levels x `ptw_level_ns`).
+    pub walk_cycles: f64,
+    /// SM cycles accesses spent queued for a free walker slot — the
+    /// bounded-walker occupancy cost, separate from walk service.
+    pub walk_queue_cycles: f64,
+    /// Walk service + queue cycles as a share of total SM execution
+    /// cycles (makespan x SM count).
+    pub walk_stall_share: f64,
+    /// 2 MB huge-page frames the allocator promoted this run.
+    pub huge_pages: u64,
+    /// Fraction of mapped base pages covered by huge frames.
+    pub huge_coverage: f64,
 }
 
 /// Base-2 exponent buckets in the sketch: covers magnitudes up to 2^63.

@@ -9,10 +9,13 @@
 //! Allocating a coarse-grain page *on a specific stack* is the primitive the
 //! data-placement algorithm (Eq 3) builds on.
 
-use crate::addr::{AddressMapper, Granularity};
+use crate::addr::{large_page_mapper, AddressMapper, Granularity, PhysicalAddress, VirtualAddress};
 use crate::config::SystemConfig;
 use anyhow::bail;
 use std::collections::HashMap;
+
+/// Bytes in one huge page (§7.2 large pages; the x86 2 MB level).
+pub const HUGE_PAGE_BYTES: u64 = 2 << 20;
 
 /// A page table entry: translation plus the CODA granularity bit (the paper
 /// stores it in one of the x86 PTE reserved bits [11:9], §7.3).
@@ -20,6 +23,14 @@ use std::collections::HashMap;
 pub struct Pte {
     pub ppn: u64,
     pub granularity: Granularity,
+    /// Set on every base-page PTE covered by a 2 MB huge mapping. The page
+    /// table stays dense at base-page granularity (the simulator's VPN
+    /// indexing depends on it); the flag tells translation hardware that
+    /// this VPN's frame is part of an aligned huge frame — the TLB may
+    /// cache one entry for the whole frame and the page walk is one level
+    /// shorter — and tells the engine to route the access through the
+    /// huge-page mapper (stack bits above the 2 MB boundary).
+    pub huge: bool,
 }
 
 /// Per-group allocator bookkeeping.
@@ -50,7 +61,14 @@ pub struct PhysAllocator {
     fgp_pool: Vec<(u64, u32)>,
     /// Free CGP pages per stack: (ppn, group_epoch).
     cgp_pools: Vec<Vec<(u64, u32)>>,
+    /// Free 2 MB frames per stack (base PPN of the frame), carved from
+    /// fresh memory by [`Self::alloc_huge_cgp`] but landing on a stack the
+    /// caller didn't ask for.
+    huge_pools: Vec<Vec<u64>>,
     mapper: AddressMapper,
+    /// The §7.2 large-page mapper: stack selection from the bits above the
+    /// 2 MB boundary, used to steer whole huge frames onto one stack.
+    huge_mapper: AddressMapper,
     pages_allocated: u64,
 }
 
@@ -67,7 +85,9 @@ impl PhysAllocator {
             groups: HashMap::new(),
             fgp_pool: Vec::new(),
             cgp_pools: vec![Vec::new(); cfg.num_stacks],
+            huge_pools: vec![Vec::new(); cfg.num_stacks],
             mapper,
+            huge_mapper: large_page_mapper(cfg),
             pages_allocated: 0,
         }
     }
@@ -174,6 +194,73 @@ impl PhysAllocator {
         Ok(ppn)
     }
 
+    /// Mark every page of group `g` as used under CGP mode (a huge frame
+    /// consumes its groups whole; the per-page pools never see them).
+    fn commit_group_full(&mut self, g: u64) {
+        let epoch = self.groups.get(&g).map(|e| e.epoch).unwrap_or(0);
+        let full = if self.group_len == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.group_len) - 1
+        };
+        self.groups.insert(
+            g,
+            GroupEntry {
+                mode: Granularity::Cgp,
+                used: full,
+                epoch,
+            },
+        );
+        self.pages_allocated += self.group_len;
+    }
+
+    /// Allocate one naturally aligned 2 MB frame (`span_pages` base pages)
+    /// resident entirely on `stack`; returns the frame's base PPN.
+    ///
+    /// Frames are carved from never-touched memory at frame alignment:
+    /// the fresh-group cursor is rounded up (skipped groups recycle
+    /// through `free_groups`, so no capacity is lost), and because under
+    /// the large-page mapper consecutive huge frames cycle round-robin
+    /// over the stacks, frames carved for the wrong stack pool up in
+    /// `huge_pools` for later requests. `span_pages` must be a multiple
+    /// of the group length (config validation guarantees it).
+    pub fn alloc_huge_cgp(&mut self, stack: usize, span_pages: u64) -> crate::Result<u64> {
+        if stack >= self.cgp_pools.len() {
+            bail!("stack {stack} out of range");
+        }
+        debug_assert_eq!(span_pages % self.group_len, 0, "frame covers whole groups");
+        if let Some(base) = self.huge_pools[stack].pop() {
+            for k in 0..span_pages / self.group_len {
+                self.commit_group_full(base / self.group_len + k);
+            }
+            return Ok(base);
+        }
+        let groups_per_frame = span_pages / self.group_len;
+        loop {
+            // Round the fresh cursor up to a frame boundary; skipped groups
+            // stay allocatable as ordinary 4 KB groups.
+            while self.next_fresh % groups_per_frame != 0
+                && self.next_fresh < self.total_groups
+            {
+                self.free_groups.push(self.next_fresh);
+                self.next_fresh += 1;
+            }
+            if self.next_fresh + groups_per_frame > self.total_groups {
+                bail!("out of physical memory (huge frame, stack {stack})");
+            }
+            let base = self.next_fresh * self.group_len;
+            self.next_fresh += groups_per_frame;
+            let frame_stack = self.huge_mapper.stack_of_ppn_cgp(base / span_pages);
+            if frame_stack == stack {
+                for k in 0..groups_per_frame {
+                    self.commit_group_full(base / self.group_len + k);
+                }
+                return Ok(base);
+            }
+            self.huge_pools[frame_stack].push(base);
+        }
+    }
+
     /// Free a page. When its whole group becomes free, the group may be
     /// re-committed to either mode by a later allocation (the paper's
     /// conversion rule).
@@ -220,16 +307,38 @@ pub struct VirtualMemory {
     table: Vec<Option<Pte>>, // indexed by VPN; dense per-workload space
     alloc: PhysAllocator,
     next_vpn: u64,
+    /// Huge-page promotion enabled (`cfg.huge_pages` and the geometry
+    /// supports it).
+    huge_enabled: bool,
+    /// Base pages per 2 MB frame ([`HUGE_PAGE_BYTES`] / page_size).
+    huge_span: u64,
+    /// 2 MB mappings created by promotion.
+    huge_frames: u64,
+    /// Base pages covered by huge mappings (huge_frames * huge_span).
+    huge_covered: u64,
+    /// Mapped (non-hole) base pages.
+    mapped_count: u64,
 }
 
 impl VirtualMemory {
     pub fn new(cfg: &SystemConfig) -> Self {
+        let huge_span = if cfg.page_size <= HUGE_PAGE_BYTES && HUGE_PAGE_BYTES % cfg.page_size == 0
+        {
+            HUGE_PAGE_BYTES / cfg.page_size
+        } else {
+            0
+        };
         Self {
             page_size: cfg.page_size,
             page_shift: cfg.page_size.trailing_zeros(),
             table: Vec::new(),
             alloc: PhysAllocator::new(cfg),
             next_vpn: 0,
+            huge_enabled: cfg.huge_pages && huge_span >= cfg.num_stacks as u64,
+            huge_span,
+            huge_frames: 0,
+            huge_covered: 0,
+            mapped_count: 0,
         }
     }
 
@@ -244,59 +353,124 @@ impl VirtualMemory {
             self.table.resize(vpn as usize + 1, None);
         }
         self.table[vpn as usize] = Some(pte);
+        self.mapped_count += 1;
         vpn
     }
 
+    /// Advance past one unmapped VPN (alignment hole before a huge frame).
+    fn push_hole(&mut self) {
+        let vpn = self.next_vpn;
+        self.next_vpn += 1;
+        if self.table.len() <= vpn as usize {
+            self.table.resize(vpn as usize + 1, None);
+        }
+    }
+
     /// Map `n_pages` fine-grain pages; returns the base virtual address.
-    pub fn map_fgp(&mut self, n_pages: u64) -> crate::Result<u64> {
+    ///
+    /// FGP regions are never huge-page candidates: fine-grain interleaving
+    /// stripes each base page across every stack, so a 2 MB mapping would
+    /// have no single stack to live on — the CGP/FGP tension the huge-page
+    /// experiment measures.
+    pub fn map_fgp(&mut self, n_pages: u64) -> crate::Result<VirtualAddress> {
         let base = self.next_vpn;
         for _ in 0..n_pages {
             let ppn = self.alloc.alloc_fgp()?;
             self.push_pte(Pte {
                 ppn,
                 granularity: Granularity::Fgp,
+                huge: false,
             });
         }
-        Ok(base << self.page_shift)
+        Ok(VirtualAddress(base << self.page_shift))
     }
 
     /// Map `n_pages` coarse-grain pages; `stack_of_page(i)` names the target
     /// stack for the i-th page (this is where Eq 3 plugs in). Returns the
     /// base virtual address.
+    ///
+    /// With huge pages on, aligned runs of [`Self::huge_span`] pages whose
+    /// requested stacks agree are promoted to one 2 MB mapping (the base
+    /// PTEs carry `huge` and a contiguous, frame-aligned PPN range); mixed
+    /// or tail runs fall back to base pages. The plan callback may be
+    /// probed more than once per page when checking run uniformity, so it
+    /// must be a pure function of the page index (every caller's is).
     pub fn map_cgp(
         &mut self,
         n_pages: u64,
         mut stack_of_page: impl FnMut(u64) -> usize,
-    ) -> crate::Result<u64> {
+    ) -> crate::Result<VirtualAddress> {
+        if !self.huge_enabled || n_pages < self.huge_span {
+            let base = self.next_vpn;
+            for i in 0..n_pages {
+                let ppn = self.alloc.alloc_cgp(stack_of_page(i))?;
+                self.push_pte(Pte {
+                    ppn,
+                    granularity: Granularity::Cgp,
+                    huge: false,
+                });
+            }
+            return Ok(VirtualAddress(base << self.page_shift));
+        }
+        // Align the region so promoted chunks are naturally aligned in
+        // virtual space (huge TLB entries and the one-level-shorter walk
+        // both assume VA alignment).
+        while self.next_vpn % self.huge_span != 0 {
+            self.push_hole();
+        }
         let base = self.next_vpn;
-        for i in 0..n_pages {
+        let mut i = 0;
+        while i < n_pages {
+            if n_pages - i >= self.huge_span {
+                let stack0 = stack_of_page(i);
+                if (1..self.huge_span).all(|k| stack_of_page(i + k) == stack0) {
+                    let frame = self.alloc.alloc_huge_cgp(stack0, self.huge_span)?;
+                    for k in 0..self.huge_span {
+                        self.push_pte(Pte {
+                            ppn: frame + k,
+                            granularity: Granularity::Cgp,
+                            huge: true,
+                        });
+                    }
+                    self.huge_frames += 1;
+                    self.huge_covered += self.huge_span;
+                    i += self.huge_span;
+                    continue;
+                }
+            }
             let ppn = self.alloc.alloc_cgp(stack_of_page(i))?;
             self.push_pte(Pte {
                 ppn,
                 granularity: Granularity::Cgp,
+                huge: false,
             });
+            i += 1;
         }
-        Ok(base << self.page_shift)
+        Ok(VirtualAddress(base << self.page_shift))
     }
 
     /// Translate a virtual address. Returns (physical address, granularity).
     #[inline]
-    pub fn translate(&self, vaddr: u64) -> Option<(u64, Granularity)> {
-        let vpn = (vaddr >> self.page_shift) as usize;
+    pub fn translate(&self, vaddr: VirtualAddress) -> Option<(PhysicalAddress, Granularity)> {
+        let vpn = (vaddr.0 >> self.page_shift) as usize;
         let pte = (*self.table.get(vpn)?)?;
-        let off = vaddr & (self.page_size - 1);
-        Some(((pte.ppn << self.page_shift) | off, pte.granularity))
+        let off = vaddr.0 & (self.page_size - 1);
+        Some((
+            PhysicalAddress((pte.ppn << self.page_shift) | off),
+            pte.granularity,
+        ))
     }
 
-    /// The PTE for a virtual page (tests / migration).
-    pub fn pte_of(&self, vaddr: u64) -> Option<Pte> {
-        *self.table.get((vaddr >> self.page_shift) as usize)?
+    /// The PTE for a virtual page (the page-table walk's result; also used
+    /// by tests and migration).
+    pub fn pte_of(&self, vaddr: VirtualAddress) -> Option<Pte> {
+        *self.table.get((vaddr.0 >> self.page_shift) as usize)?
     }
 
     /// Remap one virtual page onto a freshly allocated CGP page on `stack`
     /// (used by the migration-based first-touch baseline, §6.1 fn.6).
-    pub fn migrate_to_cgp(&mut self, vaddr: u64, stack: usize) -> crate::Result<()> {
-        let vpn = (vaddr >> self.page_shift) as usize;
+    pub fn migrate_to_cgp(&mut self, vaddr: VirtualAddress, stack: usize) -> crate::Result<()> {
+        let vpn = (vaddr.0 >> self.page_shift) as usize;
         let Some(Some(old)) = self.table.get(vpn).copied() else {
             bail!("migrating unmapped page");
         };
@@ -304,6 +478,7 @@ impl VirtualMemory {
         self.table[vpn] = Some(Pte {
             ppn,
             granularity: Granularity::Cgp,
+            huge: false,
         });
         self.alloc.free(old.ppn);
         Ok(())
@@ -313,9 +488,25 @@ impl VirtualMemory {
         &self.alloc
     }
 
-    /// Number of mapped virtual pages.
+    /// Number of virtual pages the address space spans (engine bitmap
+    /// sizing; includes alignment holes).
     pub fn mapped_pages(&self) -> u64 {
         self.next_vpn
+    }
+
+    /// 2 MB mappings created by promotion.
+    pub fn huge_frames(&self) -> u64 {
+        self.huge_frames
+    }
+
+    /// Fraction of mapped base pages covered by huge mappings (the report's
+    /// huge-page coverage; 0 when promotion is off or nothing qualified).
+    pub fn huge_coverage(&self) -> f64 {
+        if self.mapped_count == 0 {
+            0.0
+        } else {
+            self.huge_covered as f64 / self.mapped_count as f64
+        }
     }
 }
 
@@ -332,9 +523,31 @@ pub struct Tlb {
 }
 
 impl Tlb {
+    /// Build a TLB of exactly `entries` entries at up to 4-way
+    /// associativity (the historical default). See [`Self::with_ways`] for
+    /// the representability contract.
     pub fn new(entries: usize) -> Self {
-        let ways = 4.min(entries.max(1));
-        let sets = (entries / ways).max(1).next_power_of_two();
+        Self::with_ways(entries, 4)
+    }
+
+    /// Build a TLB of exactly `entries` entries, at the widest
+    /// associativity `<= max_ways` that yields a power-of-two set count.
+    ///
+    /// The budget is honored exactly — the old constructor rounded
+    /// `entries / ways` up to the next power of two, silently inflating
+    /// e.g. a 48-entry request into a 64-entry TLB. Sizes with no
+    /// `ways * 2^k` factorization under `max_ways` (e.g. 7) are a panic
+    /// here; config validation rejects them first with a proper error.
+    pub fn with_ways(entries: usize, max_ways: usize) -> Self {
+        let entries = entries.max(1);
+        let max_ways = max_ways.clamp(1, entries);
+        let ways = (1..=max_ways)
+            .rev()
+            .find(|&w| entries % w == 0 && (entries / w).is_power_of_two())
+            .unwrap_or_else(|| {
+                panic!("TLB size {entries} not representable as ways*2^k with ways <= {max_ways}")
+            });
+        let sets = entries / ways;
         Self {
             sets: vec![Vec::with_capacity(ways); sets],
             ways,
@@ -342,6 +555,19 @@ impl Tlb {
             tick: 0,
             hits: 0,
             misses: 0,
+        }
+    }
+
+    /// Total entries this TLB can hold (`sets * ways`).
+    pub fn capacity(&self) -> usize {
+        self.sets.len() * self.ways
+    }
+
+    /// Drop every cached translation (address-space switch); the hit/miss
+    /// counters survive — they describe the access stream, not the content.
+    pub fn flush(&mut self) {
+        for set in &mut self.sets {
+            set.clear();
         }
     }
 
@@ -484,13 +710,13 @@ mod tests {
         let v_c = vm.map_cgp(2, |_| 3).unwrap();
         let (p, g) = vm.translate(v_f + 100).unwrap();
         assert_eq!(g, Granularity::Fgp);
-        assert_eq!(p & 0xFFF, 100);
+        assert_eq!(p.0 & 0xFFF, 100);
         let (p, g) = vm.translate(v_c + 5000).unwrap();
         assert_eq!(g, Granularity::Cgp);
-        assert_eq!(p & 0xFFF, 5000 & 0xFFF);
+        assert_eq!(p.0 & 0xFFF, 5000 & 0xFFF);
         let mapper = AddressMapper::new(&c);
         assert_eq!(mapper.stack_of(p, g), 3);
-        assert!(vm.translate(1 << 40).is_none());
+        assert!(vm.translate(VirtualAddress(1 << 40)).is_none());
     }
 
     #[test]
@@ -512,6 +738,7 @@ mod tests {
         let pte = |ppn| Pte {
             ppn,
             granularity: Granularity::Fgp,
+            huge: false,
         };
         assert!(tlb.lookup(0).is_none());
         tlb.fill(0, pte(10));
@@ -525,5 +752,120 @@ mod tests {
         assert!(tlb.lookup(0).is_some());
         assert!(tlb.lookup(2).is_none());
         assert!(tlb.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn tlb_honors_the_requested_budget() {
+        // The old constructor rounded 48/4 = 12 sets up to 16, silently
+        // building a 64-entry TLB; 48 must now mean 48 (3-way x 16 sets).
+        assert_eq!(Tlb::new(48).capacity(), 48);
+        // Historical geometries are preserved exactly (bit-exactness of
+        // every existing run depends on it).
+        for entries in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+            assert_eq!(Tlb::new(entries).capacity(), entries);
+        }
+        assert_eq!(Tlb::with_ways(512, 8).capacity(), 512);
+    }
+
+    #[test]
+    #[should_panic(expected = "not representable")]
+    fn tlb_rejects_non_representable_sizes() {
+        let _ = Tlb::new(7); // no ways<=4 divides 7 into 2^k sets
+    }
+
+    #[test]
+    fn tlb_flush_drops_translations_but_keeps_counters() {
+        let mut tlb = Tlb::new(8);
+        tlb.fill(
+            3,
+            Pte {
+                ppn: 9,
+                granularity: Granularity::Cgp,
+                huge: false,
+            },
+        );
+        assert!(tlb.lookup(3).is_some());
+        let hits = tlb.hits;
+        tlb.flush();
+        assert!(tlb.lookup(3).is_none(), "flush must drop the entry");
+        assert_eq!(tlb.hits, hits, "counters describe the stream, not content");
+    }
+
+    fn huge_cfg() -> SystemConfig {
+        let mut c = cfg();
+        c.huge_pages = true;
+        c
+    }
+
+    #[test]
+    fn cgp_runs_promote_to_huge_frames() {
+        let c = huge_cfg();
+        let span = HUGE_PAGE_BYTES / c.page_size; // 512 pages
+        let mut vm = VirtualMemory::new(&c);
+        let v = vm.map_cgp(span, |_| 2).unwrap();
+        assert_eq!(vm.huge_frames(), 1);
+        assert!((vm.huge_coverage() - 1.0).abs() < 1e-12);
+        let pte = vm.pte_of(v).unwrap();
+        assert!(pte.huge);
+        assert_eq!(pte.granularity, Granularity::Cgp);
+        // Frame-aligned, contiguous PPNs; the whole frame on stack 2 under
+        // the large-page mapper.
+        assert_eq!(pte.ppn % span, 0);
+        let last = vm.pte_of(v + (span - 1) * c.page_size).unwrap();
+        assert_eq!(last.ppn, pte.ppn + span - 1);
+        let lm = large_page_mapper(&c);
+        assert_eq!(lm.stack_of_ppn_cgp(pte.ppn / span), 2);
+    }
+
+    #[test]
+    fn mixed_stack_runs_and_tails_stay_base_pages() {
+        let c = huge_cfg();
+        let span = HUGE_PAGE_BYTES / c.page_size;
+        let mut vm = VirtualMemory::new(&c);
+        // Per-page round-robin stacks: no uniform run, nothing promotes.
+        let v = vm.map_cgp(span, |p| (p % 4) as usize).unwrap();
+        assert_eq!(vm.huge_frames(), 0);
+        assert_eq!(vm.huge_coverage(), 0.0);
+        assert!(!vm.pte_of(v).unwrap().huge);
+        // A uniform run with a tail promotes the aligned chunk only.
+        let v2 = vm.map_cgp(span + 3, |_| 1).unwrap();
+        assert_eq!(vm.huge_frames(), 1);
+        assert!(vm.pte_of(v2).unwrap().huge);
+        assert!(!vm.pte_of(v2 + span * c.page_size).unwrap().huge);
+    }
+
+    #[test]
+    fn huge_off_and_fgp_are_untouched() {
+        let c = cfg(); // huge_pages defaults off
+        let mut vm = VirtualMemory::new(&c);
+        let span = HUGE_PAGE_BYTES / c.page_size;
+        let v = vm.map_cgp(span, |_| 0).unwrap();
+        assert_eq!(vm.huge_frames(), 0);
+        assert!(!vm.pte_of(v).unwrap().huge);
+        // FGP never promotes even with huge pages on (striping fights 2 MB
+        // frames — each base page spreads over every stack).
+        let mut vm = VirtualMemory::new(&huge_cfg());
+        let v = vm.map_fgp(span).unwrap();
+        assert_eq!(vm.huge_frames(), 0);
+        assert_eq!(vm.huge_coverage(), 0.0);
+        assert!(!vm.pte_of(v).unwrap().huge);
+    }
+
+    #[test]
+    fn huge_frame_allocator_steers_stacks_and_reuses_pool() {
+        let mut c = huge_cfg();
+        c.stack_capacity = 16 << 20; // 16 MB/stack: room for a few frames
+        let span = HUGE_PAGE_BYTES / c.page_size;
+        let lm = large_page_mapper(&c);
+        let mut a = PhysAllocator::new(&c);
+        // Asking for stack 3 first forces frames 0..3 into the pools.
+        let f3 = a.alloc_huge_cgp(3, span).unwrap();
+        assert_eq!(lm.stack_of_ppn_cgp(f3 / span), 3);
+        // Stack 0's frame now comes from the pool (frame 0), not fresh.
+        let f0 = a.alloc_huge_cgp(0, span).unwrap();
+        assert_eq!(f0, 0);
+        // Base-page allocation still works alongside frames.
+        let p = a.alloc_cgp(1).unwrap();
+        assert_eq!(AddressMapper::new(&c).stack_of_ppn_cgp(p), 1);
     }
 }

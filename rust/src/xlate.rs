@@ -1,0 +1,478 @@
+//! The address-translation subsystem: per-SM TLB hierarchies and a
+//! bounded page-table-walker model behind one seam the engine drives
+//! per access.
+//!
+//! Two models live behind [`TranslationUnit`], selected purely by
+//! configuration (`tlb_l1_entries` in [`SystemConfig`]):
+//!
+//! * [`TranslationUnit::Legacy`] (`tlb_l1_entries = 0`, the default) —
+//!   the frozen model every golden number is locked against: one flat
+//!   per-SM TLB of `tlb_entries` and a constant `tlb_miss_ns` walk
+//!   cost. Its [`access`](TranslationUnit::access) replays the engine's
+//!   historical miss sequence operation for operation (one f64 add on a
+//!   miss, nothing on a hit), so existing reports stay bit-exact — the
+//!   differential and golden suites enforce this.
+//! * [`TranslationUnit::Hier`] — the NDPage-motivated hierarchy
+//!   (arXiv 2502.14220): split per-SM L1 TLBs (one per page size, so a
+//!   2 MB entry covers a whole promoted frame), a unified per-SM L2
+//!   probing both page sizes, and a *global* pool of `ptw_slots`
+//!   page-table walkers. A walk occupies a slot for
+//!   `levels x ptw_level_ns` — [`WALK_LEVELS_BASE`] levels for base
+//!   pages, [`WALK_LEVELS_HUGE`] for huge pages (the huge walk
+//!   terminates at the directory level) — and when every slot is busy
+//!   the access queues behind the earliest-free one. Queue cycles are
+//!   accounted separately from walk service cycles, which is exactly
+//!   the signal that distinguishes translation *pressure* (not enough
+//!   walkers) from translation *cost* (walks themselves).
+//!
+//! Timing contract: [`TranslationUnit::access`] returns the instant the
+//! translation is available plus the PTE; the engine layers everything
+//! downstream on top (migration, interconnect hops, DRAM dispatch).
+//! Translation prices the lookup but never decides *where* data lives,
+//! so local/remote access counts stay model-independent — the same
+//! invariant the DRAM backends honor.
+
+use crate::addr::VirtualAddress;
+use crate::config::SystemConfig;
+use crate::stats::XlateStats;
+use crate::vm::{Pte, Tlb, VirtualMemory, HUGE_PAGE_BYTES};
+
+/// Page-table levels referenced by a base-page walk (x86-style 4-level).
+pub const WALK_LEVELS_BASE: f64 = 4.0;
+/// Levels referenced by a huge-page walk: the 2 MB mapping lives one
+/// level up, so the walk terminates early.
+pub const WALK_LEVELS_HUGE: f64 = 3.0;
+
+/// The per-SM flat TLBs plus the frozen constant-cost walk.
+pub struct Legacy {
+    tlbs: Vec<Tlb>,
+    /// `tlb_miss_ns` converted to SM cycles (hoisted once, exactly as
+    /// the engine's historical loop did).
+    miss_cycles: f64,
+    page_shift: u32,
+}
+
+/// The hierarchical L1/L2/PTW pipeline.
+pub struct Hier {
+    /// Per-SM split L1 for base pages (tagged by base-page VPN).
+    l1_base: Vec<Tlb>,
+    /// Per-SM split L1 for 2 MB pages (tagged by huge-frame number; one
+    /// entry covers a whole promoted frame).
+    l1_huge: Vec<Tlb>,
+    /// Per-SM unified L2, probed under both page sizes. Tags disambiguate
+    /// the size in the low bit: `vpn << 1` for base, `(frame << 1) | 1`
+    /// for huge.
+    l2: Vec<Tlb>,
+    /// Free-at times of the global walker pool (`ptw_slots` long).
+    walkers: Vec<f64>,
+    l2_hit_cycles: f64,
+    /// One page-table level reference in SM cycles.
+    level_cycles: f64,
+    page_shift: u32,
+    /// `log2(base pages per 2 MB frame)`; 0 when the page size cannot
+    /// tile a huge frame (then nothing is ever tagged huge).
+    huge_shift: u32,
+    /// `pages per frame - 1`, the in-frame page index mask.
+    span_mask: u64,
+    // Own counters (the embedded `Tlb` hit/miss counters are ignored:
+    // the unified L2 is probed under up to two tags per access, which
+    // would double-count misses).
+    l1_hits: u64,
+    l1_misses: u64,
+    l2_hits: u64,
+    l2_misses: u64,
+    walks: u64,
+    walk_cycles: f64,
+    walk_queue_cycles: f64,
+}
+
+/// The seam the engine drives: either the frozen legacy model or the
+/// hierarchical pipeline, selected once from configuration.
+pub enum TranslationUnit {
+    /// Flat per-SM TLB + constant walk cost (the frozen default).
+    Legacy(Legacy),
+    /// Split L1s + unified L2 + bounded walker pool.
+    Hier(Hier),
+}
+
+impl TranslationUnit {
+    /// Build the unit for `n_sms` SMs. `cyc` is the engine's
+    /// cycles-per-ns factor — passed in (not recomputed) so the legacy
+    /// path's `tlb_miss_ns * cyc` is the engine's historical expression
+    /// bit for bit.
+    pub fn new(cfg: &SystemConfig, n_sms: usize, cyc: f64) -> Self {
+        let page_shift = cfg.page_size.trailing_zeros();
+        if cfg.tlb_l1_entries == 0 {
+            return TranslationUnit::Legacy(Legacy {
+                tlbs: (0..n_sms).map(|_| Tlb::new(cfg.tlb_entries)).collect(),
+                miss_cycles: cfg.tlb_miss_ns * cyc,
+                page_shift,
+            });
+        }
+        let span = if cfg.page_size <= HUGE_PAGE_BYTES && HUGE_PAGE_BYTES % cfg.page_size == 0 {
+            HUGE_PAGE_BYTES / cfg.page_size
+        } else {
+            1
+        };
+        TranslationUnit::Hier(Hier {
+            l1_base: (0..n_sms)
+                .map(|_| Tlb::with_ways(cfg.tlb_l1_entries, cfg.tlb_l1_ways))
+                .collect(),
+            l1_huge: (0..n_sms)
+                .map(|_| Tlb::with_ways(cfg.tlb_l1_entries, cfg.tlb_l1_ways))
+                .collect(),
+            l2: (0..n_sms)
+                .map(|_| Tlb::with_ways(cfg.tlb_l2_entries, cfg.tlb_l2_ways))
+                .collect(),
+            walkers: vec![0.0; cfg.ptw_slots],
+            l2_hit_cycles: cfg.tlb_l2_hit_ns * cyc,
+            level_cycles: cfg.ptw_level_ns * cyc,
+            page_shift,
+            huge_shift: span.trailing_zeros(),
+            span_mask: span - 1,
+            l1_hits: 0,
+            l1_misses: 0,
+            l2_hits: 0,
+            l2_misses: 0,
+            walks: 0,
+            walk_cycles: 0.0,
+            walk_queue_cycles: 0.0,
+        })
+    }
+
+    /// Translate one access issued at `now` on SM `sm`: returns the time
+    /// the translation is ready and the page's PTE. Panics (like the
+    /// engine always has) if `va` lies beyond every mapped object.
+    pub fn access(
+        &mut self,
+        sm: usize,
+        now: f64,
+        va: VirtualAddress,
+        vm: &VirtualMemory,
+    ) -> (f64, Pte) {
+        match self {
+            TranslationUnit::Legacy(u) => {
+                let vpn = va.0 >> u.page_shift;
+                match u.tlbs[sm].lookup(vpn) {
+                    Some(pte) => (now, pte),
+                    None => {
+                        // The engine's historical miss sequence, verbatim:
+                        // one constant-cost walk, then fill.
+                        let t = now + u.miss_cycles;
+                        let pte = vm
+                            .pte_of(va)
+                            .expect("workload access beyond mapped object");
+                        u.tlbs[sm].fill(vpn, pte);
+                        (t, pte)
+                    }
+                }
+            }
+            TranslationUnit::Hier(u) => u.access(sm, now, va, vm),
+        }
+    }
+
+    /// Re-install a translation the engine just changed under the TLBs
+    /// (page migration rewrites the PTE in place). Mirrors the frozen
+    /// `tlb.fill` the legacy loop performed after a migration; migrated
+    /// pages are always base pages, so the hierarchy fills its base L1
+    /// and the unified L2.
+    pub fn install(&mut self, sm: usize, va: VirtualAddress, pte: Pte) {
+        match self {
+            TranslationUnit::Legacy(u) => {
+                u.tlbs[sm].fill(va.0 >> u.page_shift, pte);
+            }
+            TranslationUnit::Hier(u) => {
+                let vpn = va.0 >> u.page_shift;
+                u.l1_base[sm].fill(vpn, pte);
+                u.l2[sm].fill(vpn << 1, pte);
+            }
+        }
+    }
+
+    /// Drop every translation SM `sm` holds (an address-space switch on
+    /// a time-shared SM). Hit/miss counters survive.
+    pub fn flush(&mut self, sm: usize) {
+        match self {
+            TranslationUnit::Legacy(u) => u.tlbs[sm].flush(),
+            TranslationUnit::Hier(u) => {
+                u.l1_base[sm].flush();
+                u.l1_huge[sm].flush();
+                u.l2[sm].flush();
+            }
+        }
+    }
+
+    /// First-level hit accounting as `(hits, lookups)` — the numbers the
+    /// report's `tlb_hit_rate` has always been computed from. Legacy
+    /// sums the per-SM TLB counters exactly as the engine's historical
+    /// epilogue did; the hierarchy reports its L1 aggregate.
+    pub fn hit_totals(&self) -> (u64, u64) {
+        match self {
+            TranslationUnit::Legacy(u) => {
+                let hits: u64 = u.tlbs.iter().map(|t| t.hits).sum();
+                let total: u64 = u.tlbs.iter().map(|t| t.hits + t.misses).sum();
+                (hits, total)
+            }
+            TranslationUnit::Hier(u) => (u.l1_hits, u.l1_hits + u.l1_misses),
+        }
+    }
+
+    /// Shape the run's translation results. `None` under the legacy
+    /// model — its reports are frozen, and conditional emission is what
+    /// keeps them byte-identical. `span_cycles` is the run makespan and
+    /// `n_sms` the SM count; together they form the total-execution
+    /// denominator of the walk-stall share.
+    pub fn stats(&self, vm: &VirtualMemory, span_cycles: f64, n_sms: usize) -> Option<XlateStats> {
+        let u = match self {
+            TranslationUnit::Legacy(_) => return None,
+            TranslationUnit::Hier(u) => u,
+        };
+        let rate = |num: u64, den: u64| if den == 0 { 0.0 } else { num as f64 / den as f64 };
+        let total_cycles = span_cycles * n_sms as f64;
+        Some(XlateStats {
+            l1_hits: u.l1_hits,
+            l1_misses: u.l1_misses,
+            l2_hits: u.l2_hits,
+            l2_misses: u.l2_misses,
+            walks: u.walks,
+            l1_hit_rate: rate(u.l1_hits, u.l1_hits + u.l1_misses),
+            l2_hit_rate: rate(u.l2_hits, u.l2_hits + u.l2_misses),
+            walk_cycles: u.walk_cycles,
+            walk_queue_cycles: u.walk_queue_cycles,
+            walk_stall_share: if total_cycles > 0.0 {
+                (u.walk_cycles + u.walk_queue_cycles) / total_cycles
+            } else {
+                0.0
+            },
+            huge_pages: vm.huge_frames(),
+            huge_coverage: vm.huge_coverage(),
+        })
+    }
+}
+
+impl Hier {
+    /// A huge L1/L2 entry stores the *frame-base* PTE; reconstruct the
+    /// per-page PTE for `vpn` from it. Promotion maps frames 2 MB-aligned
+    /// in both spaces, so base ppn + in-frame index is exact.
+    #[inline]
+    fn expand(base: Pte, vpn: u64, span_mask: u64) -> Pte {
+        Pte {
+            ppn: base.ppn + (vpn & span_mask),
+            ..base
+        }
+    }
+
+    fn access(&mut self, sm: usize, now: f64, va: VirtualAddress, vm: &VirtualMemory) -> (f64, Pte) {
+        let vpn = va.0 >> self.page_shift;
+        let frame = vpn >> self.huge_shift;
+        // L1 probes overlap the access pipeline: hits cost nothing, like
+        // the legacy TLB hit.
+        if let Some(base) = self.l1_huge[sm].lookup(frame) {
+            self.l1_hits += 1;
+            return (now, Self::expand(base, vpn, self.span_mask));
+        }
+        if let Some(pte) = self.l1_base[sm].lookup(vpn) {
+            self.l1_hits += 1;
+            return (now, pte);
+        }
+        self.l1_misses += 1;
+        let t = now + self.l2_hit_cycles;
+        if let Some(base) = self.l2[sm].lookup((frame << 1) | 1) {
+            self.l2_hits += 1;
+            self.l1_huge[sm].fill(frame, base);
+            return (t, Self::expand(base, vpn, self.span_mask));
+        }
+        if let Some(pte) = self.l2[sm].lookup(vpn << 1) {
+            self.l2_hits += 1;
+            self.l1_base[sm].fill(vpn, pte);
+            return (t, pte);
+        }
+        self.l2_misses += 1;
+        // Both levels missed: take a page walk on the first free slot of
+        // the global pool. A fully-busy pool queues the access — that
+        // wait is translation *pressure*, kept separate from the walk
+        // service time.
+        let pte = vm
+            .pte_of(va)
+            .expect("workload access beyond mapped object");
+        let levels = if pte.huge {
+            WALK_LEVELS_HUGE
+        } else {
+            WALK_LEVELS_BASE
+        };
+        let latency = levels * self.level_cycles;
+        let mut slot = 0;
+        for (i, &free) in self.walkers.iter().enumerate() {
+            if free < self.walkers[slot] {
+                slot = i;
+            }
+        }
+        let start = if self.walkers[slot] > t {
+            self.walkers[slot]
+        } else {
+            t
+        };
+        self.walk_queue_cycles += start - t;
+        let done = start + latency;
+        self.walkers[slot] = done;
+        self.walks += 1;
+        self.walk_cycles += latency;
+        if pte.huge {
+            let base = Pte {
+                ppn: pte.ppn - (vpn & self.span_mask),
+                ..pte
+            };
+            self.l1_huge[sm].fill(frame, base);
+            self.l2[sm].fill((frame << 1) | 1, base);
+        } else {
+            self.l1_base[sm].fill(vpn, pte);
+            self.l2[sm].fill(vpn << 1, pte);
+        }
+        (done, pte)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::addr::Granularity;
+
+    fn small_cfg() -> SystemConfig {
+        SystemConfig::test_small()
+    }
+
+    fn vm_with_pages(cfg: &SystemConfig, pages: u64) -> (VirtualMemory, VirtualAddress) {
+        let mut vm = VirtualMemory::new(cfg);
+        let base = vm.map_fgp(pages).unwrap();
+        (vm, base)
+    }
+
+    #[test]
+    fn legacy_replays_the_flat_miss_cost() {
+        let cfg = small_cfg();
+        assert_eq!(cfg.tlb_l1_entries, 0);
+        let cyc = cfg.cycles_per_ns();
+        let (vm, base) = vm_with_pages(&cfg, 4);
+        let mut xl = TranslationUnit::new(&cfg, 2, cyc);
+        let (t, pte) = xl.access(0, 100.0, base, &vm);
+        assert_eq!(t, 100.0 + cfg.tlb_miss_ns * cyc);
+        assert_eq!(pte.granularity, Granularity::Fgp);
+        // Second access to the same page: a free hit.
+        let (t2, _) = xl.access(0, 200.0, base + 8, &vm);
+        assert_eq!(t2, 200.0);
+        // Another SM has its own TLB and misses independently.
+        let (t3, _) = xl.access(1, 200.0, base, &vm);
+        assert_eq!(t3, 200.0 + cfg.tlb_miss_ns * cyc);
+        assert_eq!(xl.hit_totals(), (1, 3));
+        assert!(xl.stats(&vm, 1000.0, 2).is_none());
+    }
+
+    #[test]
+    fn hier_walks_then_hits_the_levels_in_order() {
+        let mut cfg = small_cfg();
+        cfg.tlb_l1_entries = 1; // one-entry L1: easy to evict
+        cfg.tlb_l1_ways = 1;
+        cfg.tlb_l2_entries = 64;
+        cfg.ptw_slots = 4;
+        cfg.validate().unwrap();
+        let cyc = cfg.cycles_per_ns();
+        let (vm, base) = vm_with_pages(&cfg, 4);
+        let mut xl = TranslationUnit::new(&cfg, 1, cyc);
+        let l2_hit = cfg.tlb_l2_hit_ns * cyc;
+        let walk = WALK_LEVELS_BASE * cfg.ptw_level_ns * cyc;
+        // Cold: miss L1+L2, walk 4 levels after the L2 probe.
+        let (t, _) = xl.access(0, 0.0, base, &vm);
+        assert_eq!(t, l2_hit + walk);
+        // Same page again: L1 hit, free.
+        let (t, _) = xl.access(0, 1000.0, base, &vm);
+        assert_eq!(t, 1000.0);
+        // Touch a second page (evicts page 0 from the 1-entry L1)...
+        let _ = xl.access(0, 2000.0, base + cfg.page_size, &vm);
+        // ...so page 0 now hits in the unified L2, not L1.
+        let (t, _) = xl.access(0, 3000.0, base, &vm);
+        assert_eq!(t, 3000.0 + l2_hit);
+        let s = xl.stats(&vm, 10_000.0, 1).unwrap();
+        assert_eq!(s.l1_hits, 1);
+        assert_eq!(s.l1_misses, 3);
+        assert_eq!(s.l2_hits, 1);
+        assert_eq!(s.walks, 2);
+        assert_eq!(s.walk_cycles, 2.0 * walk);
+        assert_eq!(s.walk_queue_cycles, 0.0);
+        assert!(s.walk_stall_share > 0.0);
+    }
+
+    #[test]
+    fn busy_walkers_queue_and_account_the_wait() {
+        let mut cfg = small_cfg();
+        cfg.tlb_l1_entries = 8;
+        cfg.ptw_slots = 1; // a single walker: concurrent walks serialize
+        cfg.validate().unwrap();
+        let cyc = cfg.cycles_per_ns();
+        let (vm, base) = vm_with_pages(&cfg, 4);
+        let mut xl = TranslationUnit::new(&cfg, 2, cyc);
+        let l2_hit = cfg.tlb_l2_hit_ns * cyc;
+        let walk = WALK_LEVELS_BASE * cfg.ptw_level_ns * cyc;
+        let (t1, _) = xl.access(0, 0.0, base, &vm);
+        assert_eq!(t1, l2_hit + walk);
+        // A different SM walks a different page at the same instant: it
+        // queues behind the busy walker instead of walking in parallel.
+        let (t2, _) = xl.access(1, 0.0, base + cfg.page_size, &vm);
+        assert_eq!(t2, l2_hit + 2.0 * walk);
+        let s = xl.stats(&vm, 10_000.0, 2).unwrap();
+        assert_eq!(s.walks, 2);
+        // The second walk waited out the first's full service time.
+        assert!((s.walk_queue_cycles - walk).abs() < 1e-9);
+    }
+
+    #[test]
+    fn one_huge_entry_covers_the_whole_frame() {
+        let mut cfg = small_cfg();
+        cfg.tlb_l1_entries = 8;
+        cfg.huge_pages = true;
+        cfg.validate().unwrap();
+        let cyc = cfg.cycles_per_ns();
+        let span = HUGE_PAGE_BYTES / cfg.page_size;
+        let mut vm = VirtualMemory::new(&cfg);
+        let base = vm.map_cgp(span, |_| 1).unwrap();
+        assert_eq!(vm.huge_frames(), 1);
+        let mut xl = TranslationUnit::new(&cfg, 1, cyc);
+        let l2_hit = cfg.tlb_l2_hit_ns * cyc;
+        let walk = WALK_LEVELS_HUGE * cfg.ptw_level_ns * cyc;
+        // Cold walk: 3 levels, not 4 (the huge mapping sits a level up).
+        let (t, pte) = xl.access(0, 0.0, base, &vm);
+        assert!(pte.huge);
+        assert_eq!(t, l2_hit + walk);
+        // Every other base page of the frame hits the huge L1 entry.
+        for k in 1..span {
+            let (t, pte) = xl.access(0, 5000.0, base + k * cfg.page_size, &vm);
+            assert_eq!(t, 5000.0, "page {k} missed the huge entry");
+            assert!(pte.huge);
+            // The reconstructed PTE walks the frame contiguously.
+            assert_eq!(pte.ppn, xl_access_ppn_base(&vm, base) + k);
+        }
+        let s = xl.stats(&vm, 10_000.0, 1).unwrap();
+        assert_eq!(s.walks, 1);
+        assert_eq!(s.huge_pages, 1);
+        assert!(s.huge_coverage > 0.99);
+    }
+
+    /// Frame-base ppn of the page at `va` (test helper).
+    fn xl_access_ppn_base(vm: &VirtualMemory, va: VirtualAddress) -> u64 {
+        vm.pte_of(va).unwrap().ppn
+    }
+
+    #[test]
+    fn flush_drops_translations_but_not_counters() {
+        let cfg = small_cfg();
+        let cyc = cfg.cycles_per_ns();
+        let (vm, base) = vm_with_pages(&cfg, 2);
+        let mut xl = TranslationUnit::new(&cfg, 1, cyc);
+        let _ = xl.access(0, 0.0, base, &vm);
+        let (t, _) = xl.access(0, 10.0, base, &vm);
+        assert_eq!(t, 10.0); // hit
+        xl.flush(0);
+        let (t, _) = xl.access(0, 20.0, base, &vm);
+        assert_eq!(t, 20.0 + cfg.tlb_miss_ns * cyc); // cold again
+        assert_eq!(xl.hit_totals(), (1, 3));
+    }
+}

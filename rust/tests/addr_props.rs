@@ -8,12 +8,17 @@
 //! * The granularity bit round-trips through the PTE path in `vm.rs`: a
 //!   page mapped FGP/CGP reads back with the same bit from `pte_of` and
 //!   `translate`, and CGP pages resolve to their requested stack.
+//! * The `VirtualAddress` / `PhysicalAddress` newtypes are transparent:
+//!   `From`/`Into`/`Add` preserve the underlying bits exactly, and the
+//!   typed translate path equals the raw PPN/offset arithmetic it wraps.
 
 // Case generators mutate a default config; the lint's suggested struct
 // literal obscures which knobs each property varies.
 #![allow(clippy::field_reassign_with_default)]
 
-use coda::addr::{large_page_mapper, AddressMapper, Granularity};
+use coda::addr::{
+    large_page_mapper, AddressMapper, Granularity, PhysicalAddress, VirtualAddress,
+};
 use coda::config::SystemConfig;
 use coda::proptest_lite::{run_prop, PropConfig};
 use coda::rng::Rng;
@@ -152,18 +157,19 @@ fn prop_granularity_bit_roundtrips_through_pte() {
                     let vaddr = base + pg * cfg.page_size;
                     let pte = vm.pte_of(vaddr).ok_or("missing PTE")?;
                     if pte.granularity != want {
-                        return Err(format!("PTE bit lost at vaddr {vaddr:#x}"));
+                        return Err(format!("PTE bit lost at vaddr {:#x}", vaddr.0));
                     }
                     let (paddr, g) = vm.translate(vaddr + 123).ok_or("unmapped")?;
                     if g != want {
-                        return Err(format!("translate bit lost at vaddr {vaddr:#x}"));
+                        return Err(format!("translate bit lost at vaddr {:#x}", vaddr.0));
                     }
                     if *is_cgp {
                         for off in [0u64, cfg.page_size / 2, cfg.page_size - 1] {
                             let (p, g) = vm.translate(vaddr + off).ok_or("unmapped")?;
                             if mapper.stack_of(p, g) != *stack {
                                 return Err(format!(
-                                    "CGP page at {vaddr:#x} strayed off stack {stack}"
+                                    "CGP page at {:#x} strayed off stack {stack}",
+                                    vaddr.0
                                 ));
                             }
                         }
@@ -175,11 +181,69 @@ fn prop_granularity_bit_roundtrips_through_pte() {
                             hit[mapper.stack_of(p, g)] = true;
                         }
                         if hit.iter().any(|h| !h) {
-                            return Err(format!("FGP page at {vaddr:#x} skips a stack"));
+                            return Err(format!("FGP page at {:#x} skips a stack", vaddr.0));
                         }
                     }
                     let _ = paddr;
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The VA/PA newtypes must be pure relabelings of `u64`: conversions and
+/// offset arithmetic never perturb bits, and a typed `translate` result
+/// decomposes back into exactly the PPN and page offset of the raw math.
+#[test]
+fn prop_va_pa_newtypes_roundtrip() {
+    run_prop(
+        PropConfig {
+            cases: 96,
+            seed: 0x7A9A,
+        },
+        |rng: &mut Rng| {
+            let raw = rng.below(1u64 << 48);
+            let off = rng.below(1u64 << 20);
+            (raw, off)
+        },
+        |(raw, off)| {
+            // From / Into round-trips are the identity on both newtypes.
+            let va = VirtualAddress::from(*raw);
+            if va.0 != *raw || u64::from(va) != *raw {
+                return Err(format!("VirtualAddress round-trip lost {raw:#x}"));
+            }
+            let pa = PhysicalAddress::from(*raw);
+            if pa.0 != *raw || u64::from(pa) != *raw {
+                return Err(format!("PhysicalAddress round-trip lost {raw:#x}"));
+            }
+            // Offsetting commutes with the wrap: wrap-then-add == add-then-wrap.
+            // (raw < 2^48 and off < 2^20, so the sum cannot overflow.)
+            if (va + *off).0 != *raw + *off {
+                return Err(format!("VA + {off:#x} diverged from raw add"));
+            }
+            if (pa + *off).0 != *raw + *off {
+                return Err(format!("PA + {off:#x} diverged from raw add"));
+            }
+            // The typed translate path is the raw PPN/offset compose: a
+            // mapped page's physical address splits back into the PTE's PPN
+            // and the VA's in-page offset.
+            let cfg = SystemConfig::test_small();
+            let mut vm = VirtualMemory::new(&cfg);
+            let base = vm.map_fgp(4).map_err(|e| e.to_string())?;
+            let vaddr = base + (off % (4 * cfg.page_size));
+            let pte = vm.pte_of(vaddr).ok_or("missing PTE")?;
+            let (paddr, _) = vm.translate(vaddr).ok_or("unmapped")?;
+            let page_shift = cfg.page_size.trailing_zeros();
+            if paddr.0 >> page_shift != pte.ppn {
+                return Err(format!(
+                    "translate PPN {:#x} != PTE PPN {:#x}",
+                    paddr.0 >> page_shift,
+                    pte.ppn
+                ));
+            }
+            if paddr.0 & (cfg.page_size - 1) != vaddr.0 & (cfg.page_size - 1) {
+                return Err("translate changed the in-page offset".into());
             }
             Ok(())
         },

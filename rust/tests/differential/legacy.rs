@@ -9,7 +9,7 @@
 //! under both DRAM backends. Do not "improve" these — their value is
 //! that they never change.
 
-use coda::addr::{AddressMapper, Granularity};
+use coda::addr::{AddressMapper, Granularity, VirtualAddress};
 use coda::config::SystemConfig;
 use coda::gpu::Topology;
 use coda::mem::{self, MemBackend, MemStats};
@@ -127,7 +127,7 @@ pub fn legacy_kernel_run(
                 None => {
                     t += tlb_miss_cycles;
                     let pte = vm
-                        .pte_of(vaddr)
+                        .pte_of(VirtualAddress(vaddr))
                         .expect("workload access beyond mapped object");
                     tlbs[sm.id].fill(vpn, pte);
                     pte
@@ -140,12 +140,12 @@ pub fn legacy_kernel_run(
                 && !migrated_pages[vpn as usize]
             {
                 migrated_pages[vpn as usize] = true;
-                if vm.migrate_to_cgp(vaddr, sm.stack).is_ok() {
+                if vm.migrate_to_cgp(VirtualAddress(vaddr), sm.stack).is_ok() {
                     migrated += 1;
                     let copy_bytes =
                         cfg.page_size * (cfg.num_stacks as u64 - 1) / cfg.num_stacks as u64;
                     t = net.remote_hop(t, (sm.stack + 1) % cfg.num_stacks, sm.stack, copy_bytes);
-                    let pte = vm.pte_of(vaddr).unwrap();
+                    let pte = vm.pte_of(VirtualAddress(vaddr)).unwrap();
                     tlbs[sm.id].fill(vpn, pte);
                     paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
                     gran = pte.granularity;
@@ -263,8 +263,8 @@ pub fn legacy_run_mix(
         for obj in &app.trace.objects {
             let pages = obj.bytes.div_ceil(cfg.page_size).max(1);
             let base = match placement {
-                LegacyMixPlacement::FgpOnly => vm.map_fgp(pages)?,
-                LegacyMixPlacement::CgpLocal => vm.map_cgp(pages, |_| home)?,
+                LegacyMixPlacement::FgpOnly => vm.map_fgp(pages)?.0,
+                LegacyMixPlacement::CgpLocal => vm.map_cgp(pages, |_| home)?.0,
             };
             bases.push(base);
         }
@@ -322,7 +322,7 @@ pub fn legacy_run_mix(
                 Some(p) => p,
                 None => {
                     t += tlb_miss_cycles;
-                    let p = vm.pte_of(vaddr).expect("mapped");
+                    let p = vm.pte_of(VirtualAddress(vaddr)).expect("mapped");
                     tlbs[sm_id as usize].fill(vpn, p);
                     p
                 }

@@ -83,6 +83,8 @@ fn unified_engine_matches_legacy_kernel_loop() {
                 .run();
                 let (mut vm_old, bases_old, _, _) =
                     map_objects(&cfg, &wl.trace, &plan).unwrap();
+                // The frozen loop predates the VA newtype; hand it raw u64s.
+                let bases_old: Vec<u64> = bases_old.iter().map(|b| b.0).collect();
                 let old = legacy::legacy_kernel_run(
                     &cfg,
                     &wl.trace,
@@ -243,4 +245,10 @@ fn engine_cycles_match_golden_fixed() {
 fn engine_cycles_match_golden_bank() {
     let got = render_cycles_snapshot(MemBackendKind::BankLevel);
     check_golden("engine_cycles_bank.txt", &got);
+}
+
+#[test]
+fn engine_cycles_match_golden_cycle() {
+    let got = render_cycles_snapshot(MemBackendKind::CycleAccurate);
+    check_golden("engine_cycles_cycle.txt", &got);
 }

@@ -25,7 +25,7 @@ use coda::workloads::{suite, BuiltWorkload};
 /// Frozen copy of the pre-refactor `host::run_host_sweep` event loop
 /// (PR 1 state), kept verbatim as the timing oracle. Do not modernize.
 mod legacy {
-    use coda::addr::AddressMapper;
+    use coda::addr::{AddressMapper, VirtualAddress};
     use coda::config::SystemConfig;
     use coda::mem::{self, MemBackend, MemStats};
     use coda::net::Interconnect;
@@ -40,7 +40,7 @@ mod legacy {
         cfg: &SystemConfig,
         trace: &KernelTrace,
         vm: &VirtualMemory,
-        obj_base: &[u64],
+        obj_base: &[VirtualAddress],
     ) -> RunReport {
         let mapper = AddressMapper::new(cfg);
         let mut net = Interconnect::new(cfg);
@@ -57,7 +57,7 @@ mod legacy {
                 let (paddr, gran) = vm.translate(vaddr).expect("mapped");
                 let stack = mapper.stack_of(paddr, gran);
                 let t1 = net.host_hop(now, stack, line);
-                let done = stacks[stack].access(t1, paddr, line).done;
+                let done = stacks[stack].access(t1, paddr.0, line).done;
                 host_accesses += 1;
                 window.push(done);
                 end = end.max(done);

@@ -157,8 +157,8 @@ fn prop_vm_translation_consistent() {
                 for pg in 0..*pages {
                     let vaddr = base + pg * cfg.page_size;
                     let (paddr, g) = vm.translate(vaddr).ok_or("unmapped")?;
-                    if !seen.insert(paddr >> 12) {
-                        return Err(format!("physical page {paddr:#x} mapped twice"));
+                    if !seen.insert(paddr.0 >> 12) {
+                        return Err(format!("physical page {:#x} mapped twice", paddr.0));
                     }
                     if *is_cgp {
                         if g != Granularity::Cgp {

@@ -147,7 +147,7 @@ mod oracle {
 /// the only change, so any run-level divergence is the fabric's fault).
 mod frozen_run {
     use super::oracle::Interconnect;
-    use coda::addr::{AddressMapper, Granularity};
+    use coda::addr::{AddressMapper, Granularity, VirtualAddress};
     use coda::config::SystemConfig;
     use coda::gpu::Topology;
     use coda::mem::{self, MemBackend, MemStats};
@@ -262,7 +262,7 @@ mod frozen_run {
                     None => {
                         t += tlb_miss_cycles;
                         let pte = vm
-                            .pte_of(vaddr)
+                            .pte_of(VirtualAddress(vaddr))
                             .expect("workload access beyond mapped object");
                         tlbs[sm.id].fill(vpn, pte);
                         pte
@@ -275,7 +275,7 @@ mod frozen_run {
                     && !migrated_pages[vpn as usize]
                 {
                     migrated_pages[vpn as usize] = true;
-                    if vm.migrate_to_cgp(vaddr, sm.stack).is_ok() {
+                    if vm.migrate_to_cgp(VirtualAddress(vaddr), sm.stack).is_ok() {
                         migrated += 1;
                         let copy_bytes = cfg.page_size * (cfg.num_stacks as u64 - 1)
                             / cfg.num_stacks as u64;
@@ -285,7 +285,7 @@ mod frozen_run {
                             sm.stack,
                             copy_bytes,
                         );
-                        let pte = vm.pte_of(vaddr).unwrap();
+                        let pte = vm.pte_of(VirtualAddress(vaddr)).unwrap();
                         tlbs[sm.id].fill(vpn, pte);
                         paddr = (pte.ppn << page_shift) | (vaddr & (cfg.page_size - 1));
                         gran = pte.granularity;
@@ -528,6 +528,8 @@ fn degenerate_fabric_runs_are_bit_exact_to_frozen_loop() {
                 .run();
                 let (mut vm_old, bases_old, _, _) =
                     map_objects(&cfg, &wl.trace, &plan).unwrap();
+                // The frozen loop predates the VA newtype; hand it raw u64s.
+                let bases_old: Vec<u64> = bases_old.iter().map(|b| b.0).collect();
                 let old = frozen_run::legacy_kernel_run(
                     &cfg,
                     &wl.trace,

@@ -8,6 +8,7 @@
 //! the spec-based wrappers are cycle-identical (bit-exact f64) to these
 //! copies for mechanisms × workloads × both DRAM backends.
 
+use coda::addr::VirtualAddress;
 use coda::analysis::{analyze_kernel, profile_trace, ObjectPattern};
 use coda::config::SystemConfig;
 use coda::coordinator::Mechanism;
@@ -114,9 +115,9 @@ fn map_mix(
     cfg: &SystemConfig,
     apps: &[&BuiltWorkload],
     placement: MixPlacement,
-) -> coda::Result<(VirtualMemory, Vec<Vec<u64>>)> {
+) -> coda::Result<(VirtualMemory, Vec<Vec<VirtualAddress>>)> {
     let mut vm = VirtualMemory::new(cfg);
-    let mut app_bases: Vec<Vec<u64>> = Vec::new();
+    let mut app_bases: Vec<Vec<VirtualAddress>> = Vec::new();
     for (i, app) in apps.iter().enumerate() {
         let home = home_of(i, cfg);
         let mut bases = Vec::new();
@@ -443,7 +444,7 @@ pub fn run_hostmix(
     let host_active = host.is_some() && cfg.host_mlp > 0 && cfg.host_passes > 0;
 
     let (mut vm, app_bases) = map_mix(cfg, &apps, placement)?;
-    let host_bases: Vec<u64> = match host {
+    let host_bases: Vec<VirtualAddress> = match host {
         Some(h) => {
             let mut bases = Vec::with_capacity(h.trace.objects.len());
             for obj in &h.trace.objects {
@@ -575,7 +576,7 @@ pub fn host_sweep(
     cfg: &SystemConfig,
     trace: &KernelTrace,
     vm: &mut VirtualMemory,
-    obj_base: &[u64],
+    obj_base: &[VirtualAddress],
 ) -> RunReport {
     let raw = Engine {
         cfg,

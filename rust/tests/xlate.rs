@@ -1,0 +1,256 @@
+//! Integration tests for the hierarchical address-translation subsystem
+//! (`xlate.rs`) at the report level:
+//!
+//! * A non-degenerate config (`tlb_l1_entries > 0`) reports L1/L2 hit
+//!   rates and a nonzero walk-stall share; the degenerate default reports
+//!   `None` (its JSON stays byte-identical to the frozen legacy model).
+//! * Huge pages cut page walks and walk stalls on a CGP-heavy layout,
+//!   while an FGP-interleaved layout stays at base pages (coverage 0).
+//! * Time-shared SMs share one TLB across co-scheduled apps by default;
+//!   `tlb_flush_on_switch` drops translations at every address-space
+//!   switch and must cost hits — with identical access counts.
+
+use coda::config::SystemConfig;
+use coda::coordinator::{Coordinator, Mechanism};
+use coda::multiprog::{run_multi, KernelLaunch, MixPlacement, MultiMix};
+use coda::placement::{Placement, PlacementPlan};
+use coda::sched::{FairnessPolicy, Policy};
+use coda::sim::{map_objects, KernelRun};
+use coda::stats::RunReport;
+use coda::trace::{Access, BlockTrace, Category, KernelTrace, ObjectDesc};
+use coda::workloads::{suite, BuiltWorkload};
+use std::collections::HashMap;
+
+/// Small hierarchical TLBs over the test config: tight enough that page
+/// walks actually happen on every workload below.
+fn hier_cfg() -> SystemConfig {
+    let mut c = SystemConfig::test_small();
+    c.l2_hit_rate = 0.0; // exact access counts
+    c.tlb_l1_entries = 8;
+    c.tlb_l1_ways = 4;
+    c.tlb_l2_entries = 16;
+    c.tlb_l2_ways = 8;
+    c.validate().unwrap();
+    c
+}
+
+/// One object; each block scans its own contiguous `pages_per_block`-page
+/// slice touching one line per page — a TLB-bound page-stride walk.
+fn page_stride_trace(cfg: &SystemConfig, blocks: u32, pages_per_block: u64) -> KernelTrace {
+    KernelTrace {
+        name: "pagestride".into(),
+        threads_per_block: 256,
+        objects: vec![ObjectDesc {
+            name: "data".into(),
+            bytes: blocks as u64 * pages_per_block * cfg.page_size,
+        }],
+        blocks: (0..blocks)
+            .map(|b| BlockTrace {
+                block_id: b,
+                accesses: (0..pages_per_block)
+                    .map(|p| Access {
+                        obj: 0,
+                        offset: (b as u64 * pages_per_block + p) * cfg.page_size,
+                        write: false,
+                    })
+                    .collect(),
+            })
+            .collect(),
+    }
+}
+
+fn run_plan(cfg: &SystemConfig, trace: &KernelTrace, plan: &PlacementPlan) -> RunReport {
+    let (mut vm, bases, _, _) = map_objects(cfg, trace, plan).unwrap();
+    KernelRun {
+        cfg,
+        trace,
+        vm: &mut vm,
+        obj_base: &bases,
+        policy: Policy::Baseline,
+        migrate_on_first_touch: false,
+    }
+    .run()
+}
+
+/// CGP plan whose chunks span a whole 2 MB frame, so every aligned run of
+/// 512 base pages lands on one stack and qualifies for promotion.
+fn cgp_2mb_plan() -> PlacementPlan {
+    PlacementPlan {
+        per_object: vec![Placement::Cgp { chunk_size: 2 << 20 }],
+        page_overrides: HashMap::new(),
+        migrate_on_first_touch: false,
+    }
+}
+
+#[test]
+fn hierarchical_config_reports_xlate_stats() {
+    let cfg = hier_cfg();
+    let wl = suite::build("KM", &cfg).unwrap();
+    let r = Coordinator::new(cfg).run(&wl, Mechanism::Coda).unwrap();
+    let x = r.xlate.expect("hierarchical run must report xlate stats");
+    assert!(x.l1_hits + x.l1_misses > 0, "accesses must consult the L1");
+    assert!((0.0..=1.0).contains(&x.l1_hit_rate), "{}", x.l1_hit_rate);
+    assert!((0.0..=1.0).contains(&x.l2_hit_rate), "{}", x.l2_hit_rate);
+    assert!(x.walks > 0, "a 16-entry L2 cannot hold KM's footprint");
+    assert_eq!(x.walks, x.l2_misses);
+    assert!(x.walk_cycles > 0.0);
+    assert!(
+        x.walk_stall_share > 0.0,
+        "page walks must show up as stall share"
+    );
+}
+
+#[test]
+fn degenerate_config_reports_no_xlate() {
+    // The default (tlb_l1_entries = 0) runs the frozen legacy flat-walk
+    // model; its reports must not grow an xlate block.
+    let cfg = SystemConfig::test_small();
+    let wl = suite::build("KM", &cfg).unwrap();
+    let r = Coordinator::new(cfg).run(&wl, Mechanism::Coda).unwrap();
+    assert!(r.xlate.is_none(), "legacy model must not report xlate stats");
+}
+
+/// The §7.2 differential: on a CGP-heavy layout, huge pages collapse each
+/// aligned 512-page run into one 2 MB mapping — one TLB entry and a
+/// one-level-shorter walk — so walks and walk stalls drop and the run gets
+/// faster. FGP-interleaved data must stay at base pages throughout.
+#[test]
+fn huge_pages_cut_walk_stalls_on_cgp_heavy_layout() {
+    let mut off = hier_cfg();
+    off.huge_pages = false;
+    let mut on = off.clone();
+    on.huge_pages = true;
+
+    // 4 blocks x 512 pages = four full 2 MB frames, one per stack.
+    let trace = page_stride_trace(&off, 4, 512);
+    let r_off = run_plan(&off, &trace, &cgp_2mb_plan());
+    let r_on = run_plan(&on, &trace, &cgp_2mb_plan());
+    let x_off = r_off.xlate.unwrap();
+    let x_on = r_on.xlate.unwrap();
+
+    // Same accesses either way; only the translation machinery differs.
+    assert_eq!(r_off.accesses.ndp_total(), r_on.accesses.ndp_total());
+    assert_eq!(
+        x_off.l1_hits + x_off.l1_misses,
+        x_on.l1_hits + x_on.l1_misses
+    );
+
+    assert_eq!(x_off.huge_pages, 0);
+    assert_eq!(x_off.huge_coverage, 0.0);
+    assert_eq!(x_on.huge_pages, 4, "one promoted frame per 2 MB run");
+    assert!(x_on.huge_coverage > 0.9, "coverage {}", x_on.huge_coverage);
+
+    assert!(
+        x_on.walks < x_off.walks,
+        "huge TLB reach must cut walks: {} vs {}",
+        x_on.walks,
+        x_off.walks
+    );
+    assert!(x_on.walk_cycles < x_off.walk_cycles);
+    assert!(
+        r_on.cycles < r_off.cycles,
+        "fewer+shorter walks must show in the makespan: {} vs {}",
+        r_on.cycles,
+        r_off.cycles
+    );
+
+    // FGP-interleaved ranges stay at 4 KB even with promotion enabled.
+    let r_fgp = run_plan(&on, &trace, &PlacementPlan::all_fgp(1));
+    let x_fgp = r_fgp.xlate.unwrap();
+    assert_eq!(x_fgp.huge_pages, 0, "FGP pages must never promote");
+    assert_eq!(x_fgp.huge_coverage, 0.0);
+    assert!(
+        x_on.huge_coverage > x_fgp.huge_coverage,
+        "CGP-heavy layouts must report higher huge coverage than FGP"
+    );
+}
+
+/// Two co-scheduled apps whose blocks all hammer the same two pages: the
+/// per-SM TLB working set is four pages, so with shared (default) TLBs
+/// nearly everything hits after the compulsory misses.
+fn hot_page_app(cfg: &SystemConfig, name: &'static str) -> BuiltWorkload {
+    let lines_per_page = cfg.page_size / cfg.line_size;
+    let accesses: Vec<Access> = (0..64u64)
+        .flat_map(|r| {
+            [0u64, 1].map(|pg| Access {
+                obj: 0,
+                offset: pg * cfg.page_size + (r % lines_per_page) * cfg.line_size,
+                write: false,
+            })
+        })
+        .collect();
+    BuiltWorkload {
+        name,
+        category: Category::Sharing,
+        trace: KernelTrace {
+            name: name.into(),
+            threads_per_block: 256,
+            objects: vec![ObjectDesc {
+                name: "hot".into(),
+                bytes: 2 * cfg.page_size,
+            }],
+            blocks: (0..64)
+                .map(|b| BlockTrace {
+                    block_id: b,
+                    accesses: accesses.clone(),
+                })
+                .collect(),
+        },
+        ir: None,
+        env: coda::analysis::ParamEnv::new(256),
+    }
+}
+
+/// Time-shared SMs share one TLB across co-scheduled apps by default;
+/// `tlb_flush_on_switch` opts into dropping translations at every
+/// address-space switch. Both behaviors pinned under `run_multi`: the
+/// access totals are identical, but flushing must cost L1 hits.
+#[test]
+fn tlb_flush_on_switch_costs_hits_under_time_sharing() {
+    let base = hier_cfg();
+    let apps = [hot_page_app(&base, "hotA"), hot_page_app(&base, "hotB")];
+    let run = |flush: bool| {
+        let mut cfg = base.clone();
+        cfg.tlb_flush_on_switch = flush;
+        let mix = MultiMix {
+            launches: apps
+                .iter()
+                .map(|a| KernelLaunch { app: a, arrival: 0.0 })
+                .collect(),
+        };
+        // Baseline policy + round-robin fairness co-locates both apps on
+        // every SM, so address-space switches happen constantly.
+        run_multi(
+            &cfg,
+            &mix,
+            MixPlacement::FgpOnly,
+            Policy::Baseline,
+            FairnessPolicy::RoundRobin,
+        )
+        .unwrap()
+    };
+    let shared = run(false);
+    let flushed = run(true);
+    let x_shared = shared.xlate.unwrap();
+    let x_flushed = flushed.xlate.unwrap();
+
+    assert_eq!(
+        shared.accesses.ndp_total(),
+        flushed.accesses.ndp_total(),
+        "flushing changes timing, never the access stream"
+    );
+    assert_eq!(
+        x_shared.l1_hits + x_shared.l1_misses,
+        x_flushed.l1_hits + x_flushed.l1_misses
+    );
+    assert!(
+        x_flushed.l1_hits < x_shared.l1_hits,
+        "flushing on every switch must cost hits: {} vs {}",
+        x_flushed.l1_hits,
+        x_shared.l1_hits
+    );
+    assert!(
+        x_flushed.walks > x_shared.walks,
+        "the lost translations must be re-walked"
+    );
+}
