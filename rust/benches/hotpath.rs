@@ -14,6 +14,8 @@ use coda::addr::{AddressMapper, Granularity};
 use coda::coordinator::{Coordinator, Mechanism};
 use coda::harness::{black_box, Bencher};
 use coda::sched::{Policy, Scheduler};
+use coda::session::Session;
+use coda::spec::{ArrivalKind, ArrivalSpec, ExperimentSpec, WorkloadSel};
 use coda::vm::{Pte, Tlb};
 use coda::workloads::suite;
 
@@ -110,6 +112,46 @@ fn main() -> coda::Result<()> {
         r.mean_ns / accesses as f64,
         r.throughput(accesses as f64) / 1e6
     );
+
+    // Sharded-engine speedup: one multi-stack open-loop service stream,
+    // sequential vs one shard per stack (`shard_stacks` 1 vs 0/auto).
+    // Same spec both ways, so the pair is a direct parallel-efficiency
+    // read on this machine.
+    let wl = suite::build("KM", &cfg)?;
+    let requests = 16u64;
+    let svc_spec = |shards: &str| {
+        let mut spec = ExperimentSpec::shared(
+            vec![(WorkloadSel::Prebuilt(&wl), 0.0)],
+            coda::multiprog::MixPlacement::CgpLocal,
+            Policy::Affinity,
+            coda::sched::FairnessPolicy::Fcfs,
+        );
+        spec.output.baselines = coda::spec::Baselines::None;
+        spec.arrivals = Some(ArrivalSpec {
+            kind: ArrivalKind::Trace,
+            interarrivals: vec![500.0],
+            requests: Some(requests),
+            ..ArrivalSpec::default()
+        });
+        spec.overrides.push(("shard_stacks".into(), shards.into()));
+        spec
+    };
+    let accesses = (wl.total_accesses() * requests) as f64;
+    for (label, shards) in [("shard_stacks=1", "1"), ("shard_stacks=auto", "0")] {
+        let r = b.bench_n(&format!("sim: KM service x{requests} ({label})"), accesses, || {
+            Session::new(cfg.clone(), svc_spec(shards))
+                .unwrap()
+                .run()
+                .unwrap()
+                .run
+                .cycles
+        });
+        println!(
+            "  -> {:.1} ns/access, {:.2} M simulated accesses/s\n",
+            r.mean_ns / accesses,
+            r.throughput(accesses) / 1e6
+        );
+    }
 
     // PJRT artifact sweep latency (the runtime hot path), if built.
     let mut rt = coda::runtime::Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;

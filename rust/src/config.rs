@@ -433,6 +433,15 @@ pub struct SystemConfig {
     /// parallelism shapes wall-clock time only
     /// (`tests/parallel_equiv.rs` locks that in). CLI: `--threads N`.
     pub sim_threads: usize,
+    /// Shards for intra-run parallel simulation (see [`crate::shard`]):
+    /// the engine partitions its state by home stack and runs shards on
+    /// scoped threads under conservative time-window synchronization.
+    /// `1` (the default) is the sequential engine — the bit-exactness
+    /// oracle; `0` = one shard per stack, capped at the available cores;
+    /// `N` caps the shard count at N. Degenerate setups (a single stack,
+    /// zero fabric lookahead, hierarchical TLBs, first-touch migration)
+    /// always lower to the sequential engine regardless of this knob.
+    pub shard_stacks: usize,
 
     // --- misc ----------------------------------------------------------------
     /// Global PRNG seed for workload synthesis.
@@ -506,6 +515,7 @@ impl Default for SystemConfig {
             host_ddr_bw_gbs: 64.0,
             host_ddr_channels: 2,
             sim_threads: 0,
+            shard_stacks: 1,
             seed: 0xC0DA,
         }
     }
@@ -828,6 +838,7 @@ impl SystemConfig {
             "host_ddr_bw_gbs" => parse!(host_ddr_bw_gbs, f64),
             "host_ddr_channels" => parse!(host_ddr_channels, usize),
             "sim_threads" => parse!(sim_threads, usize),
+            "shard_stacks" => parse!(shard_stacks, usize),
             "seed" => parse!(seed, u64),
             _ => bail!("unknown config key: {key}"),
         }
@@ -931,6 +942,7 @@ impl SystemConfig {
             ("host_ddr_bw_gbs", self.host_ddr_bw_gbs.to_string()),
             ("host_ddr_channels", self.host_ddr_channels.to_string()),
             ("sim_threads", self.sim_threads.to_string()),
+            ("shard_stacks", self.shard_stacks.to_string()),
             ("seed", self.seed.to_string()),
         ]
         .into_iter()
@@ -1175,6 +1187,18 @@ mod tests {
         assert!(c.set("sim_threads", "many").is_err());
         let c2 = SystemConfig::from_toml_str("sim_threads = 1\n").unwrap();
         assert_eq!(c2.sim_threads, 1);
+    }
+
+    #[test]
+    fn shard_stacks_parses_and_defaults_to_sequential() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.shard_stacks, 1); // 1 = the sequential engine
+        c.set("shard_stacks", "0").unwrap(); // 0 = one shard per stack
+        assert_eq!(c.shard_stacks, 0);
+        assert!(c.validate().is_ok());
+        assert!(c.set("shard_stacks", "auto").is_err());
+        let c2 = SystemConfig::from_toml_str("shard_stacks = 2\n").unwrap();
+        assert_eq!(c2.shard_stacks, 2);
     }
 
     #[test]

@@ -58,6 +58,15 @@ use std::collections::BinaryHeap;
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct TimeKey(u64, u64);
 
+impl TimeKey {
+    /// The event time's raw `f64` bits (the sharded engine peeks at its
+    /// next event time to publish conservative window bounds).
+    #[inline]
+    pub fn time_bits(self) -> u64 {
+        self.0
+    }
+}
+
 /// Build a heap key from an event time and a sequence number.
 ///
 /// Rejects NaN and negative times in **every** build profile: the
@@ -230,6 +239,13 @@ pub struct EngineRaw {
     /// Hierarchical translation results (`None` under the frozen legacy
     /// flat-walk model, whose reports are byte-identical by construction).
     pub xlate: Option<XlateStats>,
+    /// Shards the run executed on (0 from this sequential engine; the
+    /// sharded engine fills these — see `crate::shard`).
+    pub shard_stacks: u64,
+    /// Conservative time windows (barrier rounds) a sharded run took.
+    pub shard_windows: u64,
+    /// Cross-shard mailbox messages a sharded run exchanged.
+    pub shard_msgs: u64,
 }
 
 impl EngineRaw {
@@ -294,6 +310,9 @@ impl EngineRaw {
             link_stats: self.link_stats.clone(),
             service: None,
             xlate: self.xlate.clone(),
+            shard_stacks: self.shard_stacks,
+            shard_windows: self.shard_windows,
+            shard_msgs: self.shard_msgs,
         }
     }
 }
@@ -384,8 +403,9 @@ pub struct Engine<'a> {
 }
 
 /// Salt decorrelating the host-DDR line hash from the L2-filter hash
-/// (both use [`line_hash`] on the line address).
-const HOST_DDR_SALT: u64 = 0x5A17_C0DA_DD2A_2026;
+/// (both use [`line_hash`] on the line address). Public so the sharded
+/// engine routes the exact same lines to host DDR.
+pub const HOST_DDR_SALT: u64 = 0x5A17_C0DA_DD2A_2026;
 
 impl<'a> Engine<'a> {
     /// Run to completion, pulling blocks from `source`.
@@ -488,13 +508,18 @@ impl<'a> Engine<'a> {
             topo.sms.len() < 1 << 16 && slots_per_sm < 1 << 16,
             "topology exceeds the packed event encoding (sm/slot must fit 16 bits)"
         );
-        // At most one event is outstanding per residency slot, plus one
-        // live arrival and one host window — pre-sizing to that bound
-        // means the heap almost never reallocates mid-run (service-mode
-        // completion wakes can transiently strand a few superseded
-        // arrival events on top; see the retirement re-arm below).
+        // At most one *live* event is outstanding per residency slot,
+        // plus one arrival and one host window — but that is a hint, not
+        // a bound: every service-mode completion wake that re-arms an
+        // earlier arrival strands the superseded event in the heap until
+        // its stale time pops (see the retirement re-arm below), and
+        // nothing caps how many retirements can strand one each before
+        // the first stale time passes. The doubled pre-size absorbs the
+        // common case; `BinaryHeap` grows past it when a wake storm
+        // strands more (`tests::heap_survives_arrival_supersede_storm`
+        // pins that nothing is lost when it does).
         let mut heap: BinaryHeap<Reverse<(TimeKey, Ev)>> =
-            BinaryHeap::with_capacity(topo.sms.len() * slots_per_sm + 2);
+            BinaryHeap::with_capacity(topo.sms.len() * slots_per_sm * 2 + 2);
         let mut occupied = vec![false; topo.sms.len() * slots_per_sm];
         // Per-SM issue-bandwidth server: resident blocks share the SM's
         // execution resources, so their compute phases serialize.
@@ -802,6 +827,9 @@ impl<'a> Engine<'a> {
             host_port_stalls: net.host_port_stalls(),
             link_stats: net.link_stats(),
             xlate: xl.stats(vm, end_time.max(host_end), topo.sms.len()),
+            shard_stacks: 0,
+            shard_windows: 0,
+            shard_msgs: 0,
         }
     }
 }
@@ -871,5 +899,94 @@ mod tests {
             EvKind::HostWindow { next } => assert_eq!(next, u64::MAX / 3),
             _ => panic!("host window decoded wrong"),
         }
+    }
+
+    /// A service-style source that re-arms an *earlier* far-future
+    /// arrival after every retirement: each re-arm strands the superseded
+    /// arrival event, so the stranded count grows with retirements — far
+    /// past any slot-derived heap pre-size.
+    struct WakeStorm {
+        blocks: u32,
+        next: u32,
+    }
+
+    impl BlockSource for WakeStorm {
+        fn seed(&mut self, _topo: &Topology, place: &mut dyn FnMut(usize, usize, BlockRef)) {
+            place(0, 0, BlockRef { app: 0, block: 0 });
+            self.next = 1;
+        }
+
+        fn refill(&mut self, sm: Sm, _retired: Option<BlockRef>, _now: f64) -> Option<BlockRef> {
+            if sm.id == 0 && self.next < self.blocks {
+                let b = self.next;
+                self.next += 1;
+                Some(BlockRef { app: 0, block: b })
+            } else {
+                None
+            }
+        }
+
+        fn next_arrival_after(&self, _now: f64) -> Option<f64> {
+            // Strictly decreasing announcements: every retirement's
+            // re-poll supersedes the armed arrival.
+            Some(1e12 - self.next as f64)
+        }
+    }
+
+    /// The heap pre-size is a fast-path hint, not a bound (see the
+    /// capacity comment in [`Engine::run`]): strand more superseded
+    /// arrivals than any slot-derived capacity and the heap must grow
+    /// without losing a single event — every block still runs exactly
+    /// once and the stale arrivals fire as inert no-ops.
+    #[test]
+    fn heap_survives_arrival_supersede_storm() {
+        use crate::trace::{Access, BlockTrace, KernelTrace, ObjectDesc};
+
+        let cfg = SystemConfig::default();
+        let slots = Topology::new(&cfg).sms.len() * cfg.blocks_per_sm;
+        let blocks = (2 * slots + 64) as u32;
+        let trace = KernelTrace {
+            name: "storm".into(),
+            threads_per_block: 1,
+            objects: vec![ObjectDesc {
+                name: "o".into(),
+                bytes: cfg.page_size,
+            }],
+            blocks: (0..blocks)
+                .map(|i| BlockTrace {
+                    block_id: i,
+                    accesses: vec![Access {
+                        obj: 0,
+                        offset: 0,
+                        write: false,
+                    }],
+                })
+                .collect(),
+        };
+        let mut vm = VirtualMemory::new(&cfg);
+        let base = vm.map_fgp(1).unwrap();
+        let bases = [base];
+        let mut source = WakeStorm { blocks, next: 0 };
+        let raw = Engine {
+            cfg: &cfg,
+            apps: vec![AppCtx {
+                trace: &trace,
+                obj_base: &bases,
+            }],
+            vm: &mut vm,
+            opts: EngineOptions {
+                l2_filter: false,
+                migrate_on_first_touch: false,
+            },
+            host: None,
+        }
+        .run(&mut source);
+        assert_eq!(source.next, blocks, "every block must be dispatched");
+        assert_eq!(
+            raw.stats.local + raw.stats.remote,
+            blocks as u64,
+            "one access per block, none lost to stale arrival events"
+        );
+        assert!(raw.end_time > 0.0);
     }
 }

@@ -61,7 +61,10 @@
 //! [`multiprog::run_multi`] adds true multi-kernel scheduling on top:
 //! more kernels than stacks, staggered arrivals, SM time-sharing under a
 //! per-app fairness policy, and per-app slowdown / weighted-speedup
-//! reporting.
+//! reporting. A single big run can itself execute in parallel: [`shard`]
+//! partitions the engine by home stack under conservative-lookahead
+//! windows (config `shard_stacks`; the sequential engine stays the
+//! bit-exactness oracle and every degenerate case lowers back to it).
 //!
 //! ## Concurrent host + NDP execution (CHoNDA-style)
 //!
@@ -148,6 +151,7 @@ pub mod rng;
 pub mod runtime;
 pub mod sched;
 pub mod session;
+pub mod shard;
 pub mod sim;
 pub mod spec;
 pub mod stats;

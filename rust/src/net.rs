@@ -672,6 +672,76 @@ impl Interconnect {
         self.kind
     }
 
+    // --- Cross-shard seam (see `crate::shard`). The sharded engine walks
+    // routes hop by hop so a message can cross shard boundaries between
+    // links; these accessors expose exactly the pieces `remote_hop`
+    // composes, with identical timing arithmetic.
+
+    /// Count one message injection into the fabric without transferring
+    /// anything. The sharded engine charges the injection on the issuing
+    /// side and then crosses each route link via [`Self::hop_transfer`]
+    /// (possibly on other shards); `inject_remote` + per-link
+    /// `hop_transfer` along the route is byte- and time-identical to one
+    /// [`Self::remote_hop`] call.
+    #[inline]
+    pub fn inject_remote(&mut self, bytes: u64) {
+        self.injected_bytes += bytes;
+    }
+
+    /// Transfer `bytes` over one fabric link by id, returning the
+    /// delivery time ([`Link::transfer`] exactly — `remote_hop` is a fold
+    /// of this along a route).
+    #[inline]
+    pub fn hop_transfer(&mut self, link: u32, now: f64, bytes: u64) -> f64 {
+        self.fabric[link as usize].transfer(now, bytes)
+    }
+
+    /// The precomputed route from `src` to `dst` as fabric link ids in
+    /// crossing order (empty iff `src == dst`).
+    #[inline]
+    pub fn route_of(&self, src: usize, dst: usize) -> &[u32] {
+        let i = src * self.num_stacks + dst;
+        &self.route_hops[self.route_offsets[i] as usize..self.route_offsets[i + 1] as usize]
+    }
+
+    /// The flattened route table `(offsets, hops)` — `route_of` for every
+    /// ordered pair at once, for callers that need to walk routes while
+    /// holding `&mut self` for the link servers (the sharded engine keeps
+    /// its own copy for exactly that reason).
+    pub fn routes(&self) -> (Vec<u32>, Vec<u32>) {
+        (self.route_offsets.clone(), self.route_hops.clone())
+    }
+
+    /// Static descriptors of the fabric's directed links (the topology's
+    /// `links()`, same indexing as the link servers).
+    pub fn links_meta(&self) -> &[DirectedLink] {
+        &self.link_meta
+    }
+
+    /// Conservative-lookahead bound for sharded simulation: the minimum
+    /// first-link latency over every ordered stack pair whose endpoints
+    /// live on different shards (`owner` maps stack id to shard). The
+    /// first link of any route is the issuing side's egress, so a request
+    /// issued at `now` cannot reach another shard before
+    /// `now + returned bound`. Returns `+inf` when no pair crosses shards
+    /// and `0.0` when some crossing route starts with a latency-free link
+    /// (no usable lookahead — callers must fall back to sequential).
+    pub fn min_cross_shard_latency(&self, owner: &[usize]) -> f64 {
+        debug_assert_eq!(owner.len(), self.num_stacks);
+        let mut bound = f64::INFINITY;
+        for s in 0..self.num_stacks {
+            for d in 0..self.num_stacks {
+                if s == d || owner[s] == owner[d] {
+                    continue;
+                }
+                if let Some(&first) = self.route_of(s, d).first() {
+                    bound = bound.min(self.link_meta[first as usize].latency_cycles);
+                }
+            }
+        }
+        bound
+    }
+
     /// Per-directed-link fabric counters. Empty under the degenerate
     /// fully-connected fabric, whose reports must stay byte-identical to
     /// the pre-fabric model; multi-hop fabrics report every link.
@@ -975,6 +1045,63 @@ mod tests {
         assert_eq!(far.bytes, 32 * 128);
         assert!(into0.stalls > 0);
         assert_eq!(into0.peak_window_bytes, into0.bytes);
+    }
+
+    #[test]
+    fn hop_transfer_chain_matches_remote_hop() {
+        // inject_remote + per-link hop_transfer must be bit-identical to
+        // one remote_hop call — that is the sharded engine's contract.
+        for kind in [
+            TopologyKind::FullyConnected,
+            TopologyKind::Line,
+            TopologyKind::Ring,
+            TopologyKind::Mesh2d,
+        ] {
+            let c = cfg_with(kind);
+            let n = c.num_stacks;
+            let mut whole = Interconnect::new(&c);
+            let mut split = Interconnect::new(&c);
+            let mut x = 0x5EED_u64;
+            for _ in 0..64 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let s = (x >> 8) as usize % n;
+                let d = (s + 1 + (x >> 16) as usize % (n - 1)) % n;
+                let now = (x >> 48) as f64;
+                let a = whole.remote_hop(now, s, d, 128);
+                split.inject_remote(128);
+                let route: Vec<u32> = split.route_of(s, d).to_vec();
+                let mut t = now;
+                for link in route {
+                    t = split.hop_transfer(link, t, 128);
+                }
+                assert_eq!(a.to_bits(), t.to_bits(), "{kind:?} {s}->{d}");
+                assert_eq!(whole.remote_bytes(), split.remote_bytes());
+            }
+        }
+    }
+
+    #[test]
+    fn cross_shard_lookahead_bound() {
+        // Degenerate fabric: first link is the egress carrying the full
+        // remote latency.
+        let c = cfg();
+        let net = Interconnect::new(&c);
+        let owner = [0usize, 0, 1, 1];
+        let cyc = c.cycles_per_ns();
+        let got = net.min_cross_shard_latency(&owner);
+        assert!((got - c.remote_latency_ns * cyc).abs() < 1e-9);
+        // One shard: no pair crosses, bound is +inf.
+        assert!(net.min_cross_shard_latency(&[0, 0, 0, 0]).is_infinite());
+        // Multi-hop fabric: the per-hop latency is the bound...
+        let c2 = cfg_with(TopologyKind::Ring);
+        let net2 = Interconnect::new(&c2);
+        let got2 = net2.min_cross_shard_latency(&owner);
+        assert!((got2 - c2.hop_latency_ns * c2.cycles_per_ns()).abs() < 1e-9);
+        // ...and a zero-latency fabric yields no usable lookahead.
+        let mut c3 = cfg_with(TopologyKind::Ring);
+        c3.hop_latency_ns = 0.0;
+        let net3 = Interconnect::new(&c3);
+        assert_eq!(net3.min_cross_shard_latency(&owner), 0.0);
     }
 
     #[test]

@@ -225,6 +225,15 @@ impl From<&RunReport> for Json {
                     ),
                 );
         }
+        // Sharded-engine extras, only when the run actually sharded
+        // (`shard_stacks >= 2`): sequential runs and every degenerate
+        // fallback carry none of these keys, so their JSON stays
+        // byte-identical to the single-threaded output.
+        if r.shard_stacks >= 2 {
+            o.push("shard_stacks", Json::Num(r.shard_stacks as f64))
+                .push("shard_windows", Json::Num(r.shard_windows as f64))
+                .push("shard_msgs", Json::Num(r.shard_msgs as f64));
+        }
         o
     }
 }
@@ -657,6 +666,34 @@ mod tests {
         assert!(s.contains(r#""net_window_cycles":1000"#));
         assert!(s.contains(r#""from":0,"to":1,"bytes":4096,"stalls":3"#));
         assert!(s.contains(r#""peak_window_bytes":2000,"peak_bytes_per_cycle":2"#));
+        validate_json(&s).unwrap();
+    }
+
+    #[test]
+    fn shard_fields_render_only_for_sharded_runs() {
+        // Sequential runs (0) and the 1-shard degenerate fallback keep the
+        // frozen JSON shape; only a genuinely sharded run grows the keys.
+        for seq in [0u64, 1] {
+            let r = RunReport {
+                shard_stacks: seq,
+                shard_windows: 7, // populated but suppressed: gated on shards
+                ..Default::default()
+            };
+            let s = Json::from(&r).render();
+            assert!(!s.contains("shard_stacks"), "leaked at {seq}");
+            assert!(!s.contains("shard_windows"));
+            assert!(!s.contains("shard_msgs"));
+        }
+        let r = RunReport {
+            shard_stacks: 4,
+            shard_windows: 123,
+            shard_msgs: 456,
+            ..Default::default()
+        };
+        let s = Json::from(&r).render();
+        assert!(s.contains(r#""shard_stacks":4"#));
+        assert!(s.contains(r#""shard_windows":123"#));
+        assert!(s.contains(r#""shard_msgs":456"#));
         validate_json(&s).unwrap();
     }
 

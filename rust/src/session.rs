@@ -39,6 +39,7 @@ use crate::placement::{self, PlacementPlan};
 use crate::report::Json;
 use crate::rng::Rng;
 use crate::sched::{affinity_stack, FairnessPolicy, Policy};
+use crate::shard;
 use crate::sim::{map_objects, KernelRun};
 use crate::spec::{ArrivalKind, ArrivalSpec, Baselines, Dispatch, ExperimentSpec, WorkloadSel};
 use crate::stats::{self, QuantileSketch, RunReport, ServiceStats};
@@ -595,6 +596,13 @@ struct ServiceSource {
     /// Worklist scratch for completion cascades (kept to avoid a per-
     /// completion allocation).
     scratch: Vec<u32>,
+    /// This instance's residue class of the global arrival sequence: the
+    /// sharded engine deals requests round-robin across shards (see
+    /// [`Self::sharded`]); the sequential engine is the 0-of-1 identity.
+    shard_index: u64,
+    shard_count: u64,
+    /// Arrivals *generated* so far (admitted here or by a peer shard).
+    arr_seq: u64,
 }
 
 impl ServiceSource {
@@ -634,7 +642,24 @@ impl ServiceSource {
             dispatched: vec![VecDeque::new(); n],
             sketch: QuantileSketch::new(),
             scratch: Vec::new(),
+            shard_index: 0,
+            shard_count: 1,
+            arr_seq: 0,
         }
+    }
+
+    /// Restrict this source to shard `index` of `count`. Every shard
+    /// runs the same deterministic generator (the RNGs stay in
+    /// lockstep), but admits only the arrivals whose global sequence
+    /// number falls in its residue class — residues partition the
+    /// stream, so each request is admitted by exactly one shard and the
+    /// shards' unions (offered, completed, response samples) reproduce
+    /// the sequential stream's totals exactly.
+    fn sharded(mut self, index: u64, count: u64) -> Self {
+        debug_assert!(index < count);
+        self.shard_index = index;
+        self.shard_count = count;
+        self
     }
 
     /// Admit every generated arrival due by `now`, so
@@ -657,8 +682,17 @@ impl ServiceSource {
                 self.next_arrival = None;
                 break;
             }
-            self.admit(t);
-            if self.max_requests.is_some_and(|m| self.offered >= m) {
+            // Deal the arrival to its shard by residue class (under the
+            // sequential 0-of-1 identity every arrival is admitted, so
+            // `arr_seq == offered` and the cap check is unchanged). The
+            // cap counts *generated* arrivals so every shard ends the
+            // stream at the same request.
+            let i = self.arr_seq;
+            self.arr_seq += 1;
+            if i % self.shard_count == self.shard_index {
+                self.admit(t);
+            }
+            if self.max_requests.is_some_and(|m| self.arr_seq >= m) {
                 self.next_arrival = None;
                 self.capped = true;
             } else {
@@ -848,17 +882,52 @@ fn exec_shared(
             obj_base: b.as_slice(),
         })
         .collect();
+    let opts = EngineOptions {
+        // The multiprogrammed paths have never modelled the L2
+        // filter; keeping it off preserves the historical cycles.
+        l2_filter: false,
+        migrate_on_first_touch: false,
+    };
+    // Shard the joint run when the plan allows it and the dispatch
+    // decomposes by home stack: under `Affinity` an app's blocks run only
+    // on its home stack's SMs, and every fairness decision except
+    // round-robin depends only on that stack's own apps (the RR cursor is
+    // machine-global state), so clearing foreign apps' queues hands each
+    // shard exactly the sequential dispatch restricted to its stacks.
+    // Solo baselines (`only_app`) stay sequential — they are the
+    // run-alone oracle every slowdown number divides by.
+    let host_active = host.is_some() && cfg.host_mlp > 0 && cfg.host_passes > 0;
+    if only_app.is_none()
+        && !apps.is_empty()
+        && policy == Policy::Affinity
+        && fairness != FairnessPolicy::RoundRobin
+    {
+        if let Some(plan) = shard::plan(cfg, &opts, host_active) {
+            let (raw, _) = shard::ShardEngine {
+                cfg,
+                apps: app_ctxs,
+                vm: &*vm,
+                opts,
+                host,
+            }
+            .run(&plan, |s| {
+                let mut src = SharedSource::new(launches, homes, policy, fairness, only_app);
+                for (i, q) in src.queues.iter_mut().enumerate() {
+                    if plan.owner[homes[i]] != s {
+                        q.clear();
+                    }
+                }
+                src
+            });
+            return raw;
+        }
+    }
     let mut source = SharedSource::new(launches, homes, policy, fairness, only_app);
     Engine {
         cfg,
         apps: app_ctxs,
         vm,
-        opts: EngineOptions {
-            // The multiprogrammed paths have never modelled the L2
-            // filter; keeping it off preserves the historical cycles.
-            l2_filter: false,
-            migrate_on_first_touch: false,
-        },
+        opts,
         host,
     }
     .run(&mut source)
@@ -1323,22 +1392,57 @@ impl<'a> Session<'a> {
                 obj_base: b.as_slice(),
             })
             .collect();
-        let mut source = PinnedSource {
-            next_block: vec![0; apps.len()],
-            num_blocks: apps.iter().map(|a| a.trace.blocks.len()).collect(),
-            homes: homes.clone(),
+        let opts = EngineOptions {
+            l2_filter: false,
+            migrate_on_first_touch: false,
         };
-        let raw = Engine {
-            cfg,
-            apps: app_ctxs,
-            vm: &mut vm,
-            opts: EngineOptions {
-                l2_filter: false,
-                migrate_on_first_touch: false,
-            },
-            host: None,
-        }
-        .run(&mut source);
+        // Pinned dispatch decomposes perfectly by home stack, so a shard
+        // plan (config `shard_stacks`) runs each stack group on its own
+        // thread; each shard's source masks foreign apps by zeroing
+        // their block counts. Stack-private mixes are bit-exact vs the
+        // sequential engine (`tests/shard.rs` pins this).
+        let raw = match shard::plan(cfg, &opts, false) {
+            Some(plan) => {
+                let (raw, _) = shard::ShardEngine {
+                    cfg,
+                    apps: app_ctxs,
+                    vm: &vm,
+                    opts,
+                    host: None,
+                }
+                .run(&plan, |s| PinnedSource {
+                    next_block: vec![0; apps.len()],
+                    num_blocks: apps
+                        .iter()
+                        .enumerate()
+                        .map(|(i, a)| {
+                            if plan.owner[homes[i]] == s {
+                                a.trace.blocks.len()
+                            } else {
+                                0
+                            }
+                        })
+                        .collect(),
+                    homes: homes.clone(),
+                });
+                raw
+            }
+            None => {
+                let mut source = PinnedSource {
+                    next_block: vec![0; apps.len()],
+                    num_blocks: apps.iter().map(|a| a.trace.blocks.len()).collect(),
+                    homes: homes.clone(),
+                };
+                Engine {
+                    cfg,
+                    apps: app_ctxs,
+                    vm: &mut vm,
+                    opts,
+                    host: None,
+                }
+                .run(&mut source)
+            }
+        };
         let mut report = raw.to_report(
             cfg,
             apps.iter().map(|a| a.name).collect::<Vec<_>>().join("+"),
@@ -1654,23 +1758,57 @@ impl<'a> Session<'a> {
             .collect();
         let after: Vec<Vec<usize>> =
             self.spec.kernels.iter().map(|k| k.after.clone()).collect();
-        let mut source = ServiceSource::new(
-            apps.iter().map(|w| w.trace.blocks.len() as u32).collect(),
-            &after,
-            a,
-            cfg.seed,
-        );
-        let raw = Engine {
-            cfg,
-            apps: app_ctxs,
-            vm: &mut vm,
-            opts: EngineOptions {
-                l2_filter: false,
-                migrate_on_first_touch: false,
-            },
-            host: host_stream,
-        }
-        .run(&mut source);
+        let blocks: Vec<u32> = apps.iter().map(|w| w.trace.blocks.len() as u32).collect();
+        let opts = EngineOptions {
+            l2_filter: false,
+            migrate_on_first_touch: false,
+        };
+        // Sharded service mode deals requests round-robin across shards
+        // by arrival sequence number (every shard runs the generator in
+        // lockstep and admits its residue class), so offered/completed
+        // totals and the response sketch are exact; per-request
+        // scheduling is shard-local rather than machine-global FCFS,
+        // which is the statistical-equivalence regime.
+        let (raw, source) = match shard::plan(cfg, &opts, host_stream.is_some()) {
+            Some(plan) => {
+                let (raw, shards) = shard::ShardEngine {
+                    cfg,
+                    apps: app_ctxs,
+                    vm: &vm,
+                    opts,
+                    host: host_stream,
+                }
+                .run(&plan, |s| {
+                    ServiceSource::new(blocks.clone(), &after, a, cfg.seed)
+                        .sharded(s as u64, plan.shards as u64)
+                });
+                // Fold the per-shard streams back into one: counts sum,
+                // the stream span is the latest admitted arrival, and the
+                // sketch merges exactly (per-bucket counts add).
+                let mut it = shards.into_iter();
+                let mut merged = it.next().expect("plan() guarantees >= 2 shards");
+                for s in it {
+                    merged.offered += s.offered;
+                    merged.completed += s.completed;
+                    merged.last_arrival = merged.last_arrival.max(s.last_arrival);
+                    merged.capped |= s.capped;
+                    merged.sketch.merge(&s.sketch);
+                }
+                (raw, merged)
+            }
+            None => {
+                let mut source = ServiceSource::new(blocks, &after, a, cfg.seed);
+                let raw = Engine {
+                    cfg,
+                    apps: app_ctxs,
+                    vm: &mut vm,
+                    opts,
+                    host: host_stream,
+                }
+                .run(&mut source);
+                (raw, source)
+            }
+        };
 
         let ndp_names = apps.iter().map(|w| w.name).collect::<Vec<_>>().join("+");
         let workload = match if host_active { host_wl.as_ref() } else { None } {

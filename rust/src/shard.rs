@@ -1,0 +1,1378 @@
+//! Intra-run parallel simulation: the engine sharded by home stack.
+//!
+//! CODA's own thesis makes a single big run shardable: co-locating
+//! computation with data means most NDP accesses are stack-private, so
+//! the simulation state decomposes along the same boundary the hardware
+//! does. This module partitions one [`crate::engine::Engine`] run into
+//! per-shard event heaps, per-shard DRAM backends and per-shard fabric
+//! link servers, and runs the shards on scoped threads under classic
+//! **conservative-lookahead** synchronization:
+//!
+//! * Stacks partition contiguously across shards ([`ShardPlan::owner`]);
+//!   an SM, its residency slots, its TLBs and its stack's DRAM all live
+//!   on the owning shard. Every fabric link is owned by the shard that
+//!   hands traffic onto it (`owner(from)`, or `owner(to)` for the
+//!   fully-connected crossbar's ingress links); all host-side state (the
+//!   host stream, the host ports, host-local DDR) lives on shard 0.
+//! * The **lookahead** `L` is the fabric's minimum first-link latency
+//!   over shard-crossing routes ([`Interconnect::min_cross_shard_latency`]),
+//!   further bounded by the host-port latency when a host stream is
+//!   active: a request issued at `t` cannot reach another shard before
+//!   `t + L`, so every shard may safely simulate the window
+//!   `[W, W + L)` where `W` is the global minimum pending event time.
+//! * Cross-shard traffic crosses between rounds through per-shard
+//!   **mailboxes**. Each message is stamped with its delivery time (the
+//!   simulated instant it is ready at its next hop); the receiver turns
+//!   it into an ordinary heap event at that time, so messages interleave
+//!   with local events in deterministic time order. A barrier closes the
+//!   round: the leader drains every outbox in shard order, computes the
+//!   next window, and everyone advances together — the run's result is a
+//!   pure function of the round structure, independent of thread timing.
+//!
+//! Response-side messages (a DRAM completion crossing back) may carry
+//! stamps inside an already-simulated window. That is safe here: every
+//! server in the simulation (links, DRAM banks) is a busy-until server
+//! that accepts non-monotonic `now`, so a "late" message is still served
+//! at its correct simulated time — the relaxation shows up only as a
+//! different arbitration interleaving, which is exactly the regime the
+//! statistical-equivalence harness covers (`tests/shard.rs`).
+//!
+//! **Bit-exactness.** When a shard's traffic never leaves it (the
+//! stack-private CGP mixes CODA optimizes for), no messages exist and
+//! each shard's heap pops in exactly the sequential order restricted to
+//! that shard, so every merged counter — cycles, per-app cycles, access
+//! counts, byte counts, DRAM stats — is bit-identical to the sequential
+//! engine; only `mean_mem_latency` may differ in final bits (its sum
+//! accumulates in shard order instead of global time order). Remote
+//! round-trips whose two routes and serving stack are all shard-local
+//! run inline through the exact sequential code path, too.
+//!
+//! **Fallbacks.** [`plan`] returns `None` — callers then run the
+//! sequential engine, the bit-exactness oracle — for every degenerate
+//! case: `shard_stacks = 1` (the default), fewer than 2 stacks or
+//! resolved shards, zero lookahead (`hop_latency_ns = 0`), hierarchical
+//! TLBs (`tlb_l1_entries > 0`: the walker pool is machine-global), and
+//! first-touch migration (it mutates the page table mid-run).
+
+use crate::addr::{large_page_mapper, AddressMapper};
+use crate::config::SystemConfig;
+use crate::engine::{
+    key, line_hash, AppCtx, BlockRef, BlockSource, EngineOptions, EngineRaw, HostStream, TimeKey,
+    HOST_DDR_SALT,
+};
+use crate::gpu::{Sm, Topology};
+use crate::mem::{self, MemBackend, MemBackendImpl, MemStats};
+use crate::net::Interconnect;
+use crate::stats::{AccessStats, LinkStat};
+use crate::vm::VirtualMemory;
+use crate::xlate::TranslationUnit;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+
+/// How a run shards: the stack-to-shard map and the conservative
+/// lookahead (in cycles) bounding each synchronization window.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Number of shards (>= 2; 1-shard plans lower to sequential).
+    pub shards: usize,
+    /// `owner[stack]` = index of the shard simulating that stack.
+    pub owner: Vec<usize>,
+    /// Window slack in cycles: a shard at global minimum time `W` may
+    /// process every event strictly before `W + lookahead`. Always > 0
+    /// and finite.
+    pub lookahead: f64,
+}
+
+/// Resolve the sharding decision for one run, or `None` to take the
+/// sequential path. `host_active` must reflect whether a host stream
+/// will actually inject traffic (it tightens the lookahead to the
+/// host-port latency).
+pub fn plan(cfg: &SystemConfig, opts: &EngineOptions, host_active: bool) -> Option<ShardPlan> {
+    if cfg.shard_stacks == 1 || cfg.num_stacks < 2 {
+        return None;
+    }
+    // First-touch migration rewrites the shared page table mid-run; the
+    // hierarchical translation unit owns a machine-global walker pool.
+    // Both couple shards through state the partition cannot split.
+    if opts.migrate_on_first_touch || cfg.tlb_l1_entries > 0 {
+        return None;
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let want = if cfg.shard_stacks == 0 {
+        cfg.num_stacks.min(hw)
+    } else {
+        cfg.shard_stacks
+    };
+    let shards = want.min(cfg.num_stacks);
+    if shards < 2 {
+        return None;
+    }
+    let n = cfg.num_stacks;
+    // Contiguous balanced partition: neighbouring stacks share a shard,
+    // which keeps line/ring/mesh neighbour traffic shard-local.
+    let owner: Vec<usize> = (0..n).map(|s| s * shards / n).collect();
+    let net = Interconnect::new(cfg);
+    let mut lookahead = net.min_cross_shard_latency(&owner);
+    if host_active {
+        lookahead = lookahead.min(cfg.host_latency_ns * cfg.cycles_per_ns());
+    }
+    if !lookahead.is_finite() || lookahead <= 0.0 {
+        return None;
+    }
+    Some(ShardPlan {
+        shards,
+        owner,
+        lookahead,
+    })
+}
+
+/// Which shard owns each fabric link: the shard that hands traffic onto
+/// it — `owner(from)` for real source nodes, `owner(to)` for the
+/// fully-connected crossbar's ingress links (their `from` is the
+/// pseudo-node `num_stacks`).
+fn link_owners(net: &Interconnect, owner: &[usize]) -> Vec<usize> {
+    let n = owner.len();
+    net.links_meta()
+        .iter()
+        .map(|l| if l.from < n { owner[l.from] } else { owner[l.to] })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Cross-shard messages.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// Request walking the forward route toward the serving stack.
+    Req,
+    /// Response walking the return route back to the issuing stack.
+    Rsp,
+    /// Final completion time headed for the origin shard's pending entry.
+    Resolve,
+}
+
+/// One cross-shard message. `time` is the **delivery-time stamp**: the
+/// simulated instant the message is ready at its next hop (for
+/// `Resolve`, the access's completion time). The receiver enqueues it as
+/// a heap event at exactly that time, so link and DRAM servers observe
+/// cross-shard traffic in deterministic time order, not arrival order.
+#[derive(Clone, Copy, Debug)]
+struct NetMsg {
+    phase: Phase,
+    /// Issuing stack (the SM side; unused for host requests).
+    src: u32,
+    /// Serving stack.
+    dst: u32,
+    /// Next hop index into the current route (forward route for `Req`,
+    /// return route for `Rsp`).
+    hop: u32,
+    /// Shard owning the pending entry this access resolves into.
+    origin: u32,
+    /// Pending-arena index in the origin shard.
+    pending: u32,
+    bytes: u32,
+    write: bool,
+    /// Host-port request: no fabric route (the host port already carried
+    /// it); served read-only at `dst`, then resolved straight to shard 0.
+    host: bool,
+    time: f64,
+    paddr: u64,
+}
+
+/// An in-flight window with accesses outstanding on other shards.
+#[derive(Clone, Copy, Debug)]
+enum PendKind {
+    Block {
+        app: u32,
+        block: u32,
+        /// First access index of the *next* window.
+        end: u32,
+        sm: u32,
+        slot: u32,
+        issued: u32,
+    },
+    Host {
+        /// First line index of the next host window.
+        end_i: u64,
+    },
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Pending {
+    outstanding: u32,
+    window_done: f64,
+    /// The window's issue time (per-access latency accounting baseline).
+    issue_now: f64,
+    kind: PendKind,
+}
+
+// ---------------------------------------------------------------------------
+// Shard-local events (the engine's packed encoding plus a message tag).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Ev(u64, u64);
+
+enum EvKind {
+    Window {
+        app: u32,
+        block: u32,
+        next: u32,
+        sm: u32,
+        slot: u32,
+    },
+    Arrival,
+    HostWindow { next: u64 },
+    /// A mailbox message reaching its stamped delivery time (word 1 =
+    /// message-arena index).
+    Msg { idx: u32 },
+}
+
+impl Ev {
+    const ARRIVAL_TAG: u64 = u64::MAX;
+    const HOST_TAG: u64 = u64::MAX - 1;
+    const MSG_TAG: u64 = u64::MAX - 2;
+
+    const ARRIVAL: Ev = Ev(Self::ARRIVAL_TAG, 0);
+
+    #[inline]
+    fn window(app: u32, block: u32, next: u32, sm: u32, slot: u32) -> Ev {
+        debug_assert!(sm < 1 << 16 && slot < 1 << 16, "sm/slot exceed 16 bits");
+        debug_assert!(app < u32::MAX - 2, "app index collides with the tag space");
+        Ev(
+            ((app as u64) << 32) | block as u64,
+            ((next as u64) << 32) | ((sm as u64) << 16) | slot as u64,
+        )
+    }
+
+    #[inline]
+    fn host(next: u64) -> Ev {
+        Ev(Self::HOST_TAG, next)
+    }
+
+    #[inline]
+    fn msg(idx: u32) -> Ev {
+        Ev(Self::MSG_TAG, idx as u64)
+    }
+
+    #[inline]
+    fn kind(self) -> EvKind {
+        match self.0 {
+            Self::ARRIVAL_TAG => EvKind::Arrival,
+            Self::HOST_TAG => EvKind::HostWindow { next: self.1 },
+            Self::MSG_TAG => EvKind::Msg { idx: self.1 as u32 },
+            w0 => EvKind::Window {
+                app: (w0 >> 32) as u32,
+                block: w0 as u32,
+                next: (self.1 >> 32) as u32,
+                sm: ((self.1 >> 16) & 0xFFFF) as u32,
+                slot: (self.1 & 0xFFFF) as u32,
+            },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared round state.
+// ---------------------------------------------------------------------------
+
+/// Barrier-round bookkeeping shared by every shard. All atomics are
+/// `Relaxed`: the barrier itself is the synchronization point (its wait
+/// establishes happens-before between everything written before it and
+/// everything read after), so the atomics only need atomicity, not
+/// ordering.
+struct RoundState {
+    barrier: Barrier,
+    /// Per-*sender* outbox filled during a round: `(dest shard, msg)` in
+    /// send order. The leader drains them in sender order, which makes
+    /// message routing deterministic.
+    outboxes: Vec<Mutex<Vec<(u32, NetMsg)>>>,
+    /// Per-*receiver* inbox the leader fills between barriers.
+    inboxes: Vec<Mutex<Vec<NetMsg>>>,
+    /// Per-shard earliest pending event time as `f64` bits
+    /// (`f64::INFINITY` = idle).
+    next_min: Vec<AtomicU64>,
+    /// Exclusive end of the current window, as `f64` bits.
+    w_end: AtomicU64,
+    done: AtomicBool,
+    windows: AtomicU64,
+    msgs: AtomicU64,
+}
+
+impl RoundState {
+    fn new(shards: usize) -> Self {
+        Self {
+            barrier: Barrier::new(shards),
+            outboxes: (0..shards).map(|_| Mutex::new(Vec::new())).collect(),
+            inboxes: (0..shards).map(|_| Mutex::new(Vec::new())).collect(),
+            next_min: (0..shards)
+                .map(|_| AtomicU64::new(f64::INFINITY.to_bits()))
+                .collect(),
+            w_end: AtomicU64::new(0),
+            done: AtomicBool::new(false),
+            windows: AtomicU64::new(0),
+            msgs: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The leader's between-barriers step: route every outbox into the
+/// destination inboxes (sender order), then derive the next window from
+/// the published per-shard minima and the routed delivery stamps. When
+/// everything is idle and nothing was routed, the run is over.
+fn route_round(shared: &RoundState, lookahead: f64) {
+    let mut routed_min = f64::INFINITY;
+    let mut routed = 0u64;
+    for ob in &shared.outboxes {
+        let batch = std::mem::take(&mut *ob.lock().unwrap());
+        for (dest, m) in batch {
+            routed_min = routed_min.min(m.time);
+            routed += 1;
+            shared.inboxes[dest as usize].lock().unwrap().push(m);
+        }
+    }
+    if routed > 0 {
+        shared.msgs.fetch_add(routed, Ordering::Relaxed);
+    }
+    let mut w = routed_min;
+    for nm in &shared.next_min {
+        w = w.min(f64::from_bits(nm.load(Ordering::Relaxed)));
+    }
+    if w.is_finite() {
+        shared.w_end.store((w + lookahead).to_bits(), Ordering::Relaxed);
+        shared.windows.fetch_add(1, Ordering::Relaxed);
+    } else {
+        shared.done.store(true, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The per-shard worker.
+// ---------------------------------------------------------------------------
+
+struct Worker<'a, S> {
+    idx: usize,
+    cfg: &'a SystemConfig,
+    plan: &'a ShardPlan,
+    apps: &'a [AppCtx<'a>],
+    vm: &'a VirtualMemory,
+    opts: EngineOptions,
+    /// Full topology: `sms[id]` works for any global SM id.
+    topo: Topology,
+    /// The SMs this shard owns (global ids preserved), in global order.
+    my_sms: Vec<Sm>,
+    mapper: AddressMapper,
+    huge_mapper: AddressMapper,
+    net: Interconnect,
+    /// Full-size backend vector; only owned stacks are ever touched.
+    stacks: Vec<MemBackendImpl>,
+    xl: TranslationUnit,
+    last_app: Vec<u32>,
+    link_owner: Vec<usize>,
+    /// Shard-local copy of the route table, so route walks don't borrow
+    /// `net` while the link servers are being driven.
+    route_offsets: Vec<u32>,
+    route_hops: Vec<u32>,
+    /// Per ordered pair `(s, d)`: both directions' routes and the serving
+    /// stack all live on this shard, so the whole round trip runs inline
+    /// through the exact sequential code path.
+    inline_pair: Vec<bool>,
+    heap: BinaryHeap<Reverse<(TimeKey, Ev)>>,
+    seq: u64,
+    occupied: Vec<bool>,
+    sm_free: Vec<f64>,
+    armed: Option<f64>,
+    source: S,
+    pend: Vec<Pending>,
+    pend_free: Vec<u32>,
+    msg_arena: Vec<NetMsg>,
+    msg_free: Vec<u32>,
+    /// Messages sent this round, flushed to the outbox at round end.
+    outbound: Vec<(u32, NetMsg)>,
+    // Host stream (shard 0 only; `host_total = 0` elsewhere).
+    host_stream: Option<HostStream<'a>>,
+    host_starts: Vec<u64>,
+    host_per_pass: u64,
+    host_total: u64,
+    host_ddr: Option<MemBackendImpl>,
+    host_end: f64,
+    host_obj: usize,
+    // Counters.
+    stats: AccessStats,
+    latency_sum: f64,
+    latency_n: u64,
+    end_time: f64,
+    app_end: Vec<f64>,
+    // Hoisted invariants (mirrors the sequential engine).
+    l2_threshold: u64,
+    l2_hit_cycles: f64,
+    host_ddr_threshold: u64,
+    line: u64,
+    page_shift: u32,
+    mlp: usize,
+    compute: f64,
+    slots_per_sm: usize,
+    flush_on_switch: bool,
+}
+
+impl<'a, S: BlockSource> Worker<'a, S> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        idx: usize,
+        cfg: &'a SystemConfig,
+        plan: &'a ShardPlan,
+        apps: &'a [AppCtx<'a>],
+        vm: &'a VirtualMemory,
+        opts: EngineOptions,
+        host: Option<HostStream<'a>>,
+        mut source: S,
+    ) -> Self {
+        let topo = Topology::new(cfg);
+        let cyc = cfg.cycles_per_ns();
+        let my_sms: Vec<Sm> = topo
+            .sms
+            .iter()
+            .copied()
+            .filter(|s| plan.owner[s.stack] == idx)
+            .collect();
+        let net = Interconnect::new(cfg);
+        let link_owner = link_owners(&net, &plan.owner);
+        let (route_offsets, route_hops) = net.routes();
+        let n = cfg.num_stacks;
+        let mut inline_pair = vec![false; n * n];
+        for s in 0..n {
+            for d in 0..n {
+                if s == d || plan.owner[s] != idx {
+                    continue;
+                }
+                inline_pair[s * n + d] = plan.owner[d] == idx
+                    && net
+                        .route_of(s, d)
+                        .iter()
+                        .chain(net.route_of(d, s))
+                        .all(|&l| link_owner[l as usize] == idx);
+            }
+        }
+
+        let line = cfg.line_size;
+        // Host stream state lands whole on shard 0 (mirrors the
+        // sequential engine's precomputation).
+        let host = if idx == 0 { host } else { None };
+        let (host_stream, host_starts, host_per_pass, host_total) = match host {
+            Some(h) if cfg.host_mlp > 0 && cfg.host_passes > 0 => {
+                let mut starts = Vec::with_capacity(h.trace.objects.len());
+                let mut acc = 0u64;
+                for o in &h.trace.objects {
+                    starts.push(acc);
+                    acc += o.bytes.div_ceil(line);
+                }
+                let total = acc.saturating_mul(cfg.host_passes);
+                if total == 0 {
+                    (None, Vec::new(), 0, 0)
+                } else {
+                    (Some(h), starts, acc, total)
+                }
+            }
+            _ => (None, Vec::new(), 0, 0),
+        };
+        let host_ddr_threshold = (cfg.host_ddr_fraction * (1u64 << 32) as f64) as u64;
+        let host_ddr = if host_stream.is_some() && host_ddr_threshold > 0 {
+            Some(mem::make_host_ddr_impl(cfg))
+        } else {
+            None
+        };
+
+        let slots_per_sm = cfg.blocks_per_sm;
+        let mut heap: BinaryHeap<Reverse<(TimeKey, Ev)>> =
+            BinaryHeap::with_capacity(my_sms.len() * slots_per_sm * 2 + 2);
+        let mut occupied = vec![false; topo.sms.len() * slots_per_sm];
+        let mut seq = 0u64;
+
+        // Seed through a *filtered* topology (owned SMs only, global ids
+        // preserved): every source iterates `topo.sms` / `sms_of_stack`,
+        // so each shard's seed is the sequential seed restricted to its
+        // SMs, in the same relative order.
+        let seed_topo = Topology {
+            sms: my_sms.clone(),
+            num_stacks: topo.num_stacks,
+            sms_per_stack: topo.sms_per_stack,
+            blocks_per_sm: topo.blocks_per_sm,
+        };
+        source.seed(&seed_topo, &mut |sm, slot, br| {
+            debug_assert!(slot < slots_per_sm, "slot {slot} out of range");
+            debug_assert!(!occupied[sm * slots_per_sm + slot], "slot seeded twice");
+            occupied[sm * slots_per_sm + slot] = true;
+            heap.push(Reverse((
+                key(0.0, seq),
+                Ev::window(br.app, br.block, 0, sm as u32, slot as u32),
+            )));
+            seq += 1;
+        });
+        let mut armed = None;
+        if let Some(ta) = source.next_arrival_after(0.0) {
+            if ta > 0.0 {
+                heap.push(Reverse((key(ta, seq), Ev::ARRIVAL)));
+                seq += 1;
+                armed = Some(ta);
+            }
+        }
+        if host_stream.is_some() {
+            heap.push(Reverse((key(0.0, seq), Ev::host(0))));
+            seq += 1;
+        }
+
+        Worker {
+            idx,
+            cfg,
+            plan,
+            apps,
+            vm,
+            opts,
+            my_sms,
+            mapper: AddressMapper::new(cfg),
+            huge_mapper: large_page_mapper(cfg),
+            net,
+            stacks: mem::make_backends_impl(cfg),
+            xl: TranslationUnit::new(cfg, topo.sms.len(), cyc),
+            last_app: vec![u32::MAX; topo.sms.len()],
+            link_owner,
+            route_offsets,
+            route_hops,
+            inline_pair,
+            heap,
+            seq,
+            occupied,
+            sm_free: vec![0.0; topo.sms.len()],
+            armed,
+            source,
+            pend: Vec::new(),
+            pend_free: Vec::new(),
+            msg_arena: Vec::new(),
+            msg_free: Vec::new(),
+            outbound: Vec::new(),
+            host_stream,
+            host_starts,
+            host_per_pass,
+            host_total,
+            host_ddr,
+            host_end: 0.0,
+            host_obj: 0,
+            stats: AccessStats::default(),
+            latency_sum: 0.0,
+            latency_n: 0,
+            end_time: 0.0,
+            app_end: vec![0.0; apps.len()],
+            l2_threshold: (cfg.l2_hit_rate * u32::MAX as f64) as u64,
+            l2_hit_cycles: cfg.l2_hit_ns * cyc,
+            host_ddr_threshold,
+            line,
+            page_shift: cfg.page_size.trailing_zeros(),
+            mlp: cfg.mlp_per_block,
+            compute: cfg.compute_cycles_per_access as f64,
+            slots_per_sm,
+            flush_on_switch: cfg.tlb_flush_on_switch,
+            topo,
+        }
+    }
+
+    /// The barrier-round loop. Each round: the leader routes mailboxes
+    /// and derives the window `[W, W + L)`; every shard then drains its
+    /// inbox into the heap and processes all events strictly before the
+    /// window end. The minimum-time event is always inside the window,
+    /// so every finite round makes progress.
+    fn run(&mut self, shared: &RoundState) {
+        self.publish(shared);
+        loop {
+            shared.barrier.wait();
+            if self.idx == 0 {
+                route_round(shared, self.plan.lookahead);
+            }
+            shared.barrier.wait();
+            if shared.done.load(Ordering::Relaxed) {
+                break;
+            }
+            self.drain_inbox(shared);
+            let w_end = f64::from_bits(shared.w_end.load(Ordering::Relaxed));
+            self.process_until(w_end);
+            self.flush_outbound(shared);
+            self.publish(shared);
+        }
+        debug_assert_eq!(
+            self.pend.len(),
+            self.pend_free.len(),
+            "shard {} ended with unresolved pending windows",
+            self.idx
+        );
+        debug_assert_eq!(
+            self.msg_arena.len(),
+            self.msg_free.len(),
+            "shard {} ended with undelivered messages",
+            self.idx
+        );
+    }
+
+    fn publish(&self, shared: &RoundState) {
+        let t = self
+            .heap
+            .peek()
+            .map(|Reverse((tk, _))| tk.time_bits())
+            .unwrap_or(f64::INFINITY.to_bits());
+        shared.next_min[self.idx].store(t, Ordering::Relaxed);
+    }
+
+    fn drain_inbox(&mut self, shared: &RoundState) {
+        let batch = std::mem::take(&mut *shared.inboxes[self.idx].lock().unwrap());
+        for m in batch {
+            let idx = self.alloc_msg(m);
+            self.heap.push(Reverse((key(m.time, self.seq), Ev::msg(idx))));
+            self.seq += 1;
+        }
+    }
+
+    fn flush_outbound(&mut self, shared: &RoundState) {
+        if !self.outbound.is_empty() {
+            shared.outboxes[self.idx]
+                .lock()
+                .unwrap()
+                .append(&mut self.outbound);
+        }
+    }
+
+    fn process_until(&mut self, w_end: f64) {
+        while let Some(&Reverse((tk, ev))) = self.heap.peek() {
+            let now = f64::from_bits(tk.time_bits());
+            if now >= w_end {
+                break;
+            }
+            self.heap.pop();
+            match ev.kind() {
+                EvKind::Arrival => self.on_arrival_event(now),
+                EvKind::HostWindow { next } => self.process_host_window(now, next),
+                EvKind::Window {
+                    app,
+                    block,
+                    next,
+                    sm,
+                    slot,
+                } => self.process_window(now, app, block, next, sm, slot),
+                EvKind::Msg { idx } => {
+                    let m = self.msg_arena[idx as usize];
+                    self.msg_free.push(idx);
+                    match m.phase {
+                        Phase::Req => self.walk_req(m),
+                        Phase::Rsp => self.walk_rsp(m),
+                        Phase::Resolve => self.resolve(m.pending, m.time),
+                    }
+                }
+            }
+        }
+    }
+
+    fn push_ev(&mut self, t: f64, ev: Ev) {
+        self.heap.push(Reverse((key(t, self.seq), ev)));
+        self.seq += 1;
+    }
+
+    fn send(&mut self, dest: usize, msg: NetMsg) {
+        debug_assert_ne!(dest, self.idx, "self-sends must resolve inline");
+        self.outbound.push((dest as u32, msg));
+    }
+
+    fn alloc_pend(&mut self, p: Pending) -> u32 {
+        if let Some(i) = self.pend_free.pop() {
+            self.pend[i as usize] = p;
+            i
+        } else {
+            self.pend.push(p);
+            (self.pend.len() - 1) as u32
+        }
+    }
+
+    fn alloc_msg(&mut self, m: NetMsg) -> u32 {
+        if let Some(i) = self.msg_free.pop() {
+            self.msg_arena[i as usize] = m;
+            i
+        } else {
+            self.msg_arena.push(m);
+            (self.msg_arena.len() - 1) as u32
+        }
+    }
+
+    /// Mirror of the sequential arrival handler over this shard's SMs.
+    fn on_arrival_event(&mut self, now: f64) {
+        if self.armed != Some(now) {
+            return; // superseded event: inert
+        }
+        self.armed = None;
+        self.source.on_arrival(now);
+        for slot in 0..self.slots_per_sm {
+            for i in 0..self.my_sms.len() {
+                let smo = self.my_sms[i];
+                if self.occupied[smo.id * self.slots_per_sm + slot] {
+                    continue;
+                }
+                if let Some(br) = self.source.refill(smo, None, now) {
+                    self.occupied[smo.id * self.slots_per_sm + slot] = true;
+                    self.push_ev(now, Ev::window(br.app, br.block, 0, smo.id as u32, slot as u32));
+                }
+            }
+        }
+        if let Some(ta) = self.source.next_arrival_after(now) {
+            if ta > now {
+                self.push_ev(ta, Ev::ARRIVAL);
+                self.armed = Some(ta);
+            }
+        }
+    }
+
+    /// One window of a resident block. Local accesses and fully
+    /// shard-local round trips run the exact sequential code path; an
+    /// access whose route leaves the shard allocates a pending entry and
+    /// ships a `Req`, and the window's retirement is deferred until the
+    /// last outstanding access resolves.
+    fn process_window(&mut self, now: f64, app: u32, block: u32, next: u32, sm: u32, slot: u32) {
+        let actx = self.apps[app as usize];
+        let smo = self.topo.sms[sm as usize];
+        if self.flush_on_switch && self.last_app[smo.id] != app {
+            if self.last_app[smo.id] != u32::MAX {
+                self.xl.flush(smo.id);
+            }
+            self.last_app[smo.id] = app;
+        }
+        let blk = &actx.trace.blocks[block as usize];
+        let begin = next as usize;
+        let end = (begin + self.mlp).min(blk.accesses.len());
+        let obj_base = actx.obj_base;
+        let n = self.cfg.num_stacks;
+
+        let mut window_done = now;
+        let mut pend_idx: Option<u32> = None;
+        for a in &blk.accesses[begin..end] {
+            let va = obj_base[a.obj as usize] + a.offset;
+            let vaddr = va.0;
+            if self.opts.l2_filter {
+                let vline = vaddr / self.line;
+                if line_hash(vline) & 0xFFFF_FFFF < self.l2_threshold {
+                    self.stats.l2_hits += 1;
+                    window_done = window_done.max(now + self.l2_hit_cycles);
+                    continue;
+                }
+            }
+            let (t, pte) = self.xl.access(smo.id, now, va, self.vm);
+            let paddr = (pte.ppn << self.page_shift) | (vaddr & (self.cfg.page_size - 1));
+            let m = if pte.huge {
+                &self.huge_mapper
+            } else {
+                &self.mapper
+            };
+            let dst = m.stack_of(paddr, pte.granularity);
+            if dst == smo.stack {
+                self.stats.local += 1;
+                let t1 = self.net.local_hop(t, dst, self.line);
+                let done = self.stacks[dst].access_rw(t1, paddr, self.line, a.write).done;
+                self.latency_sum += done - now;
+                self.latency_n += 1;
+                window_done = window_done.max(done);
+            } else if self.inline_pair[smo.stack * n + dst] {
+                // Whole round trip shard-local: sequential hot path.
+                self.stats.remote += 1;
+                let t1 = self.net.remote_hop(t, smo.stack, dst, self.line);
+                let t2 = self.stacks[dst].access_rw(t1, paddr, self.line, a.write).done;
+                let done = self.net.remote_hop(t2, dst, smo.stack, self.line);
+                self.latency_sum += done - now;
+                self.latency_n += 1;
+                window_done = window_done.max(done);
+            } else {
+                self.stats.remote += 1;
+                self.net.inject_remote(self.line);
+                let pi = match pend_idx {
+                    Some(p) => p,
+                    None => {
+                        let p = self.alloc_pend(Pending {
+                            outstanding: 0,
+                            window_done: now,
+                            issue_now: now,
+                            kind: PendKind::Block {
+                                app,
+                                block,
+                                end: end as u32,
+                                sm,
+                                slot,
+                                issued: (end - begin) as u32,
+                            },
+                        });
+                        pend_idx = Some(p);
+                        p
+                    }
+                };
+                self.pend[pi as usize].outstanding += 1;
+                self.walk_req(NetMsg {
+                    phase: Phase::Req,
+                    src: smo.stack as u32,
+                    dst: dst as u32,
+                    hop: 0,
+                    origin: self.idx as u32,
+                    pending: pi,
+                    bytes: self.line as u32,
+                    write: a.write,
+                    host: false,
+                    time: t,
+                    paddr,
+                });
+            }
+        }
+        match pend_idx {
+            None => self.finish_block(window_done, app, block, end as u32, sm, slot, (end - begin) as u32),
+            Some(pi) => {
+                let p = &mut self.pend[pi as usize];
+                p.window_done = p.window_done.max(window_done);
+            }
+        }
+    }
+
+    /// Retirement bookkeeping after a window's last access completed
+    /// (immediately for fully-local windows, at the final `Resolve` for
+    /// windows with cross-shard accesses) — the sequential engine's
+    /// post-window block verbatim.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_block(
+        &mut self,
+        window_done: f64,
+        app: u32,
+        block: u32,
+        end: u32,
+        sm: u32,
+        slot: u32,
+        issued: u32,
+    ) {
+        let smo = self.topo.sms[sm as usize];
+        let issued = issued as f64;
+        let c_start = window_done.max(self.sm_free[smo.id]);
+        let t_next = c_start + self.compute * issued;
+        self.sm_free[smo.id] = t_next;
+        self.end_time = self.end_time.max(t_next);
+        self.app_end[app as usize] = self.app_end[app as usize].max(t_next);
+
+        let blk_len = self.apps[app as usize].trace.blocks[block as usize]
+            .accesses
+            .len();
+        if (end as usize) < blk_len {
+            self.push_ev(t_next, Ev::window(app, block, end, sm, slot));
+        } else {
+            match self.source.refill(smo, Some(BlockRef { app, block }), t_next) {
+                Some(br) => self.push_ev(t_next, Ev::window(br.app, br.block, 0, sm, slot)),
+                None => {
+                    self.occupied[sm as usize * self.slots_per_sm + slot as usize] = false;
+                }
+            }
+            if let Some(ta) = self.source.next_arrival_after(t_next) {
+                if ta > t_next && self.armed.map_or(true, |t| ta < t) {
+                    self.push_ev(ta, Ev::ARRIVAL);
+                    self.armed = Some(ta);
+                }
+            }
+        }
+    }
+
+    /// One host window (shard 0 only), mirroring the sequential handler;
+    /// requests to stacks owned elsewhere ship as host `Req`s and the
+    /// next window waits for the last of them.
+    fn process_host_window(&mut self, now: f64, next: u64) {
+        let hs = self.host_stream.expect("host event without a host stream");
+        let end_i = (next + self.cfg.host_mlp as u64).min(self.host_total);
+        let mut window_done = 0.0f64;
+        let mut pend_idx: Option<u32> = None;
+        for i in next..end_i {
+            let j = i % self.host_per_pass;
+            if j == 0 {
+                self.host_obj = 0;
+            }
+            while self.host_obj + 1 < self.host_starts.len()
+                && self.host_starts[self.host_obj + 1] <= j
+            {
+                self.host_obj += 1;
+            }
+            let va = hs.obj_base[self.host_obj] + (j - self.host_starts[self.host_obj]) * self.line;
+            if self.host_ddr_threshold > 0
+                && line_hash((va.0 / self.line) ^ HOST_DDR_SALT) & 0xFFFF_FFFF
+                    < self.host_ddr_threshold
+            {
+                self.stats.host_ddr += 1;
+                let done = self
+                    .host_ddr
+                    .as_mut()
+                    .expect("host DDR backend")
+                    .access(now, va.0, self.line)
+                    .done;
+                window_done = window_done.max(done);
+                self.host_end = self.host_end.max(done);
+            } else {
+                let pte = self.vm.pte_of(va).expect("host access beyond mapped object");
+                let paddr = (pte.ppn << self.page_shift) | (va.0 & (self.cfg.page_size - 1));
+                let m = if pte.huge {
+                    &self.huge_mapper
+                } else {
+                    &self.mapper
+                };
+                let dst = m.stack_of(paddr, pte.granularity);
+                self.stats.host += 1;
+                let t1 = self.net.host_hop(now, dst, self.line);
+                if self.plan.owner[dst] == self.idx {
+                    let done = self.stacks[dst].access(t1, paddr, self.line).done;
+                    window_done = window_done.max(done);
+                    self.host_end = self.host_end.max(done);
+                } else {
+                    let pi = match pend_idx {
+                        Some(p) => p,
+                        None => {
+                            let p = self.alloc_pend(Pending {
+                                outstanding: 0,
+                                // The sequential host window folds from
+                                // 0.0, not `now`.
+                                window_done: 0.0,
+                                issue_now: now,
+                                kind: PendKind::Host { end_i },
+                            });
+                            pend_idx = Some(p);
+                            p
+                        }
+                    };
+                    self.pend[pi as usize].outstanding += 1;
+                    // The host port already carried the request; it needs
+                    // no fabric route, just the serving shard.
+                    self.send(
+                        self.plan.owner[dst],
+                        NetMsg {
+                            phase: Phase::Req,
+                            src: 0,
+                            dst: dst as u32,
+                            hop: 0,
+                            origin: self.idx as u32,
+                            pending: pi,
+                            bytes: self.line as u32,
+                            write: false,
+                            host: true,
+                            time: t1,
+                            paddr,
+                        },
+                    );
+                }
+            }
+        }
+        match pend_idx {
+            None => {
+                if end_i < self.host_total {
+                    self.push_ev(window_done.max(now), Ev::host(end_i));
+                }
+            }
+            Some(pi) => {
+                let p = &mut self.pend[pi as usize];
+                p.window_done = p.window_done.max(window_done);
+            }
+        }
+    }
+
+    /// Advance a request along its forward route. Owned links transfer
+    /// inline; the first foreign link hands the message to that link's
+    /// shard. At the serving stack the access runs and the response (or,
+    /// for host requests, the resolve) heads back.
+    fn walk_req(&mut self, mut msg: NetMsg) {
+        if !msg.host {
+            let n = self.cfg.num_stacks;
+            let base = msg.src as usize * n + msg.dst as usize;
+            let lo = self.route_offsets[base] as usize;
+            let hi = self.route_offsets[base + 1] as usize;
+            while (msg.hop as usize) < hi - lo {
+                let link = self.route_hops[lo + msg.hop as usize];
+                let owner = self.link_owner[link as usize];
+                if owner != self.idx {
+                    self.send(owner, msg);
+                    return;
+                }
+                msg.time = self.net.hop_transfer(link, msg.time, msg.bytes as u64);
+                msg.hop += 1;
+            }
+        }
+        let dst = msg.dst as usize;
+        if self.plan.owner[dst] != self.idx {
+            // Route fully crossed but the endpoint lives elsewhere (the
+            // final link belonged to the penultimate stack's shard).
+            self.send(self.plan.owner[dst], msg);
+            return;
+        }
+        let done = if msg.host {
+            self.stacks[dst].access(msg.time, msg.paddr, msg.bytes as u64).done
+        } else {
+            self.stacks[dst]
+                .access_rw(msg.time, msg.paddr, msg.bytes as u64, msg.write)
+                .done
+        };
+        msg.time = done;
+        if msg.host {
+            msg.phase = Phase::Resolve;
+            self.deliver_resolve(msg);
+        } else {
+            // Return injection + response walk: the second half of the
+            // sequential `remote_hop(t2, dst, src)` round trip.
+            self.net.inject_remote(msg.bytes as u64);
+            msg.phase = Phase::Rsp;
+            msg.hop = 0;
+            self.walk_rsp(msg);
+        }
+    }
+
+    /// Advance a response along the return route (`dst -> src`), then
+    /// resolve into the origin shard's pending entry.
+    fn walk_rsp(&mut self, mut msg: NetMsg) {
+        let n = self.cfg.num_stacks;
+        let base = msg.dst as usize * n + msg.src as usize;
+        let lo = self.route_offsets[base] as usize;
+        let hi = self.route_offsets[base + 1] as usize;
+        while (msg.hop as usize) < hi - lo {
+            let link = self.route_hops[lo + msg.hop as usize];
+            let owner = self.link_owner[link as usize];
+            if owner != self.idx {
+                self.send(owner, msg);
+                return;
+            }
+            msg.time = self.net.hop_transfer(link, msg.time, msg.bytes as u64);
+            msg.hop += 1;
+        }
+        msg.phase = Phase::Resolve;
+        self.deliver_resolve(msg);
+    }
+
+    fn deliver_resolve(&mut self, msg: NetMsg) {
+        if msg.origin as usize == self.idx {
+            self.resolve(msg.pending, msg.time);
+        } else {
+            self.send(msg.origin as usize, msg);
+        }
+    }
+
+    /// One outstanding access of a pending window completed at `done`.
+    fn resolve(&mut self, pi: u32, done: f64) {
+        let p = &mut self.pend[pi as usize];
+        debug_assert!(p.outstanding > 0, "resolve on a settled pending entry");
+        p.outstanding -= 1;
+        p.window_done = p.window_done.max(done);
+        let issue_now = p.issue_now;
+        let settled = p.outstanding == 0;
+        let (window_done, kind) = (p.window_done, p.kind);
+        match kind {
+            PendKind::Block { .. } => {
+                self.latency_sum += done - issue_now;
+                self.latency_n += 1;
+            }
+            PendKind::Host { .. } => {
+                self.host_end = self.host_end.max(done);
+            }
+        }
+        if !settled {
+            return;
+        }
+        self.pend_free.push(pi);
+        match kind {
+            PendKind::Block {
+                app,
+                block,
+                end,
+                sm,
+                slot,
+                issued,
+            } => self.finish_block(window_done, app, block, end, sm, slot, issued),
+            PendKind::Host { end_i } => {
+                if end_i < self.host_total {
+                    self.push_ev(window_done.max(issue_now), Ev::host(end_i));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The sharded engine front door.
+// ---------------------------------------------------------------------------
+
+/// The sharded counterpart of [`crate::engine::Engine`]: same inputs,
+/// except the page table is taken by shared reference (sharded runs never
+/// mutate it — [`plan`] refuses migration) and each shard gets its own
+/// [`BlockSource`] from a factory instead of one `&mut` source.
+pub struct ShardEngine<'a> {
+    pub cfg: &'a SystemConfig,
+    pub apps: Vec<AppCtx<'a>>,
+    pub vm: &'a VirtualMemory,
+    pub opts: EngineOptions,
+    pub host: Option<HostStream<'a>>,
+}
+
+impl<'a> ShardEngine<'a> {
+    /// Run to completion on `plan.shards` scoped threads. `make_source(i)`
+    /// builds shard `i`'s source, pre-restricted to the work that shard
+    /// owns (apps homed on its stacks; its residue of a request stream).
+    /// Returns the merged counters plus every shard's source, so callers
+    /// can fold source-side statistics (service-mode request accounting).
+    pub fn run<S, F>(self, plan: &ShardPlan, make_source: F) -> (EngineRaw, Vec<S>)
+    where
+        S: BlockSource + Send,
+        F: Fn(usize) -> S + Sync,
+    {
+        let ShardEngine {
+            cfg,
+            apps,
+            vm,
+            opts,
+            host,
+        } = self;
+        assert!(
+            !opts.migrate_on_first_touch,
+            "sharded runs cannot migrate pages (plan() must reject this)"
+        );
+        let n_sms = Topology::new(cfg).sms.len();
+        assert!(
+            n_sms < 1 << 16 && cfg.blocks_per_sm < 1 << 16,
+            "topology exceeds the packed event encoding (sm/slot must fit 16 bits)"
+        );
+        let shared = RoundState::new(plan.shards);
+        let apps = &apps[..];
+        let workers: Vec<Worker<'_, S>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..plan.shards)
+                .map(|i| {
+                    let shared = &shared;
+                    let make_source = &make_source;
+                    scope.spawn(move || {
+                        let mut w =
+                            Worker::new(i, cfg, plan, apps, vm, opts, host, make_source(i));
+                        w.run(shared);
+                        w
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        });
+        let raw = merge(cfg, plan, &workers, &shared);
+        (raw, workers.into_iter().map(|w| w.source).collect())
+    }
+}
+
+/// Fold per-shard counters into one [`EngineRaw`]. Per-stack state
+/// (DRAM stats, served bytes, row-hit rates, link counters) comes from
+/// the owning shard; times are element-wise maxima; counts are sums.
+fn merge<S>(
+    cfg: &SystemConfig,
+    plan: &ShardPlan,
+    workers: &[Worker<'_, S>],
+    shared: &RoundState,
+) -> EngineRaw {
+    let n = cfg.num_stacks;
+    let mut stats = AccessStats::default();
+    let mut end_time = 0.0f64;
+    let napps = workers.first().map_or(0, |w| w.app_end.len());
+    let mut app_end = vec![0.0f64; napps];
+    let mut latency_sum = 0.0f64;
+    let mut latency_n = 0u64;
+    let mut tlb_hits = 0u64;
+    let mut tlb_total = 0u64;
+    for w in workers {
+        stats.add(&w.stats);
+        end_time = end_time.max(w.end_time);
+        for (a, b) in app_end.iter_mut().zip(&w.app_end) {
+            *a = a.max(*b);
+        }
+        latency_sum += w.latency_sum;
+        latency_n += w.latency_n;
+        let (h, t) = w.xl.hit_totals();
+        tlb_hits += h;
+        tlb_total += t;
+    }
+    let row_hit_rate = {
+        let rates: Vec<f64> = (0..n)
+            .map(|s| workers[plan.owner[s]].stacks[s].row_hit_rate())
+            .collect();
+        crate::stats::mean(&rates)
+    };
+    let mut mem_stats = MemStats::default();
+    for s in 0..n {
+        mem_stats.add(&workers[plan.owner[s]].stacks[s].stats());
+    }
+    // Each fabric link was only ever driven by its owning shard, so the
+    // merged per-link counters come straight from the owner.
+    let per_shard: Vec<Vec<LinkStat>> = workers.iter().map(|w| w.net.link_stats()).collect();
+    let link_stats: Vec<LinkStat> = if per_shard[0].is_empty() {
+        Vec::new()
+    } else {
+        let link_owner = link_owners(&workers[0].net, &plan.owner);
+        (0..per_shard[0].len())
+            .map(|l| per_shard[link_owner[l]][l])
+            .collect()
+    };
+    EngineRaw {
+        stats,
+        end_time,
+        app_end,
+        mean_mem_latency: if latency_n == 0 {
+            0.0
+        } else {
+            latency_sum / latency_n as f64
+        },
+        tlb_hit_rate: if tlb_total == 0 {
+            0.0
+        } else {
+            tlb_hits as f64 / tlb_total as f64
+        },
+        row_hit_rate,
+        stack_bytes: (0..n)
+            .map(|s| workers[plan.owner[s]].stacks[s].bytes_served())
+            .collect(),
+        remote_bytes: workers.iter().map(|w| w.net.remote_bytes()).sum(),
+        mem: mem_stats,
+        migrated_pages: 0,
+        host_end: workers[0].host_end,
+        host_bytes: workers[0].net.host_bytes(),
+        host_ddr_bytes: workers[0]
+            .host_ddr
+            .as_ref()
+            .map(|d| d.bytes_served())
+            .unwrap_or(0),
+        host_port_stalls: workers[0].net.host_port_stalls(),
+        link_stats,
+        // Sharding requires the legacy translation model (per-SM state
+        // only), which never reports hierarchical stats.
+        xlate: None,
+        shard_stacks: plan.shards as u64,
+        shard_windows: shared.windows.load(Ordering::Relaxed),
+        shard_msgs: shared.msgs.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // An explicit shard count: `shard_stacks = 0` resolves against the
+    // machine's core count, which would make these tests flaky on a
+    // single-core runner.
+    fn base_cfg() -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.shard_stacks = 2;
+        c
+    }
+
+    #[test]
+    fn plan_partitions_contiguously_and_balanced() {
+        let mut c = base_cfg();
+        c.num_stacks = 8;
+        c.shard_stacks = 3;
+        let p = plan(&c, &EngineOptions::default(), false).expect("plan");
+        assert_eq!(p.shards, 3);
+        assert_eq!(p.owner.len(), 8);
+        // Contiguous and non-decreasing, every shard non-empty.
+        for w in p.owner.windows(2) {
+            assert!(w[1] == w[0] || w[1] == w[0] + 1);
+        }
+        for s in 0..3 {
+            assert!(p.owner.iter().any(|&o| o == s), "shard {s} owns no stack");
+        }
+        assert!(p.lookahead > 0.0 && p.lookahead.is_finite());
+        // Auto (0) resolves against the machine's cores: whether it
+        // engages is machine-dependent, but an engaged plan never
+        // exceeds the stack count.
+        c.shard_stacks = 0;
+        if let Some(auto) = plan(&c, &EngineOptions::default(), false) {
+            assert!(auto.shards >= 2 && auto.shards <= c.num_stacks);
+        }
+    }
+
+    #[test]
+    fn plan_falls_back_on_degenerate_configs() {
+        let opts = EngineOptions::default();
+        // The default knob value is the sequential engine.
+        let mut c = SystemConfig::default();
+        assert_eq!(c.shard_stacks, 1);
+        assert!(plan(&c, &opts, false).is_none());
+        // A single stack cannot shard.
+        c = base_cfg();
+        c.num_stacks = 1;
+        assert!(plan(&c, &opts, false).is_none());
+        // An explicit shard cap of 1 is sequential even with the knob set.
+        c = base_cfg();
+        c.shard_stacks = 1;
+        assert!(plan(&c, &opts, false).is_none());
+        // Zero-latency multi-hop fabric: no usable lookahead.
+        c = base_cfg();
+        c.topology = crate::net::TopologyKind::Ring;
+        c.hop_latency_ns = 0.0;
+        assert!(plan(&c, &opts, false).is_none());
+        // Hierarchical TLBs couple shards through the global walker pool.
+        c = base_cfg();
+        c.tlb_l1_entries = 16;
+        assert!(plan(&c, &opts, false).is_none());
+        // First-touch migration mutates the shared page table.
+        c = base_cfg();
+        let mig = EngineOptions {
+            l2_filter: true,
+            migrate_on_first_touch: true,
+        };
+        assert!(plan(&c, &mig, false).is_none());
+    }
+
+    #[test]
+    fn host_latency_tightens_lookahead() {
+        let mut c = base_cfg();
+        // Host port latency below the fabric's first-hop latency.
+        c.host_latency_ns = c.remote_latency_ns / 10.0;
+        let cyc = c.cycles_per_ns();
+        let without = plan(&c, &EngineOptions::default(), false).expect("plan");
+        let with = plan(&c, &EngineOptions::default(), true).expect("plan");
+        assert!(with.lookahead < without.lookahead);
+        assert!((with.lookahead - c.host_latency_ns * cyc).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_ownership_charges_the_handing_shard() {
+        let c = base_cfg();
+        let p = plan(&c, &EngineOptions::default(), false).expect("plan");
+        let net = Interconnect::new(&c);
+        let owners = link_owners(&net, &p.owner);
+        let n = c.num_stacks;
+        for (l, meta) in net.links_meta().iter().enumerate() {
+            let expect = if meta.from < n {
+                p.owner[meta.from]
+            } else {
+                p.owner[meta.to]
+            };
+            assert_eq!(owners[l], expect);
+        }
+    }
+
+    #[test]
+    fn shard_event_encoding_round_trips() {
+        match Ev::msg(0xDEAD).kind() {
+            EvKind::Msg { idx } => assert_eq!(idx, 0xDEAD),
+            _ => panic!("msg decoded wrong"),
+        }
+        assert!(matches!(Ev::ARRIVAL.kind(), EvKind::Arrival));
+        match Ev::window(3, 7, 11, 13, 2).kind() {
+            EvKind::Window {
+                app,
+                block,
+                next,
+                sm,
+                slot,
+            } => assert_eq!((app, block, next, sm, slot), (3, 7, 11, 13, 2)),
+            _ => panic!("window decoded wrong"),
+        }
+        match Ev::host(99).kind() {
+            EvKind::HostWindow { next } => assert_eq!(next, 99),
+            _ => panic!("host decoded wrong"),
+        }
+    }
+}

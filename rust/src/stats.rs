@@ -160,6 +160,14 @@ pub struct RunReport {
     /// Hierarchical address-translation results (`tlb_l1_entries > 0`
     /// only; `None` under the frozen legacy flat-walk model).
     pub xlate: Option<XlateStats>,
+    /// Shards the run executed on (see [`crate::shard`]). `0` from the
+    /// sequential engine; the `shard_*` fields only appear in JSON when
+    /// this is >= 2, so unsharded reports stay byte-identical.
+    pub shard_stacks: u64,
+    /// Conservative time windows (barrier rounds) a sharded run took.
+    pub shard_windows: u64,
+    /// Cross-shard messages exchanged through the shard mailboxes.
+    pub shard_msgs: u64,
 }
 
 impl RunReport {
@@ -371,6 +379,20 @@ impl QuantileSketch {
         (1u64 << exp) as f64 * (1.0 + (sub as f64 + 0.5) / SKETCH_SUBS as f64)
     }
 
+    /// Fold another sketch into this one (per-shard service streams merge
+    /// into run-level percentiles — see [`crate::shard`]). Buckets,
+    /// totals and extrema combine exactly: the merged sketch is
+    /// indistinguishable from one that observed both streams.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     /// Record one observation. Negative or non-finite values clamp to 0.0.
     pub fn record(&mut self, v: f64) {
         let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
@@ -532,6 +554,36 @@ mod tests {
         };
         assert!((run.speedup_over(&base) - 2.0).abs() < 1e-12);
         assert!((run.remote_reduction_over(&base) - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sketch_merge_equals_single_stream() {
+        // Merging shard-local sketches must be indistinguishable from one
+        // sketch that saw every observation.
+        let mut whole = QuantileSketch::new();
+        let mut parts = [QuantileSketch::new(), QuantileSketch::new(), QuantileSketch::new()];
+        let mut x = 0xC0DA_u64;
+        for i in 0..3000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = 1.0 + (x >> 40) as f64 / 16.0;
+            whole.record(v);
+            parts[i % 3].record(v);
+        }
+        let mut merged = QuantileSketch::new();
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged.count(), whole.count());
+        assert_eq!(merged.mean().to_bits(), whole.mean().to_bits());
+        assert_eq!(merged.min().to_bits(), whole.min().to_bits());
+        assert_eq!(merged.max().to_bits(), whole.max().to_bits());
+        for q in [0.5, 0.99, 0.999] {
+            assert_eq!(merged.quantile(q).to_bits(), whole.quantile(q).to_bits());
+        }
+        // Merging an empty sketch is the identity.
+        let before = merged.quantile(0.5).to_bits();
+        merged.merge(&QuantileSketch::new());
+        assert_eq!(merged.quantile(0.5).to_bits(), before);
     }
 
     #[test]

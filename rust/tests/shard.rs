@@ -1,0 +1,298 @@
+//! Sharded-engine integration coverage: the `shard_stacks` parallel
+//! engine against its bit-exactness oracle (the sequential engine).
+//!
+//! Three regimes, per the sharded engine's contract:
+//!
+//! * **Stack-private traffic** (CGP-local placement, affinity dispatch):
+//!   no cross-shard messages exist, so every report field must be
+//!   bit-identical to the sequential run — only `mean_mem_latency` may
+//!   differ in the last ulp (per-shard partial sums add in a different
+//!   order).
+//! * **Remote-heavy traffic** (FGP-only placement): cross-shard accesses
+//!   travel as mailbox messages, so exact event interleavings differ on
+//!   time ties. Placement-determined invariants stay exact — access
+//!   counts, per-stack bytes, remote bytes — and cycles agree within a
+//!   small tolerance.
+//! * **Degenerate configs** (one stack, zero-latency fabric, or
+//!   `shard_stacks = 1`): the plan lowers back to the sequential engine
+//!   and the rendered JSON must stay byte-identical, shard keys absent.
+
+use coda::config::SystemConfig;
+use coda::multiprog::MixPlacement;
+use coda::net::TopologyKind;
+use coda::sched::{FairnessPolicy, Policy};
+use coda::session::{Report, Session};
+use coda::spec::{
+    ArrivalKind, ArrivalSpec, Baselines, ExperimentSpec, TopologySpec, WorkloadSel,
+};
+use coda::stats::RunReport;
+use coda::trace::{Access, BlockTrace, Category, KernelTrace, ObjectDesc};
+use coda::workloads::BuiltWorkload;
+
+/// A synthetic multi-block kernel: `blocks` thread-blocks striding over a
+/// 64 KiB object with a mix of loads and stores. Block-exclusive so the
+/// CGP-local placement makes each app's traffic fully stack-private.
+fn workload(name: &'static str, blocks: u32) -> BuiltWorkload {
+    let blocks = (0..blocks)
+        .map(|b| BlockTrace {
+            block_id: b,
+            accesses: (0..16u64)
+                .map(|i| Access {
+                    obj: 0,
+                    offset: ((b as u64 * 41 + i * 7) % 1024) * 64,
+                    write: i % 3 == 0,
+                })
+                .collect(),
+        })
+        .collect();
+    BuiltWorkload {
+        name,
+        category: Category::BlockExclusive,
+        trace: KernelTrace {
+            name: name.into(),
+            threads_per_block: 1,
+            objects: vec![ObjectDesc {
+                name: "buf".into(),
+                bytes: 64 << 10,
+            }],
+            blocks,
+        },
+        ir: None,
+        env: coda::analysis::ParamEnv::new(1),
+    }
+}
+
+/// Four single-home apps (one per default stack) under pinned dispatch.
+fn pinned_spec<'a>(
+    wls: &'a [BuiltWorkload],
+    placement: MixPlacement,
+    shard_stacks: &str,
+) -> ExperimentSpec<'a> {
+    let mut spec = ExperimentSpec::pinned(
+        wls.iter().map(WorkloadSel::Prebuilt).collect(),
+        placement,
+    );
+    spec.output.baselines = Baselines::None;
+    spec.overrides
+        .push(("shard_stacks".into(), shard_stacks.into()));
+    spec
+}
+
+fn run(cfg: SystemConfig, spec: ExperimentSpec) -> Report {
+    Session::new(cfg, spec).unwrap().run().unwrap()
+}
+
+fn assert_close(a: f64, b: f64, rel: f64, what: &str) {
+    let denom = a.abs().max(b.abs()).max(1e-12);
+    assert!(
+        (a - b).abs() / denom <= rel,
+        "{what}: {a} vs {b} beyond rel {rel}"
+    );
+}
+
+/// The fields the stack-private regime promises bit-exact.
+fn assert_bit_exact(seq: &RunReport, shd: &RunReport) {
+    assert_eq!(seq.cycles.to_bits(), shd.cycles.to_bits(), "cycles");
+    assert_eq!(seq.accesses, shd.accesses, "access counts");
+    assert_eq!(seq.stack_bytes, shd.stack_bytes, "stack bytes");
+    assert_eq!(seq.remote_bytes, shd.remote_bytes, "remote bytes");
+    assert_eq!(
+        seq.tlb_hit_rate.to_bits(),
+        shd.tlb_hit_rate.to_bits(),
+        "tlb hit rate"
+    );
+    assert_eq!(
+        seq.row_hit_rate.to_bits(),
+        shd.row_hit_rate.to_bits(),
+        "row hit rate"
+    );
+    assert_eq!(seq.app_cycles.len(), shd.app_cycles.len());
+    for (i, (a, b)) in seq.app_cycles.iter().zip(&shd.app_cycles).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "app_cycles[{i}]");
+    }
+    // Same addends, per-shard partial-sum order: reassociation noise only.
+    assert_close(seq.mean_mem_latency, shd.mean_mem_latency, 1e-9, "latency");
+}
+
+/// Stack-private CGP mix: four shards, no messages, bit-exact reports.
+#[test]
+fn pinned_cgp_sharded_is_bit_exact() {
+    let wls: Vec<_> = ["a", "b", "c", "d"]
+        .iter()
+        .map(|&n| workload(n, 24))
+        .collect();
+    let cfg = SystemConfig::test_small();
+    let seq = run(cfg.clone(), pinned_spec(&wls, MixPlacement::CgpLocal, "1"));
+    let shd = run(cfg.clone(), pinned_spec(&wls, MixPlacement::CgpLocal, "4"));
+    assert_eq!(shd.run.shard_stacks, 4, "the shard plan must engage");
+    assert!(shd.run.shard_windows >= 1);
+    assert_eq!(
+        shd.run.shard_msgs, 0,
+        "stack-private traffic must produce no cross-shard messages"
+    );
+    assert_eq!(seq.run.shard_stacks, 0, "sequential run must stay unsharded");
+    assert_bit_exact(&seq.run, &shd.run);
+
+    // `shard_stacks = 0` (one shard per stack, capped by the machine's
+    // parallelism) must agree too, whether or not it engages here.
+    let auto = run(cfg, pinned_spec(&wls, MixPlacement::CgpLocal, "0"));
+    assert_bit_exact(&seq.run, &auto.run);
+}
+
+/// Remote-heavy FGP mix: messages flow, counts stay exact, time agrees
+/// statistically.
+#[test]
+fn pinned_fgp_sharded_matches_statistically() {
+    let wls: Vec<_> = ["a", "b", "c", "d"]
+        .iter()
+        .map(|&n| workload(n, 24))
+        .collect();
+    let cfg = SystemConfig::test_small();
+    let seq = run(cfg.clone(), pinned_spec(&wls, MixPlacement::FgpOnly, "1"));
+    let shd = run(cfg, pinned_spec(&wls, MixPlacement::FgpOnly, "4"));
+    assert_eq!(shd.run.shard_stacks, 4, "the shard plan must engage");
+    assert!(
+        shd.run.shard_msgs > 0,
+        "FGP interleaving must cross shard boundaries"
+    );
+    assert!(seq.run.accesses.remote > 0, "the mix must be remote-heavy");
+    // Placement decides where every access lands — invariant under
+    // sharding.
+    assert_eq!(seq.run.accesses, shd.run.accesses, "access counts");
+    assert_eq!(seq.run.stack_bytes, shd.run.stack_bytes, "stack bytes");
+    assert_eq!(seq.run.remote_bytes, shd.run.remote_bytes, "remote bytes");
+    // Timing: event interleavings may differ on contended-resource ties,
+    // so cycles agree within tolerance rather than bit-exactly.
+    assert_close(seq.run.cycles, shd.run.cycles, 0.10, "cycles");
+    assert_close(
+        seq.run.mean_mem_latency,
+        shd.run.mean_mem_latency,
+        0.25,
+        "mean latency",
+    );
+}
+
+/// Degenerate lowering: a 1-stack system and a zero-latency fabric must
+/// fall back to the sequential engine — byte-identical JSON, no shard
+/// keys — no matter what `shard_stacks` asks for.
+#[test]
+fn degenerate_configs_render_byte_identical_json() {
+    // One stack: nothing to partition.
+    let wls = vec![workload("solo", 24)];
+    let mut base = pinned_spec(&wls, MixPlacement::CgpLocal, "1");
+    base.overrides.push(("num_stacks".into(), "1".into()));
+    let mut asked = pinned_spec(&wls, MixPlacement::CgpLocal, "4");
+    asked.overrides.push(("num_stacks".into(), "1".into()));
+    let cfg = SystemConfig::test_small();
+    let a = run(cfg.clone(), base).to_json().render();
+    let b = run(cfg.clone(), asked).to_json().render();
+    assert_eq!(a, b, "1-stack runs must not depend on shard_stacks");
+    assert!(!a.contains("shard_stacks"), "no shard keys when sequential");
+
+    // Zero hop latency: lookahead collapses to 0, so the conservative
+    // window cannot advance — the plan must refuse and lower back.
+    let wls: Vec<_> = ["a", "b", "c", "d"]
+        .iter()
+        .map(|&n| workload(n, 12))
+        .collect();
+    let mut base = pinned_spec(&wls, MixPlacement::FgpOnly, "1");
+    base.topology = Some(TopologySpec {
+        hop_latency_ns: Some(0.0),
+        ..TopologySpec::new(TopologyKind::Ring)
+    });
+    let mut asked = pinned_spec(&wls, MixPlacement::FgpOnly, "4");
+    asked.topology = base.topology;
+    let a = run(cfg.clone(), base).to_json().render();
+    let b = run(cfg, asked).to_json().render();
+    assert_eq!(a, b, "zero-lookahead fabrics must stay sequential");
+    assert!(!a.contains("shard_windows"));
+}
+
+/// Time-shared (shared-dispatch) mix, two apps per stack: the sharded
+/// run restricts each shard to the sequential dispatch of its own
+/// stacks, so a stack-private mix stays bit-exact even with SM
+/// time-sharing and staggered arrivals.
+#[test]
+fn shared_dispatch_sharded_preserves_per_app_results() {
+    let wls: Vec<_> = ["a", "b", "c", "d", "e", "f", "g", "h"]
+        .iter()
+        .map(|&n| workload(n, 12))
+        .collect();
+    let launches: Vec<_> = wls
+        .iter()
+        .enumerate()
+        .map(|(i, w)| (WorkloadSel::Prebuilt(w), 50.0 * i as f64))
+        .collect();
+    let mk = |shard_stacks: &str| {
+        let mut spec = ExperimentSpec::shared(
+            launches.clone(),
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        spec.output.baselines = Baselines::None;
+        spec.overrides
+            .push(("shard_stacks".into(), shard_stacks.into()));
+        spec
+    };
+    let cfg = SystemConfig::test_small();
+    let seq = run(cfg.clone(), mk("1"));
+    let shd = run(cfg, mk("4"));
+    assert_eq!(shd.run.shard_stacks, 4, "the shard plan must engage");
+    assert_eq!(seq.run.accesses, shd.run.accesses, "access counts");
+    assert_eq!(seq.run.app_cycles.len(), 8);
+    for (i, (a, b)) in seq
+        .run
+        .app_cycles
+        .iter()
+        .zip(&shd.run.app_cycles)
+        .enumerate()
+    {
+        assert_eq!(a.to_bits(), b.to_bits(), "app_cycles[{i}]");
+    }
+    assert_eq!(seq.run.cycles.to_bits(), shd.run.cycles.to_bits());
+    // Per-source rows carry the same per-app response times.
+    for (s, p) in seq.sources.iter().zip(&shd.sources) {
+        assert_eq!(s.cycles.to_bits(), p.cycles.to_bits(), "source cycles");
+    }
+}
+
+/// Open-loop service mode: requests are dealt round-robin across shards
+/// by arrival sequence number, so offered/completed totals and the
+/// response-time distribution close exactly against the request cap.
+#[test]
+fn sharded_service_request_accounting_is_exact() {
+    let wl = workload("svc", 2);
+    let mk = |shard_stacks: &str| {
+        let mut spec = ExperimentSpec::shared(
+            vec![(WorkloadSel::Prebuilt(&wl), 0.0)],
+            MixPlacement::CgpLocal,
+            Policy::Affinity,
+            FairnessPolicy::Fcfs,
+        );
+        spec.arrivals = Some(ArrivalSpec {
+            kind: ArrivalKind::Trace,
+            interarrivals: vec![400.0],
+            requests: Some(4_000),
+            ..ArrivalSpec::default()
+        });
+        spec.overrides
+            .push(("shard_stacks".into(), shard_stacks.into()));
+        spec
+    };
+    let cfg = SystemConfig::test_small();
+    let seq = run(cfg.clone(), mk("1"));
+    let shd = run(cfg, mk("4"));
+    assert_eq!(shd.run.shard_stacks, 4, "the shard plan must engage");
+    let ss = seq.run.service.as_ref().expect("service stats");
+    let ps = shd.run.service.as_ref().expect("service stats");
+    assert_eq!(ss.requests_offered, 4_000);
+    assert_eq!(ps.requests_offered, 4_000, "residue classes must partition");
+    assert_eq!(ps.requests_completed, 4_000);
+    assert_eq!(ps.requests_incomplete, 0);
+    // Per-request work is placement-determined, so counts stay exact.
+    assert_eq!(seq.run.accesses, shd.run.accesses, "access counts");
+    assert!(ps.mean_response > 0.0);
+    assert!(ps.p50_response <= ps.p99_response);
+    assert!(ps.p99_response <= ps.max_response);
+}
